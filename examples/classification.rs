@@ -1,0 +1,62 @@
+//! Multiclass classification on the covtype analogue — the workload where
+//! the paper's full-rank local kernels shine (slow kernel eigendecay).
+//!
+//! Trains all four approximate kernels at two ranks and prints the
+//! accuracy table; expect hierarchical/independent to beat the low-rank
+//! kernels at small r, mirroring the paper's Figures 5–6 covtype rows.
+//!
+//! Run: `cargo run --release --example classification`
+
+use anyhow::Result;
+use hck::data::{spec_by_name, synthetic};
+use hck::kernels::Gaussian;
+use hck::learn::{EngineSpec, KrrModel, TrainConfig};
+use hck::util::bench::Table;
+use hck::util::timer::Timer;
+
+fn main() -> Result<()> {
+    let spec = spec_by_name("covtype").unwrap();
+    let (train, test) = synthetic::generate(spec, 4000, 1000, 7);
+    println!(
+        "data: {} — {} train / {} test, d = {}, {} classes (one-vs-all)\n",
+        train.name,
+        train.n(),
+        test.n(),
+        train.d(),
+        match train.task {
+            hck::data::Task::Multiclass(k) => k,
+            _ => unreachable!(),
+        }
+    );
+
+    let sigma = 0.3;
+    let lambda = 0.01;
+    let mut table = Table::new(&["engine", "r", "accuracy", "train (s)", "memory (MB)"]);
+    for &r in &[32usize, 128] {
+        let engines = [
+            EngineSpec::Hierarchical { rank: r },
+            EngineSpec::Independent { n0: r },
+            EngineSpec::Nystrom { rank: r },
+            EngineSpec::Fourier { rank: r },
+        ];
+        for engine in engines {
+            let cfg = TrainConfig::new(Gaussian::new(sigma), engine)
+                .with_lambda(lambda)
+                .with_seed(3);
+            let t = Timer::start();
+            let model = KrrModel::fit_dataset(&cfg, &train)?;
+            let secs = t.secs();
+            let acc = model.evaluate(&test);
+            table.row(&[
+                engine.name().to_string(),
+                r.to_string(),
+                format!("{acc:.4}"),
+                format!("{secs:.2}"),
+                format!("{:.1}", model.memory_words as f64 * 8e-6),
+            ]);
+        }
+    }
+    table.print();
+    println!("\n(The paper's covtype finding: at small r the full-rank local kernels\n — independent, hierarchical — clearly beat the low-rank ones.)");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Serving demo: train a model, expose it over the TCP JSON protocol,
+//! drive it with in-process clients, print the metrics — the same wiring
+//! `hck serve` offers as a long-running process.
+//!
+//! Run: `cargo run --release --example serve`
+
+use anyhow::Result;
+use hck::coordinator::{serve_tcp, BatchPolicy, PredictionService};
+use hck::data::{spec_by_name, synthetic};
+use hck::kernels::Gaussian;
+use hck::learn::{EngineSpec, KrrModel, TrainConfig};
+use hck::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let spec = spec_by_name("ijcnn1").unwrap();
+    let (train, test) = synthetic::generate(spec, 3000, 200, 5);
+    println!("training hierarchical model on {} (n={})...", train.name, train.n());
+    let cfg = TrainConfig::new(Gaussian::new(0.4), EngineSpec::Hierarchical { rank: 96 })
+        .with_seed(2);
+    let model = KrrModel::fit_dataset(&cfg, &train)?;
+
+    let svc = Arc::new(PredictionService::start(
+        Arc::new(model),
+        BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(1) },
+    ));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!("serving on {addr}");
+    let svc2 = svc.clone();
+    let server = std::thread::spawn(move || serve_tcp(listener, svc2));
+
+    // Drive it like an external client: line-delimited JSON over TCP.
+    let mut correct = 0usize;
+    let n_queries = 100;
+    {
+        let mut conn = TcpStream::connect(addr)?;
+        let mut reader = BufReader::new(conn.try_clone()?);
+        for i in 0..n_queries {
+            let req = Json::obj(vec![("features", Json::from_f64s(test.x.row(i)))]);
+            conn.write_all(format!("{}\n", req.encode()).as_bytes())?;
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let resp = Json::parse(line.trim()).map_err(anyhow::Error::msg)?;
+            let pred = resp.get("prediction").unwrap().to_f64s().unwrap()[0];
+            let label = if pred >= 0.0 { 1.0 } else { -1.0 };
+            if label == test.y[i] {
+                correct += 1;
+            }
+        }
+        // Ask for server-side metrics, then stop the server.
+        conn.write_all(b"{\"cmd\": \"metrics\"}\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        println!("server metrics: {}", line.trim());
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n")?;
+        line.clear();
+        reader.read_line(&mut line)?;
+    }
+    let conns = server.join().unwrap()?;
+    println!(
+        "client saw {correct}/{n_queries} correct over {conns} connection(s) — accuracy {:.2}",
+        correct as f64 / n_queries as f64
+    );
+    Ok(())
+}

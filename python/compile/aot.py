@@ -1,0 +1,129 @@
+"""AOT lowering: JAX (L2, embedding the L1 Pallas kernel) → HLO text.
+
+Emits one ``.hlo.txt`` per (operation, shape bucket) plus a
+``manifest.json`` the Rust runtime reads to discover artifacts. HLO
+*text* is the interchange format — NOT a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Shape buckets: the Rust side pads a kernel-block request up to the
+nearest bucket (tile rows to 128 — 32 for Laplace — and the feature
+dimension to the nearest of D_BUCKETS); padding coordinates with zeros
+on *both* sides adds exactly zero distance, so the padded result is
+exact for every supported kernel.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.pairwise import FAMILIES, default_block
+
+#: Feature-dimension buckets the kernel-block artifacts are emitted for.
+D_BUCKETS = (8, 32, 64, 128)
+#: RFF artifact shape: (tile of points, frequencies).
+RFF_SHAPE = (128, 32, 256)
+#: Dense ridge-solve artifact order.
+KRR_N = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs():
+    """Yield (name, lowered, meta) for every artifact."""
+    for family in FAMILIES:
+        tile = default_block(family)
+        for d in D_BUCKETS:
+            name = f"kb_{family}_d{d}_{tile}x{tile}"
+
+            def fn(x, y, sigma, family=family):
+                return (model.kernel_block(family, x, y, sigma),)
+
+            lowered = jax.jit(fn).lower(f32(tile, d), f32(tile, d), f32())
+            meta = {
+                "op": "kernel_block",
+                "family": family,
+                "tile_m": tile,
+                "tile_n": tile,
+                "d": d,
+                "inputs": [[tile, d], [tile, d], []],
+                "outputs": [[tile, tile]],
+            }
+            yield name, lowered, meta
+
+    m, d, r = RFF_SHAPE
+
+    def rff_fn(x, omega, b):
+        return (model.rff_features(x, omega, b),)
+
+    lowered = jax.jit(rff_fn).lower(f32(m, d), f32(r, d), f32(r))
+    yield f"rff_d{d}_r{r}", lowered, {
+        "op": "rff_features",
+        "family": "gaussian",
+        "tile_m": m,
+        "d": d,
+        "r": r,
+        "inputs": [[m, d], [r, d], [r]],
+        "outputs": [[m, r]],
+    }
+
+    def solve_fn(k, y, lam):
+        return (model.krr_solve(k, y, lam),)
+
+    lowered = jax.jit(solve_fn).lower(f32(KRR_N, KRR_N), f32(KRR_N, 1), f32())
+    yield f"krr_solve_n{KRR_N}", lowered, {
+        "op": "krr_solve",
+        "n": KRR_N,
+        "inputs": [[KRR_N, KRR_N], [KRR_N, 1], []],
+        "outputs": [[KRR_N, 1]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": 1, "hlo": "text", "artifacts": []}
+    for name, lowered, meta in artifact_specs():
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as fh:
+            fh.write(text)
+        entry = {"name": name, "file": fname, **meta}
+        manifest["artifacts"].append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as fh:
+        json.dump(manifest, fh, indent=1, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Layer 1 — Pallas kernel for tiled pairwise-distance kernel blocks.
+
+This is the compute hot spot of the whole system: every factor of the
+hierarchical kernel (leaf blocks A_ii, landmark Grams Sigma_p, the
+cross blocks behind U_i and W_p), the Nystrom features and the exact
+baseline all reduce to evaluating K(X, Y) for point blocks.
+
+TPU design (see DESIGN.md §8 — Hardware adaptation):
+
+- The grid tiles the (m, n) output into ``bm x bn`` blocks (default
+  128 x 128, the MXU-native shape). Each step stages one X tile
+  (bm x d) and one Y tile (bn x d) from HBM into VMEM via BlockSpec —
+  the same HBM<->VMEM schedule a CUDA version would express with
+  threadblocks + shared memory.
+- For squared-L2 kernels (gaussian, imq) the distance uses the
+  ``|x − y|² = |x|² + |y|² − 2 x·yᵀ`` expansion: the −2xyᵀ term is a
+  (bm x d)·(d x bn) contraction on the MXU with f32 accumulation
+  (``preferred_element_type``); the norms are cheap VPU reductions.
+- The Laplace kernel needs an L1 distance, which has no matmul form;
+  it broadcasts to (bm, bn, d) inside VMEM, so its tiles default to
+  32 x 32 to bound the footprint.
+- ``sigma`` is a runtime (1, 1) input — one compiled artifact serves
+  every bandwidth in a grid search.
+
+On this CPU testbed the kernel MUST run with ``interpret=True``:
+real-TPU lowering emits a Mosaic custom-call that the CPU PJRT plugin
+cannot execute. Numerics are identical; pytest checks them against the
+pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FAMILIES = ("gaussian", "laplace", "imq")
+
+#: MXU-friendly default tile for squared-L2 kernels.
+DEFAULT_BLOCK = 128
+#: Smaller tile for the broadcast-heavy L1 (Laplace) path.
+LAPLACE_BLOCK = 32
+
+
+def _kernel_body(family: str, sig_ref, x_ref, y_ref, o_ref):
+    """One grid step: compute the (bm, bn) output tile."""
+    x = x_ref[...]  # (bm, d) in VMEM
+    y = y_ref[...]  # (bn, d) in VMEM
+    sigma = sig_ref[0, 0]
+    if family == "laplace":
+        # L1 distance: broadcast-subtract inside VMEM.
+        dist = jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+        o_ref[...] = jnp.exp(-dist / sigma)
+        return
+    # Squared-L2 via the gemm expansion; the dot hits the MXU.
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    yn = jnp.sum(y * y, axis=1, keepdims=True)  # (bn, 1)
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(xn + yn.T - 2.0 * xy, 0.0)  # guard cancellation
+    if family == "gaussian":
+        o_ref[...] = jnp.exp(-d2 / (2.0 * sigma * sigma))
+    elif family == "imq":
+        o_ref[...] = sigma * jax.lax.rsqrt(d2 + sigma * sigma)
+    else:  # pragma: no cover - guarded by FAMILIES
+        raise ValueError(f"unknown family {family!r}")
+
+
+def default_block(family: str) -> int:
+    """Default tile edge for a kernel family."""
+    return LAPLACE_BLOCK if family == "laplace" else DEFAULT_BLOCK
+
+
+@functools.partial(
+    jax.jit, static_argnames=("family", "bm", "bn", "interpret")
+)
+def pairwise_block(x, y, sigma, *, family: str, bm: int | None = None,
+                   bn: int | None = None, interpret: bool = True):
+    """K(X, Y) for f32 blocks, tiled ``bm x bn``.
+
+    ``x``: (m, d), ``y``: (n, d) with m % bm == 0 and n % bn == 0 (the
+    AOT pipeline emits fixed padded shapes; the Rust runtime pads).
+    ``sigma``: scalar bandwidth (traced — not baked into the artifact).
+    """
+    if family not in FAMILIES:
+        raise ValueError(f"family must be one of {FAMILIES}, got {family!r}")
+    m, d = x.shape
+    n, d2 = y.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch: {d} vs {d2}")
+    bm = bm or min(default_block(family), m)
+    bn = bn or min(default_block(family), n)
+    if m % bm or n % bn:
+        raise ValueError(f"shape ({m},{n}) not divisible by tile ({bm},{bn})")
+    sig = jnp.asarray(sigma, jnp.float32).reshape(1, 1)
+    body = functools.partial(_kernel_body, family)
+    return pl.pallas_call(
+        body,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(sig, x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def vmem_bytes(family: str, bm: int, bn: int, d: int) -> int:
+    """Analytic VMEM footprint of one grid step (f32), for DESIGN.md §8."""
+    base = 4 * (bm * d + bn * d + bm * bn) + 4
+    if family == "laplace":
+        base += 4 * bm * bn * d  # broadcast intermediate
+    return base

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Pallas pairwise kernel — the correctness
+reference every L1 test asserts against (and the numerics the Rust
+`kernels::compute` module mirrors in f64)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sqdist(x, y):
+    """Pairwise squared Euclidean distances, numerically direct."""
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def l1dist(x, y):
+    """Pairwise L1 (Manhattan) distances."""
+    return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+
+def gaussian(x, y, sigma):
+    """exp(−|x−y|² / (2σ²)) — paper eq. (5)."""
+    return jnp.exp(-sqdist(x, y) / (2.0 * sigma * sigma))
+
+
+def laplace(x, y, sigma):
+    """exp(−|x−y|₁ / σ) — paper §5.4."""
+    return jnp.exp(-l1dist(x, y) / sigma)
+
+
+def imq(x, y, sigma):
+    """σ/√(|x−y|² + σ²) — inverse multiquadric, normalized to 1 at 0."""
+    return sigma / jnp.sqrt(sqdist(x, y) + sigma * sigma)
+
+
+def block(family: str, x, y, sigma):
+    """Dispatch by family name."""
+    fn = {"gaussian": gaussian, "laplace": laplace, "imq": imq}[family]
+    return fn(x, y, sigma)

@@ -1,0 +1,54 @@
+"""Layer 2 — JAX compute graphs, AOT-lowered once to HLO text.
+
+The hierarchical kernel's coordination logic lives in Rust (Layer 3);
+what XLA accelerates are the dense numeric kernels: pairwise kernel
+blocks (which call the Layer-1 Pallas kernel so both layers lower into
+one HLO module), random-Fourier feature maps, and a ridge solve. Every
+function here is pure, fixed-shape, and f32 — exactly what
+``jax.jit(...).lower(...)`` needs for ahead-of-time compilation (see
+``aot.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pairwise import pairwise_block
+
+
+def kernel_block(family: str, x, y, sigma):
+    """K(X, Y) through the Pallas kernel (L1 inside L2)."""
+    return pairwise_block(x, y, sigma, family=family)
+
+
+def kernel_block_symmetric(family: str, x, sigma):
+    """K(X, X) with exact unit diagonal (kernel value at zero distance)."""
+    k = pairwise_block(x, x, sigma, family=family)
+    n = x.shape[0]
+    eye = jnp.eye(n, dtype=k.dtype)
+    return k * (1.0 - eye) + eye
+
+
+def rff_features(x, omega, b):
+    """Random Fourier features φ(x) = √(2/r) cos(x ωᵀ + b) — eq. (7)."""
+    r = omega.shape[0]
+    proj = jnp.dot(x, omega.T, preferred_element_type=jnp.float32)
+    return jnp.sqrt(2.0 / r) * jnp.cos(proj + b[None, :])
+
+
+def krr_solve(k, y, lam):
+    """Dense ridge solve (K + λI)^{-1} y (Cholesky inside XLA)."""
+    n = k.shape[0]
+    a = k + lam * jnp.eye(n, dtype=k.dtype)
+    cf = jax.scipy.linalg.cho_factor(a, lower=True)
+    return jax.scipy.linalg.cho_solve(cf, y)
+
+
+def nystrom_features(x, landmarks, sigma, family: str = "gaussian"):
+    """φ(x) = L^{-1} k(X̲, x) with K(X̲, X̲) = L Lᵀ (eq. 6's feature map)."""
+    kll = kernel_block_symmetric(family, landmarks, sigma)
+    kxl = kernel_block(family, x, landmarks, sigma)
+    l = jnp.linalg.cholesky(kll + 1e-6 * jnp.eye(kll.shape[0], dtype=kll.dtype))
+    # φ rows solve L φᵀ = k(X̲, x).
+    return jax.scipy.linalg.solve_triangular(l, kxl.T, lower=True).T

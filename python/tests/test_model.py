@@ -1,0 +1,67 @@
+"""L2 graph correctness: model.py functions against numpy references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0.0, 1.0, shape), jnp.float32)
+
+
+def test_kernel_block_symmetric_unit_diag():
+    x = rand((32, 4), 1)
+    k = model.kernel_block_symmetric("gaussian", x, jnp.float32(0.5))
+    np.testing.assert_allclose(np.asarray(jnp.diag(k)), 1.0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(k).T, atol=1e-6)
+
+
+def test_rff_features_approximate_gaussian():
+    rng = np.random.default_rng(2)
+    sigma, d, r = 0.9, 3, 8192
+    x = rand((6, d), 3)
+    omega = jnp.asarray(rng.normal(0, 1.0 / sigma, (r, d)), jnp.float32)
+    b = jnp.asarray(rng.uniform(0, 2 * np.pi, r), jnp.float32)
+    phi = model.rff_features(x, omega, b)
+    approx = np.asarray(phi) @ np.asarray(phi).T
+    want = np.asarray(ref.gaussian(x, x, sigma))
+    np.testing.assert_allclose(approx, want, atol=0.08)
+
+
+def test_krr_solve_matches_numpy():
+    n = 32
+    x = rand((n, 3), 4)
+    k = np.asarray(ref.gaussian(x, x, 0.6), np.float64)
+    y = np.asarray(rand((n, 1), 5), np.float64)
+    lam = 0.1
+    got = model.krr_solve(jnp.asarray(k, jnp.float32),
+                          jnp.asarray(y, jnp.float32), jnp.float32(lam))
+    want = np.linalg.solve(k + lam * np.eye(n), y)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-4)
+
+
+def test_nystrom_features_gram_matches_nystrom_kernel():
+    x = rand((32, 4), 6)
+    lm = rand((16, 4), 7)
+    sigma = 0.7
+    phi = model.nystrom_features(x, lm, jnp.float32(sigma))
+    gram = np.asarray(phi) @ np.asarray(phi).T
+    kxl = np.asarray(ref.gaussian(x, lm, sigma), np.float64)
+    kll = np.asarray(ref.gaussian(lm, lm, sigma), np.float64)
+    kll[np.diag_indices(16)] = 1.0
+    want = kxl @ np.linalg.solve(kll + 1e-6 * np.eye(16), kxl.T)
+    np.testing.assert_allclose(gram, want, rtol=5e-3, atol=5e-4)
+
+
+def test_graphs_are_jittable():
+    x = rand((32, 8), 8)
+    f = jax.jit(lambda a, s: model.kernel_block("gaussian", a, a, s))
+    k1 = f(x, jnp.float32(0.5))
+    k2 = f(x, jnp.float32(1.5))  # same trace, new sigma
+    assert k1.shape == (32, 32)
+    assert not np.allclose(np.asarray(k1), np.asarray(k2))

@@ -1,0 +1,132 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes, tile sizes, bandwidths and families; explicit
+cases pin the edge geometry (single tile, many tiles, d=1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.pairwise import (
+    FAMILIES,
+    default_block,
+    pairwise_block,
+    vmem_bytes,
+)
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0.0, 1.0, shape), jnp.float32)
+
+
+def assert_matches_ref(family, m, n, d, sigma, bm, bn, seed=0):
+    x = rand((m, d), seed)
+    y = rand((n, d), seed + 1)
+    got = pairwise_block(x, y, jnp.float32(sigma), family=family, bm=bm, bn=bn)
+    want = ref.block(family, x, y, sigma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_single_tile(family):
+    b = default_block(family)
+    assert_matches_ref(family, b, b, 8, 0.7, b, b)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_multi_tile_grid(family):
+    bm, bn = 16, 8
+    assert_matches_ref(family, 48, 24, 5, 1.3, bm, bn, seed=3)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_d_equals_one(family):
+    assert_matches_ref(family, 8, 8, 1, 0.4, 8, 8, seed=5)
+
+
+def test_unit_diagonal_on_identical_points():
+    x = rand((16, 4), 7)
+    for family in FAMILIES:
+        k = pairwise_block(x, x, jnp.float32(0.9), family=family, bm=16, bn=16)
+        np.testing.assert_allclose(np.asarray(jnp.diag(k)), 1.0, rtol=1e-5)
+
+
+def test_zero_padding_is_exact():
+    """Padding the feature dim with zeros must not change the result —
+    the property the Rust runtime's d-bucketing relies on."""
+    x, y = rand((16, 5), 9), rand((16, 5), 10)
+    xp = jnp.pad(x, ((0, 0), (0, 3)))
+    yp = jnp.pad(y, ((0, 0), (0, 3)))
+    for family in FAMILIES:
+        a = pairwise_block(x, y, jnp.float32(0.6), family=family, bm=16, bn=16)
+        b = pairwise_block(xp, yp, jnp.float32(0.6), family=family, bm=16, bn=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_sigma_is_runtime_input():
+    """One jitted instance must serve multiple bandwidths (no retrace:
+    sigma is traced, family/tiles are static)."""
+    x, y = rand((16, 4), 11), rand((16, 4), 12)
+    for sigma in (0.1, 0.5, 2.0):
+        got = pairwise_block(x, y, jnp.float32(sigma), family="gaussian",
+                             bm=16, bn=16)
+        want = ref.gaussian(x, y, sigma)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_rejects_bad_shapes():
+    x = rand((10, 3), 1)
+    with pytest.raises(ValueError):
+        pairwise_block(x, x, jnp.float32(1.0), family="gaussian", bm=8, bn=8)
+    with pytest.raises(ValueError):
+        pairwise_block(x, rand((10, 4), 2), jnp.float32(1.0),
+                       family="gaussian", bm=10, bn=10)
+    with pytest.raises(ValueError):
+        pairwise_block(x, x, jnp.float32(1.0), family="cauchy", bm=10, bn=10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    family=st.sampled_from(FAMILIES),
+    tiles_m=st.integers(1, 3),
+    tiles_n=st.integers(1, 3),
+    bm=st.sampled_from([4, 8, 16]),
+    d=st.integers(1, 12),
+    sigma=st.floats(0.05, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes_and_bandwidths(family, tiles_m, tiles_n, bm, d,
+                                          sigma, seed):
+    m, n = tiles_m * bm, tiles_n * bm
+    assert_matches_ref(family, m, n, d, sigma, bm, bm, seed=seed)
+
+
+def test_vmem_estimate_fits_tpu_budget():
+    """DESIGN.md §8: the default tiles must fit comfortably in 16 MiB VMEM
+    with room for double buffering."""
+    for family in FAMILIES:
+        b = default_block(family)
+        for d in (8, 32, 64, 128):
+            bytes_per_step = vmem_bytes(family, b, b, d)
+            assert bytes_per_step * 2 < 16 * 2**20, (family, d, bytes_per_step)
+
+
+def test_values_in_unit_interval():
+    x, y = rand((32, 6), 20), rand((32, 6), 21)
+    for family in FAMILIES:
+        k = np.asarray(pairwise_block(x, y, jnp.float32(0.8), family=family,
+                                      bm=16, bn=16))
+        assert (k > 0.0).all() and (k <= 1.0 + 1e-6).all()
+
+
+def test_f64_inputs_are_downcast():
+    x = jnp.asarray(np.random.default_rng(0).uniform(size=(8, 3)))
+    k = pairwise_block(x, x, jnp.float32(1.0), family="gaussian", bm=8, bn=8)
+    assert k.dtype == jnp.float32

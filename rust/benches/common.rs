@@ -1,0 +1,123 @@
+//! Shared helpers for the paper-reproduction benchmark suite.
+//!
+//! Every bench target regenerates one table/figure of the paper's
+//! evaluation (see DESIGN.md §6 for the index) and prints the same
+//! rows/series the paper plots. Sizes are scaled to this single-core
+//! testbed (the paper used a 12-core POWER8 with up to 4M points);
+//! the *shape* of the comparisons is what must hold.
+
+#![allow(dead_code)]
+
+use hck::data::{spec_by_name, synthetic, Dataset};
+use hck::kernels::KernelKind;
+use hck::learn::{EngineSpec, KrrModel, TrainConfig};
+use hck::util::timer::Timer;
+
+/// Scaled data sizes per benchmark tier. Override the scale with
+/// HCK_BENCH_SCALE (1 = quick default, 2 = double, ...).
+pub fn scale() -> f64 {
+    std::env::var("HCK_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Generate (train, test) for a named Table-1 analogue at a scaled size.
+pub fn dataset(name: &str, n_train: usize, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+    let spec = spec_by_name(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+    let s = scale();
+    synthetic::generate(
+        spec,
+        ((n_train as f64) * s) as usize,
+        ((n_test as f64) * s) as usize,
+        seed,
+    )
+}
+
+/// The four approximate kernels of Section 5, at comparable size r.
+pub fn engines(r: usize) -> Vec<EngineSpec> {
+    vec![
+        EngineSpec::Nystrom { rank: r },
+        EngineSpec::Fourier { rank: r },
+        EngineSpec::Independent { n0: r },
+        EngineSpec::Hierarchical { rank: r },
+    ]
+}
+
+/// One trained-and-evaluated measurement.
+pub struct RunResult {
+    pub metric: f64,
+    pub higher_is_better: bool,
+    pub train_secs: f64,
+    pub memory_words: usize,
+}
+
+/// Train one engine with fixed (σ, λ, seed) and evaluate.
+pub fn run_once(
+    kind: KernelKind,
+    engine: EngineSpec,
+    lambda: f64,
+    seed: u64,
+    train: &Dataset,
+    test: &Dataset,
+) -> Option<RunResult> {
+    let cfg = TrainConfig::new(kind, engine).with_lambda(lambda).with_seed(seed);
+    let t = Timer::start();
+    let model = KrrModel::fit_dataset(&cfg, train).ok()?;
+    let train_secs = t.secs();
+    let pred = model.predict(&test.x);
+    let (metric, hib) = hck::learn::metrics::score(test, &pred);
+    Some(RunResult {
+        metric,
+        higher_is_better: hib,
+        train_secs,
+        memory_words: model.memory_words,
+    })
+}
+
+/// Sweep σ over a grid with a fixed seed and return the best run
+/// (the paper's protocol: grid search σ and λ, no repetitions).
+pub fn best_over_sigma(
+    base_kind: KernelKind,
+    sigmas: &[f64],
+    engine: EngineSpec,
+    lambda: f64,
+    seed: u64,
+    train: &Dataset,
+    test: &Dataset,
+) -> Option<(f64, RunResult)> {
+    let mut best: Option<(f64, RunResult)> = None;
+    for &s in sigmas {
+        let Some(r) = run_once(base_kind.with_sigma(s), engine, lambda, seed, train, test)
+        else {
+            continue;
+        };
+        let better = match &best {
+            None => true,
+            Some((_, b)) => {
+                if r.higher_is_better {
+                    r.metric > b.metric
+                } else {
+                    r.metric < b.metric
+                }
+            }
+        };
+        if better {
+            best = Some((s, r));
+        }
+    }
+    best
+}
+
+/// σ grids the sweeps use (log-spaced, spanning the paper's 0.01–100).
+pub const SIGMA_GRID_WIDE: [f64; 8] = [0.02, 0.05, 0.15, 0.4, 1.0, 3.0, 10.0, 50.0];
+pub const SIGMA_GRID_SMALL: [f64; 4] = [0.1, 0.3, 0.8, 2.0];
+
+/// Format a metric with its direction.
+pub fn fmt_metric(value: f64, higher_is_better: bool) -> String {
+    if higher_is_better {
+        format!("acc {value:.4}")
+    } else {
+        format!("err {value:.4}")
+    }
+}

@@ -1,0 +1,117 @@
+//! Section 4.5 cost analysis — empirical verification of the claimed
+//! complexities: O(nr) matvec (Algorithm 1), O(nr²) factorization +
+//! O(nr) solve (≡ Algorithm 2), ≈4nr memory, and the per-query
+//! out-of-sample cost (Algorithm 3, eq. 23).
+//!
+//! Prints measured times with fitted scaling exponents: time ∝ n^a at
+//! fixed r (expect a ≈ 1) and ∝ r^b at fixed n (expect b ≈ 2 for the
+//! factorization).
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use hck::hkernel::{hmatvec, HConfig, HFactors, HPredictor, HSolver};
+use hck::kernels::Gaussian;
+use hck::linalg::Mat;
+use hck::util::bench::{Bench, Table};
+use hck::util::rng::Rng;
+use std::sync::Arc;
+
+fn build(n: usize, r: usize, seed: u64) -> Arc<HFactors> {
+    let (train, _) = dataset("SUSY", n, 10, seed);
+    let mut cfg = HConfig::new(Gaussian::new(0.5), r).with_seed(seed);
+    cfg.n0 = r;
+    Arc::new(HFactors::build(&train.x, cfg).expect("build"))
+}
+
+fn fit_exponent(xs: &[f64], ys: &[f64]) -> f64 {
+    // Least-squares slope of log y on log x.
+    let n = xs.len() as f64;
+    let lx: Vec<f64> = xs.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|v| v.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let cov: f64 = lx.iter().zip(&ly).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let var: f64 = lx.iter().map(|a| (a - mx) * (a - mx)).sum();
+    cov / var
+}
+
+fn main() {
+    let bench = Bench { warmup_iters: 1, measure_iters: 3, max_secs: 60.0 };
+
+    // ---- Scaling in n at fixed r ----
+    println!("— scaling in n (r = 64) —");
+    let mut table = Table::new(&["n", "matvec (ms)", "factor (ms)", "solve (ms)", "mem words/4nr"]);
+    let ns = [2000usize, 4000, 8000, 16000];
+    let mut t_mv = Vec::new();
+    let mut t_fac = Vec::new();
+    let mut t_sol = Vec::new();
+    for &n in &ns {
+        let f = build(n, 64, 1);
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+        let m_mv = bench.run("mv", || hmatvec(&f, &b));
+        let solver = HSolver::factor(&f, 0.01).unwrap();
+        let m_fac = bench.run("fac", || HSolver::factor(&f, 0.01).unwrap());
+        let m_sol = bench.run("sol", || solver.solve(&b));
+        let mem_ratio = f.memory_words() as f64 / (4.0 * (n * 64) as f64);
+        t_mv.push(m_mv.median());
+        t_fac.push(m_fac.median());
+        t_sol.push(m_sol.median());
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}", m_mv.median() * 1e3),
+            format!("{:.1}", m_fac.median() * 1e3),
+            format!("{:.2}", m_sol.median() * 1e3),
+            format!("{:.2}", mem_ratio),
+        ]);
+    }
+    table.print();
+    let nsf: Vec<f64> = ns.iter().map(|&v| v as f64).collect();
+    println!(
+        "fitted exponents in n: matvec {:.2} (expect ≈1), factor {:.2} (≈1), solve {:.2} (≈1)\n",
+        fit_exponent(&nsf, &t_mv),
+        fit_exponent(&nsf, &t_fac),
+        fit_exponent(&nsf, &t_sol)
+    );
+
+    // ---- Scaling in r at fixed n ----
+    println!("— scaling in r (n = 8192) —");
+    let mut table = Table::new(&["r", "matvec (ms)", "factor (ms)", "oos (µs/query)"]);
+    let rs = [32usize, 64, 128, 256];
+    let mut fac_r = Vec::new();
+    for &r in &rs {
+        let f = build(8192, r, 2);
+        let b: Vec<f64> = (0..8192).map(|i| (i as f64 * 0.01).cos()).collect();
+        let m_mv = bench.run("mv", || hmatvec(&f, &b));
+        let m_fac = bench.run("fac", || HSolver::factor(&f, 0.01).unwrap());
+        fac_r.push(m_fac.median());
+        // Algorithm 3 per-query latency.
+        let w = Mat::from_vec(8192, 1, b.clone());
+        let pred = HPredictor::new(f.clone(), &w);
+        let mut rng = Rng::new(3);
+        let queries: Vec<Vec<f64>> = (0..200)
+            .map(|_| (0..f.x.cols()).map(|_| rng.uniform(0.0, 1.0)).collect())
+            .collect();
+        let m_oos = bench.run("oos", || {
+            let mut acc = 0.0;
+            for q in &queries {
+                acc += pred.predict(q)[0];
+            }
+            acc
+        });
+        table.row(&[
+            r.to_string(),
+            format!("{:.2}", m_mv.median() * 1e3),
+            format!("{:.1}", m_fac.median() * 1e3),
+            format!("{:.1}", m_oos.median() * 1e6 / 200.0),
+        ]);
+    }
+    table.print();
+    let rsf: Vec<f64> = rs.iter().map(|&v| v as f64).collect();
+    println!(
+        "fitted exponent of factor time in r: {:.2} (expect ≈2 for O(nr²); note the\n\
+         n/r leaf count shrinks as r grows, so the pure-r exponent reads below 2)",
+        fit_exponent(&rsf, &fac_r)
+    );
+}

@@ -1,0 +1,113 @@
+//! Figure 4 + Table 2 — partitioning approaches.
+//!
+//! Figure 4: error-vs-σ bands of the hierarchical kernel under random
+//! projection vs PCA partitioning (means nearly identical; PCA slightly
+//! tighter bands).
+//!
+//! Table 2: the *cost* of PCA — overhead of the dominant-singular-vector
+//! computation relative to (a) the partitioning step and (b) total
+//! training, per data set and r. Paper finding: overhead vs partitioning
+//! easily exceeds 100% (thousands of % for mnist, the largest d).
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use hck::hkernel::{size_rule_from_rank, HConfig, HFactors, HSolver};
+use hck::kernels::{Gaussian, NativeEvaluator};
+use hck::learn::EngineSpec;
+use hck::partition::{PartitionTree, SplitRule};
+use hck::util::bench::{mean_std, Table};
+use hck::util::rng::Rng;
+use hck::util::timer::Timer;
+
+fn main() {
+    fig4();
+    table2();
+}
+
+fn fig4() {
+    let repeats = 8;
+    let lambda = 0.01;
+    let (train, test) = dataset("cadata", 2000, 500, 3);
+    println!("Figure 4 — hierarchical error vs sigma: random projection vs PCA\n");
+    for (label, rule) in [
+        ("random-projection", SplitRule::RandomProjection),
+        ("pca", SplitRule::Pca { iters: 10 }),
+    ] {
+        println!("--- {label}, r = 64 ---");
+        let mut table = Table::new(&["sigma", "mean err", "std"]);
+        for &sigma in SIGMA_GRID_WIDE.iter() {
+            let errs: Vec<f64> = (0..repeats)
+                .filter_map(|seed| {
+                    let cfg = hck::learn::TrainConfig::new(
+                        Gaussian::new(sigma),
+                        EngineSpec::Hierarchical { rank: 64 },
+                    )
+                    .with_lambda(lambda)
+                    .with_seed(seed)
+                    .with_rule(rule);
+                    hck::learn::KrrModel::fit_dataset(&cfg, &train)
+                        .ok()
+                        .map(|m| m.evaluate(&test))
+                })
+                .collect();
+            let (mean, std) = mean_std(&errs);
+            table.row(&[format!("{sigma}"), format!("{mean:.4}"), format!("{std:.4}")]);
+        }
+        table.print();
+        println!();
+    }
+}
+
+fn table2() {
+    println!("Table 2 — PCA overhead vs partitioning and vs total training\n");
+    let sets: &[(&str, usize)] = &[
+        ("cadata", 2000),
+        ("YearPredictionMSD", 2000),
+        ("ijcnn1", 2000),
+        ("covtype.binary", 2000),
+        ("SUSY", 2000),
+        ("mnist", 1500),
+        ("acoustic", 2000),
+        ("covtype", 2000),
+    ];
+    let mut table = Table::new(&["dataset", "r", "vs partitioning", "vs training"]);
+    for &(name, n) in sets {
+        let (train, _) = dataset(name, n, 50, 7);
+        for j in [4u32, 3] {
+            let (n0, r, _) = size_rule_from_rank(train.n(), train.n() >> j);
+            // Time RP partitioning vs PCA partitioning.
+            let time_rule = |rule: SplitRule| {
+                let mut rng = Rng::new(11);
+                let t = Timer::start();
+                let tree = PartitionTree::build(&train.x, n0, rule, &mut rng);
+                (t.secs(), tree)
+            };
+            let (t_rp, tree) = time_rule(SplitRule::RandomProjection);
+            let (t_pca, _) = time_rule(SplitRule::Pca { iters: 10 });
+            let overhead = (t_pca - t_rp).max(0.0);
+            // Total training time with RP (instantiate + factor + solve).
+            let t_total = {
+                let mut cfg = HConfig::new(Gaussian::new(0.5), r).with_seed(11);
+                cfg.n0 = n0;
+                let mut rng = Rng::new(11);
+                let t = Timer::start();
+                let f = HFactors::build_on_tree(&train.x, cfg, tree, &mut rng, &NativeEvaluator)
+                    .expect("build");
+                let solver = HSolver::factor(&f, 0.01).expect("factor");
+                let y: Vec<f64> = train.y.clone();
+                let _ = solver.solve(&f.to_tree_order(&y));
+                t.secs() + t_rp
+            };
+            table.row(&[
+                name.to_string(),
+                r.to_string(),
+                format!("{:.1}%", 100.0 * overhead / t_rp.max(1e-9)),
+                format!("{:.1}%", 100.0 * overhead / t_total.max(1e-9)),
+            ]);
+        }
+    }
+    table.print();
+    println!("\n(paper: overhead vs partitioning often >100%, mnist extreme due to d=780)");
+}

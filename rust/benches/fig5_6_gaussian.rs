@@ -1,0 +1,87 @@
+//! Figures 5–6 — the main comparison: performance vs r, training time and
+//! memory for the four approximate kernels on all eight Table-1
+//! analogues, Gaussian base kernel. σ is grid-searched per (engine, r)
+//! with a fixed seed (the paper's protocol), λ = 0.01.
+//!
+//! Paper findings to reproduce:
+//! - hierarchical almost always best performance-vs-r (except YearPred);
+//! - Fourier fastest, then Nyström ≈ independent, hierarchical slowest;
+//! - covtype (binary + multiclass): large gap between full-rank local
+//!   kernels and low-rank ones.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use hck::kernels::Gaussian;
+use hck::util::bench::Table;
+
+fn main() {
+    let lambda = 0.01;
+    let sets: &[(&str, usize, usize)] = &[
+        ("cadata", 2000, 500),
+        ("YearPredictionMSD", 2500, 600),
+        ("ijcnn1", 2500, 600),
+        ("covtype.binary", 2500, 600),
+        ("SUSY", 3000, 700),
+        ("mnist", 1500, 400),
+        ("acoustic", 2500, 600),
+        ("covtype", 2500, 600),
+    ];
+    let ranks = [32usize, 64, 128];
+    println!("Figures 5–6 — performance / time / memory vs r (Gaussian kernel, λ={lambda})\n");
+    for &(name, ntr, nte) in sets {
+        let (train, test) = dataset(name, ntr, nte, 5);
+        println!(
+            "=== {name} (n={} d={} task={:?}) ===",
+            train.n(),
+            train.d(),
+            train.task
+        );
+        let mut table =
+            Table::new(&["engine", "r", "metric", "sigma*", "train (s)", "mem (norm r/pt)"]);
+        let mut winners: Vec<(f64, bool, String)> = Vec::new();
+        for &r in &ranks {
+            for engine in engines(r) {
+                let Some((sig, res)) = best_over_sigma(
+                    Gaussian::new(1.0),
+                    &SIGMA_GRID_SMALL,
+                    engine,
+                    lambda,
+                    9,
+                    &train,
+                    &test,
+                ) else {
+                    continue;
+                };
+                // Normalized memory (words per training point) — the
+                // paper's §5 model: r for low-rank/independent, ~4r for
+                // hierarchical.
+                let mem_per_pt = res.memory_words as f64 / train.n() as f64;
+                table.row(&[
+                    engine.name().to_string(),
+                    r.to_string(),
+                    fmt_metric(res.metric, res.higher_is_better),
+                    format!("{sig}"),
+                    format!("{:.2}", res.train_secs),
+                    format!("{:.0}", mem_per_pt),
+                ]);
+                if r == ranks[ranks.len() - 1] {
+                    winners.push((res.metric, res.higher_is_better, engine.name().to_string()));
+                }
+            }
+        }
+        table.print();
+        // Who wins at the largest r?
+        if let Some(best) = winners
+            .iter()
+            .max_by(|a, b| {
+                let va = if a.1 { a.0 } else { -a.0 };
+                let vb = if b.1 { b.0 } else { -b.0 };
+                va.partial_cmp(&vb).unwrap()
+            })
+        {
+            println!("best at r={}: {}\n", ranks[ranks.len() - 1], best.2);
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Figure 8 — kernel PCA: alignment difference ‖U − ŨM‖_F/‖U‖_F between
+//! each approximate kernel's 3-d embedding and the exact kernel's, vs r.
+//!
+//! Paper finding: the hierarchical kernel generally attains the smallest
+//! alignment difference.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use hck::approx::{FourierFeatures, NystromFeatures};
+use hck::hkernel::{HConfig, HFactors};
+use hck::kernels::{kernel_block, Gaussian};
+use hck::learn::kpca::{
+    alignment_difference, embed_from_kernel_matrix, kpca_embed_dense, kpca_embed_features,
+    kpca_embed_hierarchical,
+};
+use hck::util::bench::Table;
+use hck::util::rng::Rng;
+
+fn main() {
+    let dim = 3;
+    let sets = [("cadata", 0.5), ("ijcnn1", 0.4), ("acoustic", 0.6), ("SUSY", 0.5)];
+    for (name, sigma) in sets {
+        let (train, _) = dataset(name, 600, 50, 9);
+        let x = &train.x;
+        let kind = Gaussian::new(sigma);
+        let u_exact = kpca_embed_dense(kind, x, dim).expect("exact kpca");
+        println!(
+            "Figure 8 — kPCA alignment difference on {name} (n={}, σ={sigma}, dim={dim})\n",
+            x.rows()
+        );
+        let mut table = Table::new(&["r", "nystrom", "fourier", "independent", "hierarchical"]);
+        for r in [16usize, 32, 64, 128] {
+            let mut rng = Rng::new(50 + r as u64);
+            let nys = NystromFeatures::fit(kind, x, r, &mut rng)
+                .and_then(|f| kpca_embed_features(&f.transform(x), dim))
+                .and_then(|u| alignment_difference(&u_exact, &u))
+                .map(|d| format!("{d:.4}"))
+                .unwrap_or_else(|_| "-".into());
+            let fou = FourierFeatures::sample(kind, x.cols(), r, &mut rng)
+                .and_then(|f| kpca_embed_features(&f.transform(x), dim))
+                .and_then(|u| alignment_difference(&u_exact, &u))
+                .map(|d| format!("{d:.4}"))
+                .unwrap_or_else(|_| "-".into());
+            // Shared tree for independent + hierarchical (paper's setup:
+            // the independent kernel flattens the same partitioning).
+            let mut cfg = HConfig::new(kind, r).with_seed(70 + r as u64);
+            cfg.n0 = r;
+            let f = HFactors::build(x, cfg).expect("factors");
+            let ind = {
+                let kfull = kernel_block(kind, &f.rows_to_tree_order(x));
+                let mut k = hck::linalg::Mat::zeros(x.rows(), x.rows());
+                for &leaf in &f.tree.leaves() {
+                    let nd = &f.tree.nodes[leaf];
+                    for a in nd.lo..nd.hi {
+                        for b in nd.lo..nd.hi {
+                            k[(a, b)] = kfull[(a, b)];
+                        }
+                    }
+                }
+                embed_from_kernel_matrix(&k, dim)
+                    .map(|u_tree| f.rows_from_tree_order(&u_tree))
+                    .and_then(|u| alignment_difference(&u_exact, &u))
+                    .map(|d| format!("{d:.4}"))
+                    .unwrap_or_else(|_| "-".into())
+            };
+            let hier = kpca_embed_hierarchical(&f, dim, 60, &mut rng)
+                .and_then(|u| alignment_difference(&u_exact, &u))
+                .map(|d| format!("{d:.4}"))
+                .unwrap_or_else(|_| "-".into());
+            table.row(&[r.to_string(), nys, fou, ind, hier]);
+        }
+        table.print();
+        println!();
+    }
+}

@@ -1,0 +1,77 @@
+//! Figures 9–12 — the Figures 5–6 comparison repeated with the Laplace
+//! base kernel (Figs. 9–10) and the inverse multiquadric (Figs. 11–12;
+//! no Fourier column — its spectral density is not tabulated, paper
+//! §5.4).
+//!
+//! Paper finding: results are qualitatively the same as the Gaussian —
+//! the (optimal) λ is large relative to kernel values, so base-kernel
+//! smoothness matters little.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use hck::kernels::{Imq, KernelKind, Laplace};
+use hck::learn::EngineSpec;
+use hck::util::bench::Table;
+
+fn main() {
+    let lambda = 0.01;
+    let sets: &[(&str, usize, usize)] = &[
+        ("cadata", 2000, 500),
+        ("covtype.binary", 2500, 600),
+        ("SUSY", 2500, 600),
+        ("acoustic", 2000, 500),
+    ];
+    for (figs, base, with_fourier) in [
+        ("Figures 9–10 (Laplace)", Laplace::new(1.0), true),
+        ("Figures 11–12 (inverse multiquadric)", Imq::new(1.0), false),
+    ] {
+        println!("=== {figs}, λ={lambda} ===\n");
+        for &(name, ntr, nte) in sets {
+            let (train, test) = dataset(name, ntr, nte, 5);
+            println!("--- {name} (n={}, task={:?}) ---", train.n(), train.task);
+            let mut table = Table::new(&["engine", "r", "metric", "train (s)"]);
+            for r in [32usize, 128] {
+                let mut specs: Vec<EngineSpec> = vec![
+                    EngineSpec::Nystrom { rank: r },
+                    EngineSpec::Independent { n0: r },
+                    EngineSpec::Hierarchical { rank: r },
+                ];
+                if with_fourier {
+                    specs.insert(1, EngineSpec::Fourier { rank: r });
+                }
+                for engine in specs {
+                    match best_over_sigma(
+                        base_kind(base),
+                        &SIGMA_GRID_SMALL,
+                        engine,
+                        lambda,
+                        9,
+                        &train,
+                        &test,
+                    ) {
+                        Some((_, res)) => table.row(&[
+                            engine.name().to_string(),
+                            r.to_string(),
+                            fmt_metric(res.metric, res.higher_is_better),
+                            format!("{:.2}", res.train_secs),
+                        ]),
+                        None => table.row(&[
+                            engine.name().to_string(),
+                            r.to_string(),
+                            "n/a".into(),
+                            "-".into(),
+                        ]),
+                    }
+                }
+            }
+            table.print();
+            println!();
+        }
+    }
+}
+
+fn base_kind(k: KernelKind) -> KernelKind {
+    k
+}

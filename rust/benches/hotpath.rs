@@ -1,0 +1,151 @@
+//! Hot-path microbenchmarks — the profiling substrate for the
+//! EXPERIMENTS.md §Perf iteration log.
+//!
+//! Covers: the gemm microkernel (GFLOP/s at factor-relevant sizes),
+//! native kernel-block evaluation (gemm expansion vs naive), the PJRT
+//! AOT path per tile, Cholesky, the O(nr) matvec and the per-query
+//! Algorithm-3 latency, and coordinator batching overhead.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use hck::kernels::{kernel_cross, Gaussian, KernelKind, Laplace};
+use hck::linalg::{gemm, Cholesky, Mat, Trans};
+use hck::util::bench::{fmt_secs, Bench, Table};
+use hck::util::rng::Rng;
+
+fn main() {
+    let bench = Bench { warmup_iters: 2, measure_iters: 7, max_secs: 20.0 };
+    let mut rng = Rng::new(1);
+
+    // ---- gemm ----
+    println!("— gemm (C = A·B, square) —");
+    let mut table = Table::new(&["size", "median", "GFLOP/s"]);
+    for n in [64usize, 128, 256, 512] {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut c = Mat::zeros(n, n);
+        let m = bench.run("gemm", || {
+            gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+            c.as_slice()[0]
+        });
+        let flops = 2.0 * (n as f64).powi(3);
+        table.row(&[
+            format!("{n}"),
+            fmt_secs(m.median()),
+            format!("{:.2}", flops / m.median() / 1e9),
+        ]);
+    }
+    table.print();
+
+    // ---- kernel blocks: native ----
+    println!("\n— kernel block K(X,Y), 512x512, d=32 —");
+    let x = Mat::from_fn(512, 32, |_, _| rng.uniform(0.0, 1.0));
+    let y = Mat::from_fn(512, 32, |_, _| rng.uniform(0.0, 1.0));
+    let mut table = Table::new(&["path", "median", "Melem/s"]);
+    for (label, kind) in [
+        ("native gaussian (gemm expansion)", Gaussian::new(0.5)),
+        ("native laplace (blocked direct)", Laplace::new(0.5)),
+    ] {
+        let m = bench.run(label, || kernel_cross(kind, &x, &y));
+        table.row(&[
+            label.to_string(),
+            fmt_secs(m.median()),
+            format!("{:.1}", 512.0 * 512.0 / m.median() / 1e6),
+        ]);
+    }
+    // PJRT path, if artifacts exist.
+    if let Ok(engine) = hck::runtime::PjrtEngine::load_default() {
+        for (label, kind) in [
+            ("pjrt gaussian (AOT XLA f32)", Gaussian::new(0.5)),
+            ("pjrt laplace (AOT XLA f32)", Laplace::new(0.5)),
+        ] {
+            let _ = engine.kernel_block(kind, &x, &y); // compile once
+            let m = bench.run(label, || engine.kernel_block(kind, &x, &y).unwrap());
+            table.row(&[
+                label.to_string(),
+                fmt_secs(m.median()),
+                format!("{:.1}", 512.0 * 512.0 / m.median() / 1e6),
+            ]);
+        }
+    } else {
+        println!("(PJRT rows skipped: run `make artifacts`)");
+    }
+    table.print();
+
+    // ---- Cholesky at factor sizes ----
+    println!("\n— Cholesky (SPD, kernel-matrix-like) —");
+    let mut table = Table::new(&["n", "median"]);
+    for n in [128usize, 256, 512] {
+        let pts = Mat::from_fn(n, 8, |_, _| rng.uniform(0.0, 1.0));
+        let mut k = kernel_cross(Gaussian::new(0.5), &pts, &pts);
+        k.add_diag(0.1);
+        let m = bench.run("chol", || Cholesky::new(&k).unwrap().logdet());
+        table.row(&[n.to_string(), fmt_secs(m.median())]);
+    }
+    table.print();
+
+    // ---- end-to-end hot paths ----
+    println!("\n— hierarchical hot paths (n=8000, r=64) —");
+    let (train, test) = dataset("SUSY", 8000, 200, 3);
+    let mut cfg = hck::hkernel::HConfig::new(Gaussian::new(0.5), 64).with_seed(4);
+    cfg.n0 = 64;
+    let f = std::sync::Arc::new(hck::hkernel::HFactors::build(&train.x, cfg).unwrap());
+    let b: Vec<f64> = (0..8000).map(|i| (i as f64 * 0.01).sin()).collect();
+    let mut table = Table::new(&["path", "median"]);
+    let m = bench.run("matvec", || hck::hkernel::hmatvec(&f, &b));
+    table.row(&["Algorithm 1 matvec (O(nr))".into(), fmt_secs(m.median())]);
+    let m = bench.run("factor", || hck::hkernel::HSolver::factor(&f, 0.01).unwrap());
+    table.row(&["solver factor (O(nr²))".into(), fmt_secs(m.median())]);
+    let solver = hck::hkernel::HSolver::factor(&f, 0.01).unwrap();
+    let m = bench.run("solve", || solver.solve(&b));
+    table.row(&["solver solve per rhs (O(nr))".into(), fmt_secs(m.median())]);
+    let w = Mat::from_vec(8000, 1, solver.solve(&f.to_tree_order(&b)));
+    let wo = f.rows_from_tree_order(&w);
+    let pred = hck::hkernel::HPredictor::new(f.clone(), &wo);
+    let m = bench.run("oos", || {
+        let mut acc = 0.0;
+        for i in 0..test.n() {
+            acc += pred.predict(test.x.row(i))[0];
+        }
+        acc
+    });
+    table.row(&[
+        "Algorithm 3 per query".into(),
+        fmt_secs(m.median() / test.n() as f64),
+    ]);
+    table.print();
+
+    // ---- coordinator dispatch overhead ----
+    println!("\n— coordinator batching overhead (trivial model) —");
+    struct Noop;
+    impl hck::coordinator::Predictor for Noop {
+        fn predict_batch(&self, q: &Mat) -> Mat {
+            Mat::zeros(q.rows(), 1)
+        }
+        fn dim(&self) -> usize {
+            4
+        }
+        fn outputs(&self) -> usize {
+            1
+        }
+    }
+    let svc = hck::coordinator::PredictionService::start(
+        std::sync::Arc::new(Noop),
+        hck::coordinator::BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_micros(200),
+        },
+    );
+    let m = bench.run("roundtrip", || svc.predict(vec![0.0; 4]).unwrap());
+    println!(
+        "single-request queue→batch→respond round trip: {} (floor on serving latency)",
+        fmt_secs(m.median())
+    );
+    let _ = kind_guard();
+}
+
+fn kind_guard() -> KernelKind {
+    Gaussian::new(1.0)
+}

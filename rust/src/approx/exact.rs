@@ -1,0 +1,65 @@
+//! Exact (non-approximate) dense kernel ridge regression — eq. (2).
+//!
+//! O(n²) memory, O(n³) time: the reference the paper's Figure 7 compares
+//! against (there computed on an EC2 cluster; here at reduced n).
+
+use crate::error::Result;
+use crate::kernels::{kernel_block, kernel_cross, KernelKind};
+use crate::linalg::{matmul, Cholesky, Mat, Trans};
+
+/// Fitted dense KRR.
+pub struct ExactKrr {
+    kind: KernelKind,
+    x: Mat,
+    /// Dual coefficients (n x m).
+    alpha: Mat,
+}
+
+impl ExactKrr {
+    /// Fit: α = (K + λI)^{-1} y.
+    pub fn fit(kind: KernelKind, x: &Mat, y: &Mat, lambda: f64) -> Result<ExactKrr> {
+        let mut k = kernel_block(kind, x);
+        k.add_diag(lambda);
+        let chol = Cholesky::new_jittered(&k, 30)?;
+        Ok(ExactKrr { kind, x: x.clone(), alpha: chol.solve_mat(y) })
+    }
+
+    /// Predict: K(Q, X) α.
+    pub fn predict(&self, q: &Mat) -> Mat {
+        matmul(&kernel_cross(self.kind, q, &self.x), Trans::No, &self.alpha, Trans::No)
+    }
+
+    /// Dual coefficients.
+    pub fn alpha(&self) -> &Mat {
+        &self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Gaussian;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn interpolates_at_tiny_lambda() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(20, 2, |_, _| rng.uniform(0.0, 1.0));
+        let y = Mat::from_fn(20, 1, |i, _| (x[(i, 0)] * 5.0).sin());
+        let model = ExactKrr::fit(Gaussian::new(0.4), &x, &y, 1e-10).unwrap();
+        let pred = model.predict(&x);
+        let mut diff = pred;
+        diff.axpy(-1.0, &y);
+        assert!(diff.max_abs() < 1e-5, "{}", diff.max_abs());
+    }
+
+    #[test]
+    fn regularization_shrinks_predictions() {
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(30, 2, |_, _| rng.uniform(0.0, 1.0));
+        let y = Mat::from_fn(30, 1, |_, _| rng.normal());
+        let loose = ExactKrr::fit(Gaussian::new(0.4), &x, &y, 1e-8).unwrap();
+        let tight = ExactKrr::fit(Gaussian::new(0.4), &x, &y, 100.0).unwrap();
+        assert!(tight.predict(&x).fro_norm() < 0.1 * loose.predict(&x).fro_norm());
+    }
+}

@@ -1,0 +1,189 @@
+//! Random Fourier features (Rahimi–Recht), eq. (7) of the paper.
+//!
+//! φ_i(x) = sqrt(2/r) cos(ω_iᵀ x + b_i), b ~ U(0, 2π) and ω sampled from
+//! the kernel's normalized spectral density:
+//! - Gaussian exp(−|δ|²/(2σ²)) → ω ~ N(0, σ^{-2} I);
+//! - Laplace exp(−|δ|₁/σ) → ω_j ~ Cauchy(0, 1/σ) independently.
+//!
+//! The paper notes RFF applies only to stationary kernels with a known
+//! spectral density — the inverse multiquadric has none tabulated, so
+//! Figures 11–12 omit the Fourier column; we return an error likewise.
+
+use crate::error::{Error, Result};
+use crate::kernels::KernelKind;
+use crate::linalg::{gemm, matmul, Mat, Trans};
+use crate::util::rng::Rng;
+
+/// Sampled random Fourier feature map.
+pub struct FourierFeatures {
+    /// Frequencies (r x d).
+    pub omega: Mat,
+    /// Phases (r).
+    pub b: Vec<f64>,
+}
+
+impl FourierFeatures {
+    /// Sample r frequencies for the given kernel.
+    pub fn sample(kind: KernelKind, d: usize, r: usize, rng: &mut Rng) -> Result<FourierFeatures> {
+        let r = r.max(1);
+        let omega = match kind {
+            KernelKind::Gaussian { sigma } => {
+                Mat::from_fn(r, d, |_, _| rng.normal() / sigma)
+            }
+            KernelKind::Laplace { sigma } => {
+                Mat::from_fn(r, d, |_, _| rng.cauchy() / sigma)
+            }
+            other => {
+                return Err(Error::config(format!(
+                    "random Fourier features need a stationary kernel with known \
+                     spectral density; {:?} is not supported (cf. paper §5.4)",
+                    other.family()
+                )))
+            }
+        };
+        let b: Vec<f64> = (0..r).map(|_| rng.uniform(0.0, 2.0 * std::f64::consts::PI)).collect();
+        Ok(FourierFeatures { omega, b })
+    }
+
+    /// Feature dimension r.
+    pub fn dim(&self) -> usize {
+        self.omega.rows()
+    }
+
+    /// φ(Q): (q x r) matrix of sqrt(2/r) cos(Q ωᵀ + b).
+    pub fn transform(&self, q: &Mat) -> Mat {
+        let r = self.dim();
+        let mut proj = Mat::zeros(q.rows(), r);
+        gemm(1.0, q, Trans::No, &self.omega, Trans::Yes, 0.0, &mut proj);
+        let scale = (2.0 / r as f64).sqrt();
+        for i in 0..q.rows() {
+            let row = proj.row_mut(i);
+            for (v, &bb) in row.iter_mut().zip(self.b.iter()) {
+                *v = scale * (*v + bb).cos();
+            }
+        }
+        proj
+    }
+}
+
+/// Ridge regression on random Fourier features.
+pub struct FourierKrr {
+    features: FourierFeatures,
+    w: Mat,
+}
+
+impl FourierKrr {
+    /// Fit on features `x` and targets `y` (n x m).
+    pub fn fit(
+        kind: KernelKind,
+        x: &Mat,
+        y: &Mat,
+        r: usize,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<FourierKrr> {
+        let features = FourierFeatures::sample(kind, x.cols(), r, rng)?;
+        let phi = features.transform(x);
+        let w = super::nystrom::primal_ridge(&phi, y, lambda)?;
+        Ok(FourierKrr { features, w })
+    }
+
+    /// Predict for query rows.
+    pub fn predict(&self, q: &Mat) -> Mat {
+        matmul(&self.features.transform(q), Trans::No, &self.w, Trans::No)
+    }
+
+    /// Estimated memory in f64 words (r per training point, §5).
+    pub fn memory_words(&self, n_train: usize) -> usize {
+        n_train * self.features.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Gaussian, Imq, Laplace};
+    use crate::linalg::matrix::sqdist;
+
+    #[test]
+    fn gaussian_kernel_approximated() {
+        let mut rng = Rng::new(1);
+        let kind = Gaussian::new(0.8);
+        let d = 3;
+        let feat = FourierFeatures::sample(kind, d, 4096, &mut rng).unwrap();
+        let x = Mat::from_fn(8, d, |_, _| rng.uniform(0.0, 1.0));
+        let phi = feat.transform(&x);
+        let approx = matmul(&phi, Trans::No, &phi, Trans::Yes);
+        for i in 0..8 {
+            for j in 0..8 {
+                let true_k = kind.eval(x.row(i), x.row(j));
+                assert!(
+                    (approx[(i, j)] - true_k).abs() < 0.08,
+                    "({i},{j}): {} vs {}",
+                    approx[(i, j)],
+                    true_k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn laplace_kernel_approximated() {
+        let mut rng = Rng::new(2);
+        let kind = Laplace::new(1.2);
+        let feat = FourierFeatures::sample(kind, 2, 8192, &mut rng).unwrap();
+        let x = Mat::from_fn(6, 2, |_, _| rng.uniform(0.0, 1.0));
+        let phi = feat.transform(&x);
+        let approx = matmul(&phi, Trans::No, &phi, Trans::Yes);
+        for i in 0..6 {
+            for j in 0..6 {
+                let true_k = kind.eval(x.row(i), x.row(j));
+                assert!(
+                    (approx[(i, j)] - true_k).abs() < 0.1,
+                    "({i},{j}): {} vs {}",
+                    approx[(i, j)],
+                    true_k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn imq_rejected() {
+        let mut rng = Rng::new(3);
+        assert!(FourierFeatures::sample(Imq::new(1.0), 2, 16, &mut rng).is_err());
+    }
+
+    #[test]
+    fn krr_learns_smooth_target() {
+        let mut rng = Rng::new(4);
+        let n = 400;
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform(0.0, 1.0));
+        let y = Mat::from_fn(n, 1, |i, _| {
+            (4.0 * x[(i, 0)]).sin() * (2.0 * x[(i, 1)]).cos()
+        });
+        let model = FourierKrr::fit(Gaussian::new(0.3), &x, &y, 300, 1e-4, &mut rng).unwrap();
+        let pred = model.predict(&x);
+        let mut diff = pred;
+        diff.axpy(-1.0, &y);
+        let rel = diff.fro_norm() / y.fro_norm();
+        assert!(rel < 0.1, "train rel err {rel}");
+    }
+
+    #[test]
+    fn shift_invariance_sanity() {
+        // k(x, y) depends only on x − y: feature inner products for
+        // shifted pairs should agree in expectation. Weak check at high r.
+        let mut rng = Rng::new(5);
+        let kind = Gaussian::new(1.0);
+        let feat = FourierFeatures::sample(kind, 2, 4096, &mut rng).unwrap();
+        let a = Mat::from_vec(2, 2, vec![0.1, 0.2, 0.4, 0.6]);
+        let b = Mat::from_vec(2, 2, vec![0.5, 0.5, 0.8, 0.9]);
+        assert!((sqdist(a.row(0), a.row(1)) - sqdist(b.row(0), b.row(1))).abs() < 1e-12);
+        let pa = feat.transform(&a);
+        let pb = feat.transform(&b);
+        let ka = crate::linalg::matrix::dot(pa.row(0), pa.row(1));
+        let kb = crate::linalg::matrix::dot(pb.row(0), pb.row(1));
+        assert!((ka - kb).abs() < 0.1, "{ka} vs {kb}");
+    }
+}

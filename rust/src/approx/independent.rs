@@ -1,0 +1,196 @@
+//! Cross-domain independent kernel (eq. 8): keep only the block-diagonal
+//! of the kernel matrix over a flat partitioning of the domain.
+//!
+//! Training decouples into one exact KRR per leaf domain; prediction
+//! routes the query to its domain and uses that leaf's coefficients (the
+//! covariance to every other domain is zero). The partitioning reuses the
+//! same tree machinery as the hierarchical kernel with the hierarchy
+//! flattened — exactly the comparison setup of Section 5.1.
+
+use crate::error::Result;
+use crate::kernels::{kernel_block, kernel_cross, KernelKind};
+use crate::linalg::{matmul, Cholesky, Mat, Trans};
+use crate::partition::{PartitionTree, SplitRule};
+use crate::util::rng::Rng;
+
+/// Fitted independent-kernel KRR.
+pub struct IndependentKrr {
+    kind: KernelKind,
+    tree: PartitionTree,
+    /// Training features (original order).
+    x: Mat,
+    /// Per-leaf dual coefficients α = (K_leaf + λI)^{-1} y_leaf (n_leaf x m),
+    /// indexed by node id.
+    alpha: Vec<Option<Mat>>,
+}
+
+impl IndependentKrr {
+    /// Fit with a fresh partitioning (leaf size n0, given split rule).
+    pub fn fit(
+        kind: KernelKind,
+        x: &Mat,
+        y: &Mat,
+        n0: usize,
+        rule: SplitRule,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<IndependentKrr> {
+        let tree = PartitionTree::build(x, n0.max(1), rule, rng);
+        Self::fit_on_tree(kind, x, y, tree, lambda)
+    }
+
+    /// Fit on an existing tree (its hierarchy is ignored; only leaves
+    /// matter).
+    pub fn fit_on_tree(
+        kind: KernelKind,
+        x: &Mat,
+        y: &Mat,
+        tree: PartitionTree,
+        lambda: f64,
+    ) -> Result<IndependentKrr> {
+        let mut alpha: Vec<Option<Mat>> = (0..tree.nodes.len()).map(|_| None).collect();
+        for &leaf in &tree.leaves() {
+            let rows: Vec<usize> = tree.node_points(leaf).to_vec();
+            let xl = x.select_rows(&rows);
+            let yl = y.select_rows(&rows);
+            let mut k = kernel_block(kind, &xl);
+            k.add_diag(lambda);
+            let chol = Cholesky::new_jittered(&k, 30)?;
+            alpha[leaf] = Some(chol.solve_mat(&yl));
+        }
+        Ok(IndependentKrr { kind, tree, x: x.clone(), alpha })
+    }
+
+    /// Predict for query rows: route each to its leaf, evaluate against
+    /// that leaf's points only.
+    pub fn predict(&self, q: &Mat) -> Mat {
+        let m = self
+            .alpha
+            .iter()
+            .flatten()
+            .next()
+            .map(|a| a.cols())
+            .unwrap_or(1);
+        let mut out = Mat::zeros(q.rows(), m);
+        for i in 0..q.rows() {
+            let leaf = self.tree.route_leaf(q.row(i));
+            let rows = self.tree.node_points(leaf);
+            let xl = self.x.select_rows(rows);
+            let kq = kernel_cross(self.kind, &q.row_range(i, i + 1), &xl);
+            let pred = matmul(&kq, Trans::No, self.alpha[leaf].as_ref().unwrap(), Trans::No);
+            out.row_mut(i).copy_from_slice(pred.row(0));
+        }
+        out
+    }
+
+    /// Memory model of Section 5: r (= n0) words per training point.
+    pub fn memory_words(&self) -> usize {
+        self.tree
+            .leaves()
+            .iter()
+            .map(|&l| {
+                let n_l = self.tree.nodes[l].len();
+                n_l * n_l
+            })
+            .sum()
+    }
+
+    /// The underlying partitioning tree.
+    pub fn tree(&self) -> &PartitionTree {
+        &self.tree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Gaussian;
+
+    #[test]
+    fn single_leaf_equals_exact_krr() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(25, 2, |_, _| rng.uniform(0.0, 1.0));
+        let y = Mat::from_fn(25, 1, |i, _| x[(i, 0)] * x[(i, 1)]);
+        let kind = Gaussian::new(0.5);
+        let model =
+            IndependentKrr::fit(kind, &x, &y, 100, SplitRule::RandomProjection, 0.05, &mut rng)
+                .unwrap();
+        // Exact KRR.
+        let mut k = kernel_block(kind, &x);
+        k.add_diag(0.05);
+        let alpha = Cholesky::new_jittered(&k, 5).unwrap().solve_mat(&y);
+        let q = Mat::from_fn(6, 2, |_, _| rng.uniform(0.0, 1.0));
+        let want = matmul(&kernel_cross(kind, &q, &x), Trans::No, &alpha, Trans::No);
+        let got = model.predict(&q);
+        let mut diff = got;
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn prediction_uses_only_local_leaf() {
+        // Two well-separated blobs: predicting inside blob A must be
+        // unaffected by blob B's targets.
+        let mut rng = Rng::new(2);
+        let n = 40;
+        let x = Mat::from_fn(n, 2, |i, _| {
+            if i < 20 {
+                rng.uniform(0.0, 0.2)
+            } else {
+                rng.uniform(0.8, 1.0)
+            }
+        });
+        let kind = Gaussian::new(0.1);
+        let y1 = Mat::from_fn(n, 1, |i, _| if i < 20 { 1.0 } else { 5.0 });
+        let y2 = Mat::from_fn(n, 1, |i, _| if i < 20 { 1.0 } else { -77.0 });
+        let m1 = IndependentKrr::fit(kind, &x, &y1, 20, SplitRule::KdTree, 0.01, &mut Rng::new(9))
+            .unwrap();
+        let m2 = IndependentKrr::fit(kind, &x, &y2, 20, SplitRule::KdTree, 0.01, &mut Rng::new(9))
+            .unwrap();
+        let q = Mat::from_vec(1, 2, vec![0.1, 0.1]);
+        let p1 = m1.predict(&q)[(0, 0)];
+        let p2 = m2.predict(&q)[(0, 0)];
+        assert!((p1 - p2).abs() < 1e-9, "leakage across domains: {p1} vs {p2}");
+    }
+
+    #[test]
+    fn fits_local_structure() {
+        let mut rng = Rng::new(3);
+        let n = 300;
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform(0.0, 1.0));
+        let y = Mat::from_fn(n, 1, |i, _| (6.0 * x[(i, 0)]).sin());
+        let model = IndependentKrr::fit(
+            Gaussian::new(0.3),
+            &x,
+            &y,
+            50,
+            SplitRule::RandomProjection,
+            1e-4,
+            &mut rng,
+        )
+        .unwrap();
+        let pred = model.predict(&x);
+        let mut diff = pred;
+        diff.axpy(-1.0, &y);
+        assert!(diff.fro_norm() / y.fro_norm() < 0.1);
+    }
+
+    #[test]
+    fn multi_output() {
+        let mut rng = Rng::new(4);
+        let x = Mat::from_fn(60, 2, |_, _| rng.uniform(0.0, 1.0));
+        let y = Mat::from_fn(60, 3, |i, c| x[(i, 0)] * (c as f64 + 1.0));
+        let model = IndependentKrr::fit(
+            Gaussian::new(0.4),
+            &x,
+            &y,
+            15,
+            SplitRule::RandomProjection,
+            1e-3,
+            &mut rng,
+        )
+        .unwrap();
+        let pred = model.predict(&x);
+        assert_eq!(pred.shape(), (60, 3));
+    }
+}

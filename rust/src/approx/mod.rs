@@ -1,0 +1,13 @@
+//! The approximate kernels the paper compares against (Section 1.2 / 5):
+//! Nyström, random Fourier features, the cross-domain independent kernel,
+//! and the exact (non-approximate) dense kernel as reference.
+
+pub mod exact;
+pub mod fourier;
+pub mod independent;
+pub mod nystrom;
+
+pub use exact::ExactKrr;
+pub use fourier::{FourierFeatures, FourierKrr};
+pub use independent::IndependentKrr;
+pub use nystrom::{NystromFeatures, NystromKrr};

@@ -1,0 +1,167 @@
+//! Nyström approximation (eq. 6) and its KRR.
+//!
+//! Landmarks X̲ are uniformly sampled training points; the explicit
+//! feature map is φ(x) = L^{-1} k(X̲, x) with K(X̲, X̲) = L Lᵀ, so that
+//! ⟨φ(x), φ(x′)⟩ = k_Nyström(x, x′). Ridge regression is solved in the
+//! primal: w = (ΦᵀΦ + λ I_r)^{-1} Φᵀ y, at O(nr²).
+
+use crate::error::Result;
+use crate::kernels::{kernel_cross, KernelKind};
+use crate::linalg::{gemm, matmul, Cholesky, Mat, Trans};
+use crate::util::rng::Rng;
+
+/// The Nyström feature map.
+pub struct NystromFeatures {
+    kind: KernelKind,
+    /// Landmark coordinates (r x d).
+    pub landmarks: Mat,
+    /// Cholesky of K(X̲, X̲) (+ tiny jitter if needed).
+    chol: Cholesky,
+}
+
+impl NystromFeatures {
+    /// Sample r landmarks from the rows of `x` and factor their Gram.
+    pub fn fit(kind: KernelKind, x: &Mat, r: usize, rng: &mut Rng) -> Result<NystromFeatures> {
+        let r = r.min(x.rows()).max(1);
+        let idx = rng.sample_indices(x.rows(), r);
+        let landmarks = x.select_rows(&idx);
+        let mut kll = kernel_cross(kind, &landmarks, &landmarks);
+        kll.symmetrize();
+        let chol = Cholesky::new_jittered(&kll, 30)?;
+        Ok(NystromFeatures { kind, landmarks, chol })
+    }
+
+    /// Feature dimension r.
+    pub fn dim(&self) -> usize {
+        self.landmarks.rows()
+    }
+
+    /// φ(Q) for a block of points: rows are L^{-1} k(X̲, q), i.e. we solve
+    /// Lᵀ-systems against rows of K(Q, X̲).
+    pub fn transform(&self, q: &Mat) -> Mat {
+        let kql = kernel_cross(self.kind, q, &self.landmarks);
+        // Row y of output solves L y = k(X̲, q) → y = L^{-1} k.
+        self.chol.forward_solve_rows(&kql)
+    }
+}
+
+/// Kernel ridge regression with the Nyström kernel.
+pub struct NystromKrr {
+    features: NystromFeatures,
+    /// Primal weights (r x m).
+    w: Mat,
+}
+
+impl NystromKrr {
+    /// Fit on features `x` and (possibly multi-column) targets `y`.
+    pub fn fit(
+        kind: KernelKind,
+        x: &Mat,
+        y: &Mat,
+        r: usize,
+        lambda: f64,
+        rng: &mut Rng,
+    ) -> Result<NystromKrr> {
+        let features = NystromFeatures::fit(kind, x, r, rng)?;
+        let w = primal_ridge(&features.transform(x), y, lambda)?;
+        Ok(NystromKrr { features, w })
+    }
+
+    /// Predict for query rows.
+    pub fn predict(&self, q: &Mat) -> Mat {
+        matmul(&self.features.transform(q), Trans::No, &self.w, Trans::No)
+    }
+
+    /// Estimated memory footprint in f64 words (≈ n·r features — the
+    /// paper's Section 5 memory model counts r words per training point).
+    pub fn memory_words(&self, n_train: usize) -> usize {
+        n_train * self.features.dim()
+    }
+}
+
+/// Solve the primal ridge system w = (ΦᵀΦ + λ n? I)^{-1} Φᵀ y.
+///
+/// We follow the paper's convention (eq. 1-2): regularizer λ‖f‖², which in
+/// the primal equals λ‖w‖² — no n scaling.
+pub fn primal_ridge(phi: &Mat, y: &Mat, lambda: f64) -> Result<Mat> {
+    let r = phi.cols();
+    let mut gram = Mat::zeros(r, r);
+    gemm(1.0, phi, Trans::Yes, phi, Trans::No, 0.0, &mut gram);
+    gram.symmetrize();
+    gram.add_diag(lambda.max(1e-12));
+    let rhs = matmul(phi, Trans::Yes, y, Trans::No);
+    let chol = Cholesky::new_jittered(&gram, 30)?;
+    Ok(chol.solve_mat(&rhs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Gaussian;
+
+    fn toy(n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.uniform(0.0, 1.0));
+        let y = Mat::from_fn(n, 1, |i, _| (3.0 * x[(i, 0)]).sin() + x[(i, 1)]);
+        (x, y)
+    }
+
+    #[test]
+    fn full_rank_nystrom_equals_exact_krr() {
+        // r = n with distinct landmarks == exact kernel ridge regression.
+        let (x, y) = toy(30, 1);
+        let kind = Gaussian::new(0.5);
+        let lambda = 0.1;
+        let mut rng = Rng::new(2);
+        let model = NystromKrr::fit(kind, &x, &y, 30, lambda, &mut rng).unwrap();
+        // Exact KRR.
+        let mut k = crate::kernels::kernel_block(kind, &x);
+        k.add_diag(lambda);
+        let alpha = Cholesky::new_jittered(&k, 10).unwrap().solve_mat(&y);
+        let q = Mat::from_fn(7, 2, |i, j| 0.1 * (i + j) as f64);
+        let kq = kernel_cross(kind, &q, &x);
+        let want = matmul(&kq, Trans::No, &alpha, Trans::No);
+        let got = model.predict(&q);
+        let mut diff = got.clone();
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-6, "{}", diff.max_abs());
+    }
+
+    #[test]
+    fn transform_gram_is_nystrom_kernel() {
+        let (x, _) = toy(20, 3);
+        let kind = Gaussian::new(0.7);
+        let mut rng = Rng::new(4);
+        let feat = NystromFeatures::fit(kind, &x, 6, &mut rng).unwrap();
+        let phi = feat.transform(&x);
+        let gram = matmul(&phi, Trans::No, &phi, Trans::Yes);
+        // Against direct k_nys = K_XL K_LL^{-1} K_LX.
+        let kxl = kernel_cross(kind, &x, &feat.landmarks);
+        let sol = feat.chol.solve_right(&kxl); // K_XL K_LL^{-1}
+        let want = matmul(&sol, Trans::No, &kxl, Trans::Yes);
+        let mut diff = gram.clone();
+        diff.axpy(-1.0, &want);
+        assert!(diff.max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn fits_smooth_function() {
+        let (x, y) = toy(300, 5);
+        let mut rng = Rng::new(6);
+        let model =
+            NystromKrr::fit(Gaussian::new(0.4), &x, &y, 40, 1e-3, &mut rng).unwrap();
+        let pred = model.predict(&x);
+        let mut diff = pred.clone();
+        diff.axpy(-1.0, &y);
+        let rel = diff.fro_norm() / y.fro_norm();
+        assert!(rel < 0.05, "train rel err {rel}");
+    }
+
+    #[test]
+    fn r_capped_at_n() {
+        let (x, y) = toy(5, 7);
+        let mut rng = Rng::new(8);
+        let model = NystromKrr::fit(Gaussian::new(0.5), &x, &y, 100, 0.1, &mut rng).unwrap();
+        assert_eq!(model.features.dim(), 5);
+    }
+}

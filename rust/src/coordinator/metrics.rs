@@ -1,0 +1,155 @@
+//! Serving metrics: request counters, latency histogram, batch sizes.
+
+use crate::util::json::Json;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Log-scale latency histogram (microseconds) + aggregate counters.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+struct Inner {
+    requests: u64,
+    batches: u64,
+    batch_size_sum: u64,
+    /// Histogram buckets: [1µs, 2µs, 4µs, ...] (powers of two), 40 deep.
+    latency_us: [u64; 40],
+    latencies_sorted_cache: Vec<f64>,
+    /// Raw latencies (µs), bounded ring for percentile reporting.
+    raw: Vec<f64>,
+}
+
+const RAW_CAP: usize = 65536;
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                requests: 0,
+                batches: 0,
+                batch_size_sum: 0,
+                latency_us: [0; 40],
+                latencies_sorted_cache: Vec::new(),
+                raw: Vec::new(),
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one served batch: per-request latencies in seconds.
+    pub fn record_batch(&self, latencies_secs: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_size_sum += latencies_secs.len() as u64;
+        for &s in latencies_secs {
+            g.requests += 1;
+            let us = (s * 1e6).max(0.0);
+            let bucket = (us.max(1.0).log2().floor() as usize).min(39);
+            g.latency_us[bucket] += 1;
+            if g.raw.len() < RAW_CAP {
+                g.raw.push(us);
+            }
+        }
+        g.latencies_sorted_cache.clear();
+    }
+
+    /// Snapshot of the current counters.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut g = self.inner.lock().unwrap();
+        if g.latencies_sorted_cache.is_empty() && !g.raw.is_empty() {
+            let mut v = g.raw.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            g.latencies_sorted_cache = v;
+        }
+        let pct = |p: f64| -> f64 {
+            crate::util::bench::percentile_sorted(&g.latencies_sorted_cache, p)
+        };
+        let elapsed = self.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            mean_batch_size: if g.batches > 0 {
+                g.batch_size_sum as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+            throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
+            p50_us: pct(50.0),
+            p95_us: pct(95.0),
+            p99_us: pct(99.0),
+            elapsed_secs: elapsed,
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub throughput_rps: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub elapsed_secs: f64,
+}
+
+impl MetricsSnapshot {
+    /// JSON encoding for the wire protocol / bench logs.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_batch_size", Json::Num(self.mean_batch_size)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("elapsed_secs", Json::Num(self.elapsed_secs)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(&[1e-3, 2e-3, 4e-3]);
+        m.record_batch(&[8e-3]);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-12);
+        assert!(s.p50_us >= 1000.0 && s.p50_us <= 4000.0, "{}", s.p50_us);
+        assert!(s.p99_us >= s.p50_us);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert!(s.p50_us.is_nan());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = Metrics::new();
+        m.record_batch(&[1e-3]);
+        let enc = m.snapshot().to_json().encode();
+        let parsed = Json::parse(&enc).unwrap();
+        assert_eq!(parsed.get("requests").unwrap().as_usize(), Some(1));
+    }
+}

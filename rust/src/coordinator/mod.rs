@@ -1,0 +1,20 @@
+//! L3 serving coordinator: a threaded prediction service with dynamic
+//! batching, latency/throughput metrics, and a line-delimited JSON TCP
+//! protocol.
+//!
+//! The hierarchical kernel's out-of-sample path (Algorithm 3) is
+//! O(r² log(n/r) + dr) per query after an O(nr) precomputation — exactly
+//! the shape of workload where a serving layer wants *batching*: the
+//! per-query tree walk is cheap, so amortizing queueing and dispatch
+//! overhead across a batch dominates tail latency. The batcher collects
+//! requests until `max_batch` or `max_wait` elapses — the standard
+//! dynamic-batching policy of model servers (vLLM-style), scaled to this
+//! paper's predictor.
+
+pub mod metrics;
+pub mod protocol;
+pub mod service;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use protocol::serve_tcp;
+pub use service::{BatchPolicy, PredictionService, Predictor};

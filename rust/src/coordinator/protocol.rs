@@ -1,0 +1,185 @@
+//! TCP wire protocol: newline-delimited JSON.
+//!
+//! Requests:
+//!   {"features": [f, ...]}            → {"prediction": [...], "latency_ms": x}
+//!   {"cmd": "metrics"}                → metrics snapshot object
+//!   {"cmd": "ping"}                   → {"ok": true}
+//!   {"cmd": "shutdown"}               → {"ok": true} and the server stops
+//! Malformed input → {"error": "..."}.
+
+use super::service::PredictionService;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Serve the prediction service over a TCP listener. Blocks until a
+/// `shutdown` command arrives. Returns the number of connections served.
+pub fn serve_tcp(listener: TcpListener, svc: Arc<PredictionService>) -> std::io::Result<usize> {
+    let stop = Arc::new(AtomicBool::new(false));
+    listener.set_nonblocking(true)?;
+    let mut conns = 0usize;
+    let mut handles = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                conns += 1;
+                let svc = svc.clone();
+                let stop = stop.clone();
+                handles.push(std::thread::spawn(move || handle_conn(stream, svc, stop)));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(conns)
+}
+
+fn handle_conn(stream: TcpStream, svc: Arc<PredictionService>, stop: Arc<AtomicBool>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(&line, &svc, &stop);
+        let mut text = reply.encode();
+        text.push('\n');
+        if writer.write_all(text.as_bytes()).is_err() {
+            break;
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Process one protocol line (exposed for unit testing without sockets).
+pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Json {
+    let parsed = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
+    };
+    if let Some(cmd) = parsed.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "metrics" => svc.metrics.snapshot().to_json(),
+            "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
+            "shutdown" => {
+                stop.store(true, Ordering::SeqCst);
+                Json::obj(vec![("ok", Json::Bool(true))])
+            }
+            other => Json::obj(vec![("error", Json::Str(format!("unknown cmd '{other}'")))]),
+        };
+    }
+    let Some(features) = parsed.get("features").and_then(|f| f.to_f64s()) else {
+        return Json::obj(vec![("error", Json::Str("missing 'features'".into()))]);
+    };
+    if svc.dim() > 0 && features.len() != svc.dim() {
+        return Json::obj(vec![(
+            "error",
+            Json::Str(format!("expected {} features, got {}", svc.dim(), features.len())),
+        )]);
+    }
+    let t = std::time::Instant::now();
+    match svc.predict(features) {
+        Ok(pred) => Json::obj(vec![
+            ("prediction", Json::from_f64s(&pred)),
+            ("latency_ms", Json::Num(t.elapsed().as_secs_f64() * 1e3)),
+        ]),
+        Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::{BatchPolicy, Predictor};
+    use crate::linalg::Mat;
+
+    struct Echo;
+    impl Predictor for Echo {
+        fn predict_batch(&self, q: &Mat) -> Mat {
+            Mat::from_fn(q.rows(), 1, |i, _| q.row(i)[0] * 2.0)
+        }
+        fn dim(&self) -> usize {
+            2
+        }
+        fn outputs(&self) -> usize {
+            1
+        }
+    }
+
+    fn svc() -> PredictionService {
+        PredictionService::start(std::sync::Arc::new(Echo), BatchPolicy::default())
+    }
+
+    #[test]
+    fn predict_line() {
+        let s = svc();
+        let stop = AtomicBool::new(false);
+        let out = handle_line(r#"{"features": [3.0, 1.0]}"#, &s, &stop);
+        assert_eq!(out.get("prediction").unwrap().to_f64s().unwrap(), vec![6.0]);
+        assert!(out.get("latency_ms").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn command_lines() {
+        let s = svc();
+        let stop = AtomicBool::new(false);
+        assert_eq!(
+            handle_line(r#"{"cmd": "ping"}"#, &s, &stop).get("ok"),
+            Some(&Json::Bool(true))
+        );
+        let m = handle_line(r#"{"cmd": "metrics"}"#, &s, &stop);
+        assert!(m.get("requests").is_some());
+        assert!(!stop.load(Ordering::SeqCst));
+        handle_line(r#"{"cmd": "shutdown"}"#, &s, &stop);
+        assert!(stop.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn error_lines() {
+        let s = svc();
+        let stop = AtomicBool::new(false);
+        assert!(handle_line("not json", &s, &stop).get("error").is_some());
+        assert!(handle_line(r#"{"cmd": "nope"}"#, &s, &stop).get("error").is_some());
+        assert!(handle_line(r#"{"features": [1.0]}"#, &s, &stop)
+            .get("error")
+            .is_some()); // wrong dim
+        assert!(handle_line(r#"{"x": 1}"#, &s, &stop).get("error").is_some());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        use std::io::{BufRead, BufReader, Write};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let service = std::sync::Arc::new(svc());
+        let server = std::thread::spawn(move || serve_tcp(listener, service).unwrap());
+
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.write_all(b"{\"features\": [2.0, 0.0]}\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("prediction").unwrap().to_f64s().unwrap(), vec![4.0]);
+        conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let served = server.join().unwrap();
+        assert!(served >= 1);
+    }
+}

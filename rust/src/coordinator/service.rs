@@ -1,0 +1,242 @@
+//! The prediction service: request queue → dynamic batcher → model.
+
+use super::metrics::Metrics;
+use crate::linalg::Mat;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Anything that can serve batched predictions. Implemented by
+/// [`crate::learn::KrrModel`]; custom predictors (e.g. a long-lived
+/// Algorithm-3 [`crate::hkernel::HPredictor`]) can plug in too.
+pub trait Predictor: Send + Sync + 'static {
+    /// Predict raw outputs for a batch of query rows.
+    fn predict_batch(&self, q: &Mat) -> Mat;
+    /// Expected feature dimension.
+    fn dim(&self) -> usize;
+    /// Number of output columns.
+    fn outputs(&self) -> usize;
+}
+
+impl Predictor for crate::learn::KrrModel {
+    fn predict_batch(&self, q: &Mat) -> Mat {
+        self.predict(q)
+    }
+    fn dim(&self) -> usize {
+        // KrrModel does not retain d explicitly; infer lazily is not
+        // possible, so store via config? The hierarchical engine knows.
+        self.hierarchical_parts().map(|(f, _)| f.x.cols()).unwrap_or(0)
+    }
+    fn outputs(&self) -> usize {
+        self.hierarchical_parts().map(|(_, w)| w.cols()).unwrap_or(1)
+    }
+}
+
+/// Dynamic batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Dispatch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// ... or once the oldest queued request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Request {
+    features: Vec<f64>,
+    enqueued: Instant,
+    resp: SyncSender<Vec<f64>>,
+}
+
+/// Handle to a running prediction service (batcher thread owns the model).
+pub struct PredictionService {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    dim: usize,
+}
+
+impl PredictionService {
+    /// Start the batcher thread around a predictor.
+    pub fn start(model: Arc<dyn Predictor>, policy: BatchPolicy) -> PredictionService {
+        let (tx, rx) = sync_channel::<Request>(4096);
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let dim = model.dim();
+        let m2 = metrics.clone();
+        let s2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("hck-batcher".into())
+            .spawn(move || batcher_loop(model, rx, m2, s2, policy))
+            .expect("spawn batcher");
+        PredictionService { tx, metrics, stop, join: Some(join), dim }
+    }
+
+    /// Feature dimension the service expects (0 if unknown).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Synchronous predict: enqueue and wait for the batch to flush.
+    pub fn predict(&self, features: Vec<f64>) -> crate::error::Result<Vec<f64>> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Request { features, enqueued: Instant::now(), resp: rtx })
+            .map_err(|_| crate::error::Error::serve("service stopped"))?;
+        rrx.recv().map_err(|_| crate::error::Error::serve("service dropped request"))
+    }
+
+    /// Stop the batcher and join it.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Drop tx by replacing with a dummy? tx dropped with self after join.
+        if let Some(j) = self.join.take() {
+            // Closing the channel unblocks recv; mark stop and send nothing.
+            drop(std::mem::replace(&mut self.tx, sync_channel(1).0));
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            drop(std::mem::replace(&mut self.tx, sync_channel(1).0));
+            let _ = j.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    model: Arc<dyn Predictor>,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    policy: BatchPolicy,
+) {
+    let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
+    loop {
+        if stop.load(Ordering::SeqCst) && pending.is_empty() {
+            // Drain whatever is still in the channel before exiting.
+            match rx.try_recv() {
+                Ok(req) => pending.push(req),
+                Err(_) => break,
+            }
+        }
+        // Block for the first request of a batch.
+        if pending.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(req) => pending.push(req),
+                Err(RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Fill the batch until max_batch or the deadline of the oldest.
+        let deadline = pending[0].enqueued + policy.max_wait;
+        while pending.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => pending.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Dispatch.
+        let batch = std::mem::take(&mut pending);
+        let d = batch[0].features.len();
+        let mut q = Mat::zeros(batch.len(), d);
+        for (i, req) in batch.iter().enumerate() {
+            if req.features.len() == d {
+                q.row_mut(i).copy_from_slice(&req.features);
+            }
+        }
+        let preds = model.predict_batch(&q);
+        let done = Instant::now();
+        // Record metrics BEFORE releasing responders, so a client that
+        // returns from predict() always observes its own request counted.
+        let lats: Vec<f64> =
+            batch.iter().map(|r| (done - r.enqueued).as_secs_f64()).collect();
+        metrics.record_batch(&lats);
+        for (i, req) in batch.into_iter().enumerate() {
+            let _ = req.resp.send(preds.row(i).to_vec());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A trivial predictor: output = [sum of features].
+    struct SumModel;
+    impl Predictor for SumModel {
+        fn predict_batch(&self, q: &Mat) -> Mat {
+            Mat::from_fn(q.rows(), 1, |i, _| q.row(i).iter().sum())
+        }
+        fn dim(&self) -> usize {
+            3
+        }
+        fn outputs(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let svc = PredictionService::start(Arc::new(SumModel), BatchPolicy::default());
+        let out = svc.predict(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(out, vec![6.0]);
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.requests, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let svc = Arc::new(PredictionService::start(
+            Arc::new(SumModel),
+            BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(20) },
+        ));
+        let mut handles = Vec::new();
+        for k in 0..32 {
+            let s = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let out = s.predict(vec![k as f64, 0.0, 1.0]).unwrap();
+                assert_eq!(out[0], k as f64 + 1.0);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.requests, 32);
+        assert!(
+            snap.mean_batch_size > 1.0,
+            "expected batching, got mean size {}",
+            snap.mean_batch_size
+        );
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let svc = PredictionService::start(Arc::new(SumModel), BatchPolicy::default());
+        let _ = svc.predict(vec![0.0; 3]).unwrap();
+        svc.shutdown(); // must not hang or panic
+    }
+}

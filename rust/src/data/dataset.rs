@@ -1,0 +1,184 @@
+//! In-memory data set representation.
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Learning task type, mirroring Table 1 of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Real-valued targets; performance metric = relative error.
+    Regression,
+    /// Labels in {-1, +1}; metric = accuracy.
+    Binary,
+    /// Labels in {0, .., k-1}; metric = accuracy (one-vs-all training).
+    Multiclass(usize),
+}
+
+impl Task {
+    /// Number of regression outputs needed to train this task
+    /// (one-vs-all for multiclass).
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            Task::Regression | Task::Binary => 1,
+            Task::Multiclass(k) => *k,
+        }
+    }
+}
+
+/// A supervised data set: row-major feature matrix plus targets.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// n x d feature matrix.
+    pub x: Mat,
+    /// n targets (class index for classification).
+    pub y: Vec<f64>,
+    /// Task type.
+    pub task: Task,
+    /// Human-readable name (for reports).
+    pub name: String,
+}
+
+impl Dataset {
+    /// Construct, validating shapes and labels.
+    pub fn new(name: impl Into<String>, x: Mat, y: Vec<f64>, task: Task) -> Result<Dataset> {
+        if x.rows() != y.len() {
+            return Err(Error::data(format!(
+                "x has {} rows but y has {} entries",
+                x.rows(),
+                y.len()
+            )));
+        }
+        match task {
+            Task::Binary => {
+                if y.iter().any(|&v| v != -1.0 && v != 1.0) {
+                    return Err(Error::data("binary labels must be ±1"));
+                }
+            }
+            Task::Multiclass(k) => {
+                if y.iter().any(|&v| v < 0.0 || v >= k as f64 || v.fract() != 0.0) {
+                    return Err(Error::data(format!("multiclass labels must be 0..{k}")));
+                }
+            }
+            Task::Regression => {}
+        }
+        Ok(Dataset { x, y, task, name: name.into() })
+    }
+
+    /// Number of examples.
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Feature dimension.
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Restrict to a subset of rows (in the given order).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            task: self.task,
+            name: self.name.clone(),
+        }
+    }
+
+    /// Targets encoded for training: regression targets as-is; binary ±1;
+    /// multiclass one-vs-all columns (+1 for class c, -1 otherwise).
+    pub fn target_matrix(&self) -> Mat {
+        match self.task {
+            Task::Regression | Task::Binary => {
+                Mat::from_vec(self.n(), 1, self.y.clone())
+            }
+            Task::Multiclass(k) => Mat::from_fn(self.n(), k, |i, c| {
+                if self.y[i] as usize == c {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }),
+        }
+    }
+
+    /// Decode a prediction matrix (n x n_outputs) back to task targets.
+    pub fn decode_predictions(&self, preds: &Mat) -> Vec<f64> {
+        match self.task {
+            Task::Regression => preds.col(0),
+            Task::Binary => preds.col(0).iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect(),
+            Task::Multiclass(k) => (0..preds.rows())
+                .map(|i| {
+                    let row = preds.row(i);
+                    let mut best = 0usize;
+                    for c in 1..k {
+                        if row[c] > row[best] {
+                            best = c;
+                        }
+                    }
+                    best as f64
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xy(n: usize, d: usize) -> (Mat, Vec<f64>) {
+        (Mat::from_fn(n, d, |i, j| (i + j) as f64), (0..n).map(|i| i as f64).collect())
+    }
+
+    #[test]
+    fn construction_validates() {
+        let (x, y) = xy(4, 2);
+        let ds = Dataset::new("t", x.clone(), y, Task::Regression).unwrap();
+        assert_eq!(ds.n(), 4);
+        assert_eq!(ds.d(), 2);
+        assert!(Dataset::new("t", x.clone(), vec![0.0; 3], Task::Regression).is_err());
+        assert!(Dataset::new("t", x.clone(), vec![0.0; 4], Task::Binary).is_err());
+        assert!(Dataset::new("t", x, vec![5.0; 4], Task::Multiclass(3)).is_err());
+    }
+
+    #[test]
+    fn subset_selects() {
+        let (x, y) = xy(5, 2);
+        let ds = Dataset::new("t", x, y, Task::Regression).unwrap();
+        let s = ds.subset(&[4, 0]);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.y, vec![4.0, 0.0]);
+        assert_eq!(s.x.row(0), ds.x.row(4));
+    }
+
+    #[test]
+    fn target_matrix_multiclass_one_vs_all() {
+        let x = Mat::zeros(3, 1);
+        let ds = Dataset::new("t", x, vec![0.0, 2.0, 1.0], Task::Multiclass(3)).unwrap();
+        let t = ds.target_matrix();
+        assert_eq!(t.shape(), (3, 3));
+        assert_eq!(t[(0, 0)], 1.0);
+        assert_eq!(t[(0, 1)], -1.0);
+        assert_eq!(t[(1, 2)], 1.0);
+        assert_eq!(t[(2, 1)], 1.0);
+    }
+
+    #[test]
+    fn decode_binary_and_multiclass() {
+        let x = Mat::zeros(2, 1);
+        let b = Dataset::new("b", x.clone(), vec![1.0, -1.0], Task::Binary).unwrap();
+        let preds = Mat::from_vec(2, 1, vec![0.3, -2.0]);
+        assert_eq!(b.decode_predictions(&preds), vec![1.0, -1.0]);
+
+        let m = Dataset::new("m", x, vec![0.0, 1.0], Task::Multiclass(3)).unwrap();
+        let preds = Mat::from_vec(2, 3, vec![0.1, 0.9, -1.0, 2.0, 0.0, 1.0]);
+        assert_eq!(m.decode_predictions(&preds), vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn n_outputs() {
+        assert_eq!(Task::Regression.n_outputs(), 1);
+        assert_eq!(Task::Binary.n_outputs(), 1);
+        assert_eq!(Task::Multiclass(7).n_outputs(), 7);
+    }
+}

@@ -1,0 +1,186 @@
+//! LIBSVM sparse text format parser.
+//!
+//! The paper's eight benchmark data sets are distributed in this format
+//! (`label idx:val idx:val ...`, 1-based indices). The offline environment
+//! cannot download them, so the experiments default to the synthetic
+//! analogues in [`super::synthetic`]; this parser makes the pipeline
+//! drop-in ready for the real files (`hck train --data path.libsvm`).
+
+use super::dataset::{Dataset, Task};
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use std::io::BufRead;
+
+/// Parse LIBSVM text content. `d_hint` can force a dimension (use 0 to
+/// infer from the max index seen). Labels are returned raw; task inference
+/// happens in [`infer_task`].
+pub fn parse_text(text: &str, d_hint: usize) -> Result<(Vec<Vec<(usize, f64)>>, Vec<f64>, usize)> {
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut dmax = d_hint;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let label: f64 = toks
+            .next()
+            .ok_or_else(|| Error::data(format!("line {}: empty", lineno + 1)))?
+            .parse()
+            .map_err(|_| Error::data(format!("line {}: bad label", lineno + 1)))?;
+        let mut feats = Vec::new();
+        for t in toks {
+            let (is, vs) = t
+                .split_once(':')
+                .ok_or_else(|| Error::data(format!("line {}: token '{t}'", lineno + 1)))?;
+            let idx: usize = is
+                .parse()
+                .map_err(|_| Error::data(format!("line {}: index '{is}'", lineno + 1)))?;
+            if idx == 0 {
+                return Err(Error::data(format!("line {}: 1-based indices expected", lineno + 1)));
+            }
+            let val: f64 = vs
+                .parse()
+                .map_err(|_| Error::data(format!("line {}: value '{vs}'", lineno + 1)))?;
+            dmax = dmax.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push(feats);
+        labels.push(label);
+    }
+    Ok((rows, labels, dmax))
+}
+
+/// Infer the task from raw labels: {-1,+1} or {0,1} → binary; a small set
+/// of non-negative integers → multiclass; anything else → regression.
+pub fn infer_task(labels: &mut [f64]) -> Task {
+    let mut distinct: Vec<f64> = labels.to_vec();
+    distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    distinct.dedup();
+    let all_int = distinct.iter().all(|v| v.fract() == 0.0);
+    if distinct.len() == 2 && all_int {
+        // Map the two values to ±1.
+        let (lo, hi) = (distinct[0], distinct[1]);
+        for v in labels.iter_mut() {
+            *v = if *v == hi { 1.0 } else { -1.0 };
+        }
+        let _ = lo;
+        return Task::Binary;
+    }
+    if all_int && distinct.len() <= 64 && distinct.len() > 2 {
+        // Re-index to 0..k-1.
+        for v in labels.iter_mut() {
+            let pos = distinct.iter().position(|d| d == v).unwrap();
+            *v = pos as f64;
+        }
+        return Task::Multiclass(distinct.len());
+    }
+    Task::Regression
+}
+
+/// Write a dataset to LIBSVM text format (1-based indices, zeros
+/// omitted). Enables `hck data-gen` to emit files interchangeable with
+/// the real benchmark downloads.
+pub fn write(ds: &Dataset, path: &str) -> Result<()> {
+    use std::io::Write as _;
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..ds.n() {
+        write!(out, "{}", ds.y[i])?;
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(out, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(out)?;
+    }
+    Ok(())
+}
+
+/// Load a LIBSVM file into a dense [`Dataset`].
+pub fn load(path: &str, name: &str) -> Result<Dataset> {
+    let file = std::fs::File::open(path)?;
+    let mut text = String::new();
+    let mut reader = std::io::BufReader::new(file);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        text.push_str(&line);
+    }
+    from_text(&text, name)
+}
+
+/// Build a dense [`Dataset`] from LIBSVM text.
+pub fn from_text(text: &str, name: &str) -> Result<Dataset> {
+    let (rows, mut labels, d) = parse_text(text, 0)?;
+    if rows.is_empty() {
+        return Err(Error::data("empty libsvm file"));
+    }
+    let task = infer_task(&mut labels);
+    let mut x = Mat::zeros(rows.len(), d);
+    for (i, feats) in rows.iter().enumerate() {
+        for &(j, v) in feats {
+            x[(i, j)] = v;
+        }
+    }
+    Dataset::new(name, x, labels, task)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let text = "1 1:0.5 3:2.0\n-1 2:1.0\n";
+        let ds = from_text(text, "t").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.task, Task::Binary);
+        assert_eq!(ds.x[(0, 0)], 0.5);
+        assert_eq!(ds.x[(0, 2)], 2.0);
+        assert_eq!(ds.x[(1, 1)], 1.0);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn binary_zero_one_maps_to_pm1() {
+        let text = "0 1:1\n1 1:2\n";
+        let ds = from_text(text, "t").unwrap();
+        assert_eq!(ds.task, Task::Binary);
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn multiclass_reindexed() {
+        let text = "3 1:1\n5 1:2\n7 1:3\n3 1:4\n";
+        let ds = from_text(text, "t").unwrap();
+        assert_eq!(ds.task, Task::Multiclass(3));
+        assert_eq!(ds.y, vec![0.0, 1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn regression_detected() {
+        let text = "1.5 1:1\n-0.25 1:2\n3.0 1:3\n";
+        let ds = from_text(text, "t").unwrap();
+        assert_eq!(ds.task, Task::Regression);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let text = "# header\n\n1.5 1:1\n2.5 2:1\n";
+        let ds = from_text(text, "t").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        assert!(from_text("1 0:5\n", "t").is_err()); // 0-based index
+        assert!(from_text("1 a:b\n", "t").is_err());
+        assert!(from_text("x 1:1\n", "t").is_err());
+        assert!(from_text("", "t").is_err());
+    }
+}

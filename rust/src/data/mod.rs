@@ -1,0 +1,11 @@
+//! Data sets: representation, parsing, preprocessing, and synthetic
+//! generators mirroring the paper's Table 1 benchmarks.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod preprocess;
+pub mod synthetic;
+
+pub use dataset::{Dataset, Task};
+pub use preprocess::{dedup_conflicts, normalize_unit, train_test_split};
+pub use synthetic::{generate, generate_default, spec_by_name, SyntheticSpec, TABLE1_SPECS};

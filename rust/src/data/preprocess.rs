@@ -1,0 +1,141 @@
+//! Preprocessing mirroring Section 5 of the paper: attribute normalization
+//! to [0, 1], removal of duplicate and conflicting training records, and
+//! the 4:1 train/test split used for data sets that ship unsplit.
+
+use super::dataset::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Normalize every attribute to [0, 1] (affine per column). Columns with
+/// zero range map to 0. Returns the per-column (min, max) used, so the
+/// same transform can be applied to a test set via [`apply_normalization`].
+pub fn normalize_unit(ds: &mut Dataset) -> Vec<(f64, f64)> {
+    let (n, d) = ds.x.shape();
+    let mut ranges = vec![(f64::INFINITY, f64::NEG_INFINITY); d];
+    for i in 0..n {
+        for (j, &v) in ds.x.row(i).iter().enumerate() {
+            ranges[j].0 = ranges[j].0.min(v);
+            ranges[j].1 = ranges[j].1.max(v);
+        }
+    }
+    apply_normalization(&mut ds.x, &ranges);
+    ranges
+}
+
+/// Apply a previously computed per-column normalization.
+pub fn apply_normalization(x: &mut Mat, ranges: &[(f64, f64)]) {
+    let (n, d) = x.shape();
+    assert_eq!(d, ranges.len());
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for j in 0..d {
+            let (lo, hi) = ranges[j];
+            let span = hi - lo;
+            row[j] = if span > 0.0 { ((row[j] - lo) / span).clamp(0.0, 1.0) } else { 0.0 };
+        }
+    }
+}
+
+/// Remove duplicate records, and *conflicting* records (same features,
+/// inconsistent labels) entirely — as the paper does for training sets.
+/// Returns the number of rows removed.
+pub fn dedup_conflicts(ds: &mut Dataset) -> usize {
+    let n = ds.n();
+    // Hash rows by their bit pattern.
+    let mut first_of: HashMap<Vec<u64>, usize> = HashMap::with_capacity(n);
+    let mut conflicted: Vec<bool> = vec![false; n];
+    let mut keep: Vec<bool> = vec![false; n];
+    let mut owner: Vec<usize> = vec![usize::MAX; n];
+    for i in 0..n {
+        let key: Vec<u64> = ds.x.row(i).iter().map(|v| v.to_bits()).collect();
+        match first_of.get(&key) {
+            None => {
+                first_of.insert(key, i);
+                keep[i] = true;
+                owner[i] = i;
+            }
+            Some(&j) => {
+                owner[i] = j;
+                if ds.y[i] != ds.y[j] {
+                    conflicted[j] = true;
+                }
+            }
+        }
+    }
+    let idx: Vec<usize> =
+        (0..n).filter(|&i| keep[i] && !conflicted[i]).collect();
+    let removed = n - idx.len();
+    *ds = ds.subset(&idx);
+    removed
+}
+
+/// Random 4:1 (or custom-fraction) split into (train, test).
+pub fn train_test_split(ds: &Dataset, test_fraction: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+    let n = ds.n();
+    let perm = rng.permutation(n);
+    let n_test = ((n as f64) * test_fraction).round() as usize;
+    let (test_idx, train_idx) = perm.split_at(n_test.min(n));
+    (ds.subset(train_idx), ds.subset(test_idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Task;
+
+    fn make(xs: Vec<f64>, n: usize, d: usize, y: Vec<f64>) -> Dataset {
+        Dataset::new("t", Mat::from_vec(n, d, xs), y, Task::Regression).unwrap()
+    }
+
+    #[test]
+    fn normalize_maps_to_unit() {
+        let mut ds = make(vec![0.0, 10.0, 5.0, 20.0, 10.0, 30.0], 3, 2, vec![0.0; 3]);
+        let ranges = normalize_unit(&mut ds);
+        assert_eq!(ranges, vec![(0.0, 10.0), (10.0, 30.0)]);
+        assert_eq!(ds.x[(0, 0)], 0.0);
+        assert_eq!(ds.x[(2, 0)], 1.0);
+        assert_eq!(ds.x[(1, 1)], 0.5);
+    }
+
+    #[test]
+    fn normalize_constant_column() {
+        let mut ds = make(vec![7.0, 7.0, 7.0], 3, 1, vec![0.0; 3]);
+        normalize_unit(&mut ds);
+        assert!(ds.x.col(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn apply_normalization_clamps_test_points() {
+        let mut x = Mat::from_vec(1, 1, vec![50.0]);
+        apply_normalization(&mut x, &[(0.0, 10.0)]);
+        assert_eq!(x[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn dedup_removes_duplicates_and_conflicts() {
+        // rows: a, a (dup consistent), b, b (conflicting label), c
+        let mut ds = make(
+            vec![1.0, 1.0, 2.0, 2.0, 3.0],
+            5,
+            1,
+            vec![10.0, 10.0, 20.0, 21.0, 30.0],
+        );
+        let removed = dedup_conflicts(&mut ds);
+        assert_eq!(removed, 3); // one dup + both rows of the conflict pair
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.y, vec![10.0, 30.0]);
+    }
+
+    #[test]
+    fn split_partitions_everything() {
+        let ds = make((0..20).map(|i| i as f64).collect(), 20, 1, (0..20).map(|i| i as f64).collect());
+        let mut rng = Rng::new(1);
+        let (train, test) = train_test_split(&ds, 0.2, &mut rng);
+        assert_eq!(train.n(), 16);
+        assert_eq!(test.n(), 4);
+        let mut all: Vec<f64> = train.y.iter().chain(test.y.iter()).copied().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, (0..20).map(|i| i as f64).collect::<Vec<_>>());
+    }
+}

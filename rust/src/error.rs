@@ -1,0 +1,66 @@
+//! Unified error type for the `hck` library.
+
+use thiserror::Error;
+
+/// Library-wide error enum.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A matrix operation received incompatible or invalid dimensions.
+    #[error("dimension mismatch: {0}")]
+    Dim(String),
+
+    /// A factorization (Cholesky/LU/eigen) failed, typically because the
+    /// matrix is numerically singular or indefinite.
+    #[error("linear algebra failure: {0}")]
+    Linalg(String),
+
+    /// Invalid configuration or hyper-parameter.
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// Data loading / parsing problem.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// PJRT runtime problem (artifact missing, compile/execute failure).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / serving problem.
+    #[error("serving error: {0}")]
+    Serve(String),
+
+    /// I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper to construct a dimension error.
+    pub fn dim(msg: impl Into<String>) -> Self {
+        Error::Dim(msg.into())
+    }
+    /// Helper to construct a linear-algebra error.
+    pub fn linalg(msg: impl Into<String>) -> Self {
+        Error::Linalg(msg.into())
+    }
+    /// Helper to construct a configuration error.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Helper to construct a data error.
+    pub fn data(msg: impl Into<String>) -> Self {
+        Error::Data(msg.into())
+    }
+    /// Helper to construct a runtime error.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    /// Helper to construct a serving error.
+    pub fn serve(msg: impl Into<String>) -> Self {
+        Error::Serve(msg.into())
+    }
+}

@@ -1,0 +1,503 @@
+//! Construction of the hierarchical factors (paper Section 3, items 1–6).
+
+use crate::error::{Error, Result};
+use crate::kernels::{BlockEvaluator, KernelKind, NativeEvaluator};
+use crate::linalg::{Cholesky, Mat};
+use crate::partition::{PartitionTree, SplitRule};
+use crate::util::rng::Rng;
+
+/// Configuration of the hierarchical kernel.
+#[derive(Debug, Clone)]
+pub struct HConfig {
+    /// Base kernel (strictly PD family + bandwidth).
+    pub kind: KernelKind,
+    /// Landmark count r per nonleaf node (capped at the node size).
+    pub rank: usize,
+    /// Leaf capacity n0 (paper eq. 22 ties this to r; see [`size_rule`]).
+    pub n0: usize,
+    /// λ′ of Section 4.3: added to the *base kernel's* diagonal
+    /// (k′(x,x′) = k(x,x′) + λ′ δ_{x,x′}) for conditioning of the
+    /// landmark Gram matrices. Keep well below the training λ.
+    pub lambda_prime: f64,
+    /// Partitioning rule (Section 4.1; random projection recommended).
+    pub rule: SplitRule,
+    /// Seed for partitioning + landmark sampling.
+    pub seed: u64,
+    /// When sampling the landmark set X̲_i of a non-root node, exclude
+    /// points that are already landmarks of the parent. The paper permits
+    /// overlap (Propositions 1/5 celebrate the resulting exactness), and a
+    /// shared landmark makes the per-node Schur factor
+    /// G_i = Σ_i − W_i Σ_p W_iᵀ exactly singular (Appendix A notes its
+    /// zero rows) — which the fast solver tolerates exactly thanks to the
+    /// push-through Woodbury form (see `solve.rs`). Disjoint sampling is
+    /// offered for conditioning experiments. Default: false (paper-faithful).
+    pub avoid_parent_landmarks: bool,
+}
+
+impl HConfig {
+    /// Sensible defaults for a given kernel and rank; n0 is set equal to
+    /// the rank per the consolidated size rule (eq. 22).
+    pub fn new(kind: KernelKind, rank: usize) -> HConfig {
+        HConfig {
+            kind,
+            rank,
+            n0: rank.max(1),
+            lambda_prime: 1e-8,
+            rule: SplitRule::RandomProjection,
+            seed: 0,
+            avoid_parent_landmarks: false,
+        }
+    }
+
+    /// Builder-style seed override.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Builder-style split-rule override.
+    pub fn with_rule(mut self, rule: SplitRule) -> Self {
+        self.rule = rule;
+        self
+    }
+}
+
+/// The consolidated size rule of eq. (22): for a balanced binary tree of
+/// depth j over n points, n0 = ceil(n / 2^j) and r = floor(n / 2^j).
+pub fn size_rule(n: usize, j: u32) -> (usize, usize) {
+    let denom = 1usize << j;
+    let n0 = n.div_ceil(denom);
+    let r = n / denom;
+    (n0.max(1), r.max(1))
+}
+
+/// Choose the tree depth j so the level rank is as close as possible to
+/// `r_target`, then apply eq. (22). Returns (n0, r, j).
+pub fn size_rule_from_rank(n: usize, r_target: usize) -> (usize, usize, u32) {
+    let r_target = r_target.max(1);
+    let mut best = (n, n, 0u32);
+    let mut best_diff = f64::INFINITY;
+    let max_j = (usize::BITS - n.leading_zeros()).max(1);
+    for j in 0..max_j {
+        let (n0, r) = size_rule(n, j);
+        let diff = ((r as f64).ln() - (r_target as f64).ln()).abs();
+        if diff < best_diff {
+            best_diff = diff;
+            best = (n0, r, j);
+        }
+    }
+    best
+}
+
+/// Per-node factors of the recursively low-rank compressed matrix.
+///
+/// Indexing follows the partition tree's node ids. `Option` entries are
+/// populated according to role: leaves carry `a_leaf`/`u`; nonleaf nodes
+/// carry `landmark*`/`sigma*`; nonleaf non-root nodes carry `w`.
+pub struct HFactors {
+    /// The partitioning tree (owns the permutation).
+    pub tree: PartitionTree,
+    /// Configuration used to build.
+    pub config: HConfig,
+    /// Training features (original order), kept for out-of-sample leaf
+    /// kernel evaluations.
+    pub x: Mat,
+    /// Nonleaf i: original training indices of the landmark set X̲_i.
+    pub landmark_idx: Vec<Vec<usize>>,
+    /// Nonleaf i: landmark coordinates (r_i x d).
+    pub landmarks: Vec<Option<Mat>>,
+    /// Nonleaf i: Σ_i = K′(X̲_i, X̲_i)  (r_i x r_i).
+    pub sigma: Vec<Option<Mat>>,
+    /// Nonleaf i: Cholesky of Σ_i.
+    pub sigma_chol: Vec<Option<Cholesky>>,
+    /// Nonleaf non-root i: W_i = K′(X̲_i, X̲_p) Σ_p^{-1}  (r_i x r_p).
+    pub w: Vec<Option<Mat>>,
+    /// Leaf i: U_i = K′(X_i, X̲_p) Σ_p^{-1}  (n_i x r_p).
+    pub u: Vec<Option<Mat>>,
+    /// Leaf i: A_ii = K′(X_i, X_i)  (n_i x n_i).
+    pub a_leaf: Vec<Option<Mat>>,
+}
+
+impl HFactors {
+    /// Build tree + factors with the native block evaluator.
+    pub fn build(x: &Mat, config: HConfig) -> Result<HFactors> {
+        Self::build_with(x, config, &NativeEvaluator)
+    }
+
+    /// Build tree + factors with a custom (e.g. PJRT) block evaluator.
+    pub fn build_with(
+        x: &Mat,
+        config: HConfig,
+        eval: &dyn BlockEvaluator,
+    ) -> Result<HFactors> {
+        if x.rows() == 0 {
+            return Err(Error::config("cannot build on an empty training set"));
+        }
+        let mut rng = Rng::new(config.seed);
+        let tree = PartitionTree::build(x, config.n0.max(1), config.rule, &mut rng);
+        Self::build_on_tree(x, config, tree, &mut rng, eval)
+    }
+
+    /// Build factors over an externally constructed tree (used by the
+    /// partitioning experiments, which time tree building separately).
+    pub fn build_on_tree(
+        x: &Mat,
+        config: HConfig,
+        tree: PartitionTree,
+        rng: &mut Rng,
+        eval: &dyn BlockEvaluator,
+    ) -> Result<HFactors> {
+        let nn = tree.nodes.len();
+        let kind = config.kind;
+        let lp = config.lambda_prime;
+
+        let mut f = HFactors {
+            x: x.clone(),
+            landmark_idx: vec![Vec::new(); nn],
+            landmarks: vec![None; nn],
+            sigma: vec![None; nn],
+            sigma_chol: vec![None; nn],
+            w: vec![None; nn],
+            u: vec![None; nn],
+            a_leaf: vec![None; nn],
+            tree,
+            config,
+        };
+
+        // --- Landmark sets + Σ_i for every nonleaf node (Section 4.2:
+        // uniformly random samples of the node's own points). Node ids are
+        // assigned parent-before-child by the tree builder, so a node's
+        // parent landmarks are always available when we get to it. ---
+        for i in 0..nn {
+            if f.tree.nodes[i].is_leaf() {
+                continue;
+            }
+            let parent = f.tree.nodes[i].parent;
+            let mut pts: Vec<usize> = f.tree.node_points(i).to_vec();
+            if f.config.avoid_parent_landmarks {
+                if let Some(p) = parent {
+                    let excluded: std::collections::HashSet<usize> =
+                        f.landmark_idx[p].iter().copied().collect();
+                    let filtered: Vec<usize> =
+                        pts.iter().copied().filter(|q| !excluded.contains(q)).collect();
+                    // Keep at least one candidate; fall back to overlap if
+                    // the exclusion would empty the pool.
+                    if !filtered.is_empty() {
+                        pts = filtered;
+                    }
+                }
+            }
+            let r_i = f.config.rank.min(pts.len()).max(1);
+            let mut idx: Vec<usize> =
+                rng.sample_indices(pts.len(), r_i).iter().map(|&k| pts[k]).collect();
+            idx.sort_unstable(); // determinism niceties; order is irrelevant
+            let lm = x.select_rows(&idx);
+            let mut sig = eval.block(kind, &lm, &lm);
+            sig.symmetrize();
+            // λ′ on the diagonal (coincident points of k′).
+            for a in 0..r_i {
+                sig[(a, a)] = kind.diag_value() + lp;
+            }
+            let chol = Cholesky::new_jittered(&sig, 30).map_err(|e| {
+                Error::linalg(format!("Σ_{i} not PD even with jitter: {e}"))
+            })?;
+            f.landmark_idx[i] = idx;
+            f.landmarks[i] = Some(lm);
+            f.sigma[i] = Some(sig);
+            f.sigma_chol[i] = Some(chol);
+        }
+
+        // --- Leaf blocks and bases; W for inner nodes. ---
+        for i in 0..nn {
+            let parent = f.tree.nodes[i].parent;
+            if f.tree.nodes[i].is_leaf() {
+                let pts: Vec<usize> = f.tree.node_points(i).to_vec();
+                let xi = x.select_rows(&pts);
+                let mut aii = eval.block(kind, &xi, &xi);
+                aii.symmetrize();
+                for a in 0..pts.len() {
+                    aii[(a, a)] = kind.diag_value() + lp;
+                }
+                f.a_leaf[i] = Some(aii);
+                if let Some(p) = parent {
+                    let kxl = cross_with_identity(
+                        eval,
+                        kind,
+                        &xi,
+                        &pts,
+                        f.landmarks[p].as_ref().unwrap(),
+                        &f.landmark_idx[p],
+                        lp,
+                    );
+                    // U_i = K′(X_i, X̲_p) Σ_p^{-1}
+                    let u = f.sigma_chol[p].as_ref().unwrap().solve_right(&kxl);
+                    f.u[i] = Some(u);
+                }
+            } else if let Some(p) = parent {
+                let kll = cross_with_identity(
+                    eval,
+                    kind,
+                    f.landmarks[i].as_ref().unwrap(),
+                    &f.landmark_idx[i],
+                    f.landmarks[p].as_ref().unwrap(),
+                    &f.landmark_idx[p],
+                    lp,
+                );
+                // W_i = K′(X̲_i, X̲_p) Σ_p^{-1}
+                let w = f.sigma_chol[p].as_ref().unwrap().solve_right(&kll);
+                f.w[i] = Some(w);
+            }
+        }
+        Ok(f)
+    }
+
+    /// Number of training points.
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Landmark count of node i's parent (the dimension of the c/d
+    /// vectors attached to node i in Algorithms 1–3).
+    pub fn parent_rank(&self, i: usize) -> usize {
+        let p = self.tree.nodes[i].parent.expect("root has no parent rank");
+        self.landmark_idx[p].len()
+    }
+
+    /// Memory footprint in f64 words of the stored factors (the paper's
+    /// §4.5 estimate is ≈ 4nr for n0 = r): Σ |A_ii| + |U_i| + |Σ_p| + |W_p|.
+    pub fn memory_words(&self) -> usize {
+        let mut words = 0;
+        for i in 0..self.tree.nodes.len() {
+            if let Some(a) = &self.a_leaf[i] {
+                words += a.rows() * a.cols();
+            }
+            if let Some(u) = &self.u[i] {
+                words += u.rows() * u.cols();
+            }
+            if let Some(s) = &self.sigma[i] {
+                words += s.rows() * s.cols();
+            }
+            if let Some(w) = &self.w[i] {
+                words += w.rows() * w.cols();
+            }
+        }
+        words
+    }
+
+    /// Permute a vector from original order into tree (block) order.
+    pub fn to_tree_order(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n());
+        self.tree.perm.iter().map(|&orig| v[orig]).collect()
+    }
+
+    /// Permute a vector from tree order back to original order.
+    pub fn from_tree_order(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n());
+        let mut out = vec![0.0; v.len()];
+        for (pos, &orig) in self.tree.perm.iter().enumerate() {
+            out[orig] = v[pos];
+        }
+        out
+    }
+
+    /// Permute matrix rows from original order into tree order.
+    pub fn rows_to_tree_order(&self, m: &Mat) -> Mat {
+        m.select_rows(&self.tree.perm)
+    }
+
+    /// Permute matrix rows from tree order back to original order.
+    pub fn rows_from_tree_order(&self, m: &Mat) -> Mat {
+        let mut inv = vec![0usize; self.n()];
+        for (pos, &orig) in self.tree.perm.iter().enumerate() {
+            inv[orig] = pos;
+        }
+        m.select_rows(&inv)
+    }
+}
+
+/// K′(A, B) where both point sets carry original training indices:
+/// evaluates the base kernel block and adds λ′ wherever the same original
+/// point appears on both sides (the Kronecker δ of k′ = k + λ′δ).
+fn cross_with_identity(
+    eval: &dyn BlockEvaluator,
+    kind: KernelKind,
+    a: &Mat,
+    a_idx: &[usize],
+    b: &Mat,
+    b_idx: &[usize],
+    lambda_prime: f64,
+) -> Mat {
+    let mut k = eval.block(kind, a, b);
+    if lambda_prime != 0.0 {
+        use std::collections::HashMap;
+        let bpos: HashMap<usize, usize> =
+            b_idx.iter().enumerate().map(|(j, &orig)| (orig, j)).collect();
+        for (i, &orig) in a_idx.iter().enumerate() {
+            if let Some(&j) = bpos.get(&orig) {
+                k[(i, j)] += lambda_prime;
+            }
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Gaussian;
+
+    fn cloud(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.uniform(0.0, 1.0))
+    }
+
+    #[test]
+    fn size_rule_matches_paper() {
+        // eq. 22 with n = 1033, j = 3: n0 = ceil(1033/8) = 130, r = 129.
+        assert_eq!(size_rule(1033, 3), (130, 129));
+        assert_eq!(size_rule(16, 0), (16, 16));
+        assert_eq!(size_rule(16, 2), (4, 4));
+    }
+
+    #[test]
+    fn size_rule_from_rank_picks_nearest() {
+        let (n0, r, j) = size_rule_from_rank(4096, 129);
+        assert_eq!(j, 5);
+        assert_eq!(r, 128);
+        assert_eq!(n0, 128);
+        let (_, r1, _) = size_rule_from_rank(4096, 4096);
+        assert_eq!(r1, 4096);
+    }
+
+    #[test]
+    fn factors_have_expected_shapes() {
+        let x = cloud(64, 4, 1);
+        let cfg = HConfig::new(Gaussian::new(0.6), 8).with_seed(3);
+        let f = HFactors::build(&x, cfg).unwrap();
+        let nn = f.tree.nodes.len();
+        for i in 0..nn {
+            let nd = &f.tree.nodes[i];
+            if nd.is_leaf() {
+                let a = f.a_leaf[i].as_ref().unwrap();
+                assert_eq!(a.shape(), (nd.len(), nd.len()));
+                let u = f.u[i].as_ref().unwrap();
+                assert_eq!(u.rows(), nd.len());
+                assert_eq!(u.cols(), f.parent_rank(i));
+                assert!(f.sigma[i].is_none());
+            } else {
+                let r_i = f.landmark_idx[i].len();
+                assert_eq!(r_i, 8.min(nd.len()));
+                assert_eq!(f.sigma[i].as_ref().unwrap().shape(), (r_i, r_i));
+                if nd.parent.is_some() {
+                    let w = f.w[i].as_ref().unwrap();
+                    assert_eq!(w.shape(), (r_i, f.parent_rank(i)));
+                } else {
+                    assert!(f.w[i].is_none());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn landmarks_are_node_points() {
+        let x = cloud(64, 3, 2);
+        let cfg = HConfig::new(Gaussian::new(0.5), 6).with_seed(5);
+        let f = HFactors::build(&x, cfg).unwrap();
+        for i in 0..f.tree.nodes.len() {
+            if !f.tree.nodes[i].is_leaf() {
+                let pts: std::collections::HashSet<usize> =
+                    f.tree.node_points(i).iter().copied().collect();
+                for &lm in &f.landmark_idx[i] {
+                    assert!(pts.contains(&lm), "landmark {lm} outside node {i}");
+                }
+                // Distinct landmarks.
+                let set: std::collections::HashSet<_> =
+                    f.landmark_idx[i].iter().collect();
+                assert_eq!(set.len(), f.landmark_idx[i].len());
+            }
+        }
+    }
+
+    #[test]
+    fn u_satisfies_normal_equation() {
+        // U_i Σ_p = K′(X_i, X̲_p)
+        let x = cloud(32, 3, 7);
+        let cfg = HConfig::new(Gaussian::new(0.7), 4).with_seed(9);
+        let f = HFactors::build(&x, cfg).unwrap();
+        for &leaf in &f.tree.leaves() {
+            let p = f.tree.nodes[leaf].parent.unwrap();
+            let u = f.u[leaf].as_ref().unwrap();
+            let sig = f.sigma[p].as_ref().unwrap();
+            let prod = crate::linalg::matmul(
+                u,
+                crate::linalg::Trans::No,
+                sig,
+                crate::linalg::Trans::No,
+            );
+            // Rebuild K′(X_i, X̲_p) directly.
+            let pts: Vec<usize> = f.tree.node_points(leaf).to_vec();
+            let xi = x.select_rows(&pts);
+            let mut want = crate::kernels::kernel_cross(
+                f.config.kind,
+                &xi,
+                f.landmarks[p].as_ref().unwrap(),
+            );
+            for (a, &orig) in pts.iter().enumerate() {
+                if let Some(j) = f.landmark_idx[p].iter().position(|&l| l == orig) {
+                    want[(a, j)] += f.config.lambda_prime;
+                }
+            }
+            let mut diff = prod;
+            diff.axpy(-1.0, &want);
+            assert!(diff.max_abs() < 1e-8, "leaf {leaf}: {}", diff.max_abs());
+        }
+    }
+
+    #[test]
+    fn tree_order_roundtrip() {
+        let x = cloud(20, 2, 8);
+        let cfg = HConfig::new(Gaussian::new(0.5), 4).with_seed(1);
+        let f = HFactors::build(&x, cfg).unwrap();
+        let v: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let t = f.to_tree_order(&v);
+        let back = f.from_tree_order(&t);
+        assert_eq!(back, v);
+        let m = Mat::from_fn(20, 2, |i, j| (i * 2 + j) as f64);
+        let mb = f.rows_from_tree_order(&f.rows_to_tree_order(&m));
+        assert_eq!(mb, m);
+    }
+
+    #[test]
+    fn single_leaf_tree_ok() {
+        let x = cloud(10, 2, 9);
+        let mut cfg = HConfig::new(Gaussian::new(0.5), 4).with_seed(1);
+        cfg.n0 = 100;
+        let f = HFactors::build(&x, cfg).unwrap();
+        assert_eq!(f.tree.nodes.len(), 1);
+        assert!(f.a_leaf[0].is_some());
+        assert!(f.u[0].is_none());
+    }
+
+    #[test]
+    fn memory_about_4nr() {
+        // Balanced binary, n0 = r: paper §4.5 says ≈ 4nr words.
+        let n = 512;
+        let r = 32;
+        let x = cloud(n, 3, 10);
+        let mut cfg = HConfig::new(Gaussian::new(0.5), r).with_seed(2);
+        cfg.n0 = r;
+        let f = HFactors::build(&x, cfg).unwrap();
+        let words = f.memory_words() as f64;
+        let expect = 4.0 * (n * r) as f64;
+        assert!(
+            words > 0.7 * expect && words < 1.3 * expect,
+            "words={words} expect≈{expect}"
+        );
+    }
+
+    #[test]
+    fn empty_training_rejected() {
+        let x = Mat::zeros(0, 3);
+        assert!(HFactors::build(&x, HConfig::new(Gaussian::new(1.0), 4)).is_err());
+    }
+}

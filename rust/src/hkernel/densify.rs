@@ -1,0 +1,281 @@
+//! Materialization of the full hierarchical kernel matrix (test oracle).
+//!
+//! `densify` reconstructs K_hierarchical(X, X) in tree order from the
+//! factors, following the matrix view of Section 3 (Figure 2): exact leaf
+//! diagonal blocks, and `AggU_i Σ_p AggU_jᵀ` sibling blocks with the
+//! nested aggregate bases `AggU_p = [stack AggU_i] W_p` of item 6.
+//! O(n²) — used only by tests and small-scale experiments (Theorem 4
+//! norm comparisons, kernel PCA at dense scale).
+
+use super::build::HFactors;
+use crate::linalg::{gemm, matmul, Mat, Trans};
+
+/// Aggregate bases AggU_i (n_i x r_parent) for every non-root node.
+pub fn aggregate_bases(f: &HFactors) -> Vec<Option<Mat>> {
+    let nn = f.tree.nodes.len();
+    let mut agg: Vec<Option<Mat>> = vec![None; nn];
+    // Post-order: children before parents.
+    for id in f.tree.postorder() {
+        let nd = &f.tree.nodes[id];
+        if nd.parent.is_none() {
+            continue; // root has no parent basis
+        }
+        if nd.is_leaf() {
+            agg[id] = Some(f.u[id].as_ref().unwrap().clone());
+        } else {
+            // Stack children aggregates (they are contiguous in tree
+            // order), then multiply by W_i.
+            let r_own = f.landmark_idx[id].len();
+            let mut stacked = Mat::zeros(nd.len(), r_own);
+            let mut row = 0usize;
+            for &c in &nd.children {
+                let a = agg[c].as_ref().expect("child aggregate missing");
+                for i in 0..a.rows() {
+                    stacked.row_mut(row + i).copy_from_slice(a.row(i));
+                }
+                row += a.rows();
+            }
+            let w = f.w[id].as_ref().unwrap();
+            agg[id] = Some(matmul(&stacked, Trans::No, w, Trans::No));
+        }
+    }
+    agg
+}
+
+/// Full K_hierarchical(X, X) in **tree order**.
+pub fn densify(f: &HFactors) -> Mat {
+    let n = f.n();
+    let mut k = Mat::zeros(n, n);
+    // Leaf diagonal blocks.
+    for &leaf in &f.tree.leaves() {
+        let nd = &f.tree.nodes[leaf];
+        let a = f.a_leaf[leaf].as_ref().unwrap();
+        for i in 0..nd.len() {
+            let src = a.row(i);
+            k.row_mut(nd.lo + i)[nd.lo..nd.hi].copy_from_slice(src);
+        }
+    }
+    // Sibling off-diagonal blocks.
+    let agg = aggregate_bases(f);
+    for p in f.tree.nonleaves() {
+        let sig = f.sigma[p].as_ref().unwrap();
+        let children = f.tree.nodes[p].children.clone();
+        for (ci, &i) in children.iter().enumerate() {
+            let ai = agg[i].as_ref().unwrap();
+            let ai_sig = matmul(ai, Trans::No, sig, Trans::No);
+            for &j in children.iter().skip(ci + 1) {
+                let aj = agg[j].as_ref().unwrap();
+                let block = matmul(&ai_sig, Trans::No, aj, Trans::Yes);
+                let (li, lj) = (f.tree.nodes[i].lo, f.tree.nodes[j].lo);
+                for a in 0..block.rows() {
+                    let row = block.row(a);
+                    k.row_mut(li + a)[lj..lj + block.cols()].copy_from_slice(row);
+                    for (b, &v) in row.iter().enumerate() {
+                        k[(lj + b, li + a)] = v;
+                    }
+                }
+            }
+        }
+    }
+    k
+}
+
+/// Full K_hierarchical(X, X) in **original order** (rows and columns).
+pub fn densify_original_order(f: &HFactors) -> Mat {
+    let kt = densify(f);
+    // Apply the inverse permutation on both sides.
+    let n = f.n();
+    let mut out = Mat::zeros(n, n);
+    for a in 0..n {
+        let oa = f.tree.perm[a];
+        for b in 0..n {
+            out[(oa, f.tree.perm[b])] = kt[(a, b)];
+        }
+    }
+    out
+}
+
+/// Dense matrix of the *base* kernel K′(X, X) in tree order (with the λ′
+/// diagonal), for Theorem 4 style comparisons.
+pub fn densify_exact_base(f: &HFactors) -> Mat {
+    let xt = f.rows_to_tree_order(&f.x);
+    let mut k = crate::kernels::kernel_block(f.config.kind, &xt);
+    for i in 0..k.rows() {
+        k[(i, i)] += f.config.lambda_prime;
+    }
+    k
+}
+
+/// Dense Nyström kernel matrix (in tree order) using the root's landmark
+/// set: K(X, X̲) Σ^{-1} K(X̲, X). Reference for Theorem 4.
+pub fn densify_root_nystrom(f: &HFactors) -> Mat {
+    let root = 0usize;
+    assert!(!f.tree.nodes[root].is_leaf(), "single-leaf tree has no landmarks");
+    let xt = f.rows_to_tree_order(&f.x);
+    let lm = f.landmarks[root].as_ref().unwrap();
+    let kxl = crate::kernels::kernel_cross(f.config.kind, &xt, lm);
+    let u = f.sigma_chol[root].as_ref().unwrap().solve_right(&kxl);
+    let mut out = Mat::zeros(xt.rows(), xt.rows());
+    gemm(1.0, &u, Trans::No, &kxl, Trans::Yes, 0.0, &mut out);
+    out.symmetrize();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hkernel::build::HConfig;
+    use crate::kernels::{Gaussian, Imq, KernelKind, Laplace};
+    use crate::linalg::Cholesky;
+    use crate::partition::SplitRule;
+    use crate::util::rng::Rng;
+
+    fn cloud(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.uniform(0.0, 1.0))
+    }
+
+    fn build(n: usize, d: usize, r: usize, kind: KernelKind, seed: u64) -> HFactors {
+        let x = cloud(n, d, seed);
+        let mut cfg = HConfig::new(kind, r).with_seed(seed + 1);
+        cfg.n0 = r;
+        HFactors::build(&x, cfg).unwrap()
+    }
+
+    #[test]
+    fn densify_is_symmetric_with_exact_leaf_blocks() {
+        let f = build(48, 3, 6, Gaussian::new(0.5), 1);
+        let k = densify(&f);
+        assert!(k.is_symmetric(1e-12));
+        // Leaf diag blocks equal the exact base kernel (+λ′ diag).
+        let exact = densify_exact_base(&f);
+        for &leaf in &f.tree.leaves() {
+            let nd = &f.tree.nodes[leaf];
+            for a in nd.lo..nd.hi {
+                for b in nd.lo..nd.hi {
+                    assert!(
+                        (k[(a, b)] - exact[(a, b)]).abs() < 1e-12,
+                        "leaf block mismatch at ({a},{b})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Theorem 6: the hierarchical kernel matrix is (strictly) PD.
+    #[test]
+    fn property_positive_definite_across_kernels_and_trees() {
+        for (seed, kind) in [
+            (1u64, Gaussian::new(0.3)),
+            (2, Gaussian::new(1.5)),
+            (3, Laplace::new(0.5)),
+            (4, Imq::new(0.8)),
+        ] {
+            for rule in [SplitRule::RandomProjection, SplitRule::KMeans { k: 3, iters: 10 }] {
+                let x = cloud(60, 4, seed * 13 + 5);
+                let mut cfg = HConfig::new(kind, 7).with_seed(seed).with_rule(rule);
+                cfg.n0 = 7;
+                cfg.lambda_prime = 0.0; // strict PD must hold without help
+                let f = HFactors::build(&x, cfg).unwrap();
+                let k = densify(&f);
+                assert!(
+                    Cholesky::new_jittered(&k, 6).map(|c| c.jitter < 1e-8).unwrap_or(false),
+                    "not PD for {kind:?} {rule:?} seed {seed}"
+                );
+            }
+        }
+    }
+
+    /// Proposition 1 (one-level tree = k_compositional): rows at landmark
+    /// points reproduce the exact kernel.
+    #[test]
+    fn property_exact_at_root_landmarks() {
+        let x = cloud(40, 3, 9);
+        let mut cfg = HConfig::new(Gaussian::new(0.6), 8).with_seed(4);
+        cfg.n0 = 20; // two leaves under the root: one-level compositional
+        cfg.lambda_prime = 0.0;
+        let f = HFactors::build(&x, cfg).unwrap();
+        assert_eq!(f.tree.depth(), 1, "want a one-level tree");
+        let k = densify(&f);
+        let exact = densify_exact_base(&f);
+        // Tree-order positions of root landmarks.
+        let mut pos_of = vec![usize::MAX; 40];
+        for (pos, &orig) in f.tree.perm.iter().enumerate() {
+            pos_of[orig] = pos;
+        }
+        for &lm in &f.landmark_idx[0] {
+            let p = pos_of[lm];
+            for b in 0..40 {
+                assert!(
+                    (k[(p, b)] - exact[(p, b)]).abs() < 1e-9,
+                    "row of landmark {lm} differs at col {b}: {} vs {}",
+                    k[(p, b)],
+                    exact[(p, b)]
+                );
+            }
+        }
+    }
+
+    /// Theorem 4: ‖K − K_compositional‖ < ‖K − K_Nyström‖ for the same
+    /// (root) landmark set, in Frobenius and 2-norm.
+    #[test]
+    fn property_theorem4_norm_improvement() {
+        for seed in [1u64, 2, 3, 4, 5] {
+            let x = cloud(50, 3, 100 + seed);
+            let mut cfg = HConfig::new(Gaussian::new(0.4), 6).with_seed(seed);
+            cfg.n0 = 25; // one level: k_compositional
+            cfg.lambda_prime = 0.0;
+            let f = HFactors::build(&x, cfg).unwrap();
+            let exact = densify_exact_base(&f);
+            let comp = densify(&f);
+            let nys = densify_root_nystrom(&f);
+            let dc = {
+                let mut d = exact.clone();
+                d.axpy(-1.0, &comp);
+                d
+            };
+            let dn = {
+                let mut d = exact.clone();
+                d.axpy(-1.0, &nys);
+                d
+            };
+            assert!(
+                dc.fro_norm() < dn.fro_norm(),
+                "Frobenius: {} !< {}",
+                dc.fro_norm(),
+                dn.fro_norm()
+            );
+            assert!(
+                dc.norm2_est(60) < dn.norm2_est(60) + 1e-12,
+                "2-norm: {} !< {}",
+                dc.norm2_est(60),
+                dn.norm2_est(60)
+            );
+        }
+    }
+
+    #[test]
+    fn densify_original_order_permutes_consistently() {
+        let f = build(30, 3, 5, Gaussian::new(0.5), 11);
+        let kt = densify(&f);
+        let ko = densify_original_order(&f);
+        for (pos_a, &oa) in f.tree.perm.iter().enumerate() {
+            for (pos_b, &ob) in f.tree.perm.iter().enumerate() {
+                assert_eq!(kt[(pos_a, pos_b)], ko[(oa, ob)]);
+            }
+        }
+    }
+
+    #[test]
+    fn single_leaf_densify_is_exact() {
+        let x = cloud(12, 2, 12);
+        let mut cfg = HConfig::new(Gaussian::new(0.5), 4);
+        cfg.n0 = 50;
+        let f = HFactors::build(&x, cfg).unwrap();
+        let k = densify(&f);
+        let exact = densify_exact_base(&f);
+        let mut d = k;
+        d.axpy(-1.0, &exact);
+        assert!(d.max_abs() < 1e-12);
+    }
+}

@@ -1,0 +1,228 @@
+//! Algorithm 1: O(nr) matrix-vector multiplication `y = A b`.
+//!
+//! One post-order traversal accumulates the compressed coefficients
+//! `c_i = U_iᵀ b_i` (leaves) / `c_i = W_iᵀ Σ_j c_j` (inner nodes), one
+//! pre-order traversal pushes the sibling interactions `d` back down, and
+//! leaves finish with `y_i = A_ii b_i + U_i d_i`.
+
+use super::build::HFactors;
+use crate::linalg::{gemv, Trans};
+
+/// y = K_hierarchical b, both in **tree order**. Multi-column version:
+/// `b` and the returned y are n x m in row-major [`crate::linalg::Mat`]s
+/// via [`hmatvec_mat`].
+pub fn hmatvec(f: &HFactors, b: &[f64]) -> Vec<f64> {
+    let n = f.n();
+    assert_eq!(b.len(), n, "hmatvec length");
+    let nn = f.tree.nodes.len();
+    let mut y = vec![0.0; n];
+
+    // Single-leaf tree: dense block multiply.
+    if nn == 1 {
+        let a = f.a_leaf[0].as_ref().unwrap();
+        gemv(1.0, a, Trans::No, b, 0.0, &mut y);
+        return y;
+    }
+
+    // c[i], d[i] live in the parent's landmark space (len = parent_rank).
+    let mut c: Vec<Vec<f64>> = vec![Vec::new(); nn];
+    let mut d: Vec<Vec<f64>> = vec![Vec::new(); nn];
+
+    // ---- Upward (post-order): compute c. ----
+    let post = f.tree.postorder();
+    for &i in &post {
+        let nd = &f.tree.nodes[i];
+        if nd.parent.is_none() {
+            continue;
+        }
+        let rp = f.parent_rank(i);
+        let mut ci = vec![0.0; rp];
+        if nd.is_leaf() {
+            let u = f.u[i].as_ref().unwrap();
+            gemv(1.0, u, Trans::Yes, &b[nd.lo..nd.hi], 0.0, &mut ci);
+        } else {
+            // Sum of children c (each of length = own rank), then W_iᵀ.
+            let r_own = f.landmark_idx[i].len();
+            let mut csum = vec![0.0; r_own];
+            for &ch in &nd.children {
+                for (s, v) in csum.iter_mut().zip(c[ch].iter()) {
+                    *s += v;
+                }
+            }
+            let w = f.w[i].as_ref().unwrap();
+            gemv(1.0, w, Trans::Yes, &csum, 0.0, &mut ci);
+        }
+        c[i] = ci;
+    }
+
+    // ---- Sibling exchange: d_l += Σ_p (Σ_{siblings i of l} c_i). ----
+    for p in f.tree.nonleaves() {
+        let children = &f.tree.nodes[p].children;
+        let rp = f.landmark_idx[p].len();
+        let sig = f.sigma[p].as_ref().unwrap();
+        let mut total = vec![0.0; rp];
+        for &ch in children {
+            for (t, v) in total.iter_mut().zip(c[ch].iter()) {
+                *t += v;
+            }
+        }
+        for &ch in children {
+            // others = total − c_ch
+            let others: Vec<f64> =
+                total.iter().zip(c[ch].iter()).map(|(t, v)| t - v).collect();
+            let mut dch = vec![0.0; rp];
+            gemv(1.0, sig, Trans::No, &others, 0.0, &mut dch);
+            d[ch] = dch;
+        }
+    }
+
+    // ---- Downward (pre-order): push d through W, finish at leaves. ----
+    // Pre-order = reverse post-order works for parent-before-child since
+    // postorder lists children first.
+    for &i in post.iter().rev() {
+        let nd = &f.tree.nodes[i];
+        if nd.is_leaf() {
+            continue;
+        }
+        if nd.parent.is_some() {
+            // d_child += W_i d_i
+            let w = f.w[i].as_ref().unwrap();
+            let r_own = f.landmark_idx[i].len();
+            let mut wd = vec![0.0; r_own];
+            gemv(1.0, w, Trans::No, &d[i], 0.0, &mut wd);
+            for &ch in &nd.children {
+                for (dc, v) in d[ch].iter_mut().zip(wd.iter()) {
+                    *dc += v;
+                }
+            }
+        }
+    }
+    for &leaf in &f.tree.leaves() {
+        let nd = &f.tree.nodes[leaf];
+        let a = f.a_leaf[leaf].as_ref().unwrap();
+        gemv(1.0, a, Trans::No, &b[nd.lo..nd.hi], 0.0, &mut y[nd.lo..nd.hi]);
+        let u = f.u[leaf].as_ref().unwrap();
+        gemv(1.0, u, Trans::No, &d[leaf], 1.0, &mut y[nd.lo..nd.hi]);
+    }
+    y
+}
+
+/// Multi-column matvec Y = K_hierarchical B (tree order), column by column.
+pub fn hmatvec_mat(f: &HFactors, b: &crate::linalg::Mat) -> crate::linalg::Mat {
+    let mut y = crate::linalg::Mat::zeros(b.rows(), b.cols());
+    for j in 0..b.cols() {
+        let col = hmatvec(f, &b.col(j));
+        y.set_col(j, &col);
+    }
+    y
+}
+
+/// y = K_hierarchical b in **original order** (permutes in and out).
+pub fn hmatvec_original(f: &HFactors, b: &[f64]) -> Vec<f64> {
+    let bt = f.to_tree_order(b);
+    let yt = hmatvec(f, &bt);
+    f.from_tree_order(&yt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hkernel::build::HConfig;
+    use crate::hkernel::densify::densify;
+    use crate::kernels::{Gaussian, KernelKind, Laplace};
+    use crate::linalg::Mat;
+    use crate::partition::SplitRule;
+    use crate::util::rng::Rng;
+
+    fn build(n: usize, r: usize, n0: usize, kind: KernelKind, seed: u64) -> HFactors {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 4, |_, _| rng.uniform(0.0, 1.0));
+        let mut cfg = HConfig::new(kind, r).with_seed(seed * 7 + 1);
+        cfg.n0 = n0;
+        HFactors::build(&x, cfg).unwrap()
+    }
+
+    /// Property: Algorithm 1 equals the dense densified matvec across
+    /// random instances, kernels, tree shapes and arities.
+    #[test]
+    fn property_matches_dense() {
+        let cases: Vec<(HFactors, u64)> = vec![
+            (build(60, 6, 6, Gaussian::new(0.5), 1), 11),
+            (build(60, 6, 15, Gaussian::new(1.2), 2), 12),
+            (build(47, 5, 9, Laplace::new(0.7), 3), 13),
+            (build(33, 16, 16, Gaussian::new(0.4), 4), 14),
+        ];
+        for (f, s) in cases {
+            let k = densify(&f);
+            let mut rng = Rng::new(s);
+            for _ in 0..3 {
+                let b: Vec<f64> = (0..f.n()).map(|_| rng.normal()).collect();
+                let fast = hmatvec(&f, &b);
+                let mut slow = vec![0.0; f.n()];
+                crate::linalg::gemv(1.0, &k, crate::linalg::Trans::No, &b, 0.0, &mut slow);
+                for i in 0..f.n() {
+                    assert!(
+                        (fast[i] - slow[i]).abs() < 1e-9 * (1.0 + slow[i].abs()),
+                        "mismatch at {i}: {} vs {}",
+                        fast[i],
+                        slow[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_arity_tree_matches_dense() {
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(72, 3, |_, _| rng.uniform(0.0, 1.0));
+        let mut cfg = HConfig::new(Gaussian::new(0.5), 6).with_seed(6);
+        cfg.n0 = 9;
+        cfg.rule = SplitRule::KMeans { k: 3, iters: 10 };
+        let f = HFactors::build(&x, cfg).unwrap();
+        let k = densify(&f);
+        let b: Vec<f64> = (0..72).map(|_| rng.normal()).collect();
+        let fast = hmatvec(&f, &b);
+        let mut slow = vec![0.0; 72];
+        crate::linalg::gemv(1.0, &k, crate::linalg::Trans::No, &b, 0.0, &mut slow);
+        for i in 0..72 {
+            assert!((fast[i] - slow[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_leaf_matvec() {
+        let f = build(10, 4, 64, Gaussian::new(0.5), 7);
+        assert_eq!(f.tree.nodes.len(), 1);
+        let b = vec![1.0; 10];
+        let y = hmatvec(&f, &b);
+        let k = densify(&f);
+        let mut want = vec![0.0; 10];
+        crate::linalg::gemv(1.0, &k, crate::linalg::Trans::No, &b, 0.0, &mut want);
+        for i in 0..10 {
+            assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn original_order_wrapper_consistent() {
+        let f = build(40, 5, 8, Gaussian::new(0.6), 8);
+        let mut rng = Rng::new(9);
+        let b: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let yo = hmatvec_original(&f, &b);
+        let yt = hmatvec(&f, &f.to_tree_order(&b));
+        assert_eq!(f.to_tree_order(&yo), yt);
+    }
+
+    #[test]
+    fn matvec_mat_matches_columns() {
+        let f = build(30, 4, 6, Gaussian::new(0.5), 10);
+        let mut rng = Rng::new(11);
+        let b = Mat::from_fn(30, 3, |_, _| rng.normal());
+        let y = hmatvec_mat(&f, &b);
+        for j in 0..3 {
+            let col = hmatvec(&f, &b.col(j));
+            assert_eq!(y.col(j), col);
+        }
+    }
+}

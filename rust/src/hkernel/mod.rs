@@ -1,0 +1,30 @@
+//! The paper's contribution: the hierarchically compositional kernel and
+//! its recursively low-rank compressed matrix algebra.
+//!
+//! - [`build`]: hierarchical factor construction — the matrix view of
+//!   Section 3 (leaf blocks `A_ii`, bases `U_i`, middle factors `Σ_p`,
+//!   changes of basis `W_p`), with the λ′ numerical stabilization of
+//!   Section 4.3 and the landmark selection of Section 4.2.
+//! - [`matvec`]: Algorithm 1 — `y = A b` in O(nr) via one post-order and
+//!   one pre-order traversal.
+//! - [`solve`]: a two-pass Sherman–Morrison–Woodbury factorization of
+//!   `A + λI`, algebraically equivalent to the paper's Algorithm 2
+//!   (O(nr²) factor, O(nr) per right-hand side), which also yields
+//!   `log det(A + λI)` — the Gaussian-process MLE extension of Section 6.
+//! - [`oos`]: Algorithm 3 — out-of-sample inner products
+//!   `wᵀ k_hierarchical(X, x)` with O(nr) preprocessing and
+//!   O(r² log(n/r) + dr) per query.
+//! - [`densify`]: materializes the full kernel matrix (test oracle only).
+
+pub mod build;
+pub mod densify;
+pub mod matvec;
+pub mod oos;
+pub mod persist;
+pub mod solve;
+
+pub use build::{size_rule, size_rule_from_rank, HConfig, HFactors};
+pub use persist::{load_model, save_model};
+pub use matvec::hmatvec;
+pub use oos::HPredictor;
+pub use solve::HSolver;

@@ -1,0 +1,367 @@
+//! Algorithm 3: out-of-sample prediction `z = wᵀ k_hierarchical(X, x)`.
+//!
+//! The x-independent phase (eqs. 20 of the paper) is a post-order pass
+//! computing, for each node, the compressed mass of its weight block:
+//! `e_l = U_lᵀ w_l` (leaf) or `e_l = W_lᵀ Σ_children e_c`, and the sibling
+//! aggregates `c_m = Σ_p (Σ_{siblings l of m} e_l)`. Per query, only the
+//! path from the routed leaf to the root is touched (eqs. 18, 21):
+//! `d` starts as `Σ_{p(j)}^{-1} k(X̲_{p(j)}, x)`, climbs via `Wᵀ`, and the
+//! prediction is the leaf term plus `Σ_path c_mᵀ d_m` — O(r²) per level
+//! plus one leaf kernel vector, matching eq. (23).
+//!
+//! Supports multi-output weight matrices (n x m), which is how the
+//! one-vs-all multiclass classifier evaluates all classes in one walk.
+
+use super::build::HFactors;
+use crate::linalg::{gemv, matmul, Mat, Trans};
+
+/// Precomputed out-of-sample predictor for a fixed weight block `W`
+/// (n x m, original order) — typically `W = (A + λI)^{-1} Y`.
+///
+/// Owns an `Arc` of the factors so fitted models can cache a long-lived
+/// predictor (the precomputation is O(nr·m); rebuilding it per query
+/// batch would dominate serving latency).
+pub struct HPredictor {
+    f: std::sync::Arc<HFactors>,
+    /// Weights in tree order (n x m).
+    w_tree: Mat,
+    /// c_m per non-root node (r_{p(m)} x m).
+    c: Vec<Option<Mat>>,
+    /// Original-row coordinates of each leaf's points (cached for the leaf
+    /// kernel vector evaluation).
+    leaf_rows: Vec<Option<Vec<usize>>>,
+}
+
+impl HPredictor {
+    /// Build the predictor (the O(nr·m) precomputation phase).
+    pub fn new(f: std::sync::Arc<HFactors>, w_original: &Mat) -> HPredictor {
+        assert_eq!(w_original.rows(), f.n(), "weight rows");
+        let m = w_original.cols();
+        let w_tree = f.rows_to_tree_order(w_original);
+        let nn = f.tree.nodes.len();
+        let mut e: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+        let mut c: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+
+        // e pass (post-order).
+        for &i in &f.tree.postorder() {
+            let nd = &f.tree.nodes[i];
+            if nd.parent.is_none() {
+                continue;
+            }
+            let ei = if nd.is_leaf() {
+                let u = f.u[i].as_ref().unwrap();
+                let wi = w_tree.row_range(nd.lo, nd.hi);
+                matmul(u, Trans::Yes, &wi, Trans::No)
+            } else {
+                let r_own = f.landmark_idx[i].len();
+                let mut esum = Mat::zeros(r_own, m);
+                for &ch in &nd.children {
+                    esum.axpy(1.0, e[ch].as_ref().unwrap());
+                }
+                let w = f.w[i].as_ref().unwrap();
+                matmul(w, Trans::Yes, &esum, Trans::No)
+            };
+            e[i] = Some(ei);
+        }
+        // c pass: siblings' e through Σ_p.
+        for p in f.tree.nonleaves() {
+            let children = f.tree.nodes[p].children.clone();
+            let rp = f.landmark_idx[p].len();
+            let sig = f.sigma[p].as_ref().unwrap();
+            let mut total = Mat::zeros(rp, m);
+            for &ch in &children {
+                total.axpy(1.0, e[ch].as_ref().unwrap());
+            }
+            for &ch in &children {
+                let mut others = total.clone();
+                others.axpy(-1.0, e[ch].as_ref().unwrap());
+                c[ch] = Some(matmul(sig, Trans::No, &others, Trans::No));
+            }
+        }
+
+        let mut leaf_rows: Vec<Option<Vec<usize>>> = (0..nn).map(|_| None).collect();
+        for &l in &f.tree.leaves() {
+            leaf_rows[l] = Some(f.tree.node_points(l).to_vec());
+        }
+        HPredictor { f, w_tree, c, leaf_rows }
+    }
+
+    /// Number of outputs m.
+    pub fn outputs(&self) -> usize {
+        self.w_tree.cols()
+    }
+
+    /// Predict for one query point: returns the m-vector
+    /// `wᵀ k_hierarchical(X, x)` (one entry per output column).
+    pub fn predict(&self, x: &[f64]) -> Vec<f64> {
+        let f = self.f.as_ref();
+        let m = self.outputs();
+        let kind = f.config.kind;
+        let path = f.tree.route(x);
+        let leaf = *path.last().unwrap();
+        let nd = &f.tree.nodes[leaf];
+
+        // Leaf term: w_jᵀ k(X_j, x).
+        let rows = self.leaf_rows[leaf].as_ref().unwrap();
+        let mut z = vec![0.0; m];
+        for (k_local, &orig) in rows.iter().enumerate() {
+            let kv = kind.eval(f.x.row(orig), x);
+            if kv != 0.0 {
+                let wrow = self.w_tree.row(nd.lo + k_local);
+                for (zi, wi) in z.iter_mut().zip(wrow.iter()) {
+                    *zi += kv * wi;
+                }
+            }
+        }
+        if path.len() == 1 {
+            return z; // single-leaf tree
+        }
+
+        // Path term: climb from the leaf, maintaining d.
+        let parent = f.tree.nodes[leaf].parent.unwrap();
+        let lm = f.landmarks[parent].as_ref().unwrap();
+        let rp = lm.rows();
+        let mut kvec = vec![0.0; rp];
+        for a in 0..rp {
+            kvec[a] = kind.eval(lm.row(a), x);
+        }
+        let mut d = f.sigma_chol[parent].as_ref().unwrap().solve(&kvec);
+
+        // path = [root, ..., parent, leaf]; iterate bottom-up over the
+        // non-root nodes: leaf, parent, ..., child-of-root.
+        for idx in (1..path.len()).rev() {
+            let mnode = path[idx];
+            // z += c_mᵀ d
+            if let Some(cm) = &self.c[mnode] {
+                let mut contrib = vec![0.0; m];
+                gemv(1.0, cm, Trans::Yes, &d, 0.0, &mut contrib);
+                for (zi, v) in z.iter_mut().zip(contrib.iter()) {
+                    *zi += v;
+                }
+            }
+            // Climb: d ← W_mᵀ d for the *next* node up (skip once the next
+            // node is the root — there is no W at the root's children...
+            // rather, the child-of-root term used W of that child).
+            let next = path[idx - 1];
+            if idx >= 2 {
+                // `next` is a non-root inner node with a W factor.
+                let w = self.f.w[next].as_ref().unwrap();
+                let mut dnew = vec![0.0; w.cols()];
+                gemv(1.0, w, Trans::Yes, &d, 0.0, &mut dnew);
+                d = dnew;
+            }
+            let _ = next;
+        }
+        z
+    }
+
+    /// Materialize the full column v = k_hierarchical(X, x) in **tree
+    /// order** (O(n) per query; used by GP posterior variance, which needs
+    /// the column itself rather than an inner product).
+    pub fn column(f: &HFactors, x: &[f64]) -> Vec<f64> {
+        let kind = f.config.kind;
+        let path = f.tree.route(x);
+        let leaf = *path.last().unwrap();
+        let n = f.n();
+        let agg = super::densify::aggregate_bases(f);
+        let mut v = vec![0.0; n];
+        let nd = &f.tree.nodes[leaf];
+        for (k_local, &orig) in f.tree.node_points(leaf).iter().enumerate() {
+            v[nd.lo + k_local] = kind.eval(f.x.row(orig), x);
+        }
+        if path.len() > 1 {
+            let parent = f.tree.nodes[leaf].parent.unwrap();
+            let lm = f.landmarks[parent].as_ref().unwrap();
+            let kvec: Vec<f64> = (0..lm.rows()).map(|a| kind.eval(lm.row(a), x)).collect();
+            let mut d = f.sigma_chol[parent].as_ref().unwrap().solve(&kvec);
+            for idx in (1..path.len()).rev() {
+                let mnode = path[idx];
+                let p = f.tree.nodes[mnode].parent.unwrap();
+                let sig = f.sigma[p].as_ref().unwrap();
+                let mut sd = vec![0.0; sig.rows()];
+                gemv(1.0, sig, Trans::No, &d, 0.0, &mut sd);
+                for &sib in &f.tree.nodes[p].children {
+                    if sib == mnode {
+                        continue;
+                    }
+                    let a = agg[sib].as_ref().unwrap();
+                    let ndl = &f.tree.nodes[sib];
+                    let mut block = vec![0.0; ndl.len()];
+                    gemv(1.0, a, Trans::No, &sd, 0.0, &mut block);
+                    v[ndl.lo..ndl.hi].copy_from_slice(&block);
+                }
+                if idx >= 2 {
+                    let next = path[idx - 1];
+                    let w = f.w[next].as_ref().unwrap();
+                    let mut dnew = vec![0.0; w.cols()];
+                    gemv(1.0, w, Trans::Yes, &d, 0.0, &mut dnew);
+                    d = dnew;
+                }
+            }
+        }
+        v
+    }
+
+    /// Predict a batch of query points (rows of `q`), returning an
+    /// (q.rows() x m) matrix.
+    pub fn predict_batch(&self, q: &Mat) -> Mat {
+        let mut out = Mat::zeros(q.rows(), self.outputs());
+        for i in 0..q.rows() {
+            let z = self.predict(q.row(i));
+            out.row_mut(i).copy_from_slice(&z);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hkernel::build::HConfig;
+    use crate::hkernel::densify::aggregate_bases;
+    use crate::kernels::{Gaussian, KernelKind, Laplace};
+    use crate::util::rng::Rng;
+
+    fn build(n: usize, r: usize, n0: usize, kind: KernelKind, seed: u64) -> std::sync::Arc<HFactors> {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 3, |_, _| rng.uniform(0.0, 1.0));
+        let mut cfg = HConfig::new(kind, r).with_seed(seed + 100);
+        cfg.n0 = n0;
+        cfg.lambda_prime = 0.0;
+        std::sync::Arc::new(HFactors::build(&x, cfg).unwrap())
+    }
+
+    /// Oracle: materialize v = k_hierarchical(X, x) (tree order) from the
+    /// definition via aggregate bases, then dot with w. Independent code
+    /// path from HPredictor.
+    fn oracle(f: &HFactors, w_tree: &Mat, x: &[f64]) -> Vec<f64> {
+        let kind = f.config.kind;
+        let path = f.tree.route(x);
+        let leaf = *path.last().unwrap();
+        let n = f.n();
+        let m = w_tree.cols();
+        let agg = aggregate_bases(f);
+        let mut v = vec![0.0; n];
+        // Leaf block.
+        let nd = &f.tree.nodes[leaf];
+        for (k_local, &orig) in f.tree.node_points(leaf).iter().enumerate() {
+            v[nd.lo + k_local] = kind.eval(f.x.row(orig), x);
+        }
+        // For every node on the path (from leaf up), its siblings receive
+        // AggU_l Σ_p d_m.
+        if path.len() > 1 {
+            let parent = f.tree.nodes[leaf].parent.unwrap();
+            let lm = f.landmarks[parent].as_ref().unwrap();
+            let kvec: Vec<f64> = (0..lm.rows()).map(|a| kind.eval(lm.row(a), x)).collect();
+            let mut d = f.sigma_chol[parent].as_ref().unwrap().solve(&kvec);
+            for idx in (1..path.len()).rev() {
+                let mnode = path[idx];
+                let p = f.tree.nodes[mnode].parent.unwrap();
+                let sig = f.sigma[p].as_ref().unwrap();
+                let mut sd = vec![0.0; sig.rows()];
+                gemv(1.0, sig, Trans::No, &d, 0.0, &mut sd);
+                for &sib in &f.tree.nodes[p].children {
+                    if sib == mnode {
+                        continue;
+                    }
+                    let a = agg[sib].as_ref().unwrap();
+                    let ndl = &f.tree.nodes[sib];
+                    let mut block = vec![0.0; ndl.len()];
+                    gemv(1.0, a, Trans::No, &sd, 0.0, &mut block);
+                    for (k_local, val) in block.iter().enumerate() {
+                        v[ndl.lo + k_local] = *val;
+                    }
+                }
+                if idx >= 2 {
+                    let next = path[idx - 1];
+                    let w = f.w[next].as_ref().unwrap();
+                    let mut dnew = vec![0.0; w.cols()];
+                    gemv(1.0, w, Trans::Yes, &d, 0.0, &mut dnew);
+                    d = dnew;
+                }
+            }
+        }
+        // wᵀ v
+        (0..m)
+            .map(|j| (0..n).map(|i| w_tree[(i, j)] * v[i]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn property_matches_oracle() {
+        for (seed, kind, n0) in [
+            (1u64, Gaussian::new(0.5), 6usize),
+            (2, Gaussian::new(1.3), 15),
+            (3, Laplace::new(0.7), 10),
+        ] {
+            let f = build(60, 6, n0, kind, seed);
+            let mut rng = Rng::new(seed * 31);
+            let w = Mat::from_fn(60, 2, |_, _| rng.normal());
+            let pred = HPredictor::new(f.clone(), &w);
+            let w_tree = f.rows_to_tree_order(&w);
+            for _ in 0..10 {
+                let x: Vec<f64> = (0..3).map(|_| rng.uniform(0.0, 1.0)).collect();
+                let got = pred.predict(&x);
+                let want = oracle(&f, &w_tree, &x);
+                for j in 0..2 {
+                    assert!(
+                        (got[j] - want[j]).abs() < 1e-9 * (1.0 + want[j].abs()),
+                        "{kind:?} n0={n0}: {} vs {}",
+                        got[j],
+                        want[j]
+                    );
+                }
+            }
+        }
+    }
+
+    /// End-to-end consistency: predicting at a *training* point must
+    /// reproduce the corresponding entry of the fast matvec, because
+    /// k_hierarchical(X, x_i) is the i-th column of the kernel matrix.
+    #[test]
+    fn training_point_prediction_matches_matvec() {
+        let f = build(48, 6, 8, Gaussian::new(0.6), 5);
+        let mut rng = Rng::new(77);
+        let wvec: Vec<f64> = (0..48).map(|_| rng.normal()).collect();
+        let w = Mat::from_vec(48, 1, wvec.clone());
+        let pred = HPredictor::new(f.clone(), &w);
+        // wᵀ K column i == (K w)_i by symmetry.
+        let kw = crate::hkernel::matvec::hmatvec_original(&f, &wvec);
+        let mut worst = 0.0f64;
+        for i in 0..48 {
+            let z = pred.predict(f.x.row(i))[0];
+            worst = worst.max((z - kw[i]).abs());
+        }
+        assert!(worst < 1e-9, "worst {worst}");
+    }
+
+    #[test]
+    fn single_leaf_predictor() {
+        let f = build(10, 4, 64, Gaussian::new(0.5), 6);
+        assert_eq!(f.tree.nodes.len(), 1);
+        let w = Mat::from_fn(10, 1, |i, _| i as f64);
+        let pred = HPredictor::new(f.clone(), &w);
+        let x = vec![0.3, 0.6, 0.9];
+        let got = pred.predict(&x)[0];
+        let want: f64 = (0..10)
+            .map(|i| (i as f64) * f.config.kind.eval(f.x.row(i), &x))
+            .sum();
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let f = build(36, 5, 6, Gaussian::new(0.8), 7);
+        let mut rng = Rng::new(11);
+        let w = Mat::from_fn(36, 3, |_, _| rng.normal());
+        let pred = HPredictor::new(f.clone(), &w);
+        let q = Mat::from_fn(5, 3, |_, _| rng.uniform(0.0, 1.0));
+        let batch = pred.predict_batch(&q);
+        for i in 0..5 {
+            let single = pred.predict(q.row(i));
+            for j in 0..3 {
+                assert_eq!(batch[(i, j)], single[j]);
+            }
+        }
+    }
+}

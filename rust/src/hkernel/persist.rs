@@ -1,0 +1,392 @@
+//! Binary persistence of fitted hierarchical models.
+//!
+//! `save_model` serializes the factors (tree, landmarks, Σ/W/U/A blocks)
+//! plus the trained weight block `W = (A + λI)^{-1} Y`, so a server can
+//! load and serve without re-training (`hck train --save` /
+//! `hck serve --model`). The Σ Cholesky factors are recomputed on load
+//! (O((n/r)·r³) — negligible next to I/O).
+//!
+//! Format: little-endian, magic `HCK1`, then a tagged stream. Not a
+//! public interchange format — versioned and rejected on mismatch.
+
+use super::build::{HConfig, HFactors};
+use crate::error::{Error, Result};
+use crate::kernels::KernelKind;
+use crate::linalg::{Cholesky, Mat};
+use crate::partition::{Node, PartitionTree, Split, SplitRule};
+use std::io::{BufReader, BufWriter, Read, Write};
+
+const MAGIC: &[u8; 4] = b"HCK1";
+
+/// Save a fitted model (factors + weights) to a file.
+pub fn save_model(f: &HFactors, w: &Mat, path: &str) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut out = BufWriter::new(file);
+    out.write_all(MAGIC)?;
+    write_config(&mut out, &f.config)?;
+    write_tree(&mut out, &f.tree)?;
+    write_mat(&mut out, &f.x)?;
+    let nn = f.tree.nodes.len();
+    for i in 0..nn {
+        write_usizes(&mut out, &f.landmark_idx[i])?;
+        write_opt_mat(&mut out, &f.landmarks[i])?;
+        write_opt_mat(&mut out, &f.sigma[i])?;
+        write_opt_mat(&mut out, &f.w[i])?;
+        write_opt_mat(&mut out, &f.u[i])?;
+        write_opt_mat(&mut out, &f.a_leaf[i])?;
+    }
+    write_mat(&mut out, w)?;
+    out.flush()?;
+    Ok(())
+}
+
+/// Load a fitted model saved by [`save_model`].
+pub fn load_model(path: &str) -> Result<(HFactors, Mat)> {
+    let file = std::fs::File::open(path)?;
+    let mut inp = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    inp.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::data("not an HCK1 model file"));
+    }
+    let config = read_config(&mut inp)?;
+    let tree = read_tree(&mut inp)?;
+    let x = read_mat(&mut inp)?;
+    let nn = tree.nodes.len();
+    let mut f = HFactors {
+        x,
+        landmark_idx: Vec::with_capacity(nn),
+        landmarks: Vec::with_capacity(nn),
+        sigma: Vec::with_capacity(nn),
+        sigma_chol: Vec::with_capacity(nn),
+        w: Vec::with_capacity(nn),
+        u: Vec::with_capacity(nn),
+        a_leaf: Vec::with_capacity(nn),
+        tree,
+        config,
+    };
+    for _ in 0..nn {
+        f.landmark_idx.push(read_usizes(&mut inp)?);
+        f.landmarks.push(read_opt_mat(&mut inp)?);
+        let sigma = read_opt_mat(&mut inp)?;
+        let chol = match &sigma {
+            Some(s) => Some(Cholesky::new_jittered(s, 30)?),
+            None => None,
+        };
+        f.sigma.push(sigma);
+        f.sigma_chol.push(chol);
+        f.w.push(read_opt_mat(&mut inp)?);
+        f.u.push(read_opt_mat(&mut inp)?);
+        f.a_leaf.push(read_opt_mat(&mut inp)?);
+    }
+    let w = read_mat(&mut inp)?;
+    if w.rows() != f.x.rows() {
+        return Err(Error::data("weight rows do not match training size"));
+    }
+    Ok((f, w))
+}
+
+// ---- primitives ----
+
+fn wu64(out: &mut impl Write, v: u64) -> Result<()> {
+    out.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+fn wf64(out: &mut impl Write, v: f64) -> Result<()> {
+    out.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+fn ru64(inp: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    inp.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+fn rf64(inp: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    inp.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn write_f64s(out: &mut impl Write, v: &[f64]) -> Result<()> {
+    wu64(out, v.len() as u64)?;
+    let mut bytes = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    out.write_all(&bytes)?;
+    Ok(())
+}
+fn read_f64s(inp: &mut impl Read) -> Result<Vec<f64>> {
+    let n = ru64(inp)? as usize;
+    if n > (1usize << 34) {
+        return Err(Error::data("corrupt model file (vector too large)"));
+    }
+    let mut bytes = vec![0u8; n * 8];
+    inp.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn write_usizes(out: &mut impl Write, v: &[usize]) -> Result<()> {
+    wu64(out, v.len() as u64)?;
+    for &x in v {
+        wu64(out, x as u64)?;
+    }
+    Ok(())
+}
+fn read_usizes(inp: &mut impl Read) -> Result<Vec<usize>> {
+    let n = ru64(inp)? as usize;
+    if n > (1usize << 32) {
+        return Err(Error::data("corrupt model file (index list too large)"));
+    }
+    (0..n).map(|_| ru64(inp).map(|v| v as usize)).collect()
+}
+
+fn write_mat(out: &mut impl Write, m: &Mat) -> Result<()> {
+    wu64(out, m.rows() as u64)?;
+    wu64(out, m.cols() as u64)?;
+    write_f64s(out, m.as_slice())
+}
+fn read_mat(inp: &mut impl Read) -> Result<Mat> {
+    let rows = ru64(inp)? as usize;
+    let cols = ru64(inp)? as usize;
+    let data = read_f64s(inp)?;
+    if data.len() != rows * cols {
+        return Err(Error::data("corrupt model file (matrix shape)"));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+fn write_opt_mat(out: &mut impl Write, m: &Option<Mat>) -> Result<()> {
+    match m {
+        None => wu64(out, 0),
+        Some(m) => {
+            wu64(out, 1)?;
+            write_mat(out, m)
+        }
+    }
+}
+fn read_opt_mat(inp: &mut impl Read) -> Result<Option<Mat>> {
+    match ru64(inp)? {
+        0 => Ok(None),
+        1 => Ok(Some(read_mat(inp)?)),
+        _ => Err(Error::data("corrupt model file (option tag)")),
+    }
+}
+
+// ---- config / kernel / tree ----
+
+fn write_config(out: &mut impl Write, c: &HConfig) -> Result<()> {
+    write_kind(out, c.kind)?;
+    wu64(out, c.rank as u64)?;
+    wu64(out, c.n0 as u64)?;
+    wf64(out, c.lambda_prime)?;
+    write_rule(out, c.rule)?;
+    wu64(out, c.seed)?;
+    wu64(out, c.avoid_parent_landmarks as u64)?;
+    Ok(())
+}
+fn read_config(inp: &mut impl Read) -> Result<HConfig> {
+    Ok(HConfig {
+        kind: read_kind(inp)?,
+        rank: ru64(inp)? as usize,
+        n0: ru64(inp)? as usize,
+        lambda_prime: rf64(inp)?,
+        rule: read_rule(inp)?,
+        seed: ru64(inp)?,
+        avoid_parent_landmarks: ru64(inp)? != 0,
+    })
+}
+
+fn write_kind(out: &mut impl Write, k: KernelKind) -> Result<()> {
+    match k {
+        KernelKind::Gaussian { sigma } => {
+            wu64(out, 0)?;
+            wf64(out, sigma)
+        }
+        KernelKind::Laplace { sigma } => {
+            wu64(out, 1)?;
+            wf64(out, sigma)
+        }
+        KernelKind::Imq { sigma } => {
+            wu64(out, 2)?;
+            wf64(out, sigma)
+        }
+        KernelKind::Matern32 { sigma } => {
+            wu64(out, 3)?;
+            wf64(out, sigma)
+        }
+        KernelKind::TaperedGaussian { sigma, theta, ell } => {
+            wu64(out, 4)?;
+            wf64(out, sigma)?;
+            wf64(out, theta)?;
+            wu64(out, ell as u64)
+        }
+    }
+}
+fn read_kind(inp: &mut impl Read) -> Result<KernelKind> {
+    Ok(match ru64(inp)? {
+        0 => KernelKind::Gaussian { sigma: rf64(inp)? },
+        1 => KernelKind::Laplace { sigma: rf64(inp)? },
+        2 => KernelKind::Imq { sigma: rf64(inp)? },
+        3 => KernelKind::Matern32 { sigma: rf64(inp)? },
+        4 => KernelKind::TaperedGaussian {
+            sigma: rf64(inp)?,
+            theta: rf64(inp)?,
+            ell: ru64(inp)? as u32,
+        },
+        _ => return Err(Error::data("corrupt model file (kernel tag)")),
+    })
+}
+
+fn write_rule(out: &mut impl Write, r: SplitRule) -> Result<()> {
+    match r {
+        SplitRule::RandomProjection => wu64(out, 0),
+        SplitRule::Pca { iters } => {
+            wu64(out, 1)?;
+            wu64(out, iters as u64)
+        }
+        SplitRule::KdTree => wu64(out, 2),
+        SplitRule::KMeans { k, iters } => {
+            wu64(out, 3)?;
+            wu64(out, k as u64)?;
+            wu64(out, iters as u64)
+        }
+    }
+}
+fn read_rule(inp: &mut impl Read) -> Result<SplitRule> {
+    Ok(match ru64(inp)? {
+        0 => SplitRule::RandomProjection,
+        1 => SplitRule::Pca { iters: ru64(inp)? as usize },
+        2 => SplitRule::KdTree,
+        3 => SplitRule::KMeans { k: ru64(inp)? as usize, iters: ru64(inp)? as usize },
+        _ => return Err(Error::data("corrupt model file (rule tag)")),
+    })
+}
+
+fn write_tree(out: &mut impl Write, t: &PartitionTree) -> Result<()> {
+    wu64(out, t.n0 as u64)?;
+    write_usizes(out, &t.perm)?;
+    wu64(out, t.nodes.len() as u64)?;
+    for nd in &t.nodes {
+        wu64(out, nd.parent.map(|p| p as u64 + 1).unwrap_or(0))?;
+        write_usizes(out, &nd.children)?;
+        wu64(out, nd.lo as u64)?;
+        wu64(out, nd.hi as u64)?;
+        wu64(out, nd.depth as u64)?;
+        match &nd.split {
+            None => wu64(out, 0)?,
+            Some(Split::Hyperplane { dir, threshold }) => {
+                wu64(out, 1)?;
+                write_f64s(out, dir)?;
+                wf64(out, *threshold)?;
+            }
+            Some(Split::Axis { axis, threshold }) => {
+                wu64(out, 2)?;
+                wu64(out, *axis as u64)?;
+                wf64(out, *threshold)?;
+            }
+            Some(Split::Centers { centers }) => {
+                wu64(out, 3)?;
+                write_mat(out, centers)?;
+            }
+        }
+    }
+    Ok(())
+}
+fn read_tree(inp: &mut impl Read) -> Result<PartitionTree> {
+    let n0 = ru64(inp)? as usize;
+    let perm = read_usizes(inp)?;
+    let nn = ru64(inp)? as usize;
+    let mut nodes = Vec::with_capacity(nn);
+    for _ in 0..nn {
+        let parent_raw = ru64(inp)?;
+        let parent = if parent_raw == 0 { None } else { Some(parent_raw as usize - 1) };
+        let children = read_usizes(inp)?;
+        let lo = ru64(inp)? as usize;
+        let hi = ru64(inp)? as usize;
+        let depth = ru64(inp)? as usize;
+        let split = match ru64(inp)? {
+            0 => None,
+            1 => Some(Split::Hyperplane { dir: read_f64s(inp)?, threshold: rf64(inp)? }),
+            2 => Some(Split::Axis { axis: ru64(inp)? as usize, threshold: rf64(inp)? }),
+            3 => Some(Split::Centers { centers: read_mat(inp)? }),
+            _ => return Err(Error::data("corrupt model file (split tag)")),
+        };
+        nodes.push(Node { parent, children, lo, hi, split, depth });
+    }
+    Ok(PartitionTree { nodes, perm, n0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hkernel::HPredictor;
+    use crate::kernels::Gaussian;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn tmpfile(tag: &str) -> String {
+        let dir = std::env::temp_dir();
+        dir.join(format!("hck_persist_test_{tag}_{}.bin", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn fitted(rule: SplitRule, seed: u64) -> (HFactors, Mat) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(80, 4, |_, _| rng.uniform(0.0, 1.0));
+        let mut cfg = HConfig::new(Gaussian::new(0.5), 10).with_seed(seed).with_rule(rule);
+        cfg.n0 = 10;
+        let f = HFactors::build(&x, cfg).unwrap();
+        let solver = crate::hkernel::HSolver::factor(&f, 0.05).unwrap();
+        let y: Vec<f64> = (0..80).map(|i| (i as f64 * 0.1).sin()).collect();
+        let w = solver.solve_mat_original(&Mat::from_vec(80, 1, y));
+        (f, w)
+    }
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        for (tag, rule) in [
+            ("rp", SplitRule::RandomProjection),
+            ("kmeans", SplitRule::KMeans { k: 3, iters: 10 }),
+            ("kd", SplitRule::KdTree),
+        ] {
+            let (f, w) = fitted(rule, 7);
+            let path = tmpfile(tag);
+            save_model(&f, &w, &path).unwrap();
+            let (f2, w2) = load_model(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(f2.tree.perm, f.tree.perm);
+            assert_eq!(f2.config.rank, f.config.rank);
+            // Predictions must be bit-identical (same factors, same walk).
+            let p1 = HPredictor::new(Arc::new(f), &w);
+            let p2 = HPredictor::new(Arc::new(f2), &w2);
+            let mut rng = Rng::new(11);
+            for _ in 0..20 {
+                let q: Vec<f64> = (0..4).map(|_| rng.uniform(0.0, 1.0)).collect();
+                assert_eq!(p1.predict(&q), p2.predict(&q), "rule {tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpfile("garbage");
+        std::fs::write(&path, b"definitely not a model").unwrap();
+        assert!(load_model(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let (f, w) = fitted(SplitRule::RandomProjection, 9);
+        let path = tmpfile("trunc");
+        save_model(&f, &w, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_model(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

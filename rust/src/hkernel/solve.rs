@@ -1,0 +1,405 @@
+//! Fast direct solver for `(K_hierarchical + λI) w = y` — the role of the
+//! paper's Algorithm 2, at the same O(nr²) factorization / O(nr) per-rhs
+//! cost, plus log-determinant for free.
+//!
+//! Derivation (DESIGN.md §2). The telescoping decomposition of Appendix A
+//! gives, in matrix form,
+//!
+//! ```text
+//! A + λI = D + Σ_{nonleaf i} B_i G_i B_iᵀ
+//! ```
+//!
+//! with `D` the block-diagonal of leaf Schur complements
+//! `H_j = A_jj + λI − U_j Σ_p U_jᵀ`, `G_i = Σ_i − W_i Σ_p W_iᵀ`
+//! (`G_root = Σ_root`), and nested bases `B_i = stack_j (U_j | B_j W_j)`.
+//! Eliminating the low-rank terms bottom-up with the *push-through*
+//! Woodbury identity
+//!
+//! ```text
+//! (H + B G Bᵀ)^{-1} = H^{-1} − H^{-1} B (I + G Ŝ)^{-1} G Bᵀ H^{-1},
+//! Ŝ = Bᵀ H^{-1} B,
+//! ```
+//!
+//! which — unlike the classical form — needs no `G^{-1}`, so it stays
+//! exact even when `G_i` is singular (the paper's Appendix A notes `G_i`
+//! has exact zero rows whenever a landmark is shared between a node and
+//! its parent). Sylvester's identity gives the determinant along the way:
+//! `det(H + BGBᵀ) = det(H) · det(I + G Ŝ)`.
+//!
+//! All per-node quantities are r×r; leaves contribute one Cholesky of
+//! `H_j` (n0×n0) and the n0×r block `Z_j = H_j^{-1} U_j`.
+
+use super::build::HFactors;
+use crate::error::Result;
+use crate::linalg::{gemm, matmul, Cholesky, Lu, Mat, Trans};
+
+/// Per-leaf factorization state.
+struct LeafState {
+    /// Cholesky of H_j = A_jj + λI − U_j Σ_p U_jᵀ.
+    chol: Cholesky,
+    /// Z_j = H_j^{-1} U_j (n_j x r_p); empty for a root leaf.
+    zu: Mat,
+}
+
+/// Per-nonleaf factorization state.
+struct NodeState {
+    /// Ŝ_i = Σ_{children} S_child (r_i x r_i).
+    shat: Mat,
+    /// G_i = Σ_i − W_i Σ_p W_iᵀ (root: Σ_root).
+    g: Mat,
+    /// LU of (I + G_i Ŝ_i).
+    lu: Lu,
+}
+
+/// Factorized `(K_hierarchical + λI)`; solves and log-determinant.
+pub struct HSolver<'a> {
+    f: &'a HFactors,
+    lambda: f64,
+    leaf: Vec<Option<LeafState>>,
+    node: Vec<Option<NodeState>>,
+    logdet: f64,
+}
+
+impl<'a> HSolver<'a> {
+    /// Factor `A + λI` where A is the hierarchical kernel matrix described
+    /// by `f`. `lambda` is the ridge regularization (the paper's λ − λ′,
+    /// since λ′ is already inside the factors).
+    pub fn factor(f: &'a HFactors, lambda: f64) -> Result<HSolver<'a>> {
+        let nn = f.tree.nodes.len();
+        let mut leaf: Vec<Option<LeafState>> = (0..nn).map(|_| None).collect();
+        let mut node: Vec<Option<NodeState>> = (0..nn).map(|_| None).collect();
+        let mut logdet = 0.0;
+        // S_child per node, consumed by the parent.
+        let mut s: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+
+        for &i in &f.tree.postorder() {
+            let nd = &f.tree.nodes[i];
+            if nd.is_leaf() {
+                let a = f.a_leaf[i].as_ref().unwrap();
+                let mut h = a.clone();
+                h.add_diag(lambda);
+                if let Some(p) = nd.parent {
+                    // H_j = A + λI − U Σ_p Uᵀ
+                    let u = f.u[i].as_ref().unwrap();
+                    let sig = f.sigma[p].as_ref().unwrap();
+                    let us = matmul(u, Trans::No, sig, Trans::No);
+                    gemm(-1.0, &us, Trans::No, u, Trans::Yes, 1.0, &mut h);
+                    h.symmetrize();
+                    let chol = Cholesky::new_jittered(&h, 30)?;
+                    let zu = chol.solve_mat(u);
+                    logdet += chol.logdet();
+                    // S_j = U_jᵀ Z_j
+                    let sj = matmul(u, Trans::Yes, &zu, Trans::No);
+                    s[i] = Some(sj);
+                    leaf[i] = Some(LeafState { chol, zu });
+                } else {
+                    // Single-leaf tree: A + λI is the whole matrix.
+                    let chol = Cholesky::new_jittered(&h, 30)?;
+                    logdet += chol.logdet();
+                    leaf[i] = Some(LeafState { chol, zu: Mat::zeros(nd.len(), 0) });
+                }
+            } else {
+                let r_i = f.landmark_idx[i].len();
+                // Ŝ_i = Σ_children S_child
+                let mut shat = Mat::zeros(r_i, r_i);
+                for &ch in &nd.children {
+                    shat.axpy(1.0, s[ch].as_ref().unwrap());
+                }
+                shat.symmetrize();
+                // G_i
+                let sig = f.sigma[i].as_ref().unwrap();
+                let mut g = sig.clone();
+                if let Some(p) = nd.parent {
+                    let w = f.w[i].as_ref().unwrap();
+                    let sp = f.sigma[p].as_ref().unwrap();
+                    let wsp = matmul(w, Trans::No, sp, Trans::No);
+                    gemm(-1.0, &wsp, Trans::No, w, Trans::Yes, 1.0, &mut g);
+                    g.symmetrize();
+                }
+                // (I + G Ŝ)
+                let mut igs = matmul(&g, Trans::No, &shat, Trans::No);
+                igs.add_diag(1.0);
+                let lu = Lu::new(&igs)?;
+                logdet += lu.logabsdet();
+                if nd.parent.is_some() {
+                    // T_i = Ŝ − Ŝ Φ(Ŝ), S_i = W_iᵀ T_i W_i
+                    let phi_s = phi(&g, &lu, &shat);
+                    let mut t = shat.clone();
+                    gemm(-1.0, &shat, Trans::No, &phi_s, Trans::No, 1.0, &mut t);
+                    let w = f.w[i].as_ref().unwrap();
+                    let tw = matmul(&t, Trans::No, w, Trans::No);
+                    let si = matmul(w, Trans::Yes, &tw, Trans::No);
+                    s[i] = Some(si);
+                }
+                node[i] = Some(NodeState { shat, g, lu });
+            }
+        }
+        Ok(HSolver { f, lambda, leaf, node, logdet })
+    }
+
+    /// The regularization this solver was factored with.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// log det(A + λI).
+    pub fn logdet(&self) -> f64 {
+        self.logdet
+    }
+
+    /// Solve (A + λI) W = Y for a block of right-hand sides, **tree
+    /// order**. O(n·n0 + n·r + (n/n0)·r²) per column after factoring.
+    pub fn solve_mat(&self, y: &Mat) -> Mat {
+        let n = self.f.n();
+        assert_eq!(y.rows(), n, "solve rhs rows");
+        let m = y.cols();
+        let nn = self.f.tree.nodes.len();
+        let post = self.f.tree.postorder();
+
+        // Single-leaf tree.
+        if nn == 1 {
+            return self.leaf[0].as_ref().unwrap().chol.solve_mat(y);
+        }
+
+        // ---- Upward: per-leaf z, per-node t̂ / t. ----
+        let mut z: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+        let mut t: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+        let mut that: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+        for &i in &post {
+            let nd = &self.f.tree.nodes[i];
+            if nd.is_leaf() {
+                let st = self.leaf[i].as_ref().unwrap();
+                let yi = y.row_range(nd.lo, nd.hi);
+                let zi = st.chol.solve_mat(&yi);
+                // t_j = U_jᵀ z_j
+                let u = self.f.u[i].as_ref().unwrap();
+                t[i] = Some(matmul(u, Trans::Yes, &zi, Trans::No));
+                z[i] = Some(zi);
+            } else {
+                let st = self.node[i].as_ref().unwrap();
+                let r_i = st.shat.rows();
+                let mut th = Mat::zeros(r_i, m);
+                for &ch in &nd.children {
+                    th.axpy(1.0, t[ch].as_ref().unwrap());
+                }
+                if nd.parent.is_some() {
+                    // t_i = W_iᵀ (t̂ − Ŝ Φ(t̂))
+                    let phi_t = phi(&st.g, &st.lu, &th);
+                    let mut corr = th.clone();
+                    gemm(-1.0, &st.shat, Trans::No, &phi_t, Trans::No, 1.0, &mut corr);
+                    let w = self.f.w[i].as_ref().unwrap();
+                    t[i] = Some(matmul(w, Trans::Yes, &corr, Trans::No));
+                }
+                that[i] = Some(th);
+            }
+        }
+
+        // ---- Downward: incoming corrections q, finish at leaves. ----
+        let mut out = Mat::zeros(n, m);
+        let mut q: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+        for &i in post.iter().rev() {
+            let nd = &self.f.tree.nodes[i];
+            if nd.is_leaf() {
+                continue;
+            }
+            let st = self.node[i].as_ref().unwrap();
+            let th = that[i].as_ref().unwrap();
+            // u_i = q_i + Φ(t̂_i − Ŝ_i q_i); root has q = 0.
+            let u_i = match &q[i] {
+                None => phi(&st.g, &st.lu, th),
+                Some(qi) => {
+                    let mut rhs = th.clone();
+                    gemm(-1.0, &st.shat, Trans::No, qi, Trans::No, 1.0, &mut rhs);
+                    let mut u = phi(&st.g, &st.lu, &rhs);
+                    u.axpy(1.0, qi);
+                    u
+                }
+            };
+            for &ch in &nd.children {
+                if self.f.tree.nodes[ch].is_leaf() {
+                    // w_ch = z_ch − Z_ch u_i
+                    let st_l = self.leaf[ch].as_ref().unwrap();
+                    let mut wch = z[ch].take().unwrap();
+                    gemm(-1.0, &st_l.zu, Trans::No, &u_i, Trans::No, 1.0, &mut wch);
+                    let (lo, hi) = (self.f.tree.nodes[ch].lo, self.f.tree.nodes[ch].hi);
+                    for (k, row) in (lo..hi).enumerate() {
+                        out.row_mut(row).copy_from_slice(wch.row(k));
+                    }
+                } else {
+                    // q_ch = W_ch u_i
+                    let w = self.f.w[ch].as_ref().unwrap();
+                    q[ch] = Some(matmul(w, Trans::No, &u_i, Trans::No));
+                }
+            }
+        }
+        out
+    }
+
+    /// Solve for a single right-hand side (tree order).
+    pub fn solve(&self, y: &[f64]) -> Vec<f64> {
+        let ym = Mat::from_vec(y.len(), 1, y.to_vec());
+        self.solve_mat(&ym).col(0)
+    }
+
+    /// Solve with rhs/solution in **original order**.
+    pub fn solve_original(&self, y: &[f64]) -> Vec<f64> {
+        let yt = self.f.to_tree_order(y);
+        let wt = self.solve(&yt);
+        self.f.from_tree_order(&wt)
+    }
+
+    /// Solve a block of rhs in original order.
+    pub fn solve_mat_original(&self, y: &Mat) -> Mat {
+        let yt = self.f.rows_to_tree_order(y);
+        let wt = self.solve_mat(&yt);
+        self.f.rows_from_tree_order(&wt)
+    }
+}
+
+/// Φ(M) = (I + G Ŝ)^{-1} (G M) — the push-through capacitance apply.
+fn phi(g: &Mat, lu: &Lu, m: &Mat) -> Mat {
+    let gm = matmul(g, Trans::No, m, Trans::No);
+    lu.solve_mat(&gm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hkernel::build::HConfig;
+    use crate::hkernel::densify::densify;
+    use crate::kernels::{Gaussian, Imq, KernelKind, Laplace};
+    use crate::partition::SplitRule;
+    use crate::util::rng::Rng;
+
+    fn build_custom(
+        n: usize,
+        r: usize,
+        n0: usize,
+        kind: KernelKind,
+        seed: u64,
+        avoid: bool,
+        rule: SplitRule,
+    ) -> HFactors {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 4, |_, _| rng.uniform(0.0, 1.0));
+        let mut cfg = HConfig::new(kind, r).with_seed(seed * 3 + 7).with_rule(rule);
+        cfg.n0 = n0;
+        cfg.avoid_parent_landmarks = avoid;
+        HFactors::build(&x, cfg).unwrap()
+    }
+
+    fn dense_solve(f: &HFactors, lambda: f64, y: &Mat) -> Mat {
+        let mut k = densify(f);
+        k.add_diag(lambda);
+        Cholesky::new_jittered(&k, 10).unwrap().solve_mat(y)
+    }
+
+    /// Property: solver equals dense solve across kernels, tree shapes,
+    /// arities, and both landmark-overlap regimes (G singular or not).
+    #[test]
+    fn property_matches_dense_solve() {
+        let cases = vec![
+            build_custom(60, 6, 6, Gaussian::new(0.5), 1, true, SplitRule::RandomProjection),
+            build_custom(60, 6, 6, Gaussian::new(0.5), 2, false, SplitRule::RandomProjection),
+            build_custom(57, 5, 12, Laplace::new(0.8), 3, false, SplitRule::RandomProjection),
+            build_custom(64, 8, 8, Imq::new(0.6), 4, true, SplitRule::KdTree),
+            build_custom(72, 6, 9, Gaussian::new(1.1), 5, false, SplitRule::KMeans { k: 3, iters: 10 }),
+        ];
+        let lambda = 0.05;
+        for f in &cases {
+            let solver = HSolver::factor(f, lambda).unwrap();
+            let mut rng = Rng::new(99);
+            let y = Mat::from_fn(f.n(), 2, |_, _| rng.normal());
+            let got = solver.solve_mat(&y);
+            let want = dense_solve(f, lambda, &y);
+            let mut diff = got.clone();
+            diff.axpy(-1.0, &want);
+            let rel = diff.fro_norm() / want.fro_norm();
+            assert!(rel < 1e-8, "rel err {rel} (n={})", f.n());
+        }
+    }
+
+    #[test]
+    fn logdet_matches_dense() {
+        for (seed, avoid) in [(1u64, true), (2, false)] {
+            let f = build_custom(50, 5, 10, Gaussian::new(0.6), seed, avoid, SplitRule::RandomProjection);
+            let lambda = 0.1;
+            let solver = HSolver::factor(&f, lambda).unwrap();
+            let mut k = densify(&f);
+            k.add_diag(lambda);
+            let want = Cholesky::new_jittered(&k, 5).unwrap().logdet();
+            assert!(
+                (solver.logdet() - want).abs() < 1e-7 * (1.0 + want.abs()),
+                "logdet {} vs {}",
+                solver.logdet(),
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn residual_is_small() {
+        // (A + λI) w must reproduce y through the fast matvec as well.
+        let f = build_custom(80, 8, 8, Gaussian::new(0.5), 7, false, SplitRule::RandomProjection);
+        let lambda = 0.02;
+        let solver = HSolver::factor(&f, lambda).unwrap();
+        let mut rng = Rng::new(3);
+        let y: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+        let w = solver.solve(&y);
+        let mut aw = crate::hkernel::matvec::hmatvec(&f, &w);
+        for (awi, wi) in aw.iter_mut().zip(w.iter()) {
+            *awi += lambda * wi;
+        }
+        let num: f64 = aw.iter().zip(y.iter()).map(|(a, b)| (a - b) * (a - b)).sum();
+        let den: f64 = y.iter().map(|b| b * b).sum();
+        assert!((num / den).sqrt() < 1e-8, "residual {}", (num / den).sqrt());
+    }
+
+    #[test]
+    fn single_leaf_solver() {
+        let f = build_custom(12, 4, 64, Gaussian::new(0.5), 8, true, SplitRule::RandomProjection);
+        assert_eq!(f.tree.nodes.len(), 1);
+        let solver = HSolver::factor(&f, 0.3).unwrap();
+        let y: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let got = solver.solve(&y);
+        let want = dense_solve(&f, 0.3, &Mat::from_vec(12, 1, y.clone()));
+        for i in 0..12 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-10);
+        }
+        // logdet too.
+        let mut k = densify(&f);
+        k.add_diag(0.3);
+        let ld = Cholesky::new_jittered(&k, 5).unwrap().logdet();
+        assert!((solver.logdet() - ld).abs() < 1e-9);
+    }
+
+    #[test]
+    fn original_order_wrappers() {
+        let f = build_custom(40, 5, 8, Gaussian::new(0.7), 9, false, SplitRule::RandomProjection);
+        let solver = HSolver::factor(&f, 0.05).unwrap();
+        let mut rng = Rng::new(5);
+        let y: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let wo = solver.solve_original(&y);
+        let wt = solver.solve(&f.to_tree_order(&y));
+        assert_eq!(f.to_tree_order(&wo), wt);
+        let ym = Mat::from_vec(40, 1, y);
+        let wm = solver.solve_mat_original(&ym);
+        for i in 0..40 {
+            assert!((wm[(i, 0)] - wo[i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn deep_tree_small_leaves() {
+        // n0 much smaller than r exercises rank capping (r_i = min(r, n_i)).
+        let f = build_custom(64, 16, 4, Gaussian::new(0.5), 10, false, SplitRule::RandomProjection);
+        let solver = HSolver::factor(&f, 0.05).unwrap();
+        let mut rng = Rng::new(6);
+        let y = Mat::from_fn(64, 1, |_, _| rng.normal());
+        let got = solver.solve_mat(&y);
+        let want = dense_solve(&f, 0.05, &y);
+        let mut diff = got;
+        diff.axpy(-1.0, &want);
+        assert!(diff.fro_norm() / want.fro_norm() < 1e-8);
+    }
+}

@@ -1,0 +1,319 @@
+//! Base kernels: Gaussian, Laplace, inverse multiquadric, Matérn-3/2.
+
+/// Which pairwise distance a kernel consumes. Determines whether the gemm
+/// expansion applies (squared L2) or a direct tiled loop is used (L1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Squared Euclidean distance.
+    SqL2,
+    /// Manhattan distance.
+    L1,
+}
+
+/// Identifies a kernel family + bandwidth; the serializable description
+/// used by configs, the CLI and the AOT artifact manifest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelKind {
+    /// exp(−|x−y|²/(2σ²))
+    Gaussian { sigma: f64 },
+    /// exp(−|x−y|₁/σ)
+    Laplace { sigma: f64 },
+    /// σ/√(|x−y|² + σ²)  (normalized so k(x,x)=1; the paper's σ²/√(·)
+    /// differs only by the constant factor σ, which KRR absorbs)
+    Imq { sigma: f64 },
+    /// (1 + √3 t/σ) exp(−√3 t/σ), t = |x−y|₂ (extension; not in paper §5)
+    Matern32 { sigma: f64 },
+    /// Covariance tapering (paper §1.2, third approach): the Gaussian
+    /// kernel multiplied by a compactly supported Wendland-φ_{ℓ,1} taper
+    /// of range θ — zero beyond ‖x−y‖₂ ≥ θ. The product of two PD
+    /// kernels is PD (Schur); strict PD of the Wendland factor on R^d
+    /// requires ℓ ≥ ⌊d/2⌋ + 2, which [`tapered_gaussian`] enforces.
+    TaperedGaussian { sigma: f64, theta: f64, ell: u32 },
+}
+
+/// Construct a tapered Gaussian valid in dimension `d`:
+/// k(x,y) = exp(−t²/2σ²) · (1 − t/θ)₊^{ℓ+1} ((ℓ+1)t/θ + 1),
+/// ℓ = ⌊d/2⌋ + 2 (Wendland's condition for positive definiteness).
+pub fn tapered_gaussian(sigma: f64, theta: f64, d: usize) -> KernelKind {
+    KernelKind::TaperedGaussian { sigma, theta, ell: (d as u32) / 2 + 2 }
+}
+
+impl KernelKind {
+    /// Family name (for artifact lookup / reports).
+    pub fn family(&self) -> &'static str {
+        match self {
+            KernelKind::Gaussian { .. } => "gaussian",
+            KernelKind::Laplace { .. } => "laplace",
+            KernelKind::Imq { .. } => "imq",
+            KernelKind::Matern32 { .. } => "matern32",
+            KernelKind::TaperedGaussian { .. } => "tapered_gaussian",
+        }
+    }
+
+    /// Bandwidth parameter.
+    pub fn sigma(&self) -> f64 {
+        match self {
+            KernelKind::Gaussian { sigma }
+            | KernelKind::Laplace { sigma }
+            | KernelKind::Imq { sigma }
+            | KernelKind::Matern32 { sigma }
+            | KernelKind::TaperedGaussian { sigma, .. } => *sigma,
+        }
+    }
+
+    /// Same family, different bandwidth.
+    pub fn with_sigma(&self, sigma: f64) -> KernelKind {
+        match self {
+            KernelKind::Gaussian { .. } => KernelKind::Gaussian { sigma },
+            KernelKind::Laplace { .. } => KernelKind::Laplace { sigma },
+            KernelKind::Imq { .. } => KernelKind::Imq { sigma },
+            KernelKind::Matern32 { .. } => KernelKind::Matern32 { sigma },
+            KernelKind::TaperedGaussian { theta, ell, .. } => {
+                KernelKind::TaperedGaussian { sigma, theta: *theta, ell: *ell }
+            }
+        }
+    }
+
+    /// Parse "family:sigma" (e.g. "gaussian:1.5").
+    pub fn parse(text: &str) -> Result<KernelKind, String> {
+        let (fam, sig) = text.split_once(':').unwrap_or((text, "1.0"));
+        let sigma: f64 = sig.parse().map_err(|_| format!("bad sigma '{sig}'"))?;
+        if sigma <= 0.0 {
+            return Err("sigma must be positive".into());
+        }
+        match fam {
+            "gaussian" => Ok(KernelKind::Gaussian { sigma }),
+            "laplace" => Ok(KernelKind::Laplace { sigma }),
+            "imq" => Ok(KernelKind::Imq { sigma }),
+            "matern32" => Ok(KernelKind::Matern32 { sigma }),
+            _ => Err(format!("unknown kernel family '{fam}'")),
+        }
+    }
+
+    /// Distance metric this kernel consumes.
+    pub fn metric(&self) -> Metric {
+        match self {
+            KernelKind::Laplace { .. } => Metric::L1,
+            _ => Metric::SqL2,
+        }
+    }
+
+    /// Apply the scalar profile to a distance value (squared L2 distance
+    /// for SqL2-metric kernels, L1 distance for the Laplace kernel).
+    #[inline]
+    pub fn profile(&self, dist: f64) -> f64 {
+        match self {
+            KernelKind::Gaussian { sigma } => (-dist / (2.0 * sigma * sigma)).exp(),
+            KernelKind::Laplace { sigma } => (-dist / sigma).exp(),
+            KernelKind::Imq { sigma } => sigma / (dist + sigma * sigma).sqrt(),
+            KernelKind::Matern32 { sigma } => {
+                let t = dist.max(0.0).sqrt() * 3f64.sqrt() / sigma;
+                (1.0 + t) * (-t).exp()
+            }
+            KernelKind::TaperedGaussian { sigma, theta, ell } => {
+                // dist is the squared L2 distance.
+                let t = dist.max(0.0).sqrt();
+                let u = t / theta;
+                if u >= 1.0 {
+                    return 0.0;
+                }
+                let gauss = (-dist / (2.0 * sigma * sigma)).exp();
+                let base = 1.0 - u;
+                let wendland = base.powi(*ell as i32 + 1) * ((*ell as f64 + 1.0) * u + 1.0);
+                gauss * wendland
+            }
+        }
+    }
+
+    /// Evaluate k(x, x') on two points.
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        match self.metric() {
+            Metric::SqL2 => self.profile(crate::linalg::matrix::sqdist(x, y)),
+            Metric::L1 => self.profile(crate::linalg::matrix::l1dist(x, y)),
+        }
+    }
+
+    /// k(x, x) — all supported kernels are normalized to 1 at zero.
+    pub fn diag_value(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Trait view of a kernel (object-safe), for code that is generic over the
+/// base kernel. [`KernelKind`] implements it; custom kernels can too.
+pub trait Kernel: Send + Sync {
+    /// Evaluate on a pair of points.
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64;
+    /// Value on the diagonal k(x, x).
+    fn diag_value(&self) -> f64;
+    /// Structured description, if this is a built-in family.
+    fn kind(&self) -> Option<KernelKind> {
+        None
+    }
+}
+
+impl Kernel for KernelKind {
+    fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        KernelKind::eval(self, x, y)
+    }
+    fn diag_value(&self) -> f64 {
+        1.0
+    }
+    fn kind(&self) -> Option<KernelKind> {
+        Some(*self)
+    }
+}
+
+/// Convenience constructors mirroring the paper's notation.
+pub struct Gaussian;
+impl Gaussian {
+    /// Gaussian (squared-exponential) kernel with bandwidth σ — eq. (5).
+    pub fn new(sigma: f64) -> KernelKind {
+        KernelKind::Gaussian { sigma }
+    }
+}
+/// Laplace kernel (Section 5.4).
+pub struct Laplace;
+impl Laplace {
+    pub fn new(sigma: f64) -> KernelKind {
+        KernelKind::Laplace { sigma }
+    }
+}
+/// Inverse multiquadric kernel (Section 5.4).
+pub struct Imq;
+impl Imq {
+    pub fn new(sigma: f64) -> KernelKind {
+        KernelKind::Imq { sigma }
+    }
+}
+/// Matérn-3/2 kernel (extension).
+pub struct Matern32;
+impl Matern32 {
+    pub fn new(sigma: f64) -> KernelKind {
+        KernelKind::Matern32 { sigma }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tapered_gaussian_properties() {
+        let d = 5;
+        let k = tapered_gaussian(0.8, 0.5, d);
+        let x = [0.1, 0.2, 0.3, 0.4, 0.5];
+        // Unit diagonal.
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-15);
+        // Compact support: zero at distance >= theta.
+        let mut far = x;
+        far[0] += 0.6;
+        assert_eq!(k.eval(&x, &far), 0.0);
+        // Inside the support: equals gaussian * wendland and is below the
+        // plain gaussian.
+        let mut near = x;
+        near[0] += 0.2;
+        let v = k.eval(&x, &near);
+        let g = Gaussian::new(0.8).eval(&x, &near);
+        assert!(v > 0.0 && v < g, "taper must shrink: {v} vs {g}");
+        // PD: kernel matrix on random points factorizes.
+        let mut rng = crate::util::rng::Rng::new(3);
+        let pts = crate::linalg::Mat::from_fn(40, d, |_, _| rng.uniform(0.0, 1.0));
+        let km = crate::kernels::compute::kernel_block(k, &pts);
+        assert!(crate::linalg::Cholesky::new_jittered(&km, 6)
+            .map(|c| c.jitter < 1e-8)
+            .unwrap_or(false));
+        // Sparsity: with theta = 0.5 on the unit cube many entries vanish.
+        let zeros = km.as_slice().iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 100, "expected sparsity, got {zeros} zeros");
+    }
+
+    #[test]
+    fn tapered_gaussian_ell_rule() {
+        match tapered_gaussian(1.0, 1.0, 9) {
+            KernelKind::TaperedGaussian { ell, .. } => assert_eq!(ell, 6),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn gaussian_matches_formula() {
+        let k = Gaussian::new(2.0);
+        let x = [0.0, 0.0];
+        let y = [3.0, 4.0];
+        // |x-y|^2 = 25, sigma = 2 -> exp(-25/8)
+        assert!((k.eval(&x, &y) - (-25.0f64 / 8.0).exp()).abs() < 1e-15);
+        assert_eq!(k.eval(&x, &x), 1.0);
+    }
+
+    #[test]
+    fn laplace_uses_l1() {
+        let k = Laplace::new(2.0);
+        let x = [0.0, 0.0];
+        let y = [3.0, -4.0];
+        assert!((k.eval(&x, &y) - (-7.0f64 / 2.0).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn imq_normalized_at_zero() {
+        let k = Imq::new(0.7);
+        let x = [1.0, 2.0];
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-15);
+        let y = [2.0, 2.0];
+        assert!((k.eval(&x, &y) - 0.7 / (1.0f64 + 0.49).sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matern_decreasing() {
+        let k = Matern32::new(1.0);
+        let x = [0.0];
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-12);
+        let a = k.eval(&x, &[0.5]);
+        let b = k.eval(&x, &[1.5]);
+        assert!(a > b && b > 0.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let k = KernelKind::parse("gaussian:1.5").unwrap();
+        assert_eq!(k, Gaussian::new(1.5));
+        assert_eq!(k.family(), "gaussian");
+        assert_eq!(k.sigma(), 1.5);
+        assert_eq!(KernelKind::parse("laplace").unwrap(), Laplace::new(1.0));
+        assert!(KernelKind::parse("foo:1").is_err());
+        assert!(KernelKind::parse("gaussian:-1").is_err());
+        assert!(KernelKind::parse("gaussian:x").is_err());
+    }
+
+    #[test]
+    fn with_sigma_preserves_family() {
+        let k = Imq::new(1.0).with_sigma(3.0);
+        assert_eq!(k, Imq::new(3.0));
+    }
+
+    #[test]
+    fn metric_assignment() {
+        assert_eq!(Gaussian::new(1.0).metric(), Metric::SqL2);
+        assert_eq!(Laplace::new(1.0).metric(), Metric::L1);
+        assert_eq!(Imq::new(1.0).metric(), Metric::SqL2);
+    }
+
+    #[test]
+    fn symmetry_random_points() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for kind in [
+            Gaussian::new(0.8),
+            Laplace::new(1.3),
+            Imq::new(0.5),
+            Matern32::new(2.0),
+        ] {
+            for _ in 0..20 {
+                let x: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+                let y: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+                assert!((kind.eval(&x, &y) - kind.eval(&y, &x)).abs() < 1e-15);
+                assert!(kind.eval(&x, &y) <= 1.0 + 1e-12);
+                assert!(kind.eval(&x, &y) > 0.0);
+            }
+        }
+    }
+}

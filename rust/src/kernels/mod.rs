@@ -1,0 +1,16 @@
+//! Base kernel functions and block evaluation.
+//!
+//! The paper's construction is agnostic to the base kernel as long as it is
+//! strictly positive-definite; Section 5 experiments with the Gaussian,
+//! Laplace and inverse-multiquadric kernels. All three are implemented
+//! here, plus Matérn-3/2 as an extension. Block evaluation K(X, Y) is the
+//! compute hot spot: for `L2`-based kernels it uses the
+//! |x−y|² = |x|² + |y|² − 2⟨x,y⟩ gemm expansion (the same tiling the L1
+//! Pallas kernel implements on TPU), and the [`BlockEvaluator`] trait lets
+//! the PJRT runtime substitute the AOT-compiled XLA path at runtime.
+
+pub mod base;
+pub mod compute;
+
+pub use base::{tapered_gaussian, Gaussian, Imq, Kernel, KernelKind, Laplace, Matern32};
+pub use compute::{kernel_block, kernel_cross, BlockEvaluator, NativeEvaluator};

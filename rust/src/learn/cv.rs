@@ -1,0 +1,100 @@
+//! Grid-search model selection over (σ, λ) — the tuning protocol of
+//! Section 5.3 ("a grid search of the optimal parameters σ and λ").
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::learn::krr::{KrrModel, TrainConfig};
+
+/// Outcome of a grid search.
+#[derive(Debug, Clone)]
+pub struct GridResult {
+    /// Best bandwidth found.
+    pub sigma: f64,
+    /// Best regularization found.
+    pub lambda: f64,
+    /// Validation metric at the optimum (rel. error or accuracy).
+    pub metric: f64,
+    /// Whether higher metric is better (classification) or lower
+    /// (regression).
+    pub higher_is_better: bool,
+    /// All evaluated grid points: (σ, λ, metric).
+    pub grid: Vec<(f64, f64, f64)>,
+}
+
+/// Exhaustive grid search: trains one model per (σ, λ) pair on `train`,
+/// scores on `val`, returns the winner. The same seed is used for every
+/// grid point so randomness does not confound the sweep (the protocol of
+/// Section 5.1: "the seed always stays the same every time the range of σ
+/// is swept").
+pub fn grid_search(
+    base: &TrainConfig,
+    sigmas: &[f64],
+    lambdas: &[f64],
+    train: &Dataset,
+    val: &Dataset,
+) -> Result<GridResult> {
+    assert!(!sigmas.is_empty() && !lambdas.is_empty());
+    let mut grid = Vec::with_capacity(sigmas.len() * lambdas.len());
+    let mut best: Option<(f64, f64, f64)> = None;
+    let mut higher_is_better = false;
+    for &s in sigmas {
+        for &l in lambdas {
+            let cfg = base.clone().with_sigma(s).with_lambda(l);
+            let model = KrrModel::fit_dataset(&cfg, train)?;
+            let pred = model.predict(&val.x);
+            let (metric, hib) = super::metrics::score(val, &pred);
+            higher_is_better = hib;
+            grid.push((s, l, metric));
+            let better = match &best {
+                None => true,
+                Some((_, _, m)) => {
+                    if hib {
+                        metric > *m
+                    } else {
+                        metric < *m
+                    }
+                }
+            };
+            if better {
+                best = Some((s, l, metric));
+            }
+        }
+    }
+    let (sigma, lambda, metric) = best.unwrap();
+    Ok(GridResult { sigma, lambda, metric, higher_is_better, grid })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{spec_by_name, synthetic};
+    use crate::kernels::Gaussian;
+    use crate::learn::krr::EngineSpec;
+
+    #[test]
+    fn finds_interior_optimum() {
+        let spec = spec_by_name("cadata").unwrap();
+        let (train, val) = synthetic::generate(spec, 400, 100, 21);
+        let base = TrainConfig::new(Gaussian::new(1.0), EngineSpec::Nystrom { rank: 60 })
+            .with_seed(2);
+        let res = grid_search(&base, &[0.05, 0.3, 2.0], &[1e-4, 1e-2], &train, &val).unwrap();
+        assert_eq!(res.grid.len(), 6);
+        assert!(!res.higher_is_better);
+        // Best metric is the min of the grid.
+        let min = res.grid.iter().map(|g| g.2).fold(f64::INFINITY, f64::min);
+        assert_eq!(res.metric, min);
+        assert!(res.sigma > 0.0 && res.lambda > 0.0);
+    }
+
+    #[test]
+    fn classification_maximizes() {
+        let spec = spec_by_name("ijcnn1").unwrap();
+        let (train, val) = synthetic::generate(spec, 300, 80, 5);
+        let base = TrainConfig::new(Gaussian::new(1.0), EngineSpec::Independent { n0: 50 })
+            .with_seed(3);
+        let res = grid_search(&base, &[0.2, 1.0], &[1e-2], &train, &val).unwrap();
+        assert!(res.higher_is_better);
+        let max = res.grid.iter().map(|g| g.2).fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(res.metric, max);
+    }
+}

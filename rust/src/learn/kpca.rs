@@ -1,0 +1,230 @@
+//! Kernel principal component analysis (paper Section 5.6, Figure 8).
+//!
+//! The embedding of the training points is U = V_m diag(√λ_m) from the
+//! eigendecomposition of the *centered* kernel matrix K̃ = H K H,
+//! H = I − 11ᵀ/n. For explicit-feature kernels (Nyström, Fourier) the same
+//! embedding comes from PCA of the centered feature matrix. For the
+//! hierarchical kernel we never densify: Lanczos runs on the centered
+//! matvec, whose inner K·v is the paper's Algorithm 1 at O(nr).
+//!
+//! Figure 8 compares embeddings across kernels by the alignment
+//! difference min_M ‖U − Ũ M‖_F / ‖U‖_F (a least-squares solve).
+
+use crate::error::Result;
+use crate::hkernel::{hmatvec, HFactors};
+use crate::kernels::{kernel_block, KernelKind};
+use crate::linalg::{lanczos_topk, lstsq, matmul, sym_eig, Mat, Trans};
+use crate::util::rng::Rng;
+
+/// Center a square kernel matrix in place: K ← H K H.
+pub fn center_kernel_matrix(k: &mut Mat) {
+    let n = k.rows();
+    assert_eq!(k.cols(), n);
+    let nf = n as f64;
+    let row_means: Vec<f64> = (0..n).map(|i| k.row(i).iter().sum::<f64>() / nf).collect();
+    let total_mean = row_means.iter().sum::<f64>() / nf;
+    for i in 0..n {
+        for j in 0..n {
+            k[(i, j)] += total_mean - row_means[i] - row_means[j];
+        }
+    }
+}
+
+/// Embedding from a dense kernel matrix: top-`dim` eigenpairs of the
+/// centered matrix, scaled by √λ. Rows follow the matrix's row order.
+///
+/// Small matrices (n ≤ 256) use the dense Jacobi eigensolver; larger ones
+/// use Lanczos with a dense matvec — only the leading `dim` pairs are
+/// needed, so full O(n³) diagonalization would be wasted work.
+pub fn embed_from_kernel_matrix(k: &Mat, dim: usize) -> Result<Mat> {
+    let mut kc = k.clone();
+    center_kernel_matrix(&mut kc);
+    kc.symmetrize();
+    let n = kc.rows();
+    if n <= 256 {
+        let (w, v) = sym_eig(&kc)?;
+        return Ok(scale_embedding(&w, &v, dim));
+    }
+    let mut rng = Rng::new(0x5eed_cafe);
+    let (w, v) = lanczos_topk(n, dim, dim + 40, &mut rng, |b| {
+        let mut y = vec![0.0; n];
+        crate::linalg::gemv(1.0, &kc, Trans::No, b, 0.0, &mut y);
+        y
+    })?;
+    Ok(scale_embedding(&w, &v, dim))
+}
+
+/// Exact-kernel embedding of the rows of `x` (dense path).
+pub fn kpca_embed_dense(kind: KernelKind, x: &Mat, dim: usize) -> Result<Mat> {
+    let k = kernel_block(kind, x);
+    embed_from_kernel_matrix(&k, dim)
+}
+
+/// Embedding from an explicit feature map (Nyström / Fourier): PCA of the
+/// centered features. Returns an n x dim matrix; equals the kernel-matrix
+/// path because ⟨φ_c(x_i), φ_c(x_j)⟩ = K̃_ij.
+pub fn kpca_embed_features(phi: &Mat, dim: usize) -> Result<Mat> {
+    let (n, r) = phi.shape();
+    // Center features.
+    let mut mean = vec![0.0; r];
+    for i in 0..n {
+        for (m, v) in mean.iter_mut().zip(phi.row(i).iter()) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut pc = phi.clone();
+    for i in 0..n {
+        for (v, m) in pc.row_mut(i).iter_mut().zip(mean.iter()) {
+            *v -= m;
+        }
+    }
+    // Eig of the r x r covariance; project.
+    let mut cov = Mat::zeros(r, r);
+    crate::linalg::gemm(1.0, &pc, Trans::Yes, &pc, Trans::No, 0.0, &mut cov);
+    cov.symmetrize();
+    let (w, v) = sym_eig(&cov)?;
+    let dim = dim.min(r);
+    // Projection onto unit principal directions: U = Φc V_dim. The
+    // kernel-matrix convention scales eigenvectors of K̃ by √λ, which is
+    // exactly Φc times the unit right singular vectors — identical.
+    let mut vdim = Mat::zeros(r, dim);
+    for c in 0..dim {
+        if w[c] <= 1e-12 {
+            continue;
+        }
+        for i in 0..r {
+            vdim[(i, c)] = v[(i, c)];
+        }
+    }
+    Ok(matmul(&pc, Trans::No, &vdim, Trans::No))
+}
+
+/// Hierarchical-kernel embedding via Lanczos on the centered O(nr) matvec.
+/// Returns rows in **original order**.
+pub fn kpca_embed_hierarchical(
+    f: &HFactors,
+    dim: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> Result<Mat> {
+    let n = f.n();
+    let center = |v: &[f64]| -> Vec<f64> {
+        let mean = v.iter().sum::<f64>() / n as f64;
+        v.iter().map(|x| x - mean).collect()
+    };
+    let (w, v) = lanczos_topk(n, dim, iters.max(dim + 20), rng, |b| {
+        let kb = hmatvec(f, &center(b));
+        center(&kb)
+    })?;
+    let emb_tree = scale_embedding(&w, &v, dim);
+    Ok(f.rows_from_tree_order(&emb_tree))
+}
+
+fn scale_embedding(w: &[f64], v: &Mat, dim: usize) -> Mat {
+    let n = v.rows();
+    let dim = dim.min(w.len());
+    let mut u = Mat::zeros(n, dim);
+    for c in 0..dim {
+        let s = w[c].max(0.0).sqrt();
+        for i in 0..n {
+            u[(i, c)] = s * v[(i, c)];
+        }
+    }
+    u
+}
+
+/// Alignment difference ‖U − Ũ M‖_F / ‖U‖_F with M the least-squares
+/// minimizer (Figure 8's metric, after Zhang et al. 2008).
+pub fn alignment_difference(u: &Mat, u_tilde: &Mat) -> Result<f64> {
+    assert_eq!(u.rows(), u_tilde.rows());
+    let m = lstsq(u_tilde, u)?;
+    let mut res = matmul(u_tilde, Trans::No, &m, Trans::No);
+    res.axpy(-1.0, u);
+    Ok(res.fro_norm() / u.fro_norm())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::NystromFeatures;
+    use crate::hkernel::HConfig;
+    use crate::kernels::Gaussian;
+
+    fn cloud(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.uniform(0.0, 1.0))
+    }
+
+    #[test]
+    fn centering_zeroes_row_sums() {
+        let x = cloud(15, 3, 1);
+        let mut k = kernel_block(Gaussian::new(0.5), &x);
+        center_kernel_matrix(&mut k);
+        for i in 0..15 {
+            let s: f64 = k.row(i).iter().sum();
+            assert!(s.abs() < 1e-9, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn feature_embedding_matches_kernel_embedding() {
+        // Full-rank Nyström features reproduce the exact kernel, so both
+        // embedding paths must agree up to per-column sign.
+        let x = cloud(25, 3, 2);
+        let kind = Gaussian::new(0.6);
+        let mut rng = Rng::new(3);
+        let feat = NystromFeatures::fit(kind, &x, 25, &mut rng).unwrap();
+        let phi = feat.transform(&x);
+        let ue = kpca_embed_dense(kind, &x, 3).unwrap();
+        let uf = kpca_embed_features(&phi, 3).unwrap();
+        for c in 0..3 {
+            let dot: f64 = (0..25).map(|i| ue[(i, c)] * uf[(i, c)]).sum();
+            let sign = if dot >= 0.0 { 1.0 } else { -1.0 };
+            for i in 0..25 {
+                assert!(
+                    (ue[(i, c)] - sign * uf[(i, c)]).abs() < 1e-6,
+                    "col {c} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_embedding_matches_densified() {
+        let x = cloud(60, 3, 4);
+        let mut cfg = HConfig::new(Gaussian::new(0.5), 8).with_seed(5);
+        cfg.n0 = 8;
+        let f = HFactors::build(&x, cfg).unwrap();
+        let kdense = crate::hkernel::densify::densify_original_order(&f);
+        let u_dense = embed_from_kernel_matrix(&kdense, 3).unwrap();
+        let mut rng = Rng::new(6);
+        let u_lanczos = kpca_embed_hierarchical(&f, 3, 60, &mut rng).unwrap();
+        let diff = alignment_difference(&u_dense, &u_lanczos).unwrap();
+        assert!(diff < 1e-6, "alignment diff {diff}");
+    }
+
+    #[test]
+    fn alignment_zero_for_rotations() {
+        let u = cloud(20, 3, 7);
+        // Rotate columns by an orthogonal-ish mix: alignment must be ~0.
+        let m = Mat::from_vec(
+            3,
+            3,
+            vec![0.0, 1.0, 0.0, -1.0, 0.0, 0.0, 0.0, 0.0, 1.0],
+        );
+        let ut = matmul(&u, Trans::No, &m, Trans::No);
+        let d = alignment_difference(&u, &ut).unwrap();
+        assert!(d < 1e-10);
+    }
+
+    #[test]
+    fn alignment_positive_for_unrelated() {
+        let u = cloud(30, 3, 8);
+        let v = cloud(30, 3, 9);
+        let d = alignment_difference(&u, &v).unwrap();
+        assert!(d > 0.3, "unrelated embeddings should misalign: {d}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Evaluation metrics used by the paper's experiments: relative error for
+//! regression, accuracy for classification.
+
+use crate::data::{Dataset, Task};
+use crate::linalg::Mat;
+
+/// Relative testing error ‖pred − y‖₂ / ‖y‖₂ (regression plots, Fig. 3–7).
+pub fn relative_error(pred: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    let num: f64 = pred.iter().zip(y).map(|(p, t)| (p - t) * (p - t)).sum();
+    let den: f64 = y.iter().map(|t| t * t).sum();
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    let n = pred.len().max(1) as f64;
+    (pred.iter().zip(y).map(|(p, t)| (p - t) * (p - t)).sum::<f64>() / n).sqrt()
+}
+
+/// Classification accuracy in [0, 1].
+pub fn accuracy(pred_labels: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(pred_labels.len(), y.len());
+    if y.is_empty() {
+        return 0.0;
+    }
+    let hits = pred_labels.iter().zip(y).filter(|(p, t)| p == t).count();
+    hits as f64 / y.len() as f64
+}
+
+/// Task-appropriate score for a prediction matrix against a data set.
+/// Returns (metric value, higher_is_better).
+pub fn score(ds: &Dataset, raw_pred: &Mat) -> (f64, bool) {
+    let decoded = ds.decode_predictions(raw_pred);
+    match ds.task {
+        Task::Regression => (relative_error(&decoded, &ds.y), false),
+        Task::Binary | Task::Multiclass(_) => (accuracy(&decoded, &ds.y), true),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_error_basics() {
+        assert_eq!(relative_error(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((relative_error(&[0.0, 0.0], &[3.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(relative_error(&[0.0], &[0.0]), 0.0);
+        assert!(relative_error(&[1.0], &[0.0]).is_infinite());
+    }
+
+    #[test]
+    fn rmse_basics() {
+        assert!((rmse(&[1.0, 3.0], &[0.0, 0.0]) - 5.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1.0, -1.0, 1.0], &[1.0, 1.0, 1.0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn score_dispatches_on_task() {
+        use crate::data::Task;
+        let x = Mat::zeros(2, 1);
+        let reg = Dataset::new("r", x.clone(), vec![1.0, 2.0], Task::Regression).unwrap();
+        let (v, hib) = score(&reg, &Mat::from_vec(2, 1, vec![1.0, 2.0]));
+        assert_eq!((v, hib), (0.0, false));
+        let cls = Dataset::new("c", x, vec![1.0, -1.0], Task::Binary).unwrap();
+        let (v, hib) = score(&cls, &Mat::from_vec(2, 1, vec![0.5, 0.5]));
+        assert_eq!((v, hib), (0.5, true));
+    }
+}

@@ -1,0 +1,14 @@
+//! Learning tasks on top of the kernel engines: a unified KRR front-end
+//! over all five kernels compared in Section 5 (hierarchical, Nyström,
+//! Fourier, independent, exact), classification wrappers, kernel PCA
+//! (Section 5.6), grid-search model selection, and metrics.
+
+pub mod cv;
+pub mod kpca;
+pub mod krr;
+pub mod metrics;
+
+pub use cv::{grid_search, GridResult};
+pub use kpca::{alignment_difference, kpca_embed_dense, kpca_embed_features, kpca_embed_hierarchical};
+pub use krr::{EngineSpec, KrrModel, TrainConfig};
+pub use metrics::{accuracy, relative_error, rmse};

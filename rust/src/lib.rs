@@ -1,0 +1,45 @@
+//! # hck — Hierarchically Compositional Kernels
+//!
+//! A production-grade reproduction of *"Hierarchically Compositional Kernels
+//! for Scalable Nonparametric Learning"* (Chen, Avron, Sindhwani, 2016).
+//!
+//! The library implements the paper's hierarchically compositional kernel
+//! `k_hierarchical` — a strictly positive-definite kernel built by marrying
+//! the Nyström (globally low-rank) approximation with a locally lossless
+//! block-diagonal approximation across a hierarchical partitioning of the
+//! data domain — together with the full O(nr)/O(nr^2) structured linear
+//! algebra it induces (Algorithms 1–3 of the paper), all baselines the paper
+//! compares against (Nyström, random Fourier features, cross-domain
+//! independent kernel, exact dense), and the downstream learning tasks
+//! (kernel ridge regression, classification, kernel PCA, Gaussian-process
+//! log-likelihood / MLE).
+//!
+//! ## Three-layer architecture
+//!
+//! - **L3 (this crate)**: the coordinator and the structured-matrix engine —
+//!   partition trees, hierarchical factor construction, fast matvec/solve,
+//!   out-of-sample prediction, training pipeline, a threaded prediction
+//!   server with dynamic batching, CLI.
+//! - **L2 (python/compile/model.py)**: JAX compute graphs for kernel-block
+//!   evaluation and feature maps, AOT-lowered to HLO text once at build time.
+//! - **L1 (python/compile/kernels/)**: Pallas kernels for the tiled pairwise
+//!   distance + kernel-application hot spot, lowered inside the L2 graphs.
+//!
+//! Python never runs at inference time: the Rust binary loads the AOT HLO
+//! artifacts through PJRT ([`runtime`]) and otherwise uses its own native
+//! kernels ([`kernels`]).
+
+pub mod approx;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod gp;
+pub mod hkernel;
+pub mod learn;
+pub mod runtime;
+pub mod kernels;
+pub mod linalg;
+pub mod partition;
+pub mod util;
+
+pub use error::{Error, Result};

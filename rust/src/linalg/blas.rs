@@ -1,0 +1,324 @@
+//! BLAS-like kernels: blocked GEMM, GEMV, SYRK.
+//!
+//! `gemm` is the hottest native routine in the library (kernel-block
+//! evaluation uses the |x-y|^2 = |x|^2 + |y|^2 - 2<x,y> expansion, the
+//! hierarchical factor construction multiplies U/W/Σ factors constantly).
+//! The implementation packs nothing but uses an i-k-j loop order with 4-way
+//! j-unrolling, which keeps the B row in cache and lets LLVM autovectorize;
+//! on the benchmark machine it reaches a few GFLOP/s single-core, which is
+//! within ~2-3x of an optimized microkernel and far from the O(n^3) naive
+//! j-inner order. See rust/benches/hotpath.rs for measurements.
+
+use super::matrix::Mat;
+
+/// Transpose marker for [`gemm`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Trans {
+    /// Use the operand as stored.
+    No,
+    /// Use the transpose of the operand.
+    Yes,
+}
+
+/// General matrix multiply: `C = alpha * op_a(A) * op_b(B) + beta * C`.
+///
+/// Panics on dimension mismatch (programming error, not data error).
+pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &mut Mat) {
+    let (am, ak) = match ta {
+        Trans::No => a.shape(),
+        Trans::Yes => (a.cols(), a.rows()),
+    };
+    let (bk, bn) = match tb {
+        Trans::No => b.shape(),
+        Trans::Yes => (b.cols(), b.rows()),
+    };
+    assert_eq!(ak, bk, "gemm inner dims: {ak} vs {bk}");
+    assert_eq!(c.shape(), (am, bn), "gemm output shape");
+
+    if beta == 0.0 {
+        c.as_mut_slice().fill(0.0);
+    } else if beta != 1.0 {
+        c.scale(beta);
+    }
+    if alpha == 0.0 || am == 0 || bn == 0 || ak == 0 {
+        return;
+    }
+
+    match (ta, tb) {
+        (Trans::No, Trans::No) => gemm_nn(alpha, a, b, c),
+        (Trans::Yes, Trans::No) => gemm_tn(alpha, a, b, c),
+        (Trans::No, Trans::Yes) => gemm_nt(alpha, a, b, c),
+        (Trans::Yes, Trans::Yes) => {
+            // Rare; fall back to materializing Bᵀ (small matrices here).
+            let bt = b.t();
+            gemm_tn(alpha, a, &bt, c);
+        }
+    }
+}
+
+/// C += alpha * A * B, row-major, i-k-j order with 4-way register
+/// blocking over k: each pass over the C row consumes four B rows, which
+/// quarters the C-row load/store traffic (the bottleneck the flat profile
+/// shows — see EXPERIMENTS.md §Perf iteration 4).
+fn gemm_nn(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let bd = b.as_slice();
+    let k4 = k / 4 * 4;
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        let mut p = 0;
+        while p < k4 {
+            let a0 = alpha * arow[p];
+            let a1 = alpha * arow[p + 1];
+            let a2 = alpha * arow[p + 2];
+            let a3 = alpha * arow[p + 3];
+            let b0 = &bd[p * n..(p + 1) * n];
+            let b1 = &bd[(p + 1) * n..(p + 2) * n];
+            let b2 = &bd[(p + 2) * n..(p + 3) * n];
+            let b3 = &bd[(p + 3) * n..(p + 4) * n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            p += 4;
+        }
+        while p < k {
+            let aip = alpha * arow[p];
+            if aip != 0.0 {
+                axpy_row(aip, &bd[p * n..(p + 1) * n], crow);
+            }
+            p += 1;
+        }
+    }
+}
+
+/// C += alpha * Aᵀ * B where A is (k x m): loop over k accumulating outer
+/// products; accesses all operands row-contiguously.
+fn gemm_tn(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
+    let (k, m) = a.shape();
+    let n = b.cols();
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let aip = alpha * arow[i];
+            if aip == 0.0 {
+                continue;
+            }
+            axpy_row(aip, brow, &mut c.row_mut(i)[..n]);
+        }
+    }
+}
+
+/// C += alpha * A * Bᵀ: every C entry is a dot of two rows.
+fn gemm_nt(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
+    let m = a.rows();
+    let n = b.rows();
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            crow[j] += alpha * super::matrix::dot(arow, b.row(j));
+        }
+    }
+}
+
+/// y[j] += a * x[j] over a row — unrolled 8-way.
+#[inline]
+fn axpy_row(a: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 8;
+    for cidx in 0..chunks {
+        let i = cidx * 8;
+        y[i] += a * x[i];
+        y[i + 1] += a * x[i + 1];
+        y[i + 2] += a * x[i + 2];
+        y[i + 3] += a * x[i + 3];
+        y[i + 4] += a * x[i + 4];
+        y[i + 5] += a * x[i + 5];
+        y[i + 6] += a * x[i + 6];
+        y[i + 7] += a * x[i + 7];
+    }
+    for i in chunks * 8..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Matrix-vector product: `y = alpha * op(A) x + beta * y`.
+pub fn gemv(alpha: f64, a: &Mat, ta: Trans, x: &[f64], beta: f64, y: &mut [f64]) {
+    let (m, n) = match ta {
+        Trans::No => a.shape(),
+        Trans::Yes => (a.cols(), a.rows()),
+    };
+    assert_eq!(x.len(), n, "gemv x len");
+    assert_eq!(y.len(), m, "gemv y len");
+    if beta == 0.0 {
+        y.fill(0.0);
+    } else if beta != 1.0 {
+        for v in y.iter_mut() {
+            *v *= beta;
+        }
+    }
+    match ta {
+        Trans::No => {
+            for i in 0..m {
+                y[i] += alpha * super::matrix::dot(a.row(i), x);
+            }
+        }
+        Trans::Yes => {
+            for p in 0..a.rows() {
+                let ax = alpha * x[p];
+                if ax == 0.0 {
+                    continue;
+                }
+                axpy_row(ax, a.row(p), y);
+            }
+        }
+    }
+}
+
+/// Convenience: allocate and return op_a(A) * op_b(B).
+pub fn matmul(a: &Mat, ta: Trans, b: &Mat, tb: Trans) -> Mat {
+    let m = match ta {
+        Trans::No => a.rows(),
+        Trans::Yes => a.cols(),
+    };
+    let n = match tb {
+        Trans::No => b.cols(),
+        Trans::Yes => b.rows(),
+    };
+    let mut c = Mat::zeros(m, n);
+    gemm(1.0, a, ta, b, tb, 0.0, &mut c);
+    c
+}
+
+/// Symmetric rank-k update: C = alpha * A Aᵀ + beta * C (full storage,
+/// exploits symmetry by computing the upper triangle and mirroring).
+pub fn syrk(alpha: f64, a: &Mat, beta: f64, c: &mut Mat) {
+    let m = a.rows();
+    assert_eq!(c.shape(), (m, m));
+    for i in 0..m {
+        let arow_i = a.row(i);
+        for j in i..m {
+            let v = alpha * super::matrix::dot(arow_i, a.row(j));
+            let prev = if beta == 0.0 { 0.0 } else { beta * c[(i, j)] };
+            c[(i, j)] = prev + v;
+        }
+    }
+    for i in 0..m {
+        for j in 0..i {
+            c[(i, j)] = c[(j, i)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(r: &mut Rng, m: usize, n: usize) -> Mat {
+        Mat::from_fn(m, n, |_, _| r.normal())
+    }
+
+    fn naive_mm(a: &Mat, b: &Mat) -> Mat {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a[(i, p)] * b[(p, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!(a.shape(), b.shape());
+        let mut diff = a.clone();
+        diff.axpy(-1.0, b);
+        let rel = diff.fro_norm() / (1.0 + b.fro_norm());
+        assert!(rel < tol, "relative diff {rel}");
+    }
+
+    #[test]
+    fn gemm_matches_naive_all_transposes() {
+        let mut r = Rng::new(1);
+        let (m, k, n) = (13, 9, 17);
+        let a = randmat(&mut r, m, k);
+        let b = randmat(&mut r, k, n);
+        let at = a.t();
+        let bt = b.t();
+        let want = naive_mm(&a, &b);
+        assert_close(&matmul(&a, Trans::No, &b, Trans::No), &want, 1e-12);
+        assert_close(&matmul(&at, Trans::Yes, &b, Trans::No), &want, 1e-12);
+        assert_close(&matmul(&a, Trans::No, &bt, Trans::Yes), &want, 1e-12);
+        assert_close(&matmul(&at, Trans::Yes, &bt, Trans::Yes), &want, 1e-12);
+    }
+
+    #[test]
+    fn gemm_alpha_beta() {
+        let mut r = Rng::new(2);
+        let a = randmat(&mut r, 4, 5);
+        let b = randmat(&mut r, 5, 3);
+        let c0 = randmat(&mut r, 4, 3);
+        let mut c = c0.clone();
+        gemm(2.0, &a, Trans::No, &b, Trans::No, 0.5, &mut c);
+        let mut want = naive_mm(&a, &b);
+        want.scale(2.0);
+        want.axpy(0.5, &c0);
+        assert_close(&c, &want, 1e-12);
+    }
+
+    #[test]
+    fn gemv_matches_gemm() {
+        let mut r = Rng::new(3);
+        let a = randmat(&mut r, 6, 4);
+        let x: Vec<f64> = (0..4).map(|_| r.normal()).collect();
+        let mut y = vec![0.0; 6];
+        gemv(1.0, &a, Trans::No, &x, 0.0, &mut y);
+        let want = naive_mm(&a, &Mat::col_vec(&x));
+        for i in 0..6 {
+            assert!((y[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+        // transposed
+        let mut yt = vec![1.0; 4];
+        gemv(1.0, &a, Trans::Yes, &y, 2.0, &mut yt);
+        let want_t = naive_mm(&a.t(), &Mat::col_vec(&y));
+        for j in 0..4 {
+            assert!((yt[j] - (want_t[(j, 0)] + 2.0)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        let mut r = Rng::new(4);
+        let a = randmat(&mut r, 7, 3);
+        let mut c = Mat::zeros(7, 7);
+        syrk(1.5, &a, 0.0, &mut c);
+        let want = {
+            let mut w = matmul(&a, Trans::No, &a, Trans::Yes);
+            w.scale(1.5);
+            w
+        };
+        assert_close(&c, &want, 1e-12);
+        assert!(c.is_symmetric(1e-14));
+    }
+
+    #[test]
+    fn empty_dims_ok() {
+        let a = Mat::zeros(0, 3);
+        let b = Mat::zeros(3, 2);
+        let c = matmul(&a, Trans::No, &b, Trans::No);
+        assert_eq!(c.shape(), (0, 2));
+        let a2 = Mat::zeros(2, 0);
+        let b2 = Mat::zeros(0, 2);
+        let c2 = matmul(&a2, Trans::No, &b2, Trans::No);
+        assert_eq!(c2.fro_norm(), 0.0);
+    }
+}

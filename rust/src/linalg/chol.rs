@@ -1,0 +1,324 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! Used everywhere the paper inverts a landmark Gram matrix K(X_i, X_i):
+//! the Nyström factors U_i = K(X_i, X_p) K(X_p, X_p)^{-1}, the change-of-
+//! basis W_p, the leaf blocks of the fast solver, the baselines' primal
+//! systems. Supports jitter retry: kernel matrices are notoriously
+//! ill-conditioned (Section 4.3), so on breakdown we add a small multiple
+//! of the mean diagonal and retry, mirroring the paper's λ' stabilization.
+
+use super::matrix::Mat;
+use crate::error::{Error, Result};
+
+/// Lower-triangular Cholesky factor L with A = L Lᵀ.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Mat,
+    /// Jitter that was added to the diagonal to make the factorization
+    /// succeed (0.0 if none was needed).
+    pub jitter: f64,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix. Fails if `a` is not
+    /// (numerically) positive-definite.
+    pub fn new(a: &Mat) -> Result<Cholesky> {
+        Self::factor_with_jitter(a, 0.0).map(|l| Cholesky { l, jitter: 0.0 })
+    }
+
+    /// Factor with automatic jitter retry: if the plain factorization
+    /// breaks down, retry with diag += jitter, growing 10x per attempt
+    /// starting from `1e-12 * mean(diag)`, up to `max_tries` attempts.
+    pub fn new_jittered(a: &Mat, max_tries: usize) -> Result<Cholesky> {
+        match Self::factor_with_jitter(a, 0.0) {
+            Ok(l) => return Ok(Cholesky { l, jitter: 0.0 }),
+            Err(_) => {}
+        }
+        let n = a.rows();
+        let mean_diag =
+            (0..n).map(|i| a[(i, i)].abs()).sum::<f64>() / n.max(1) as f64;
+        let mut jitter = (mean_diag * 1e-12).max(1e-300);
+        for _ in 0..max_tries {
+            if let Ok(l) = Self::factor_with_jitter(a, jitter) {
+                return Ok(Cholesky { l, jitter });
+            }
+            jitter *= 10.0;
+        }
+        Err(Error::linalg(format!(
+            "cholesky breakdown (n={n}), jitter up to {jitter:.1e} did not help"
+        )))
+    }
+
+    fn factor_with_jitter(a: &Mat, jitter: f64) -> Result<Mat> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(Error::dim(format!("cholesky of {}x{}", a.rows(), a.cols())));
+        }
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            // L[j][j]
+            let mut d = a[(j, j)] + jitter;
+            let lrow_j_owned: Vec<f64> = l.row(j)[..j].to_vec();
+            for v in &lrow_j_owned {
+                d -= v * v;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(Error::linalg(format!(
+                    "cholesky breakdown at pivot {j} (d={d:.3e})"
+                )));
+            }
+            let djj = d.sqrt();
+            l[(j, j)] = djj;
+            // Column below the pivot.
+            for i in (j + 1)..n {
+                let s = super::matrix::dot(&l.row(i)[..j], &lrow_j_owned);
+                l[(i, j)] = (a[(i, j)] - s) / djj;
+            }
+        }
+        Ok(l)
+    }
+
+    /// The lower factor L.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Order of the factored matrix.
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// Solve A x = b in place (b becomes x). Forward then back substitution.
+    pub fn solve_in_place(&self, b: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        // L y = b
+        for i in 0..n {
+            let s = super::matrix::dot(&self.l.row(i)[..i], &b[..i]);
+            b[i] = (b[i] - s) / self.l[(i, i)];
+        }
+        // Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * b[k];
+            }
+            b[i] = s / self.l[(i, i)];
+        }
+    }
+
+    /// Solve A x = b, returning x.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// Solve A X = B for a block of right-hand sides (B is n x m).
+    ///
+    /// Row-wise substitution vectorized across the m RHS columns: every
+    /// inner update is a contiguous row axpy, no transposes, no strided
+    /// accesses (EXPERIMENTS.md §Perf iteration 5).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let m = b.cols();
+        let mut y = b.clone();
+        let yd = y.as_mut_slice();
+        // Forward: L Y = B.
+        for i in 0..n {
+            let (done, rest) = yd.split_at_mut(i * m);
+            let yrow = &mut rest[..m];
+            let lrow = &self.l.row(i)[..i];
+            for (k, &lik) in lrow.iter().enumerate() {
+                if lik != 0.0 {
+                    let yk = &done[k * m..(k + 1) * m];
+                    for (a, b) in yrow.iter_mut().zip(yk.iter()) {
+                        *a -= lik * b;
+                    }
+                }
+            }
+            let inv = 1.0 / self.l[(i, i)];
+            for a in yrow.iter_mut() {
+                *a *= inv;
+            }
+        }
+        // Backward: Lᵀ X = Y.
+        for i in (0..n).rev() {
+            let (head, tail) = yd.split_at_mut((i + 1) * m);
+            let yrow = &mut head[i * m..];
+            for k in (i + 1)..n {
+                let lki = self.l[(k, i)];
+                if lki != 0.0 {
+                    let yk = &tail[(k - i - 1) * m..(k - i) * m];
+                    for (a, b) in yrow.iter_mut().zip(yk.iter()) {
+                        *a -= lki * b;
+                    }
+                }
+            }
+            let inv = 1.0 / self.l[(i, i)];
+            for a in yrow.iter_mut() {
+                *a *= inv;
+            }
+        }
+        y
+    }
+
+    /// Solve Xᵀ A = Bᵀ i.e. return B A^{-1} for row-major B (m x n).
+    /// Because A is symmetric this is (A^{-1} Bᵀ)ᵀ.
+    pub fn solve_right(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.cols(), n);
+        let mut out = b.clone();
+        for r in 0..out.rows() {
+            self.solve_in_place(out.row_mut(r));
+        }
+        out
+    }
+
+    /// Forward substitution only: solve L y = b (in place). Used to form
+    /// Nyström features Z = K(X, L) L^{-T} etc.
+    pub fn forward_solve_in_place(&self, b: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        for i in 0..n {
+            let s = super::matrix::dot(&self.l.row(i)[..i], &b[..i]);
+            b[i] = (b[i] - s) / self.l[(i, i)];
+        }
+    }
+
+    /// Solve rows of B against Lᵀ from the right: return B L^{-T}.
+    /// Each row b of B is replaced by the solution y of Lᵀ... specifically
+    /// y such that y Lᵀ = b, i.e. L y = b with y as a row.
+    pub fn forward_solve_rows(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.cols(), n);
+        let mut out = b.clone();
+        for r in 0..out.rows() {
+            self.forward_solve_in_place(out.row_mut(r));
+        }
+        out
+    }
+
+    /// Explicit inverse A^{-1} (n x n). Only for small factors.
+    pub fn inverse(&self) -> Mat {
+        let n = self.n();
+        let eye = Mat::eye(n);
+        self.solve_mat(&eye)
+    }
+
+    /// log det(A) = 2 * sum log L[i][i].
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{matmul, Trans};
+    use crate::util::rng::Rng;
+
+    /// A random SPD matrix A = G Gᵀ + n*I.
+    fn spd(r: &mut Rng, n: usize) -> Mat {
+        let g = Mat::from_fn(n, n, |_, _| r.normal());
+        let mut a = matmul(&g, Trans::No, &g, Trans::Yes);
+        a.add_diag(n as f64 * 0.1);
+        a.symmetrize();
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut r = Rng::new(1);
+        let a = spd(&mut r, 12);
+        let ch = Cholesky::new(&a).unwrap();
+        let rec = matmul(ch.l(), Trans::No, ch.l(), Trans::Yes);
+        let mut diff = rec.clone();
+        diff.axpy(-1.0, &a);
+        assert!(diff.fro_norm() / a.fro_norm() < 1e-12);
+        assert_eq!(ch.jitter, 0.0);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut r = Rng::new(2);
+        let a = spd(&mut r, 9);
+        let ch = Cholesky::new(&a).unwrap();
+        let b: Vec<f64> = (0..9).map(|_| r.normal()).collect();
+        let x = ch.solve(&b);
+        // A x should equal b.
+        let mut ax = vec![0.0; 9];
+        crate::linalg::blas::gemv(1.0, &a, Trans::No, &x, 0.0, &mut ax);
+        for i in 0..9 {
+            assert!((ax[i] - b[i]).abs() < 1e-9, "{} vs {}", ax[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn solve_mat_and_inverse() {
+        let mut r = Rng::new(3);
+        let a = spd(&mut r, 7);
+        let ch = Cholesky::new(&a).unwrap();
+        let inv = ch.inverse();
+        let prod = matmul(&a, Trans::No, &inv, Trans::No);
+        let mut diff = prod.clone();
+        diff.axpy(-1.0, &Mat::eye(7));
+        assert!(diff.fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn solve_right_is_b_ainv() {
+        let mut r = Rng::new(4);
+        let a = spd(&mut r, 6);
+        let b = Mat::from_fn(4, 6, |_, _| r.normal());
+        let ch = Cholesky::new(&a).unwrap();
+        let x = ch.solve_right(&b); // B A^{-1}
+        let rec = matmul(&x, Trans::No, &a, Trans::No);
+        let mut diff = rec.clone();
+        diff.axpy(-1.0, &b);
+        assert!(diff.fro_norm() / b.fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_rescues_singular() {
+        // Rank-1 PSD matrix: plain Cholesky fails, jittered succeeds.
+        let v = Mat::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let a = matmul(&v, Trans::No, &v, Trans::Yes);
+        assert!(Cholesky::new(&a).is_err());
+        let ch = Cholesky::new_jittered(&a, 40).unwrap();
+        assert!(ch.jitter > 0.0);
+    }
+
+    #[test]
+    fn logdet_matches_known() {
+        // diag(2, 3, 4): logdet = ln 24.
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 2.0;
+        a[(1, 1)] = 3.0;
+        a[(2, 2)] = 4.0;
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.logdet() - 24.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forward_solve_rows_matches() {
+        // Z = B L^{-T} should satisfy Z Lᵀ = B.
+        let mut r = Rng::new(5);
+        let a = spd(&mut r, 5);
+        let ch = Cholesky::new(&a).unwrap();
+        let b = Mat::from_fn(3, 5, |_, _| r.normal());
+        let z = ch.forward_solve_rows(&b);
+        let rec = matmul(&z, Trans::No, &ch.l().t(), Trans::No);
+        let mut diff = rec.clone();
+        diff.axpy(-1.0, &b);
+        assert!(diff.fro_norm() / b.fro_norm() < 1e-10);
+    }
+}

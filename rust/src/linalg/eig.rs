@@ -1,0 +1,172 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Jacobi is slow asymptotically but extremely robust and accurate for the
+//! modest orders this library needs (factor sizes r and leaf sizes n0, a
+//! few hundred at most; the dense kernel-PCA path caps n in the low
+//! thousands). Larger spectral problems go through [`super::lanczos`]
+//! on top of the O(nr) hierarchical matvec instead.
+
+use super::matrix::Mat;
+use crate::error::{Error, Result};
+
+/// Eigendecomposition A = V diag(w) Vᵀ of a symmetric matrix.
+/// Eigenvalues are returned in *descending* order, V's columns matching.
+pub fn sym_eig(a: &Mat) -> Result<(Vec<f64>, Mat)> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::dim(format!("sym_eig of {}x{}", a.rows(), a.cols())));
+    }
+    if !a.is_symmetric(1e-8 * (1.0 + a.max_abs())) {
+        return Err(Error::linalg("sym_eig: matrix is not symmetric".to_string()));
+    }
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::eye(n);
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + m.max_abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Jacobi rotation angle.
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation to rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut w: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    // Sort descending, permuting eigenvector columns along.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| w[j].partial_cmp(&w[i]).unwrap());
+    let wsorted: Vec<f64> = order.iter().map(|&i| w[i]).collect();
+    let mut vsorted = Mat::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        for i in 0..n {
+            vsorted[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    w = wsorted;
+    Ok((w, vsorted))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{matmul, Trans};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 5.0;
+        a[(2, 2)] = 3.0;
+        let (w, _) = sym_eig(&a).unwrap();
+        assert!((w[0] - 5.0).abs() < 1e-12);
+        assert!((w[1] - 3.0).abs() < 1e-12);
+        assert!((w[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric() {
+        let mut r = Rng::new(1);
+        let n = 15;
+        let g = Mat::from_fn(n, n, |_, _| r.normal());
+        let mut a = matmul(&g, Trans::No, &g, Trans::Yes);
+        a.symmetrize();
+        let (w, v) = sym_eig(&a).unwrap();
+        // A ≈ V diag(w) Vᵀ
+        let mut vd = v.clone();
+        for i in 0..n {
+            for j in 0..n {
+                vd[(i, j)] *= w[j];
+            }
+        }
+        let rec = matmul(&vd, Trans::No, &v, Trans::Yes);
+        let mut diff = rec;
+        diff.axpy(-1.0, &a);
+        assert!(diff.fro_norm() / a.fro_norm() < 1e-10);
+        // Eigenvalues descending.
+        for k in 1..n {
+            assert!(w[k - 1] >= w[k] - 1e-12);
+        }
+        // V orthogonal.
+        let vtv = matmul(&v, Trans::Yes, &v, Trans::No);
+        let mut d = vtv;
+        d.axpy(-1.0, &Mat::eye(n));
+        assert!(d.fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn psd_matrix_has_nonneg_eigs() {
+        let mut r = Rng::new(2);
+        let g = Mat::from_fn(8, 3, |_, _| r.normal());
+        let a = matmul(&g, Trans::No, &g, Trans::Yes); // rank 3 PSD
+        let (w, _) = sym_eig(&a).unwrap();
+        for &x in &w {
+            assert!(x > -1e-10);
+        }
+        // Rank should be 3: eigenvalues 4..8 near zero.
+        assert!(w[2] > 1e-6);
+        assert!(w[3].abs() < 1e-8);
+    }
+
+    #[test]
+    fn rejects_nonsymmetric() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 5.0, 0.0, 1.0]);
+        assert!(sym_eig(&a).is_err());
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigs 3, 1.
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (w, v) = sym_eig(&a).unwrap();
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+        // Eigenvector for 3 is (1,1)/sqrt(2) up to sign.
+        assert!((v[(0, 0)].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+    }
+}

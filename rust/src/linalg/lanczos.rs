@@ -1,0 +1,268 @@
+//! Iterative spectral methods over implicit operators.
+//!
+//! [`lanczos_topk`] computes leading eigenpairs of a symmetric operator
+//! given only a matvec closure — this is how kernel PCA runs on the
+//! hierarchical kernel matrix, whose matvec is the paper's Algorithm 1 at
+//! O(nr) cost, avoiding any O(n^2) densification.
+//!
+//! [`power_iteration`] computes the dominant singular vector of a (shifted)
+//! data matrix — the PCA partitioning rule of Section 4.1.
+
+use super::eig::sym_eig;
+use super::matrix::{dot, Mat};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Top-k eigenpairs (descending by eigenvalue) of a symmetric operator of
+/// dimension `n`, available only through `matvec`.
+///
+/// Runs Lanczos with full reorthogonalization for `iters` steps
+/// (iters >= k; a few k + 20 is plenty for kernel matrices whose spectrum
+/// decays), then solves the small tridiagonal problem densely.
+/// Returns (eigenvalues, eigenvectors as columns of an n x k matrix).
+pub fn lanczos_topk(
+    n: usize,
+    k: usize,
+    iters: usize,
+    rng: &mut Rng,
+    mut matvec: impl FnMut(&[f64]) -> Vec<f64>,
+) -> Result<(Vec<f64>, Mat)> {
+    if k == 0 || n == 0 {
+        return Ok((vec![], Mat::zeros(n, 0)));
+    }
+    let m = iters.max(k + 2).min(n);
+    let mut qs: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut alphas: Vec<f64> = Vec::with_capacity(m);
+    let mut betas: Vec<f64> = Vec::with_capacity(m);
+
+    // Random start vector.
+    let mut q = vec![0.0; n];
+    rng.fill_normal(&mut q);
+    normalize(&mut q)?;
+    qs.push(q);
+
+    for j in 0..m {
+        let mut w = matvec(&qs[j]);
+        if w.len() != n {
+            return Err(Error::dim("lanczos: matvec returned wrong length"));
+        }
+        let alpha = dot(&w, &qs[j]);
+        alphas.push(alpha);
+        // w -= alpha q_j + beta_{j-1} q_{j-1}
+        for (wi, qi) in w.iter_mut().zip(qs[j].iter()) {
+            *wi -= alpha * qi;
+        }
+        if j > 0 {
+            let beta_prev = betas[j - 1];
+            let qprev = &qs[j - 1];
+            for (wi, qi) in w.iter_mut().zip(qprev.iter()) {
+                *wi -= beta_prev * qi;
+            }
+        }
+        // Full reorthogonalization (twice is enough).
+        for _ in 0..2 {
+            for qv in &qs {
+                let c = dot(&w, qv);
+                if c != 0.0 {
+                    for (wi, qi) in w.iter_mut().zip(qv.iter()) {
+                        *wi -= c * qi;
+                    }
+                }
+            }
+        }
+        let beta = norm(&w);
+        if j + 1 == m || beta < 1e-12 {
+            betas.push(beta);
+            break;
+        }
+        betas.push(beta);
+        for x in w.iter_mut() {
+            *x /= beta;
+        }
+        qs.push(w);
+    }
+
+    // Solve the tridiagonal eigenproblem densely (small).
+    let steps = qs.len();
+    let mut t = Mat::zeros(steps, steps);
+    for i in 0..steps {
+        t[(i, i)] = alphas[i];
+        if i + 1 < steps {
+            t[(i, i + 1)] = betas[i];
+            t[(i + 1, i)] = betas[i];
+        }
+    }
+    let (w, s) = sym_eig(&t)?;
+    let k_eff = k.min(steps);
+    // Ritz vectors: V = Q S[:, :k]
+    let mut v = Mat::zeros(n, k_eff);
+    for col in 0..k_eff {
+        for (jrow, qv) in qs.iter().enumerate() {
+            let c = s[(jrow, col)];
+            if c == 0.0 {
+                continue;
+            }
+            for i in 0..n {
+                v[(i, col)] += c * qv[i];
+            }
+        }
+    }
+    Ok((w[..k_eff].to_vec(), v))
+}
+
+fn norm(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+fn normalize(v: &mut [f64]) -> Result<()> {
+    let n = norm(v);
+    if n < 1e-300 {
+        return Err(Error::linalg("cannot normalize zero vector"));
+    }
+    for x in v.iter_mut() {
+        *x /= n;
+    }
+    Ok(())
+}
+
+/// Dominant right singular vector of the row-centered data matrix
+/// `X - mean` (i.e. the first principal axis), via power iteration on
+/// Cov = (X-m)ᵀ(X-m) without forming it. Returns (direction, iterations).
+///
+/// This is the split rule of the PCA partitioning baseline (Section 4.1);
+/// Table 2 measures its overhead relative to random projection.
+pub fn power_iteration(x: &Mat, rows: &[usize], iters: usize, rng: &mut Rng) -> Vec<f64> {
+    let d = x.cols();
+    let nr = rows.len();
+    if nr == 0 || d == 0 {
+        return vec![0.0; d];
+    }
+    // Column means over the selected rows.
+    let mut mean = vec![0.0; d];
+    for &i in rows {
+        for (mj, xj) in mean.iter_mut().zip(x.row(i).iter()) {
+            *mj += xj;
+        }
+    }
+    for mj in mean.iter_mut() {
+        *mj /= nr as f64;
+    }
+
+    let mut v = rng.unit_vector(d);
+    let mut xv = vec![0.0; nr];
+    for _ in 0..iters {
+        // xv = (X - m) v
+        for (k, &i) in rows.iter().enumerate() {
+            xv[k] = dot(x.row(i), &v) - dot(&mean, &v);
+        }
+        // v = (X - m)ᵀ xv
+        for vj in v.iter_mut() {
+            *vj = 0.0;
+        }
+        let mut xv_sum = 0.0;
+        for (k, &i) in rows.iter().enumerate() {
+            let c = xv[k];
+            xv_sum += c;
+            for (vj, xj) in v.iter_mut().zip(x.row(i).iter()) {
+                *vj += c * xj;
+            }
+        }
+        for (vj, mj) in v.iter_mut().zip(mean.iter()) {
+            *vj -= xv_sum * mj;
+        }
+        let nv = norm(&v);
+        if nv < 1e-300 {
+            // Degenerate data (all points identical): any direction works.
+            return rng.unit_vector(d);
+        }
+        for x in v.iter_mut() {
+            *x /= nv;
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{matmul, Trans};
+
+    #[test]
+    fn lanczos_matches_dense_eig() {
+        let mut rng = Rng::new(1);
+        let n = 40;
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut a = matmul(&g, Trans::No, &g, Trans::Yes);
+        a.symmetrize();
+        let (w_dense, _) = sym_eig(&a).unwrap();
+        let (w, v) = lanczos_topk(n, 5, 40, &mut rng, |x| {
+            let mut y = vec![0.0; n];
+            crate::linalg::blas::gemv(1.0, &a, Trans::No, x, 0.0, &mut y);
+            y
+        })
+        .unwrap();
+        for i in 0..5 {
+            assert!(
+                (w[i] - w_dense[i]).abs() / w_dense[0] < 1e-8,
+                "eig {i}: {} vs {}",
+                w[i],
+                w_dense[i]
+            );
+        }
+        // Ritz vectors orthonormal.
+        let vtv = matmul(&v, Trans::Yes, &v, Trans::No);
+        let mut d = vtv;
+        d.axpy(-1.0, &Mat::eye(5));
+        assert!(d.fro_norm() < 1e-8);
+    }
+
+    #[test]
+    fn lanczos_k_zero() {
+        let mut rng = Rng::new(2);
+        let (w, v) = lanczos_topk(10, 0, 5, &mut rng, |x| x.to_vec()).unwrap();
+        assert!(w.is_empty());
+        assert_eq!(v.cols(), 0);
+    }
+
+    #[test]
+    fn lanczos_on_identity_terminates_early() {
+        let mut rng = Rng::new(3);
+        // Identity: Krylov space is 1-dimensional; beta hits ~0 at step 1.
+        let (w, _) = lanczos_topk(20, 3, 20, &mut rng, |x| x.to_vec()).unwrap();
+        assert!((w[0] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_iteration_finds_principal_axis() {
+        let mut rng = Rng::new(4);
+        // Points stretched along (1, 1)/sqrt(2), offset by a constant mean.
+        let n = 300;
+        let x = Mat::from_fn(n, 2, |_, j| {
+            // filled below
+            let _ = j;
+            0.0
+        });
+        let mut x = x;
+        for i in 0..n {
+            let t = rng.normal() * 5.0;
+            let e = rng.normal() * 0.3;
+            x[(i, 0)] = 10.0 + (t + e) / std::f64::consts::SQRT_2;
+            x[(i, 1)] = -3.0 + (t - e) / std::f64::consts::SQRT_2;
+        }
+        let rows: Vec<usize> = (0..n).collect();
+        let v = power_iteration(&x, &rows, 30, &mut rng);
+        let target = std::f64::consts::FRAC_1_SQRT_2;
+        let align = (v[0] * target + v[1] * target).abs();
+        assert!(align > 0.99, "alignment {align}, v={v:?}");
+    }
+
+    #[test]
+    fn power_iteration_degenerate_data() {
+        let mut rng = Rng::new(5);
+        let x = Mat::zeros(5, 3);
+        let rows: Vec<usize> = (0..5).collect();
+        let v = power_iteration(&x, &rows, 10, &mut rng);
+        let nv: f64 = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+        assert!((nv - 1.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,191 @@
+//! LU factorization with partial pivoting, for general (non-symmetric)
+//! small systems — e.g. the `F_i = G_i^{-1} + Ŝ_i` capacitance matrices of
+//! the fast solver when they are near-symmetric but not numerically SPD,
+//! and the kernel-PCA alignment solve.
+
+use super::matrix::Mat;
+use crate::error::{Error, Result};
+
+/// P A = L U factorization (packed in one matrix + pivot vector).
+#[derive(Debug, Clone)]
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    /// Number of row swaps (for the determinant sign).
+    swaps: usize,
+}
+
+impl Lu {
+    /// Factor a square matrix. Fails on (numerical) singularity.
+    pub fn new(a: &Mat) -> Result<Lu> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(Error::dim(format!("lu of {}x{}", a.rows(), a.cols())));
+        }
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut swaps = 0;
+        for k in 0..n {
+            // Partial pivot.
+            let mut pmax = k;
+            let mut vmax = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > vmax {
+                    vmax = v;
+                    pmax = i;
+                }
+            }
+            if vmax < 1e-300 || !vmax.is_finite() {
+                return Err(Error::linalg(format!("lu: singular at pivot {k}")));
+            }
+            if pmax != k {
+                piv.swap(k, pmax);
+                swaps += 1;
+                // swap rows in lu
+                for j in 0..n {
+                    let t = lu[(k, j)];
+                    lu[(k, j)] = lu[(pmax, j)];
+                    lu[(pmax, j)] = t;
+                }
+            }
+            let pivot = lu[(k, k)];
+            for i in (k + 1)..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    for j in (k + 1)..n {
+                        let v = lu[(k, j)];
+                        lu[(i, j)] -= m * v;
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu, piv, swaps })
+    }
+
+    /// Order of the system.
+    pub fn n(&self) -> usize {
+        self.lu.rows()
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        // Apply permutation.
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // Forward: L y = Pb (unit lower).
+        for i in 1..n {
+            let s = super::matrix::dot(&self.lu.row(i)[..i], &x[..i]);
+            x[i] -= s;
+        }
+        // Back: U x = y.
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Solve A X = B for a matrix of right-hand sides.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let mut out = Mat::zeros(n, b.cols());
+        for j in 0..b.cols() {
+            let col = self.solve(&b.col(j));
+            out.set_col(j, &col);
+        }
+        out
+    }
+
+    /// Explicit inverse (small systems only).
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.n()))
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        let mut d = if self.swaps % 2 == 0 { 1.0 } else { -1.0 };
+        for i in 0..self.n() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+
+    /// log |det(A)| (stable against overflow).
+    pub fn logabsdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.lu[(i, i)].abs().ln()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{gemv, matmul, Trans};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solve_random_system() {
+        let mut r = Rng::new(1);
+        let n = 11;
+        let a = Mat::from_fn(n, n, |_, _| r.normal());
+        let xstar: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mut b = vec![0.0; n];
+        gemv(1.0, &a, Trans::No, &xstar, 0.0, &mut b);
+        let lu = Lu::new(&a).unwrap();
+        let x = lu.solve(&b);
+        for i in 0..n {
+            assert!((x[i] - xstar[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut r = Rng::new(2);
+        let a = Mat::from_fn(6, 6, |_, _| r.normal());
+        let inv = Lu::new(&a).unwrap().inverse();
+        let prod = matmul(&a, Trans::No, &inv, Trans::No);
+        let mut diff = prod;
+        diff.axpy(-1.0, &Mat::eye(6));
+        assert!(diff.fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn det_of_known_matrix() {
+        // [[2, 0], [1, 3]] -> det 6.
+        let a = Mat::from_vec(2, 2, vec![2.0, 0.0, 1.0, 3.0]);
+        let lu = Lu::new(&a).unwrap();
+        assert!((lu.det() - 6.0).abs() < 1e-12);
+        assert!((lu.logabsdet() - 6.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permutation_sign() {
+        // Swapping two rows of the identity gives det -1.
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let lu = Lu::new(&a).unwrap();
+        assert!((lu.det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(Lu::new(&a).is_err());
+    }
+
+    #[test]
+    fn needs_pivoting() {
+        // Zero on the leading diagonal forces a pivot.
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 2.0, 1.0]);
+        let lu = Lu::new(&a).unwrap();
+        let x = lu.solve(&[3.0, 5.0]);
+        // 0*x0 + 1*x1 = 3; 2*x0 + x1 = 5 -> x1 = 3, x0 = 1.
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,31 @@
+//! Dense linear algebra substrate.
+//!
+//! The offline crate set has no BLAS/LAPACK bindings and no `nalgebra`, so
+//! the library carries its own: a row-major [`Mat`] type, cache-blocked
+//! matrix multiplication, Cholesky / LU / QR factorizations, a symmetric
+//! eigensolver (cyclic Jacobi), Lanczos iteration over an implicit operator
+//! (used for kernel PCA on the hierarchical matrix, whose matvec is the
+//! paper's Algorithm 1), and power iteration for dominant singular vectors
+//! (used by the PCA partitioning baseline of Section 4.1).
+//!
+//! All factor sizes in the hierarchical kernel are `r x r` or `n0 x n0`
+//! (a few hundred at most), so these routines are written for correctness
+//! and reasonable single-core throughput rather than peak LINPACK numbers;
+//! the `gemm` microkernel is the one genuinely hot routine and is blocked
+//! and unrolled accordingly (see `rust/benches/hotpath.rs`).
+
+pub mod blas;
+pub mod chol;
+pub mod eig;
+pub mod lanczos;
+pub mod lu;
+pub mod matrix;
+pub mod qr;
+
+pub use blas::{gemm, gemv, matmul, syrk, Trans};
+pub use chol::Cholesky;
+pub use eig::sym_eig;
+pub use lanczos::{lanczos_topk, power_iteration};
+pub use lu::Lu;
+pub use matrix::Mat;
+pub use qr::{lstsq, Qr};

@@ -1,0 +1,249 @@
+//! Householder QR factorization and least-squares solves.
+//!
+//! Used by the kernel-PCA alignment experiment (Figure 8: M minimizing
+//! ||U - Ũ M||_F is a least-squares solve) and by Lanczos
+//! reorthogonalization.
+
+use super::matrix::Mat;
+use crate::error::{Error, Result};
+
+/// Thin QR of an m x n matrix with m >= n: A = Q R, Q m x n with
+/// orthonormal columns, R n x n upper triangular.
+#[derive(Debug, Clone)]
+pub struct Qr {
+    q: Mat,
+    r: Mat,
+}
+
+impl Qr {
+    /// Factor `a` (requires rows >= cols).
+    pub fn new(a: &Mat) -> Result<Qr> {
+        let (m, n) = a.shape();
+        if m < n {
+            return Err(Error::dim(format!("thin QR needs rows>=cols, got {m}x{n}")));
+        }
+        // Householder on a working copy; accumulate Q by applying the
+        // reflectors to the identity afterwards.
+        let mut work = a.clone();
+        let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for k in 0..n {
+            // Build the reflector for column k below the diagonal.
+            let mut norm = 0.0;
+            for i in k..m {
+                norm += work[(i, k)] * work[(i, k)];
+            }
+            let norm = norm.sqrt();
+            let mut v = vec![0.0; m - k];
+            if norm < 1e-300 {
+                vs.push(v);
+                continue;
+            }
+            let alpha = if work[(k, k)] >= 0.0 { -norm } else { norm };
+            for i in k..m {
+                v[i - k] = work[(i, k)];
+            }
+            v[0] -= alpha;
+            let vnorm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if vnorm > 1e-300 {
+                for x in v.iter_mut() {
+                    *x /= vnorm;
+                }
+                // Apply H = I - 2 v vᵀ to the trailing submatrix.
+                for j in k..n {
+                    let mut s = 0.0;
+                    for i in k..m {
+                        s += v[i - k] * work[(i, j)];
+                    }
+                    let s2 = 2.0 * s;
+                    for i in k..m {
+                        work[(i, j)] -= s2 * v[i - k];
+                    }
+                }
+            }
+            vs.push(v);
+        }
+        // R = top n x n of work.
+        let mut r = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = work[(i, j)];
+            }
+        }
+        // Q = H_0 H_1 ... H_{n-1} * [I_n; 0].
+        let mut q = Mat::zeros(m, n);
+        for j in 0..n {
+            q[(j, j)] = 1.0;
+        }
+        for k in (0..n).rev() {
+            let v = &vs[k];
+            if v.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            for j in 0..n {
+                let mut s = 0.0;
+                for i in k..m {
+                    s += v[i - k] * q[(i, j)];
+                }
+                let s2 = 2.0 * s;
+                for i in k..m {
+                    q[(i, j)] -= s2 * v[i - k];
+                }
+            }
+        }
+        Ok(Qr { q, r })
+    }
+
+    /// Orthonormal factor (m x n).
+    pub fn q(&self) -> &Mat {
+        &self.q
+    }
+
+    /// Upper-triangular factor (n x n).
+    pub fn r(&self) -> &Mat {
+        &self.r
+    }
+
+    /// Solve the least-squares problem min ||A x - b||_2 via R x = Qᵀ b.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let (m, n) = self.q.shape();
+        if b.len() != m {
+            return Err(Error::dim("qr solve rhs length"));
+        }
+        // qtb = Qᵀ b
+        let mut qtb = vec![0.0; n];
+        super::blas::gemv(1.0, &self.q, super::blas::Trans::Yes, b, 0.0, &mut qtb);
+        // Back substitution R x = qtb.
+        let mut x = qtb;
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= self.r[(i, k)] * x[k];
+            }
+            let d = self.r[(i, i)];
+            if d.abs() < 1e-300 {
+                return Err(Error::linalg("qr: rank deficient"));
+            }
+            x[i] = s / d;
+        }
+        Ok(x)
+    }
+}
+
+/// Least squares min_X ||A X - B||_F, column by column.
+pub fn lstsq(a: &Mat, b: &Mat) -> Result<Mat> {
+    let qr = Qr::new(a)?;
+    let n = a.cols();
+    let mut x = Mat::zeros(n, b.cols());
+    for j in 0..b.cols() {
+        let col = qr.solve(&b.col(j))?;
+        x.set_col(j, &col);
+    }
+    Ok(x)
+}
+
+/// Orthonormalize the columns of `a` in place (modified Gram-Schmidt,
+/// two passes). Returns the numerical rank found.
+pub fn orthonormalize_cols(a: &mut Mat) -> usize {
+    let (m, n) = a.shape();
+    let mut rank = 0;
+    for j in 0..n {
+        let mut col = a.col(j);
+        for _pass in 0..2 {
+            for k in 0..rank {
+                let qk = a.col(k);
+                let proj = super::matrix::dot(&col, &qk);
+                for i in 0..m {
+                    col[i] -= proj * qk[i];
+                }
+            }
+        }
+        let norm = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for x in col.iter_mut() {
+                *x /= norm;
+            }
+            // Move into position `rank`.
+            a.set_col(rank, &col);
+            rank += 1;
+        }
+    }
+    // Zero out the trailing columns.
+    for j in rank..n {
+        let zero = vec![0.0; m];
+        a.set_col(j, &zero);
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{matmul, Trans};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(1);
+        let a = Mat::from_fn(9, 4, |_, _| rng.normal());
+        let qr = Qr::new(&a).unwrap();
+        let rec = matmul(qr.q(), Trans::No, qr.r(), Trans::No);
+        let mut diff = rec;
+        diff.axpy(-1.0, &a);
+        assert!(diff.fro_norm() / a.fro_norm() < 1e-12);
+        // Q orthonormal columns.
+        let qtq = matmul(qr.q(), Trans::Yes, qr.q(), Trans::No);
+        let mut d = qtq;
+        d.axpy(-1.0, &Mat::eye(4));
+        assert!(d.fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn lstsq_exact_when_consistent() {
+        let mut rng = Rng::new(2);
+        let a = Mat::from_fn(10, 3, |_, _| rng.normal());
+        let xstar = Mat::from_fn(3, 2, |_, _| rng.normal());
+        let b = matmul(&a, Trans::No, &xstar, Trans::No);
+        let x = lstsq(&a, &b).unwrap();
+        let mut diff = x;
+        diff.axpy(-1.0, &xstar);
+        assert!(diff.fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn lstsq_minimizes_residual() {
+        let mut rng = Rng::new(3);
+        let a = Mat::from_fn(20, 4, |_, _| rng.normal());
+        let b = Mat::from_fn(20, 1, |_, _| rng.normal());
+        let x = lstsq(&a, &b).unwrap();
+        // At the optimum the residual is orthogonal to the column space.
+        let mut res = matmul(&a, Trans::No, &x, Trans::No);
+        res.axpy(-1.0, &b);
+        let atr = matmul(&a, Trans::Yes, &res, Trans::No);
+        assert!(atr.fro_norm() < 1e-9);
+    }
+
+    #[test]
+    fn orthonormalize_detects_rank() {
+        let mut rng = Rng::new(4);
+        // 3 independent columns, then a dependent one.
+        let base = Mat::from_fn(8, 3, |_, _| rng.normal());
+        let mut a = Mat::zeros(8, 4);
+        for j in 0..3 {
+            a.set_col(j, &base.col(j));
+        }
+        let dep: Vec<f64> =
+            (0..8).map(|i| base[(i, 0)] + 2.0 * base[(i, 1)]).collect();
+        a.set_col(3, &dep);
+        let rank = orthonormalize_cols(&mut a);
+        assert_eq!(rank, 3);
+        let qtq = matmul(&a, Trans::Yes, &a, Trans::No);
+        for i in 0..3 {
+            assert!((qtq[(i, i)] - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rejects_wide() {
+        assert!(Qr::new(&Mat::zeros(2, 5)).is_err());
+    }
+}

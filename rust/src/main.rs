@@ -1,0 +1,370 @@
+//! `hck` — command-line entry point for the hierarchically compositional
+//! kernel library.
+//!
+//! Subcommands:
+//!   info       artifact + data set inventory
+//!   data-gen   emit a synthetic Table-1 analogue as LIBSVM text
+//!   train      train any engine on a data set, report metric + timings
+//!   serve      train, then serve predictions over TCP (JSON lines)
+//!   likelihood GP log-marginal likelihood / MLE bandwidth search
+
+use anyhow::{anyhow, Result};
+use hck::coordinator::{serve_tcp, BatchPolicy, PredictionService};
+use hck::data::{self, Dataset};
+use hck::kernels::KernelKind;
+use hck::learn::{EngineSpec, KrrModel, TrainConfig};
+use hck::partition::SplitRule;
+use hck::util::args::{usage, Args, OptSpec};
+use hck::util::timer::Timer;
+use std::sync::Arc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let Some(cmd) = argv.first().cloned() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = argv[1..].to_vec();
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "data-gen" => cmd_data_gen(rest),
+        "train" => cmd_train(rest),
+        "predict" => cmd_predict(rest),
+        "serve" => cmd_serve(rest),
+        "likelihood" => cmd_likelihood(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}' (try 'hck help')")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "hck — Hierarchically Compositional Kernels (Chen, Avron, Sindhwani 2016)\n\
+         \n\
+         usage: hck <subcommand> [options]\n\
+         \n\
+         subcommands:\n\
+           info        show artifact inventory and Table-1 data set specs\n\
+           data-gen    generate a synthetic data set (LIBSVM format)\n\
+           train       train a kernel model and report test metric\n\
+           predict     load a saved model and predict a LIBSVM file\n\
+           serve       train, then serve predictions over TCP\n\
+           likelihood  GP log-likelihood / MLE bandwidth search\n\
+         \n\
+         run 'hck <subcommand> --help' for options"
+    );
+}
+
+fn common_data_opts() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "dataset", help: "Table-1 analogue name (e.g. cadata, SUSY, covtype)", default: Some("cadata"), is_flag: false },
+        OptSpec { name: "data", help: "path to a LIBSVM file (overrides --dataset)", default: None, is_flag: false },
+        OptSpec { name: "n-train", help: "training size (synthetic only; 0 = spec default)", default: Some("0"), is_flag: false },
+        OptSpec { name: "n-test", help: "testing size (synthetic only; 0 = spec default)", default: Some("0"), is_flag: false },
+        OptSpec { name: "seed", help: "random seed", default: Some("0"), is_flag: false },
+    ]
+}
+
+/// Resolve (train, test) from --data or --dataset options.
+fn load_data(a: &Args) -> Result<(Dataset, Dataset)> {
+    let seed = a.u64("seed").map_err(anyhow::Error::msg)?;
+    if let Some(path) = a.get("data") {
+        let mut ds = data::libsvm::load(path, path)?;
+        data::preprocess::normalize_unit(&mut ds);
+        let removed = data::preprocess::dedup_conflicts(&mut ds);
+        if removed > 0 {
+            eprintln!("removed {removed} duplicate/conflicting records");
+        }
+        let mut rng = hck::util::rng::Rng::new(seed);
+        Ok(data::preprocess::train_test_split(&ds, 0.2, &mut rng))
+    } else {
+        let name = a.req("dataset").map_err(anyhow::Error::msg)?;
+        let spec = data::spec_by_name(name)
+            .ok_or_else(|| anyhow!("unknown dataset '{name}' (see 'hck info')"))?;
+        let n_train = a.usize("n-train").map_err(anyhow::Error::msg)?;
+        let n_test = a.usize("n-test").map_err(anyhow::Error::msg)?;
+        let nt = if n_train == 0 { spec.default_n_train } else { n_train };
+        let ns = if n_test == 0 { spec.default_n_test } else { n_test };
+        Ok(data::synthetic::generate(spec, nt, ns, seed))
+    }
+}
+
+fn model_opts() -> Vec<OptSpec> {
+    let mut o = common_data_opts();
+    o.extend([
+        OptSpec { name: "engine", help: "hierarchical | nystrom | fourier | independent | exact", default: Some("hierarchical"), is_flag: false },
+        OptSpec { name: "r", help: "rank / leaf size", default: Some("128"), is_flag: false },
+        OptSpec { name: "kernel", help: "family:sigma, e.g. gaussian:0.5", default: Some("gaussian:0.5"), is_flag: false },
+        OptSpec { name: "lambda", help: "ridge regularization", default: Some("0.01"), is_flag: false },
+        OptSpec { name: "rule", help: "rp | pca | kd | kmeans", default: Some("rp"), is_flag: false },
+    ]);
+    o
+}
+
+fn parse_rule(text: &str) -> Result<SplitRule> {
+    Ok(match text {
+        "rp" => SplitRule::RandomProjection,
+        "pca" => SplitRule::Pca { iters: 10 },
+        "kd" => SplitRule::KdTree,
+        "kmeans" => SplitRule::KMeans { k: 2, iters: 15 },
+        other => return Err(anyhow!("unknown split rule '{other}'")),
+    })
+}
+
+fn build_config(a: &Args) -> Result<TrainConfig> {
+    let kind = KernelKind::parse(a.req("kernel").map_err(anyhow::Error::msg)?)
+        .map_err(anyhow::Error::msg)?;
+    let r = a.usize("r").map_err(anyhow::Error::msg)?;
+    let engine = match a.req("engine").map_err(anyhow::Error::msg)? {
+        "hierarchical" => EngineSpec::Hierarchical { rank: r },
+        "nystrom" => EngineSpec::Nystrom { rank: r },
+        "fourier" => EngineSpec::Fourier { rank: r },
+        "independent" => EngineSpec::Independent { n0: r },
+        "exact" => EngineSpec::Exact,
+        other => return Err(anyhow!("unknown engine '{other}'")),
+    };
+    Ok(TrainConfig::new(kind, engine)
+        .with_lambda(a.f64("lambda").map_err(anyhow::Error::msg)?)
+        .with_seed(a.u64("seed").map_err(anyhow::Error::msg)?)
+        .with_rule(parse_rule(a.req("rule").map_err(anyhow::Error::msg)?)?))
+}
+
+fn cmd_info() -> Result<()> {
+    println!("Table 1 data set analogues (synthetic generators):");
+    println!(
+        "{:<20} {:>5} {:<22} {:>10} {:>9} {:>9}",
+        "name", "d", "task", "paper n", "bench n", "test n"
+    );
+    for s in &data::TABLE1_SPECS {
+        println!(
+            "{:<20} {:>5} {:<22} {:>10} {:>9} {:>9}",
+            s.name,
+            s.d,
+            format!("{:?}", s.task),
+            s.paper_n_train,
+            s.default_n_train,
+            s.default_n_test
+        );
+    }
+    println!();
+    match hck::runtime::PjrtEngine::load_default() {
+        Ok(engine) => {
+            println!(
+                "PJRT artifacts: {} loaded (platform: {})",
+                engine.artifacts().len(),
+                engine.platform()
+            );
+            for a in engine.artifacts() {
+                println!("  {:<28} op={} d={}", a.name, a.op, a.d);
+            }
+        }
+        Err(e) => println!("PJRT artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn cmd_data_gen(argv: Vec<String>) -> Result<()> {
+    let mut spec = common_data_opts();
+    spec.push(OptSpec { name: "out", help: "output LIBSVM path (train set; .test appended for test)", default: Some("dataset.libsvm"), is_flag: false });
+    spec.push(OptSpec { name: "help", help: "show help", default: None, is_flag: true });
+    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", usage("hck data-gen", "generate a synthetic data set", &spec));
+        return Ok(());
+    }
+    let (train, test) = load_data(&a)?;
+    let out = a.req("out").map_err(anyhow::Error::msg)?;
+    data::libsvm::write(&train, out)?;
+    data::libsvm::write(&test, &format!("{out}.test"))?;
+    println!(
+        "wrote {} ({} x {}) and {}.test ({} x {})",
+        out,
+        train.n(),
+        train.d(),
+        out,
+        test.n(),
+        test.d()
+    );
+    Ok(())
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let mut spec = model_opts();
+    spec.push(OptSpec { name: "save", help: "save the fitted hierarchical model to this path", default: None, is_flag: false });
+    spec.push(OptSpec { name: "help", help: "show help", default: None, is_flag: true });
+    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", usage("hck train", "train a kernel model", &spec));
+        return Ok(());
+    }
+    let (train, test) = load_data(&a)?;
+    let cfg = build_config(&a)?;
+    println!(
+        "training {} on {} (n={} d={} task={:?}), kernel {}:{}, λ={}",
+        cfg.engine.name(),
+        train.name,
+        train.n(),
+        train.d(),
+        train.task,
+        cfg.kind.family(),
+        cfg.kind.sigma(),
+        cfg.lambda
+    );
+    let t = Timer::start();
+    let model = KrrModel::fit_dataset(&cfg, &train)?;
+    let train_secs = t.secs();
+    let t2 = Timer::start();
+    let metric = model.evaluate(&test);
+    let test_secs = t2.secs();
+    let metric_name = match train.task {
+        data::Task::Regression => "relative error",
+        _ => "accuracy",
+    };
+    println!("{metric_name}: {metric:.4}");
+    println!("train: {train_secs:.3}s ({})", model.phases.summary());
+    println!(
+        "test:  {test_secs:.3}s ({:.1} µs/query)",
+        test_secs * 1e6 / test.n().max(1) as f64
+    );
+    println!(
+        "memory estimate: {:.1} MB ({} words)",
+        model.memory_words as f64 * 8e-6,
+        model.memory_words
+    );
+    if let Some(path) = a.get("save") {
+        let (factors, w) = model.hierarchical_parts().ok_or_else(|| {
+            anyhow!("--save currently supports the hierarchical engine only")
+        })?;
+        hck::hkernel::save_model(factors, w, path)?;
+        println!("saved model to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_predict(argv: Vec<String>) -> Result<()> {
+    let spec = vec![
+        OptSpec { name: "model", help: "path of a model saved by `hck train --save`", default: None, is_flag: false },
+        OptSpec { name: "data", help: "LIBSVM file of query points", default: None, is_flag: false },
+        OptSpec { name: "quiet", help: "only print the summary metric", default: None, is_flag: true },
+        OptSpec { name: "help", help: "show help", default: None, is_flag: true },
+    ];
+    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", usage("hck predict", "predict with a saved model", &spec));
+        return Ok(());
+    }
+    let model_path = a.req("model").map_err(anyhow::Error::msg)?;
+    let data_path = a.req("data").map_err(anyhow::Error::msg)?;
+    let (factors, w) = hck::hkernel::load_model(model_path)?;
+    let queries = data::libsvm::load(data_path, data_path)?;
+    if queries.d() > factors.x.cols() {
+        return Err(anyhow!(
+            "query dimension {} exceeds model dimension {}",
+            queries.d(),
+            factors.x.cols()
+        ));
+    }
+    // Pad query features to the model dimension if the sparse file
+    // happened to omit trailing attributes.
+    let d = factors.x.cols();
+    let q = hck::linalg::Mat::from_fn(queries.n(), d, |i, j| {
+        if j < queries.d() {
+            queries.x[(i, j)]
+        } else {
+            0.0
+        }
+    });
+    let pred = hck::hkernel::HPredictor::new(std::sync::Arc::new(factors), &w);
+    let out = pred.predict_batch(&q);
+    if !a.flag("quiet") {
+        for i in 0..out.rows() {
+            let row: Vec<String> = out.row(i).iter().map(|v| format!("{v:.6}")).collect();
+            println!("{}", row.join(" "));
+        }
+    }
+    let (metric, hib) = hck::learn::metrics::score(&queries, &out);
+    eprintln!(
+        "{}: {metric:.4} over {} queries",
+        if hib { "accuracy" } else { "relative error" },
+        queries.n()
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let mut spec = model_opts();
+    spec.extend([
+        OptSpec { name: "port", help: "TCP port", default: Some("7878"), is_flag: false },
+        OptSpec { name: "max-batch", help: "dynamic batch size cap", default: Some("64"), is_flag: false },
+        OptSpec { name: "max-wait-ms", help: "batching window (ms)", default: Some("2"), is_flag: false },
+        OptSpec { name: "help", help: "show help", default: None, is_flag: true },
+    ]);
+    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", usage("hck serve", "train, then serve predictions over TCP", &spec));
+        return Ok(());
+    }
+    let (train, _) = load_data(&a)?;
+    let cfg = build_config(&a)?;
+    eprintln!("training {} on {} (n={})...", cfg.engine.name(), train.name, train.n());
+    let model = KrrModel::fit_dataset(&cfg, &train)?;
+    let policy = BatchPolicy {
+        max_batch: a.usize("max-batch").map_err(anyhow::Error::msg)?,
+        max_wait: std::time::Duration::from_millis(
+            a.u64("max-wait-ms").map_err(anyhow::Error::msg)?,
+        ),
+    };
+    let svc = Arc::new(PredictionService::start(Arc::new(model), policy));
+    let port = a.usize("port").map_err(anyhow::Error::msg)?;
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    eprintln!(
+        "serving on 127.0.0.1:{port} — send {{\"features\": [...]}} lines; {{\"cmd\":\"shutdown\"}} to stop"
+    );
+    let conns = serve_tcp(listener, svc.clone())?;
+    let snap = svc.metrics.snapshot();
+    eprintln!(
+        "served {} requests over {} connections; {:.0} rps, p50 {:.0} µs, p99 {:.0} µs",
+        snap.requests, conns, snap.throughput_rps, snap.p50_us, snap.p99_us
+    );
+    Ok(())
+}
+
+fn cmd_likelihood(argv: Vec<String>) -> Result<()> {
+    let mut spec = model_opts();
+    spec.push(OptSpec { name: "mle", help: "run golden-section MLE over sigma", default: None, is_flag: true });
+    spec.push(OptSpec { name: "help", help: "show help", default: None, is_flag: true });
+    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    if a.flag("help") {
+        println!("{}", usage("hck likelihood", "GP log-likelihood / MLE", &spec));
+        return Ok(());
+    }
+    let (train, _) = load_data(&a)?;
+    let cfg = build_config(&a)?;
+    let r = a.usize("r").map_err(anyhow::Error::msg)?;
+    let mut hcfg = hck::hkernel::HConfig::new(cfg.kind, r).with_seed(cfg.seed);
+    hcfg.n0 = r;
+    if a.flag("mle") {
+        let (sig, ll) =
+            hck::gp::mle_sigma(&train.x, &train.y, &hcfg, cfg.lambda, 0.01, 20.0, 0.05)?;
+        println!("MLE bandwidth σ* = {sig:.4}, log-likelihood = {ll:.2}");
+    } else {
+        let f = hck::hkernel::HFactors::build(&train.x, hcfg)?;
+        let ll = hck::gp::log_marginal_likelihood(&f, cfg.lambda, &train.y)?;
+        println!("log-likelihood at σ={}: {ll:.2}", cfg.kind.sigma());
+    }
+    Ok(())
+}

@@ -1,0 +1,192 @@
+//! Lloyd's k-means with k-means++ seeding, over a subset of rows.
+
+use crate::linalg::matrix::{sqdist, Mat};
+use crate::util::rng::Rng;
+
+/// Result of a k-means run.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    /// k x d cluster centers.
+    pub centers: Mat,
+    /// Assignment of each input row (into 0..k).
+    pub assign: Vec<usize>,
+    /// Final within-cluster sum of squares.
+    pub inertia: f64,
+}
+
+/// Run k-means on `x.select_rows(rows)`.
+///
+/// k-means++ seeding, `iters` Lloyd iterations (early exit on no
+/// reassignment). Empty clusters are re-seeded from the farthest point of
+/// the largest cluster, so the result always has k non-empty clusters when
+/// `rows.len() >= k` and the points are not all identical.
+pub fn kmeans_lloyd(
+    x: &Mat,
+    rows: &[usize],
+    k: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> KmeansResult {
+    let n = rows.len();
+    let d = x.cols();
+    assert!(k >= 1 && n >= k, "kmeans: n={n} < k={k}");
+
+    // --- k-means++ seeding ---
+    let mut centers = Mat::zeros(k, d);
+    let first = rows[rng.below(n)];
+    centers.row_mut(0).copy_from_slice(x.row(first));
+    let mut dist2: Vec<f64> = rows.iter().map(|&i| sqdist(x.row(i), centers.row(0))).collect();
+    for c in 1..k {
+        let total: f64 = dist2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = n - 1;
+            for (j, &d2) in dist2.iter().enumerate() {
+                if target < d2 {
+                    idx = j;
+                    break;
+                }
+                target -= d2;
+            }
+            idx
+        };
+        centers.row_mut(c).copy_from_slice(x.row(rows[pick]));
+        for (j, &i) in rows.iter().enumerate() {
+            dist2[j] = dist2[j].min(sqdist(x.row(i), centers.row(c)));
+        }
+    }
+
+    // --- Lloyd iterations ---
+    let mut assign = vec![0usize; n];
+    let mut counts = vec![0usize; k];
+    for _it in 0..iters.max(1) {
+        let mut changed = 0usize;
+        for (j, &i) in rows.iter().enumerate() {
+            let xi = x.row(i);
+            let mut best = 0usize;
+            let mut bestd = f64::INFINITY;
+            for c in 0..k {
+                let d2 = sqdist(xi, centers.row(c));
+                if d2 < bestd {
+                    bestd = d2;
+                    best = c;
+                }
+            }
+            if assign[j] != best {
+                changed += 1;
+            }
+            assign[j] = best;
+        }
+        // Recompute centers.
+        counts.fill(0);
+        let mut sums = Mat::zeros(k, d);
+        for (j, &i) in rows.iter().enumerate() {
+            let c = assign[j];
+            counts[c] += 1;
+            let srow = sums.row_mut(c);
+            for (s, v) in srow.iter_mut().zip(x.row(i).iter()) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed from the farthest point of the largest cluster.
+                let big = (0..k).max_by_key(|&cc| counts[cc]).unwrap();
+                let far = rows
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| assign[*j] == big)
+                    .max_by(|(_, &a), (_, &b)| {
+                        sqdist(x.row(a), centers.row(big))
+                            .partial_cmp(&sqdist(x.row(b), centers.row(big)))
+                            .unwrap()
+                    })
+                    .map(|(j, _)| j);
+                if let Some(j) = far {
+                    centers.row_mut(c).copy_from_slice(x.row(rows[j]));
+                    assign[j] = c;
+                }
+                continue;
+            }
+            let inv = 1.0 / counts[c] as f64;
+            let srow = sums.row(c).to_vec();
+            for (cc, s) in centers.row_mut(c).iter_mut().zip(srow.iter()) {
+                *cc = s * inv;
+            }
+        }
+        if changed == 0 {
+            break;
+        }
+    }
+
+    let inertia = rows
+        .iter()
+        .enumerate()
+        .map(|(j, &i)| sqdist(x.row(i), centers.row(assign[j])))
+        .sum();
+    KmeansResult { centers, assign, inertia }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated blobs in 2D.
+    fn blobs(rng: &mut Rng) -> Mat {
+        let centers = [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        Mat::from_fn(90, 2, |i, j| centers[i / 30][j] + rng.normal() * 0.3)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let x = blobs(&mut rng);
+        let rows: Vec<usize> = (0..90).collect();
+        let res = kmeans_lloyd(&x, &rows, 3, 30, &mut rng);
+        // Each blob maps to one cluster.
+        for blob in 0..3 {
+            let first = res.assign[blob * 30];
+            for j in 0..30 {
+                assert_eq!(res.assign[blob * 30 + j], first, "blob {blob} split");
+            }
+        }
+        assert!(res.inertia < 90.0 * 0.5);
+    }
+
+    #[test]
+    fn all_clusters_nonempty() {
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(50, 3, |_, _| rng.uniform(0.0, 1.0));
+        let rows: Vec<usize> = (0..50).collect();
+        let res = kmeans_lloyd(&x, &rows, 5, 20, &mut rng);
+        let mut counts = vec![0usize; 5];
+        for &a in &res.assign {
+            counts[a] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn k_equals_n() {
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f64);
+        let rows: Vec<usize> = (0..4).collect();
+        let res = kmeans_lloyd(&x, &rows, 4, 10, &mut rng);
+        let mut a = res.assign.clone();
+        a.sort_unstable();
+        a.dedup();
+        assert_eq!(a.len(), 4);
+        assert!(res.inertia < 1e-12);
+    }
+
+    #[test]
+    fn subset_rows_only() {
+        let mut rng = Rng::new(4);
+        let x = blobs(&mut rng);
+        let rows: Vec<usize> = (0..30).collect(); // only the first blob
+        let res = kmeans_lloyd(&x, &rows, 2, 20, &mut rng);
+        assert_eq!(res.assign.len(), 30);
+    }
+}

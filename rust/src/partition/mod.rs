@@ -1,0 +1,25 @@
+//! Hierarchical partitioning of the data domain (paper Section 4.1).
+//!
+//! The partitioning tree T drives everything: the hierarchical kernel's
+//! structure, the cross-domain independent baseline (a flattened T), and
+//! out-of-sample routing. Four split rules are implemented:
+//!
+//! - **random projection** (recommended by the paper): project on a random
+//!   unit direction, split at the median — O(nz(X)) per level;
+//! - **PCA**: split along the dominant principal axis (power iteration),
+//!   at the median so partitions stay balanced — the paper's Table 2
+//!   measures its overhead;
+//! - **k-d**: split the widest-spread axis at the median;
+//! - **k-means** (with k-means++ seeding): Voronoi partitioning; the rule
+//!   the paper recommends for general metric spaces (§6). May produce
+//!   arity > 2.
+//!
+//! All median-split rules produce perfectly balanced binary trees, which
+//! is what the size rule (eq. 22: n0 = ceil(n / 2^j), r = floor(n / 2^j))
+//! assumes.
+
+pub mod kmeans;
+pub mod tree;
+
+pub use kmeans::kmeans_lloyd;
+pub use tree::{Node, PartitionTree, Split, SplitRule};

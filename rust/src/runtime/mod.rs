@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts emitted by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs here — the interchange is HLO *text* (see
+//! aot.py's module docs for why text and not serialized protos), compiled
+//! once per artifact by the PJRT CPU client and cached. The
+//! [`PjrtBlockEvaluator`] plugs into [`crate::kernels::BlockEvaluator`],
+//! so the hierarchical factor construction can run its kernel-block
+//! evaluations through XLA; anything the artifact set cannot serve
+//! (unsupported family, d beyond the largest bucket) falls back to the
+//! native Rust path with identical semantics.
+
+pub mod engine;
+
+pub use engine::{PjrtBlockEvaluator, PjrtEngine};

@@ -1,0 +1,214 @@
+//! Minimal command-line argument parser (clap is not in the offline crate
+//! set). Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments: options plus positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        spec: &[OptSpec],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        // Seed defaults.
+        for s in spec {
+            if let Some(d) = s.default {
+                out.opts.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let known = spec.iter().find(|s| s.name == name);
+                match known {
+                    Some(s) if s.is_flag => {
+                        if inline_val.is_some() {
+                            return Err(format!("--{name} is a flag, takes no value"));
+                        }
+                        out.flags.push(name);
+                    }
+                    Some(_) => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .ok_or_else(|| format!("--{name} requires a value"))?,
+                        };
+                        out.opts.insert(name, val);
+                    }
+                    None => return Err(format!("unknown option --{name}")),
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String value of an option (default applied at parse time).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Required string value.
+    pub fn req(&self, name: &str) -> Result<&str, String> {
+        self.get(name).ok_or_else(|| format!("missing required --{name}"))
+    }
+
+    /// Typed accessor: usize.
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| format!("--{name} must be a non-negative integer"))
+    }
+
+    /// Typed accessor: u64.
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| format!("--{name} must be a non-negative integer"))
+    }
+
+    /// Typed accessor: f64.
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| format!("--{name} must be a number"))
+    }
+
+    /// Comma-separated list of f64.
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>, String> {
+        self.req(name)?
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|_| format!("--{name}: '{t}' is not a number"))
+            })
+            .collect()
+    }
+
+    /// Comma-separated list of usize.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, String> {
+        self.req(name)?
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|_| format!("--{name}: '{t}' is not an integer"))
+            })
+            .collect()
+    }
+
+    /// Whether a boolean flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in spec {
+        let kind = if o.is_flag { "" } else { " <value>" };
+        let def = o
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{kind}\n      {}{def}\n", o.name, o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", help: "count", default: Some("10"), is_flag: false },
+            OptSpec { name: "sigma", help: "bandwidth", default: None, is_flag: false },
+            OptSpec { name: "verbose", help: "chatty", default: None, is_flag: true },
+        ]
+    }
+
+    fn parse(toks: &[&str]) -> Result<Args, String> {
+        Args::parse(toks.iter().map(|s| s.to_string()), &spec())
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 10);
+        assert!(a.get("sigma").is_none());
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--n", "5", "--sigma=2.5"]).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 5);
+        assert_eq!(a.f64("sigma").unwrap(), 2.5);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["--verbose", "input.txt", "out.txt"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["input.txt".to_string(), "out.txt".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--bogus", "1"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&["--verbose=yes"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--sigma"]).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--sigma", "1,2.5, 3"]).unwrap();
+        assert_eq!(a.f64_list("sigma").unwrap(), vec![1.0, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("train", "train a model", &spec());
+        assert!(u.contains("--sigma"));
+        assert!(u.contains("default: 10"));
+    }
+}

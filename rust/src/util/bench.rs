@@ -1,0 +1,243 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! Provides warmup + repeated timing with robust statistics (median, MAD,
+//! mean, min), throughput helpers, and aligned table output used by every
+//! `rust/benches/*.rs` target (all declared `harness = false`).
+
+use super::timer::Timer;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall times in seconds, sorted ascending.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        percentile_sorted(&self.samples, 50.0)
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.first().copied().unwrap_or(f64::NAN)
+    }
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let mut devs: Vec<f64> = self.samples.iter().map(|s| (s - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&devs, 50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        percentile_sorted(&self.samples, 95.0)
+    }
+}
+
+/// Percentile of a sorted sample (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Cap on total measurement wall time in seconds; once exceeded,
+    /// measurement stops early (at least one sample is always taken).
+    pub max_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 2, measure_iters: 7, max_secs: 30.0 }
+    }
+}
+
+impl Bench {
+    /// Quick preset for cheap closures.
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 3, measure_iters: 15, max_secs: 10.0 }
+    }
+
+    /// Preset for expensive end-to-end runs.
+    pub fn heavy() -> Self {
+        Bench { warmup_iters: 1, measure_iters: 3, max_secs: 120.0 }
+    }
+
+    /// Run a closure repeatedly and collect timing samples. The closure's
+    /// return value is passed through `std::hint::black_box` so the work
+    /// cannot be optimized away.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let budget = Timer::start();
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for i in 0..self.measure_iters {
+            let t = Timer::start();
+            std::hint::black_box(f());
+            samples.push(t.secs());
+            if i + 1 < self.measure_iters && budget.secs() > self.max_secs {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Measurement { name: name.to_string(), samples }
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        "n/a".to_string()
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// A simple fixed-width table printer for benchmark reports.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .take(ncol)
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Mean and (population) standard deviation of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement { name: "t".into(), samples: vec![1.0, 2.0, 3.0, 4.0, 100.0] };
+        assert_eq!(m.median(), 3.0);
+        assert_eq!(m.min(), 1.0);
+        assert!((m.mean() - 22.0).abs() < 1e-12);
+        assert_eq!(m.mad(), 1.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+        assert!(percentile_sorted(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let b = Bench { warmup_iters: 1, measure_iters: 5, max_secs: 10.0 };
+        let mut count = 0usize;
+        let m = b.run("inc", || {
+            count += 1;
+            count
+        });
+        assert_eq!(m.samples.len(), 5);
+        assert_eq!(count, 6); // 1 warmup + 5 measured
+        assert!(m.min() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+        assert_eq!(fmt_secs(f64::NAN), "n/a");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".to_string(), "1".to_string()]);
+        t.row(&["longer".to_string(), "2".to_string()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[3].starts_with("longer"));
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+}

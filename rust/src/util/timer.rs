@@ -1,0 +1,143 @@
+//! Lightweight wall-clock timing helpers used throughout training,
+//! benchmarking and the coordinator's metrics.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Elapsed microseconds since start.
+    pub fn micros(&self) -> f64 {
+        self.secs() * 1e6
+    }
+
+    /// Reset the timer and return the elapsed seconds up to the reset.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Time a closure, returning (result, elapsed seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Accumulates named timing breakdowns (e.g. the phases of training:
+/// partition / instantiate / factor / predict), for reporting.
+#[derive(Debug, Default, Clone)]
+pub struct Phases {
+    entries: Vec<(String, f64)>,
+}
+
+impl Phases {
+    /// New empty breakdown.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record (accumulate) `secs` under `name`.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+
+    /// Run and time a closure under `name`.
+    pub fn scope<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, s) = timed(f);
+        self.add(name, s);
+        out
+    }
+
+    /// Seconds recorded under `name` (0.0 if absent).
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries.iter().find(|e| e.0 == name).map_or(0.0, |e| e.1)
+    }
+
+    /// Total seconds across all phases.
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+
+    /// All (name, secs) entries in insertion order.
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(k, v)| format!("{k}={:.3}s", v))
+            .collect();
+        parts.push(format!("total={:.3}s", self.total()));
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut p = Phases::new();
+        p.add("a", 1.0);
+        p.add("a", 0.5);
+        p.add("b", 2.0);
+        assert!((p.get("a") - 1.5).abs() < 1e-12);
+        assert!((p.total() - 3.5).abs() < 1e-12);
+        assert_eq!(p.entries().len(), 2);
+        assert!(p.summary().contains("a=1.500s"));
+    }
+
+    #[test]
+    fn scope_records_and_returns() {
+        let mut p = Phases::new();
+        let v = p.scope("work", || 7);
+        assert_eq!(v, 7);
+        assert!(p.get("work") >= 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration tests across modules: PJRT runtime vs native numerics,
+//! end-to-end training on synthetic Table-1 analogues, hierarchical
+//! factors built through the PJRT evaluator, and coordinator serving.
+//!
+//! Requires `make artifacts` for the PJRT cases (they are skipped with a
+//! note when the artifact directory is absent, so `cargo test` stays
+//! green in a fresh checkout).
+
+use hck::data::{spec_by_name, synthetic};
+use hck::hkernel::{HConfig, HFactors, HSolver};
+use hck::kernels::{kernel_cross, Gaussian, Imq, Laplace};
+use hck::learn::{EngineSpec, KrrModel, TrainConfig};
+use hck::linalg::Mat;
+use hck::runtime::{PjrtBlockEvaluator, PjrtEngine};
+use hck::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    // cargo test runs with cwd = crate root.
+    let p = std::path::Path::new("artifacts/manifest.json");
+    if p.exists() {
+        Some(p.parent().unwrap().to_path_buf())
+    } else {
+        None
+    }
+}
+
+#[test]
+fn pjrt_kernel_block_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let engine = PjrtEngine::load(dir).expect("engine");
+    let mut rng = Rng::new(1);
+    // Deliberately ragged shapes to exercise padding + tiling.
+    for (m, n, d) in [(130usize, 70usize, 5usize), (128, 128, 8), (33, 257, 21), (7, 3, 64)] {
+        let x = Mat::from_fn(m, d, |_, _| rng.uniform(0.0, 1.0));
+        let y = Mat::from_fn(n, d, |_, _| rng.uniform(0.0, 1.0));
+        for kind in [Gaussian::new(0.6), Laplace::new(0.9), Imq::new(0.8)] {
+            let got = engine.kernel_block(kind, &x, &y).expect("pjrt exec");
+            let want = kernel_cross(kind, &x, &y);
+            let mut diff = got.clone();
+            diff.axpy(-1.0, &want);
+            // f32 path vs f64 native.
+            assert!(
+                diff.max_abs() < 5e-6,
+                "{kind:?} ({m},{n},{d}): max abs diff {}",
+                diff.max_abs()
+            );
+        }
+    }
+    let stats = engine.stats.lock().unwrap().clone();
+    assert!(stats.tiles_executed > 0);
+}
+
+#[test]
+fn hierarchical_factors_via_pjrt_evaluator() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let engine = std::sync::Arc::new(PjrtEngine::load(dir).expect("engine"));
+    let eval = PjrtBlockEvaluator::new(engine);
+    let mut rng = Rng::new(2);
+    let x = Mat::from_fn(96, 8, |_, _| rng.uniform(0.0, 1.0));
+    let mut cfg = HConfig::new(Gaussian::new(0.5), 12).with_seed(3);
+    cfg.n0 = 12;
+    let mut rng2 = Rng::new(cfg.seed);
+    let tree = hck::partition::PartitionTree::build(&x, cfg.n0, cfg.rule, &mut rng2);
+    let f_pjrt =
+        HFactors::build_on_tree(&x, cfg.clone(), tree, &mut rng2, &eval).expect("pjrt build");
+    let f_native = {
+        let mut rng3 = Rng::new(cfg.seed);
+        let tree = hck::partition::PartitionTree::build(&x, cfg.n0, cfg.rule, &mut rng3);
+        HFactors::build_on_tree(&x, cfg, tree, &mut rng3, &hck::kernels::NativeEvaluator)
+            .expect("native build")
+    };
+    // Same seeds -> same tree/landmarks; factors agree to f32 precision.
+    let k1 = hck::hkernel::densify::densify(&f_pjrt);
+    let k2 = hck::hkernel::densify::densify(&f_native);
+    let mut diff = k1.clone();
+    diff.axpy(-1.0, &k2);
+    assert!(diff.max_abs() < 1e-4, "max diff {}", diff.max_abs());
+    // And the whole pipeline still solves.
+    let solver = HSolver::factor(&f_pjrt, 0.05).expect("solver");
+    let y: Vec<f64> = (0..96).map(|i| (i as f64 * 0.1).sin()).collect();
+    let w = solver.solve_original(&y);
+    assert!(w.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn end_to_end_training_all_table1_sets() {
+    // Scaled-down: every Table-1 analogue trains and beats the trivial
+    // baseline with the hierarchical engine.
+    for name in ["cadata", "ijcnn1", "acoustic"] {
+        let spec = spec_by_name(name).unwrap();
+        let (train, test) = synthetic::generate(spec, 500, 120, 9);
+        let cfg = TrainConfig::new(
+            Gaussian::new(0.5),
+            EngineSpec::Hierarchical { rank: 64 },
+        )
+        .with_seed(4);
+        let model = KrrModel::fit_dataset(&cfg, &train).expect("fit");
+        let metric = model.evaluate(&test);
+        match train.task {
+            hck::data::Task::Regression => {
+                assert!(metric < 0.9, "{name}: rel err {metric}")
+            }
+            _ => assert!(metric > 0.55, "{name}: acc {metric}"),
+        }
+    }
+}
+
+#[test]
+fn coordinator_serves_trained_model() {
+    use hck::coordinator::{BatchPolicy, PredictionService};
+    let spec = spec_by_name("cadata").unwrap();
+    let (train, test) = synthetic::generate(spec, 400, 50, 13);
+    let cfg = TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 50 })
+        .with_seed(5);
+    let model = KrrModel::fit_dataset(&cfg, &train).expect("fit");
+    // Reference predictions (direct path).
+    let direct = model.predict(&test.x);
+    let svc = std::sync::Arc::new(PredictionService::start(
+        std::sync::Arc::new(model),
+        BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(5) },
+    ));
+    // Concurrent clients through the batcher must agree with the direct path.
+    let mut handles = Vec::new();
+    for i in 0..test.n() {
+        let svc = svc.clone();
+        let feats = test.x.row(i).to_vec();
+        let want = direct[(i, 0)];
+        handles.push(std::thread::spawn(move || {
+            let got = svc.predict(feats).unwrap()[0];
+            assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.requests as usize, test.n());
+}
+
+#[test]
+fn solver_scales_linearly_in_n() {
+    // Weak O(n r^2) sanity: doubling n should not quadruple factor time.
+    // (Generous 3.5x bound to stay robust on a noisy CI machine.)
+    let spec = spec_by_name("cadata").unwrap();
+    let time_for = |n: usize| {
+        let (train, _) = synthetic::generate(spec, n, 10, 17);
+        let mut cfg = HConfig::new(Gaussian::new(0.5), 32).with_seed(3);
+        cfg.n0 = 32;
+        let f = HFactors::build(&train.x, cfg).unwrap();
+        let t = std::time::Instant::now();
+        let solver = HSolver::factor(&f, 0.01).unwrap();
+        let y: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let _ = solver.solve(&f.to_tree_order(&y));
+        t.elapsed().as_secs_f64()
+    };
+    // Warm up and take medians of 3.
+    let med = |n: usize| {
+        let mut ts: Vec<f64> = (0..3).map(|_| time_for(n)).collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts[1]
+    };
+    let t1 = med(2000);
+    let t2 = med(4000);
+    assert!(
+        t2 / t1 < 3.5,
+        "factor+solve time ratio {:.2} suggests super-linear scaling",
+        t2 / t1
+    );
+}

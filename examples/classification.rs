@@ -7,7 +7,7 @@
 //!
 //! Run: `cargo run --release --example classification`
 
-use anyhow::Result;
+use hck::error::Result;
 use hck::data::{spec_by_name, synthetic};
 use hck::kernels::Gaussian;
 use hck::learn::{EngineSpec, KrrModel, TrainConfig};
@@ -57,6 +57,9 @@ fn main() -> Result<()> {
         }
     }
     table.print();
-    println!("\n(The paper's covtype finding: at small r the full-rank local kernels\n — independent, hierarchical — clearly beat the low-rank ones.)");
+    println!(
+        "\n(The paper's covtype finding: at small r the full-rank local kernels\n \
+         — independent, hierarchical — clearly beat the low-rank ones.)"
+    );
     Ok(())
 }

@@ -14,7 +14,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example end_to_end`
 
-use anyhow::Result;
+use hck::error::Result;
 use hck::coordinator::{BatchPolicy, PredictionService};
 use hck::data::{spec_by_name, synthetic};
 use hck::hkernel::{HConfig, HFactors, HPredictor, HSolver};

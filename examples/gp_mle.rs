@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo run --release --example gp_mle`
 
-use anyhow::Result;
+use hck::error::Result;
 use hck::data::{spec_by_name, synthetic};
 use hck::gp::{log_marginal_likelihood, mle_sigma, GpRegressor};
 use hck::hkernel::{HConfig, HFactors};

@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo run --release --example kpca_embed`
 
-use anyhow::Result;
+use hck::error::Result;
 use hck::approx::{FourierFeatures, NystromFeatures};
 use hck::data::{spec_by_name, synthetic};
 use hck::hkernel::{HConfig, HFactors};
@@ -79,6 +79,9 @@ fn main() -> Result<()> {
     }
     println!("\nalignment difference ‖U − ŨM‖_F / ‖U‖_F (lower = better):\n");
     table.print();
-    println!("\n(Paper Figure 8: the hierarchical kernel generally attains the\n smallest alignment difference at a given r.)");
+    println!(
+        "\n(Paper Figure 8: the hierarchical kernel generally attains the\n \
+         smallest alignment difference at a given r.)"
+    );
     Ok(())
 }

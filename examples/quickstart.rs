@@ -3,7 +3,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use anyhow::Result;
+use hck::error::Result;
 use hck::data::{spec_by_name, synthetic};
 use hck::kernels::Gaussian;
 use hck::learn::{EngineSpec, KrrModel, TrainConfig};

@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo run --release --example serve`
 
-use anyhow::Result;
+use hck::error::Result;
 use hck::coordinator::{serve_tcp, BatchPolicy, PredictionService};
 use hck::data::{spec_by_name, synthetic};
 use hck::kernels::Gaussian;
@@ -43,7 +43,7 @@ fn main() -> Result<()> {
             conn.write_all(format!("{}\n", req.encode()).as_bytes())?;
             let mut line = String::new();
             reader.read_line(&mut line)?;
-            let resp = Json::parse(line.trim()).map_err(anyhow::Error::msg)?;
+            let resp = Json::parse(line.trim()).map_err(hck::error::Error::Data)?;
             let pred = resp.get("prediction").unwrap().to_f64s().unwrap()[0];
             let label = if pred >= 0.0 { 1.0 } else { -1.0 };
             if label == test.y[i] {

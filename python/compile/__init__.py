@@ -1,0 +1,12 @@
+"""The Python build-time side of the three-layer system.
+
+- ``compile.kernels`` — L1: Pallas kernels for the pairwise hot spot.
+- ``compile.model`` — L2: JAX compute graphs embedding the L1 kernels.
+- ``compile.aot`` — the AOT lowering CLI emitting HLO-text artifacts +
+  manifest for the Rust (L3) PJRT runtime.
+
+A regular package (not a PEP-420 namespace) so ``python -m compile.aot``
+and ``from compile import model`` resolve identically from the
+``python/`` directory regardless of interpreter/pytest path handling.
+Python only runs at build time; inference is pure Rust.
+"""

@@ -1,0 +1,8 @@
+"""Root conftest for the ``python/`` tree.
+
+Present (and intentionally empty of hooks) so pytest inserts this
+directory onto ``sys.path`` during collection, making ``import
+compile`` resolve under the bare ``pytest`` binary as well as
+``python -m pytest``. Test-suite configuration (jax gating, markers)
+lives in ``tests/conftest.py``.
+"""

@@ -1,0 +1,28 @@
+"""Shared pytest configuration for the L1/L2 test suite.
+
+Every test module in this directory exercises JAX (the Pallas kernel, the
+AOT lowering, the L2 graphs). CI runners and minimal dev machines may not
+have ``jax`` installed; in that case the whole suite must *skip*, not
+fail — the Rust tier-1 suite is independent of it. ``test_pairwise``
+additionally needs ``hypothesis`` and skips on its own when that is
+missing (see its ``importorskip``).
+"""
+
+import importlib.util
+
+#: Modules that import jax at module scope and cannot even be collected
+#: without it. test_environment.py stays runnable everywhere.
+JAX_DEPENDENT = ["test_aot.py", "test_model.py", "test_pairwise.py"]
+
+collect_ignore: list[str] = []
+
+if importlib.util.find_spec("jax") is None:
+    # Without jax these modules fail at import time; skip their
+    # collection entirely rather than erroring out.
+    collect_ignore.extend(JAX_DEPENDENT)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end cases (full AOT emission)"
+    )

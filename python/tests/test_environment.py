@@ -1,0 +1,27 @@
+"""Dependency-free sanity tests.
+
+These run on any interpreter, so the suite always collects at least one
+test even when ``jax`` is absent and every jax-dependent module is
+skipped (pytest treats an empty collection as an error — exit code 5 —
+which would wrongly fail CI on a jax-less runner).
+"""
+
+import importlib.util
+from pathlib import Path
+
+PKG = Path(__file__).resolve().parents[1] / "compile"
+
+
+def test_package_layout():
+    assert (PKG / "__init__.py").is_file()
+    assert (PKG / "aot.py").is_file()
+    assert (PKG / "model.py").is_file()
+    assert (PKG / "kernels" / "pairwise.py").is_file()
+    assert (PKG / "kernels" / "ref.py").is_file()
+
+
+def test_jax_availability_is_reported():
+    # Informational: the jax-dependent modules skip themselves via
+    # conftest.py when this is None. Either state is valid.
+    spec = importlib.util.find_spec("jax")
+    assert spec is None or spec.name == "jax"

@@ -138,5 +138,8 @@ fn main() {
         ]);
     }
     table.print();
-    println!("(paper §1.2: tapering trades accuracy for sparsity; the support must be\n narrow for sparse algebra to pay off, which hurts prediction — as seen)");
+    println!(
+        "(paper §1.2: tapering trades accuracy for sparsity; the support must be\n \
+         narrow for sparse algebra to pay off, which hurts prediction — as seen)"
+    );
 }

@@ -4,25 +4,48 @@
 //! Covers: the gemm microkernel (GFLOP/s at factor-relevant sizes),
 //! native kernel-block evaluation (gemm expansion vs naive), the PJRT
 //! AOT path per tile, Cholesky, the O(nr) matvec and the per-query
-//! Algorithm-3 latency, and coordinator batching overhead.
+//! Algorithm-3 latency, coordinator batching overhead, and the
+//! **parallel matvec thread-scaling sweep**, whose measurements are also
+//! written to `BENCH_hotpath.json` (one row per (op, n, r, threads) with
+//! ns/op) so every PR leaves a machine-readable perf trajectory.
+//!
+//! `HCK_BENCH_QUICK=1` shrinks every size for the CI smoke job; the
+//! default sizes include the n=50k thread-scaling sweep the perf gate
+//! tracks.
 
 #[path = "common.rs"]
 mod common;
 
 use common::*;
-use hck::kernels::{kernel_cross, Gaussian, KernelKind, Laplace};
+use hck::kernels::{kernel_cross, Gaussian, Laplace};
 use hck::linalg::{gemm, Cholesky, Mat, Trans};
-use hck::util::bench::{fmt_secs, Bench, Table};
+use hck::util::bench::{fmt_secs, Bench, BenchJson, Table};
+use hck::util::json::Json;
+use hck::util::parallel::{auto_threads, default_threads};
 use hck::util::rng::Rng;
 
+fn quick_mode() -> bool {
+    std::env::var("HCK_BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
 fn main() {
-    let bench = Bench { warmup_iters: 2, measure_iters: 7, max_secs: 20.0 };
+    let quick = quick_mode();
+    let bench = if quick {
+        Bench { warmup_iters: 1, measure_iters: 3, max_secs: 5.0 }
+    } else {
+        Bench { warmup_iters: 2, measure_iters: 7, max_secs: 20.0 }
+    };
     let mut rng = Rng::new(1);
+    let mut report = BenchJson::new("hotpath");
+    if quick {
+        println!("(HCK_BENCH_QUICK: reduced sizes)\n");
+    }
 
     // ---- gemm ----
     println!("— gemm (C = A·B, square) —");
+    let gemm_sizes: &[usize] = if quick { &[64, 128] } else { &[64, 128, 256, 512] };
     let mut table = Table::new(&["size", "median", "GFLOP/s"]);
-    for n in [64usize, 128, 256, 512] {
+    for &n in gemm_sizes {
         let a = Mat::from_fn(n, n, |_, _| rng.normal());
         let b = Mat::from_fn(n, n, |_, _| rng.normal());
         let mut c = Mat::zeros(n, n);
@@ -36,13 +59,19 @@ fn main() {
             fmt_secs(m.median()),
             format!("{:.2}", flops / m.median() / 1e9),
         ]);
+        report.row(vec![
+            ("op", Json::Str("gemm".into())),
+            ("n", Json::Num(n as f64)),
+            ("ns_per_op", Json::Num(m.median() * 1e9)),
+        ]);
     }
     table.print();
 
     // ---- kernel blocks: native ----
-    println!("\n— kernel block K(X,Y), 512x512, d=32 —");
-    let x = Mat::from_fn(512, 32, |_, _| rng.uniform(0.0, 1.0));
-    let y = Mat::from_fn(512, 32, |_, _| rng.uniform(0.0, 1.0));
+    let kb = if quick { 128 } else { 512 };
+    println!("\n— kernel block K(X,Y), {kb}x{kb}, d=32 —");
+    let x = Mat::from_fn(kb, 32, |_, _| rng.uniform(0.0, 1.0));
+    let y = Mat::from_fn(kb, 32, |_, _| rng.uniform(0.0, 1.0));
     let mut table = Table::new(&["path", "median", "Melem/s"]);
     for (label, kind) in [
         ("native gaussian (gemm expansion)", Gaussian::new(0.5)),
@@ -52,10 +81,10 @@ fn main() {
         table.row(&[
             label.to_string(),
             fmt_secs(m.median()),
-            format!("{:.1}", 512.0 * 512.0 / m.median() / 1e6),
+            format!("{:.1}", (kb * kb) as f64 / m.median() / 1e6),
         ]);
     }
-    // PJRT path, if artifacts exist.
+    // PJRT path, if artifacts exist (stub build: never).
     if let Ok(engine) = hck::runtime::PjrtEngine::load_default() {
         for (label, kind) in [
             ("pjrt gaussian (AOT XLA f32)", Gaussian::new(0.5)),
@@ -66,18 +95,19 @@ fn main() {
             table.row(&[
                 label.to_string(),
                 fmt_secs(m.median()),
-                format!("{:.1}", 512.0 * 512.0 / m.median() / 1e6),
+                format!("{:.1}", (kb * kb) as f64 / m.median() / 1e6),
             ]);
         }
     } else {
-        println!("(PJRT rows skipped: run `make artifacts`)");
+        println!("(PJRT rows skipped: runtime unavailable)");
     }
     table.print();
 
     // ---- Cholesky at factor sizes ----
     println!("\n— Cholesky (SPD, kernel-matrix-like) —");
+    let chol_sizes: &[usize] = if quick { &[128] } else { &[128, 256, 512] };
     let mut table = Table::new(&["n", "median"]);
-    for n in [128usize, 256, 512] {
+    for &n in chol_sizes {
         let pts = Mat::from_fn(n, 8, |_, _| rng.uniform(0.0, 1.0));
         let mut k = kernel_cross(Gaussian::new(0.5), &pts, &pts);
         k.add_diag(0.1);
@@ -87,21 +117,36 @@ fn main() {
     table.print();
 
     // ---- end-to-end hot paths ----
-    println!("\n— hierarchical hot paths (n=8000, r=64) —");
-    let (train, test) = dataset("SUSY", 8000, 200, 3);
-    let mut cfg = hck::hkernel::HConfig::new(Gaussian::new(0.5), 64).with_seed(4);
-    cfg.n0 = 64;
+    let (eh_n, eh_r) = if quick { (2000, 32) } else { (8000usize, 64usize) };
+    println!("\n— hierarchical hot paths (n={eh_n}, r={eh_r}) —");
+    let (train, test) = dataset("SUSY", eh_n, 200, 3);
+    let mut cfg = hck::hkernel::HConfig::new(Gaussian::new(0.5), eh_r).with_seed(4);
+    cfg.n0 = eh_r;
     let f = std::sync::Arc::new(hck::hkernel::HFactors::build(&train.x, cfg).unwrap());
-    let b: Vec<f64> = (0..8000).map(|i| (i as f64 * 0.01).sin()).collect();
+    let b: Vec<f64> = (0..eh_n).map(|i| (i as f64 * 0.01).sin()).collect();
     let mut table = Table::new(&["path", "median"]);
     let m = bench.run("matvec", || hck::hkernel::hmatvec(&f, &b));
     table.row(&["Algorithm 1 matvec (O(nr))".into(), fmt_secs(m.median())]);
     let m = bench.run("factor", || hck::hkernel::HSolver::factor(&f, 0.01).unwrap());
     table.row(&["solver factor (O(nr²))".into(), fmt_secs(m.median())]);
+    report.row(vec![
+        ("op", Json::Str("factor".into())),
+        ("n", Json::Num(eh_n as f64)),
+        ("r", Json::Num(eh_r as f64)),
+        ("threads", Json::Num(auto_threads(eh_n) as f64)),
+        ("ns_per_op", Json::Num(m.median() * 1e9)),
+    ]);
     let solver = hck::hkernel::HSolver::factor(&f, 0.01).unwrap();
     let m = bench.run("solve", || solver.solve(&b));
     table.row(&["solver solve per rhs (O(nr))".into(), fmt_secs(m.median())]);
-    let w = Mat::from_vec(8000, 1, solver.solve(&f.to_tree_order(&b)));
+    report.row(vec![
+        ("op", Json::Str("solve".into())),
+        ("n", Json::Num(eh_n as f64)),
+        ("r", Json::Num(eh_r as f64)),
+        ("threads", Json::Num(auto_threads(eh_n) as f64)),
+        ("ns_per_op", Json::Num(m.median() * 1e9)),
+    ]);
+    let w = Mat::from_vec(eh_n, 1, solver.solve(&f.to_tree_order(&b)));
     let wo = f.rows_from_tree_order(&w);
     let pred = hck::hkernel::HPredictor::new(f.clone(), &wo);
     let m = bench.run("oos", || {
@@ -116,6 +161,50 @@ fn main() {
         fmt_secs(m.median() / test.n() as f64),
     ]);
     table.print();
+
+    // ---- parallel matvec thread scaling (the perf gate rows) ----
+    let scaling_cases: &[(usize, usize)] =
+        if quick { &[(6000, 64)] } else { &[(8000, 64), (50000, 128)] };
+    let mut threads_list = vec![1usize, 2, 4];
+    let dt = default_threads();
+    if dt > 4 {
+        threads_list.push(dt);
+    }
+    println!("\n— parallel matvec scaling (threads: {threads_list:?}) —");
+    for &(n, r) in scaling_cases {
+        let (train, _) = dataset("SUSY", n, 10, 5);
+        let mut cfg = hck::hkernel::HConfig::new(Gaussian::new(0.5), r).with_seed(6);
+        cfg.n0 = r;
+        let f = hck::hkernel::HFactors::build(&train.x, cfg).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.013).cos()).collect();
+        let mut table = Table::new(&["n", "r", "threads", "median", "ns/op", "speedup"]);
+        let mut base_ns = f64::NAN;
+        for &t in &threads_list {
+            let m = bench.run("pmv", || hck::hkernel::hmatvec_with_threads(&f, &b, t));
+            let ns = m.median() * 1e9;
+            if t == 1 {
+                base_ns = ns;
+            }
+            let speedup = base_ns / ns;
+            table.row(&[
+                n.to_string(),
+                r.to_string(),
+                t.to_string(),
+                fmt_secs(m.median()),
+                format!("{ns:.0}"),
+                format!("{speedup:.2}x"),
+            ]);
+            report.row(vec![
+                ("op", Json::Str("matvec".into())),
+                ("n", Json::Num(n as f64)),
+                ("r", Json::Num(r as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("ns_per_op", Json::Num(ns)),
+                ("speedup_vs_1t", Json::Num(speedup)),
+            ]);
+        }
+        table.print();
+    }
 
     // ---- coordinator dispatch overhead ----
     println!("\n— coordinator batching overhead (trivial model) —");
@@ -143,9 +232,13 @@ fn main() {
         "single-request queue→batch→respond round trip: {} (floor on serving latency)",
         fmt_secs(m.median())
     );
-    let _ = kind_guard();
-}
 
-fn kind_guard() -> KernelKind {
-    Gaussian::new(1.0)
+    // Cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the telemetry at the workspace root so CI picks it up at a
+    // fixed path regardless of the invoking directory.
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match report.write(out_path) {
+        Ok(()) => println!("\nwrote {out_path} ({} rows)", report.len()),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
 }

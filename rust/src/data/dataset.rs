@@ -105,7 +105,9 @@ impl Dataset {
     pub fn decode_predictions(&self, preds: &Mat) -> Vec<f64> {
         match self.task {
             Task::Regression => preds.col(0),
-            Task::Binary => preds.col(0).iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect(),
+            Task::Binary => {
+                preds.col(0).iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect()
+            }
             Task::Multiclass(k) => (0..preds.rows())
                 .map(|i| {
                     let row = preds.row(i);

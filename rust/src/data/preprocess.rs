@@ -129,7 +129,8 @@ mod tests {
 
     #[test]
     fn split_partitions_everything() {
-        let ds = make((0..20).map(|i| i as f64).collect(), 20, 1, (0..20).map(|i| i as f64).collect());
+        let vals: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ds = make(vals.clone(), 20, 1, vals);
         let mut rng = Rng::new(1);
         let (train, test) = train_test_split(&ds, 0.2, &mut rng);
         assert_eq!(train.n(), 16);

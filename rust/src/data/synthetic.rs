@@ -183,7 +183,12 @@ pub fn generate_default(spec: &SyntheticSpec, seed: u64) -> (Dataset, Dataset) {
 ///   flipped with prob `noise`;
 /// - multiclass: cluster-majority classes with a smooth boundary
 ///   perturbation and `noise` flips.
-pub fn generate(spec: &SyntheticSpec, n_train: usize, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+pub fn generate(
+    spec: &SyntheticSpec,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
     let n = n_train + n_test;
     let d = spec.d;
     let mut rng = Rng::new(seed ^ hash_name(spec.name));

@@ -1,38 +1,61 @@
 //! Unified error type for the `hck` library.
-
-use thiserror::Error;
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror` in the offline
+//! crate set — see util/mod.rs on the zero-dependency policy).
 
 /// Library-wide error enum.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A matrix operation received incompatible or invalid dimensions.
-    #[error("dimension mismatch: {0}")]
     Dim(String),
 
     /// A factorization (Cholesky/LU/eigen) failed, typically because the
     /// matrix is numerically singular or indefinite.
-    #[error("linear algebra failure: {0}")]
     Linalg(String),
 
     /// Invalid configuration or hyper-parameter.
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// Data loading / parsing problem.
-    #[error("data error: {0}")]
     Data(String),
 
     /// PJRT runtime problem (artifact missing, compile/execute failure).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator / serving problem.
-    #[error("serving error: {0}")]
     Serve(String),
 
     /// I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Dim(m) => write!(f, "dimension mismatch: {m}"),
+            Error::Linalg(m) => write!(f, "linear algebra failure: {m}"),
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Serve(m) => write!(f, "serving error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Library-wide result alias.
@@ -62,5 +85,26 @@ impl Error {
     /// Helper to construct a serving error.
     pub fn serve(msg: impl Into<String>) -> Self {
         Error::Serve(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        assert_eq!(Error::dim("2x3 vs 4x5").to_string(), "dimension mismatch: 2x3 vs 4x5");
+        assert_eq!(Error::linalg("pivot").to_string(), "linear algebra failure: pivot");
+        assert_eq!(Error::serve("down").to_string(), "serving error: down");
+    }
+
+    #[test]
+    fn io_conversion_preserves_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("missing"));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
     }
 }

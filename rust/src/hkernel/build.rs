@@ -1,9 +1,28 @@
 //! Construction of the hierarchical factors (paper Section 3, items 1–6).
+//!
+//! The build runs in three phases so the expensive per-node block work
+//! parallelizes while randomness stays on a single deterministic stream:
+//!
+//! 1. **Sampling** (sequential): landmark index sets X̲_i for every
+//!    nonleaf node, drawn from one RNG in node-id order — the stream is
+//!    identical whatever the thread count.
+//! 2. **Landmark Grams** (parallel): Σ_i = K′(X̲_i, X̲_i) and its
+//!    Cholesky, independent across nodes.
+//! 3. **Blocks and bases** (parallel): leaf blocks A_ii, leaf bases U_i
+//!    and inner changes-of-basis W_i, independent across nodes once every
+//!    parent Σ_p is factored.
+//!
+//! Phases 2–3 engage threads only for evaluators that declare
+//! [`BlockEvaluator::parallel_safe`] (the native one); the PJRT evaluator
+//! wraps a single-threaded client and keeps the sequential path. Results
+//! are written back in node-id order, so factor construction is bitwise
+//! deterministic for every thread count.
 
 use crate::error::{Error, Result};
 use crate::kernels::{BlockEvaluator, KernelKind, NativeEvaluator};
 use crate::linalg::{Cholesky, Mat};
 use crate::partition::{PartitionTree, SplitRule};
+use crate::util::parallel::{auto_threads, parallel_map};
 use crate::util::rng::Rng;
 
 /// Configuration of the hierarchical kernel.
@@ -118,6 +137,12 @@ pub struct HFactors {
     pub a_leaf: Vec<Option<Mat>>,
 }
 
+/// Phase-3 output for one node (computed off-thread, applied in order).
+enum NodeFactor {
+    Leaf { aii: Mat, u: Option<Mat> },
+    Inner { w: Option<Mat> },
+}
+
 impl HFactors {
     /// Build tree + factors with the native block evaluator.
     pub fn build(x: &Mat, config: HConfig) -> Result<HFactors> {
@@ -150,6 +175,8 @@ impl HFactors {
         let nn = tree.nodes.len();
         let kind = config.kind;
         let lp = config.lambda_prime;
+        let threads = auto_threads(x.rows());
+        let use_parallel = threads > 1 && eval.parallel_safe();
 
         let mut f = HFactors {
             x: x.clone(),
@@ -164,10 +191,12 @@ impl HFactors {
             config,
         };
 
-        // --- Landmark sets + Σ_i for every nonleaf node (Section 4.2:
-        // uniformly random samples of the node's own points). Node ids are
-        // assigned parent-before-child by the tree builder, so a node's
-        // parent landmarks are always available when we get to it. ---
+        // --- Phase 1 (sequential): landmark sets for every nonleaf node
+        // (Section 4.2: uniformly random samples of the node's own
+        // points). Node ids are assigned parent-before-child by the tree
+        // builder, so a node's parent landmarks are always available when
+        // we get to it. One RNG stream in node-id order keeps sampling
+        // independent of the thread count. ---
         for i in 0..nn {
             if f.tree.nodes[i].is_leaf() {
                 continue;
@@ -191,61 +220,41 @@ impl HFactors {
             let mut idx: Vec<usize> =
                 rng.sample_indices(pts.len(), r_i).iter().map(|&k| pts[k]).collect();
             idx.sort_unstable(); // determinism niceties; order is irrelevant
-            let lm = x.select_rows(&idx);
-            let mut sig = eval.block(kind, &lm, &lm);
-            sig.symmetrize();
-            // λ′ on the diagonal (coincident points of k′).
-            for a in 0..r_i {
-                sig[(a, a)] = kind.diag_value() + lp;
-            }
-            let chol = Cholesky::new_jittered(&sig, 30).map_err(|e| {
-                Error::linalg(format!("Σ_{i} not PD even with jitter: {e}"))
-            })?;
+            f.landmarks[i] = Some(x.select_rows(&idx));
             f.landmark_idx[i] = idx;
-            f.landmarks[i] = Some(lm);
+        }
+
+        // --- Phase 2 (parallel): Σ_i and its Cholesky per nonleaf. ---
+        let nonleaves: Vec<usize> =
+            (0..nn).filter(|&i| !f.tree.nodes[i].is_leaf()).collect();
+        let sig_results: Vec<Result<(Mat, Cholesky)>> = if use_parallel {
+            parallel_map(threads, &nonleaves, |&i| sigma_factor(&f, i, kind, lp, &NativeEvaluator))
+        } else {
+            nonleaves.iter().map(|&i| sigma_factor(&f, i, kind, lp, eval)).collect()
+        };
+        for (&i, res) in nonleaves.iter().zip(sig_results) {
+            let (sig, chol) = res?;
             f.sigma[i] = Some(sig);
             f.sigma_chol[i] = Some(chol);
         }
 
-        // --- Leaf blocks and bases; W for inner nodes. ---
-        for i in 0..nn {
-            let parent = f.tree.nodes[i].parent;
-            if f.tree.nodes[i].is_leaf() {
-                let pts: Vec<usize> = f.tree.node_points(i).to_vec();
-                let xi = x.select_rows(&pts);
-                let mut aii = eval.block(kind, &xi, &xi);
-                aii.symmetrize();
-                for a in 0..pts.len() {
-                    aii[(a, a)] = kind.diag_value() + lp;
+        // --- Phase 3 (parallel): leaf blocks and bases; W for inner
+        // nodes. Every parent Σ_p is factored by now. ---
+        let all_ids: Vec<usize> = (0..nn).collect();
+        let node_results: Vec<NodeFactor> = if use_parallel {
+            parallel_map(threads, &all_ids, |&i| node_factor(&f, i, kind, lp, &NativeEvaluator))
+        } else {
+            all_ids.iter().map(|&i| node_factor(&f, i, kind, lp, eval)).collect()
+        };
+        for (i, res) in node_results.into_iter().enumerate() {
+            match res {
+                NodeFactor::Leaf { aii, u } => {
+                    f.a_leaf[i] = Some(aii);
+                    f.u[i] = u;
                 }
-                f.a_leaf[i] = Some(aii);
-                if let Some(p) = parent {
-                    let kxl = cross_with_identity(
-                        eval,
-                        kind,
-                        &xi,
-                        &pts,
-                        f.landmarks[p].as_ref().unwrap(),
-                        &f.landmark_idx[p],
-                        lp,
-                    );
-                    // U_i = K′(X_i, X̲_p) Σ_p^{-1}
-                    let u = f.sigma_chol[p].as_ref().unwrap().solve_right(&kxl);
-                    f.u[i] = Some(u);
+                NodeFactor::Inner { w } => {
+                    f.w[i] = w;
                 }
-            } else if let Some(p) = parent {
-                let kll = cross_with_identity(
-                    eval,
-                    kind,
-                    f.landmarks[i].as_ref().unwrap(),
-                    &f.landmark_idx[i],
-                    f.landmarks[p].as_ref().unwrap(),
-                    &f.landmark_idx[p],
-                    lp,
-                );
-                // W_i = K′(X̲_i, X̲_p) Σ_p^{-1}
-                let w = f.sigma_chol[p].as_ref().unwrap().solve_right(&kll);
-                f.w[i] = Some(w);
             }
         }
         Ok(f)
@@ -315,11 +324,83 @@ impl HFactors {
     }
 }
 
+/// Phase-2 work for one nonleaf node: Σ_i = K′(X̲_i, X̲_i) and its
+/// Cholesky. Reads only phase-1 state.
+fn sigma_factor<E: BlockEvaluator + ?Sized>(
+    f: &HFactors,
+    i: usize,
+    kind: KernelKind,
+    lp: f64,
+    eval: &E,
+) -> Result<(Mat, Cholesky)> {
+    let lm = f.landmarks[i].as_ref().unwrap();
+    let r_i = lm.rows();
+    let mut sig = eval.block(kind, lm, lm);
+    sig.symmetrize();
+    // λ′ on the diagonal (coincident points of k′).
+    for a in 0..r_i {
+        sig[(a, a)] = kind.diag_value() + lp;
+    }
+    let chol = Cholesky::new_jittered(&sig, 30)
+        .map_err(|e| Error::linalg(format!("Σ_{i} not PD even with jitter: {e}")))?;
+    Ok((sig, chol))
+}
+
+/// Phase-3 work for one node: the leaf block A_ii and basis U_i, or the
+/// inner change-of-basis W_i. Reads only phase-1/2 state.
+fn node_factor<E: BlockEvaluator + ?Sized>(
+    f: &HFactors,
+    i: usize,
+    kind: KernelKind,
+    lp: f64,
+    eval: &E,
+) -> NodeFactor {
+    let parent = f.tree.nodes[i].parent;
+    if f.tree.nodes[i].is_leaf() {
+        let pts: Vec<usize> = f.tree.node_points(i).to_vec();
+        let xi = f.x.select_rows(&pts);
+        let mut aii = eval.block(kind, &xi, &xi);
+        aii.symmetrize();
+        for a in 0..pts.len() {
+            aii[(a, a)] = kind.diag_value() + lp;
+        }
+        let u = parent.map(|p| {
+            let kxl = cross_with_identity(
+                eval,
+                kind,
+                &xi,
+                &pts,
+                f.landmarks[p].as_ref().unwrap(),
+                &f.landmark_idx[p],
+                lp,
+            );
+            // U_i = K′(X_i, X̲_p) Σ_p^{-1}
+            f.sigma_chol[p].as_ref().unwrap().solve_right(&kxl)
+        });
+        NodeFactor::Leaf { aii, u }
+    } else {
+        let w = parent.map(|p| {
+            let kll = cross_with_identity(
+                eval,
+                kind,
+                f.landmarks[i].as_ref().unwrap(),
+                &f.landmark_idx[i],
+                f.landmarks[p].as_ref().unwrap(),
+                &f.landmark_idx[p],
+                lp,
+            );
+            // W_i = K′(X̲_i, X̲_p) Σ_p^{-1}
+            f.sigma_chol[p].as_ref().unwrap().solve_right(&kll)
+        });
+        NodeFactor::Inner { w }
+    }
+}
+
 /// K′(A, B) where both point sets carry original training indices:
 /// evaluates the base kernel block and adds λ′ wherever the same original
 /// point appears on both sides (the Kronecker δ of k′ = k + λ′δ).
-fn cross_with_identity(
-    eval: &dyn BlockEvaluator,
+fn cross_with_identity<E: BlockEvaluator + ?Sized>(
+    eval: &E,
     kind: KernelKind,
     a: &Mat,
     a_idx: &[usize],

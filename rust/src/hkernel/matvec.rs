@@ -4,14 +4,37 @@
 //! `c_i = U_iᵀ b_i` (leaves) / `c_i = W_iᵀ Σ_j c_j` (inner nodes), one
 //! pre-order traversal pushes the sibling interactions `d` back down, and
 //! leaves finish with `y_i = A_ii b_i + U_i d_i`.
+//!
+//! ## Parallel execution
+//!
+//! Every per-node quantity is computed from already-finalized inputs and
+//! written to node-private storage, so the traversals parallelize
+//! *level-synchronously*: all nodes of one tree level run concurrently
+//! (children are one level deeper and therefore already done in the
+//! upward pass; ancestors are shallower and already done in the downward
+//! pass), the sibling exchange runs concurrently across parents (each
+//! parent owns its children's `d`), and the leaf finish writes disjoint
+//! `[lo, hi)` windows of `y`. No work item shares an accumulator and all
+//! results are applied in node-id order, so the output is **bitwise
+//! identical for every thread count** — the deterministic fallback is
+//! simply `threads = 1`. The thread count defaults to
+//! [`crate::util::parallel::default_threads`] (`HCK_THREADS` env knob)
+//! and can be pinned per call with [`hmatvec_with_threads`].
 
 use super::build::HFactors;
 use crate::linalg::{gemv, Trans};
+use crate::util::parallel::{auto_threads, disjoint_slices, parallel_map, run_parallel};
 
-/// y = K_hierarchical b, both in **tree order**. Multi-column version:
-/// `b` and the returned y are n x m in row-major [`crate::linalg::Mat`]s
-/// via [`hmatvec_mat`].
+/// y = K_hierarchical b, both in **tree order**, using the adaptive
+/// thread count (serial below [`crate::util::parallel::AUTO_MIN_N`]
+/// points). Multi-column version: [`hmatvec_mat`].
 pub fn hmatvec(f: &HFactors, b: &[f64]) -> Vec<f64> {
+    hmatvec_with_threads(f, b, auto_threads(f.n()))
+}
+
+/// y = K_hierarchical b with an explicit thread count (1 = the exact
+/// sequential reference; results are bitwise identical regardless).
+pub fn hmatvec_with_threads(f: &HFactors, b: &[f64], threads: usize) -> Vec<f64> {
     let n = f.n();
     assert_eq!(b.len(), n, "hmatvec length");
     let nn = f.tree.nodes.len();
@@ -28,35 +51,51 @@ pub fn hmatvec(f: &HFactors, b: &[f64]) -> Vec<f64> {
     let mut c: Vec<Vec<f64>> = vec![Vec::new(); nn];
     let mut d: Vec<Vec<f64>> = vec![Vec::new(); nn];
 
-    // ---- Upward (post-order): compute c. ----
-    let post = f.tree.postorder();
-    for &i in &post {
-        let nd = &f.tree.nodes[i];
-        if nd.parent.is_none() {
-            continue;
+    // Non-root nodes grouped by depth (level-synchronous schedule).
+    let max_depth = f.tree.depth();
+    let mut by_depth: Vec<Vec<usize>> = vec![Vec::new(); max_depth + 1];
+    for (i, nd) in f.tree.nodes.iter().enumerate() {
+        if nd.parent.is_some() {
+            by_depth[nd.depth].push(i);
         }
-        let rp = f.parent_rank(i);
-        let mut ci = vec![0.0; rp];
-        if nd.is_leaf() {
-            let u = f.u[i].as_ref().unwrap();
-            gemv(1.0, u, Trans::Yes, &b[nd.lo..nd.hi], 0.0, &mut ci);
-        } else {
-            // Sum of children c (each of length = own rank), then W_iᵀ.
-            let r_own = f.landmark_idx[i].len();
-            let mut csum = vec![0.0; r_own];
-            for &ch in &nd.children {
-                for (s, v) in csum.iter_mut().zip(c[ch].iter()) {
-                    *s += v;
-                }
-            }
-            let w = f.w[i].as_ref().unwrap();
-            gemv(1.0, w, Trans::Yes, &csum, 0.0, &mut ci);
-        }
-        c[i] = ci;
     }
 
-    // ---- Sibling exchange: d_l += Σ_p (Σ_{siblings i of l} c_i). ----
-    for p in f.tree.nonleaves() {
+    // ---- Upward, deepest level first: compute c. ----
+    for depth in (1..=max_depth).rev() {
+        let ids = &by_depth[depth];
+        if ids.is_empty() {
+            continue;
+        }
+        let results = parallel_map(threads, ids, |&i| {
+            let nd = &f.tree.nodes[i];
+            let rp = f.parent_rank(i);
+            let mut ci = vec![0.0; rp];
+            if nd.is_leaf() {
+                let u = f.u[i].as_ref().unwrap();
+                gemv(1.0, u, Trans::Yes, &b[nd.lo..nd.hi], 0.0, &mut ci);
+            } else {
+                // Sum of children c (each of length = own rank), then W_iᵀ.
+                let r_own = f.landmark_idx[i].len();
+                let mut csum = vec![0.0; r_own];
+                for &ch in &nd.children {
+                    for (s, v) in csum.iter_mut().zip(c[ch].iter()) {
+                        *s += v;
+                    }
+                }
+                let w = f.w[i].as_ref().unwrap();
+                gemv(1.0, w, Trans::Yes, &csum, 0.0, &mut ci);
+            }
+            ci
+        });
+        for (&i, ci) in ids.iter().zip(results) {
+            c[i] = ci;
+        }
+    }
+
+    // ---- Sibling exchange: d_l = Σ_p (Σ_{siblings i of l} c_i). Each
+    // parent owns its children's d, so parents run concurrently. ----
+    let parents = f.tree.nonleaves();
+    let exchanged = parallel_map(threads, &parents, |&p| {
         let children = &f.tree.nodes[p].children;
         let rp = f.landmark_idx[p].len();
         let sig = f.sigma[p].as_ref().unwrap();
@@ -66,43 +105,66 @@ pub fn hmatvec(f: &HFactors, b: &[f64]) -> Vec<f64> {
                 *t += v;
             }
         }
+        let mut out = Vec::with_capacity(children.len());
         for &ch in children {
             // others = total − c_ch
             let others: Vec<f64> =
                 total.iter().zip(c[ch].iter()).map(|(t, v)| t - v).collect();
             let mut dch = vec![0.0; rp];
             gemv(1.0, sig, Trans::No, &others, 0.0, &mut dch);
+            out.push((ch, dch));
+        }
+        out
+    });
+    for set in exchanged {
+        for (ch, dch) in set {
             d[ch] = dch;
         }
     }
 
-    // ---- Downward (pre-order): push d through W, finish at leaves. ----
-    // Pre-order = reverse post-order works for parent-before-child since
-    // postorder lists children first.
-    for &i in post.iter().rev() {
-        let nd = &f.tree.nodes[i];
-        if nd.is_leaf() {
+    // ---- Downward, shallowest level first: push d through W. A node's
+    // own d is final once its parent's level has run. ----
+    for depth in 1..=max_depth {
+        let pushers: Vec<usize> = by_depth[depth]
+            .iter()
+            .copied()
+            .filter(|&i| !f.tree.nodes[i].is_leaf())
+            .collect();
+        if pushers.is_empty() {
             continue;
         }
-        if nd.parent.is_some() {
-            // d_child += W_i d_i
+        let pushed = parallel_map(threads, &pushers, |&i| {
+            // wd = W_i d_i, forwarded to every child of i.
             let w = f.w[i].as_ref().unwrap();
             let r_own = f.landmark_idx[i].len();
             let mut wd = vec![0.0; r_own];
             gemv(1.0, w, Trans::No, &d[i], 0.0, &mut wd);
-            for &ch in &nd.children {
+            wd
+        });
+        for (&i, wd) in pushers.iter().zip(pushed) {
+            for &ch in &f.tree.nodes[i].children {
                 for (dc, v) in d[ch].iter_mut().zip(wd.iter()) {
                     *dc += v;
                 }
             }
         }
     }
-    for &leaf in &f.tree.leaves() {
-        let nd = &f.tree.nodes[leaf];
-        let a = f.a_leaf[leaf].as_ref().unwrap();
-        gemv(1.0, a, Trans::No, &b[nd.lo..nd.hi], 0.0, &mut y[nd.lo..nd.hi]);
-        let u = f.u[leaf].as_ref().unwrap();
-        gemv(1.0, u, Trans::No, &d[leaf], 1.0, &mut y[nd.lo..nd.hi]);
+
+    // ---- Leaf finish: y_i = A_ii b_i + U_i d_i over disjoint windows. ----
+    let leaves = f.tree.leaves();
+    let ranges: Vec<(usize, usize)> =
+        leaves.iter().map(|&l| (f.tree.nodes[l].lo, f.tree.nodes[l].hi)).collect();
+    {
+        let slices = disjoint_slices(&mut y, &ranges);
+        let items: Vec<(usize, &mut [f64])> =
+            leaves.iter().copied().zip(slices).collect();
+        run_parallel(threads, items, |(leaf, ys)| {
+            let nd = &f.tree.nodes[leaf];
+            let a = f.a_leaf[leaf].as_ref().unwrap();
+            gemv(1.0, a, Trans::No, &b[nd.lo..nd.hi], 0.0, ys);
+            let u = f.u[leaf].as_ref().unwrap();
+            gemv(1.0, u, Trans::No, &d[leaf], 1.0, ys);
+        });
     }
     y
 }
@@ -168,6 +230,25 @@ mod tests {
                         slow[i]
                     );
                 }
+            }
+        }
+    }
+
+    /// Thread count must not change the result at all (the parallel
+    /// schedule computes the same values and applies them in the same
+    /// order; see the module docs).
+    #[test]
+    fn thread_count_is_bitwise_irrelevant() {
+        for (f, seed) in [
+            (build(96, 8, 8, Gaussian::new(0.5), 21), 31u64),
+            (build(70, 6, 10, Laplace::new(0.9), 22), 32),
+        ] {
+            let mut rng = Rng::new(seed);
+            let b: Vec<f64> = (0..f.n()).map(|_| rng.normal()).collect();
+            let y1 = hmatvec_with_threads(&f, &b, 1);
+            for threads in [2usize, 3, 4, 8] {
+                let yt = hmatvec_with_threads(&f, &b, threads);
+                assert_eq!(y1, yt, "threads={threads}");
             }
         }
     }

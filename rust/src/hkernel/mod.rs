@@ -25,6 +25,6 @@ pub mod solve;
 
 pub use build::{size_rule, size_rule_from_rank, HConfig, HFactors};
 pub use persist::{load_model, save_model};
-pub use matvec::hmatvec;
+pub use matvec::{hmatvec, hmatvec_mat, hmatvec_original, hmatvec_with_threads};
 pub use oos::HPredictor;
 pub use solve::HSolver;

@@ -222,7 +222,13 @@ mod tests {
     use crate::kernels::{Gaussian, KernelKind, Laplace};
     use crate::util::rng::Rng;
 
-    fn build(n: usize, r: usize, n0: usize, kind: KernelKind, seed: u64) -> std::sync::Arc<HFactors> {
+    fn build(
+        n: usize,
+        r: usize,
+        n0: usize,
+        kind: KernelKind,
+        seed: u64,
+    ) -> std::sync::Arc<HFactors> {
         let mut rng = Rng::new(seed);
         let x = Mat::from_fn(n, 3, |_, _| rng.uniform(0.0, 1.0));
         let mut cfg = HConfig::new(kind, r).with_seed(seed + 100);

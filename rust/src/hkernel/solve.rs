@@ -32,6 +32,7 @@
 use super::build::HFactors;
 use crate::error::Result;
 use crate::linalg::{gemm, matmul, Cholesky, Lu, Mat, Trans};
+use crate::util::parallel::{auto_threads, parallel_map};
 
 /// Per-leaf factorization state.
 struct LeafState {
@@ -64,75 +65,79 @@ impl<'a> HSolver<'a> {
     /// Factor `A + λI` where A is the hierarchical kernel matrix described
     /// by `f`. `lambda` is the ridge regularization (the paper's λ − λ′,
     /// since λ′ is already inside the factors).
+    ///
+    /// The per-leaf factorizations (one n0×n0 Cholesky + the Z/S blocks
+    /// each) are independent and run across the scoped-thread pool; the
+    /// r×r inner-node chain stays on the post-order. Per-node log-det
+    /// contributions are summed in post-order afterwards, so the result
+    /// is bitwise identical for every thread count.
     pub fn factor(f: &'a HFactors, lambda: f64) -> Result<HSolver<'a>> {
         let nn = f.tree.nodes.len();
         let mut leaf: Vec<Option<LeafState>> = (0..nn).map(|_| None).collect();
         let mut node: Vec<Option<NodeState>> = (0..nn).map(|_| None).collect();
-        let mut logdet = 0.0;
+        // Per-node log-det contribution, reduced in post-order at the end.
+        let mut ld: Vec<f64> = vec![0.0; nn];
         // S_child per node, consumed by the parent.
         let mut s: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+        let threads = auto_threads(f.n());
+        let post = f.tree.postorder();
 
-        for &i in &f.tree.postorder() {
+        // --- Leaves (parallel): H_j, Cholesky, Z_j, S_j. ---
+        let leaves = f.tree.leaves();
+        let louts = parallel_map(threads, &leaves, |&i| leaf_factor(f, i, lambda));
+        for (&i, res) in leaves.iter().zip(louts) {
+            let (state, sj, ldj) = res?;
+            leaf[i] = Some(state);
+            s[i] = sj;
+            ld[i] = ldj;
+        }
+
+        // --- Inner nodes (sequential post-order; children S ready). ---
+        for &i in &post {
             let nd = &f.tree.nodes[i];
             if nd.is_leaf() {
-                let a = f.a_leaf[i].as_ref().unwrap();
-                let mut h = a.clone();
-                h.add_diag(lambda);
-                if let Some(p) = nd.parent {
-                    // H_j = A + λI − U Σ_p Uᵀ
-                    let u = f.u[i].as_ref().unwrap();
-                    let sig = f.sigma[p].as_ref().unwrap();
-                    let us = matmul(u, Trans::No, sig, Trans::No);
-                    gemm(-1.0, &us, Trans::No, u, Trans::Yes, 1.0, &mut h);
-                    h.symmetrize();
-                    let chol = Cholesky::new_jittered(&h, 30)?;
-                    let zu = chol.solve_mat(u);
-                    logdet += chol.logdet();
-                    // S_j = U_jᵀ Z_j
-                    let sj = matmul(u, Trans::Yes, &zu, Trans::No);
-                    s[i] = Some(sj);
-                    leaf[i] = Some(LeafState { chol, zu });
-                } else {
-                    // Single-leaf tree: A + λI is the whole matrix.
-                    let chol = Cholesky::new_jittered(&h, 30)?;
-                    logdet += chol.logdet();
-                    leaf[i] = Some(LeafState { chol, zu: Mat::zeros(nd.len(), 0) });
-                }
-            } else {
-                let r_i = f.landmark_idx[i].len();
-                // Ŝ_i = Σ_children S_child
-                let mut shat = Mat::zeros(r_i, r_i);
-                for &ch in &nd.children {
-                    shat.axpy(1.0, s[ch].as_ref().unwrap());
-                }
-                shat.symmetrize();
-                // G_i
-                let sig = f.sigma[i].as_ref().unwrap();
-                let mut g = sig.clone();
-                if let Some(p) = nd.parent {
-                    let w = f.w[i].as_ref().unwrap();
-                    let sp = f.sigma[p].as_ref().unwrap();
-                    let wsp = matmul(w, Trans::No, sp, Trans::No);
-                    gemm(-1.0, &wsp, Trans::No, w, Trans::Yes, 1.0, &mut g);
-                    g.symmetrize();
-                }
-                // (I + G Ŝ)
-                let mut igs = matmul(&g, Trans::No, &shat, Trans::No);
-                igs.add_diag(1.0);
-                let lu = Lu::new(&igs)?;
-                logdet += lu.logabsdet();
-                if nd.parent.is_some() {
-                    // T_i = Ŝ − Ŝ Φ(Ŝ), S_i = W_iᵀ T_i W_i
-                    let phi_s = phi(&g, &lu, &shat);
-                    let mut t = shat.clone();
-                    gemm(-1.0, &shat, Trans::No, &phi_s, Trans::No, 1.0, &mut t);
-                    let w = f.w[i].as_ref().unwrap();
-                    let tw = matmul(&t, Trans::No, w, Trans::No);
-                    let si = matmul(w, Trans::Yes, &tw, Trans::No);
-                    s[i] = Some(si);
-                }
-                node[i] = Some(NodeState { shat, g, lu });
+                continue;
             }
+            let r_i = f.landmark_idx[i].len();
+            // Ŝ_i = Σ_children S_child
+            let mut shat = Mat::zeros(r_i, r_i);
+            for &ch in &nd.children {
+                shat.axpy(1.0, s[ch].as_ref().unwrap());
+            }
+            shat.symmetrize();
+            // G_i
+            let sig = f.sigma[i].as_ref().unwrap();
+            let mut g = sig.clone();
+            if let Some(p) = nd.parent {
+                let w = f.w[i].as_ref().unwrap();
+                let sp = f.sigma[p].as_ref().unwrap();
+                let wsp = matmul(w, Trans::No, sp, Trans::No);
+                gemm(-1.0, &wsp, Trans::No, w, Trans::Yes, 1.0, &mut g);
+                g.symmetrize();
+            }
+            // (I + G Ŝ)
+            let mut igs = matmul(&g, Trans::No, &shat, Trans::No);
+            igs.add_diag(1.0);
+            let lu = Lu::new(&igs)?;
+            ld[i] = lu.logabsdet();
+            if nd.parent.is_some() {
+                // T_i = Ŝ − Ŝ Φ(Ŝ), S_i = W_iᵀ T_i W_i
+                let phi_s = phi(&g, &lu, &shat);
+                let mut t = shat.clone();
+                gemm(-1.0, &shat, Trans::No, &phi_s, Trans::No, 1.0, &mut t);
+                let w = f.w[i].as_ref().unwrap();
+                let tw = matmul(&t, Trans::No, w, Trans::No);
+                let si = matmul(w, Trans::Yes, &tw, Trans::No);
+                s[i] = Some(si);
+            }
+            node[i] = Some(NodeState { shat, g, lu });
+        }
+
+        // Deterministic reduction: the same order the sequential
+        // factorization accumulated in.
+        let mut logdet = 0.0;
+        for &i in &post {
+            logdet += ld[i];
         }
         Ok(HSolver { f, lambda, leaf, node, logdet })
     }
@@ -161,37 +166,47 @@ impl<'a> HSolver<'a> {
             return self.leaf[0].as_ref().unwrap().chol.solve_mat(y);
         }
 
-        // ---- Upward: per-leaf z, per-node t̂ / t. ----
+        // ---- Upward: per-leaf z (parallel — each leaf's triangular
+        // solves are independent), then per-node t̂ / t in post-order. ----
         let mut z: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
         let mut t: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
         let mut that: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+        let threads = auto_threads(n);
+        let leaves = self.f.tree.leaves();
+        let leaf_zt = parallel_map(threads, &leaves, |&i| {
+            let nd = &self.f.tree.nodes[i];
+            let st = self.leaf[i].as_ref().unwrap();
+            let yi = y.row_range(nd.lo, nd.hi);
+            let zi = st.chol.solve_mat(&yi);
+            // t_j = U_jᵀ z_j
+            let u = self.f.u[i].as_ref().unwrap();
+            let ti = matmul(u, Trans::Yes, &zi, Trans::No);
+            (zi, ti)
+        });
+        for (&i, (zi, ti)) in leaves.iter().zip(leaf_zt) {
+            z[i] = Some(zi);
+            t[i] = Some(ti);
+        }
         for &i in &post {
             let nd = &self.f.tree.nodes[i];
             if nd.is_leaf() {
-                let st = self.leaf[i].as_ref().unwrap();
-                let yi = y.row_range(nd.lo, nd.hi);
-                let zi = st.chol.solve_mat(&yi);
-                // t_j = U_jᵀ z_j
-                let u = self.f.u[i].as_ref().unwrap();
-                t[i] = Some(matmul(u, Trans::Yes, &zi, Trans::No));
-                z[i] = Some(zi);
-            } else {
-                let st = self.node[i].as_ref().unwrap();
-                let r_i = st.shat.rows();
-                let mut th = Mat::zeros(r_i, m);
-                for &ch in &nd.children {
-                    th.axpy(1.0, t[ch].as_ref().unwrap());
-                }
-                if nd.parent.is_some() {
-                    // t_i = W_iᵀ (t̂ − Ŝ Φ(t̂))
-                    let phi_t = phi(&st.g, &st.lu, &th);
-                    let mut corr = th.clone();
-                    gemm(-1.0, &st.shat, Trans::No, &phi_t, Trans::No, 1.0, &mut corr);
-                    let w = self.f.w[i].as_ref().unwrap();
-                    t[i] = Some(matmul(w, Trans::Yes, &corr, Trans::No));
-                }
-                that[i] = Some(th);
+                continue; // handled by the parallel pass above
             }
+            let st = self.node[i].as_ref().unwrap();
+            let r_i = st.shat.rows();
+            let mut th = Mat::zeros(r_i, m);
+            for &ch in &nd.children {
+                th.axpy(1.0, t[ch].as_ref().unwrap());
+            }
+            if nd.parent.is_some() {
+                // t_i = W_iᵀ (t̂ − Ŝ Φ(t̂))
+                let phi_t = phi(&st.g, &st.lu, &th);
+                let mut corr = th.clone();
+                gemm(-1.0, &st.shat, Trans::No, &phi_t, Trans::No, 1.0, &mut corr);
+                let w = self.f.w[i].as_ref().unwrap();
+                t[i] = Some(matmul(w, Trans::Yes, &corr, Trans::No));
+            }
+            that[i] = Some(th);
         }
 
         // ---- Downward: incoming corrections q, finish at leaves. ----
@@ -262,6 +277,40 @@ fn phi(g: &Mat, lu: &Lu, m: &Mat) -> Mat {
     lu.solve_mat(&gm)
 }
 
+/// Factorization work for one leaf: the Schur complement
+/// H_j = A_jj + λI − U_j Σ_p U_jᵀ, its Cholesky, Z_j = H_j^{-1} U_j and
+/// S_j = U_jᵀ Z_j. Independent across leaves — the parallel unit of
+/// [`HSolver::factor`]. Returns (state, S_j, logdet contribution).
+fn leaf_factor(
+    f: &HFactors,
+    i: usize,
+    lambda: f64,
+) -> Result<(LeafState, Option<Mat>, f64)> {
+    let nd = &f.tree.nodes[i];
+    let a = f.a_leaf[i].as_ref().unwrap();
+    let mut h = a.clone();
+    h.add_diag(lambda);
+    if let Some(p) = nd.parent {
+        // H_j = A + λI − U Σ_p Uᵀ
+        let u = f.u[i].as_ref().unwrap();
+        let sig = f.sigma[p].as_ref().unwrap();
+        let us = matmul(u, Trans::No, sig, Trans::No);
+        gemm(-1.0, &us, Trans::No, u, Trans::Yes, 1.0, &mut h);
+        h.symmetrize();
+        let chol = Cholesky::new_jittered(&h, 30)?;
+        let zu = chol.solve_mat(u);
+        let ldj = chol.logdet();
+        // S_j = U_jᵀ Z_j
+        let sj = matmul(u, Trans::Yes, &zu, Trans::No);
+        Ok((LeafState { chol, zu }, Some(sj), ldj))
+    } else {
+        // Single-leaf tree: A + λI is the whole matrix.
+        let chol = Cholesky::new_jittered(&h, 30)?;
+        let ldj = chol.logdet();
+        Ok((LeafState { chol, zu: Mat::zeros(nd.len(), 0) }, None, ldj))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +337,10 @@ mod tests {
         HFactors::build(&x, cfg).unwrap()
     }
 
+    fn kmeans3() -> SplitRule {
+        SplitRule::KMeans { k: 3, iters: 10 }
+    }
+
     fn dense_solve(f: &HFactors, lambda: f64, y: &Mat) -> Mat {
         let mut k = densify(f);
         k.add_diag(lambda);
@@ -303,7 +356,7 @@ mod tests {
             build_custom(60, 6, 6, Gaussian::new(0.5), 2, false, SplitRule::RandomProjection),
             build_custom(57, 5, 12, Laplace::new(0.8), 3, false, SplitRule::RandomProjection),
             build_custom(64, 8, 8, Imq::new(0.6), 4, true, SplitRule::KdTree),
-            build_custom(72, 6, 9, Gaussian::new(1.1), 5, false, SplitRule::KMeans { k: 3, iters: 10 }),
+            build_custom(72, 6, 9, Gaussian::new(1.1), 5, false, kmeans3()),
         ];
         let lambda = 0.05;
         for f in &cases {
@@ -322,7 +375,8 @@ mod tests {
     #[test]
     fn logdet_matches_dense() {
         for (seed, avoid) in [(1u64, true), (2, false)] {
-            let f = build_custom(50, 5, 10, Gaussian::new(0.6), seed, avoid, SplitRule::RandomProjection);
+            let rp = SplitRule::RandomProjection;
+            let f = build_custom(50, 5, 10, Gaussian::new(0.6), seed, avoid, rp);
             let lambda = 0.1;
             let solver = HSolver::factor(&f, lambda).unwrap();
             let mut k = densify(&f);

@@ -32,6 +32,16 @@ pub trait BlockEvaluator {
         self.eval_block(kind, x, y, &mut out);
         out
     }
+
+    /// Whether the parallel factor-construction path may be used with
+    /// this evaluator. Must return `true` only if block evaluation is
+    /// stateless and produces results identical to [`NativeEvaluator`]
+    /// (the parallel path dispatches blocks through per-thread native
+    /// evaluation; see `hkernel::build`). The PJRT evaluator keeps the
+    /// default `false`: its client is single-threaded.
+    fn parallel_safe(&self) -> bool {
+        false
+    }
 }
 
 /// Pure-Rust evaluator (always available; f64 precision).
@@ -46,6 +56,10 @@ impl BlockEvaluator for NativeEvaluator {
             Metric::SqL2 => sql2_block(kind, x, y, out),
             Metric::L1 => l1_block(kind, x, y, out),
         }
+    }
+
+    fn parallel_safe(&self) -> bool {
+        true
     }
 }
 

@@ -9,6 +9,8 @@ pub mod krr;
 pub mod metrics;
 
 pub use cv::{grid_search, GridResult};
-pub use kpca::{alignment_difference, kpca_embed_dense, kpca_embed_features, kpca_embed_hierarchical};
+pub use kpca::{
+    alignment_difference, kpca_embed_dense, kpca_embed_features, kpca_embed_hierarchical,
+};
 pub use krr::{EngineSpec, KrrModel, TrainConfig};
 pub use metrics::{accuracy, relative_error, rmse};

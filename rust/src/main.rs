@@ -8,7 +8,7 @@
 //!   serve      train, then serve predictions over TCP (JSON lines)
 //!   likelihood GP log-marginal likelihood / MLE bandwidth search
 
-use anyhow::{anyhow, Result};
+use hck::error::{Error, Result};
 use hck::coordinator::{serve_tcp, BatchPolicy, PredictionService};
 use hck::data::{self, Dataset};
 use hck::kernels::KernelKind;
@@ -17,6 +17,14 @@ use hck::partition::SplitRule;
 use hck::util::args::{usage, Args, OptSpec};
 use hck::util::timer::Timer;
 use std::sync::Arc;
+
+/// `anyhow!`-style constructor for CLI errors (the offline crate set has
+/// no `anyhow`; hck's own error type carries the message instead).
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        Error::config(format!($($arg)*))
+    };
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -69,19 +77,29 @@ fn print_help() {
     );
 }
 
+/// Shorthand for a value-taking option (keeps tables one line per option).
+fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec { name, help, default, is_flag: false }
+}
+
+/// Shorthand for a boolean flag.
+fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, default: None, is_flag: true }
+}
+
 fn common_data_opts() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "dataset", help: "Table-1 analogue name (e.g. cadata, SUSY, covtype)", default: Some("cadata"), is_flag: false },
-        OptSpec { name: "data", help: "path to a LIBSVM file (overrides --dataset)", default: None, is_flag: false },
-        OptSpec { name: "n-train", help: "training size (synthetic only; 0 = spec default)", default: Some("0"), is_flag: false },
-        OptSpec { name: "n-test", help: "testing size (synthetic only; 0 = spec default)", default: Some("0"), is_flag: false },
-        OptSpec { name: "seed", help: "random seed", default: Some("0"), is_flag: false },
+        opt("dataset", "Table-1 analogue name (e.g. cadata, SUSY, covtype)", Some("cadata")),
+        opt("data", "path to a LIBSVM file (overrides --dataset)", None),
+        opt("n-train", "training size (synthetic only; 0 = spec default)", Some("0")),
+        opt("n-test", "testing size (synthetic only; 0 = spec default)", Some("0")),
+        opt("seed", "random seed", Some("0")),
     ]
 }
 
 /// Resolve (train, test) from --data or --dataset options.
 fn load_data(a: &Args) -> Result<(Dataset, Dataset)> {
-    let seed = a.u64("seed").map_err(anyhow::Error::msg)?;
+    let seed = a.u64("seed").map_err(Error::Config)?;
     if let Some(path) = a.get("data") {
         let mut ds = data::libsvm::load(path, path)?;
         data::preprocess::normalize_unit(&mut ds);
@@ -92,11 +110,11 @@ fn load_data(a: &Args) -> Result<(Dataset, Dataset)> {
         let mut rng = hck::util::rng::Rng::new(seed);
         Ok(data::preprocess::train_test_split(&ds, 0.2, &mut rng))
     } else {
-        let name = a.req("dataset").map_err(anyhow::Error::msg)?;
+        let name = a.req("dataset").map_err(Error::Config)?;
         let spec = data::spec_by_name(name)
             .ok_or_else(|| anyhow!("unknown dataset '{name}' (see 'hck info')"))?;
-        let n_train = a.usize("n-train").map_err(anyhow::Error::msg)?;
-        let n_test = a.usize("n-test").map_err(anyhow::Error::msg)?;
+        let n_train = a.usize("n-train").map_err(Error::Config)?;
+        let n_test = a.usize("n-test").map_err(Error::Config)?;
         let nt = if n_train == 0 { spec.default_n_train } else { n_train };
         let ns = if n_test == 0 { spec.default_n_test } else { n_test };
         Ok(data::synthetic::generate(spec, nt, ns, seed))
@@ -106,11 +124,15 @@ fn load_data(a: &Args) -> Result<(Dataset, Dataset)> {
 fn model_opts() -> Vec<OptSpec> {
     let mut o = common_data_opts();
     o.extend([
-        OptSpec { name: "engine", help: "hierarchical | nystrom | fourier | independent | exact", default: Some("hierarchical"), is_flag: false },
-        OptSpec { name: "r", help: "rank / leaf size", default: Some("128"), is_flag: false },
-        OptSpec { name: "kernel", help: "family:sigma, e.g. gaussian:0.5", default: Some("gaussian:0.5"), is_flag: false },
-        OptSpec { name: "lambda", help: "ridge regularization", default: Some("0.01"), is_flag: false },
-        OptSpec { name: "rule", help: "rp | pca | kd | kmeans", default: Some("rp"), is_flag: false },
+        opt(
+            "engine",
+            "hierarchical | nystrom | fourier | independent | exact",
+            Some("hierarchical"),
+        ),
+        opt("r", "rank / leaf size", Some("128")),
+        opt("kernel", "family:sigma, e.g. gaussian:0.5", Some("gaussian:0.5")),
+        opt("lambda", "ridge regularization", Some("0.01")),
+        opt("rule", "rp | pca | kd | kmeans", Some("rp")),
     ]);
     o
 }
@@ -126,10 +148,10 @@ fn parse_rule(text: &str) -> Result<SplitRule> {
 }
 
 fn build_config(a: &Args) -> Result<TrainConfig> {
-    let kind = KernelKind::parse(a.req("kernel").map_err(anyhow::Error::msg)?)
-        .map_err(anyhow::Error::msg)?;
-    let r = a.usize("r").map_err(anyhow::Error::msg)?;
-    let engine = match a.req("engine").map_err(anyhow::Error::msg)? {
+    let kind = KernelKind::parse(a.req("kernel").map_err(Error::Config)?)
+        .map_err(Error::Config)?;
+    let r = a.usize("r").map_err(Error::Config)?;
+    let engine = match a.req("engine").map_err(Error::Config)? {
         "hierarchical" => EngineSpec::Hierarchical { rank: r },
         "nystrom" => EngineSpec::Nystrom { rank: r },
         "fourier" => EngineSpec::Fourier { rank: r },
@@ -138,9 +160,9 @@ fn build_config(a: &Args) -> Result<TrainConfig> {
         other => return Err(anyhow!("unknown engine '{other}'")),
     };
     Ok(TrainConfig::new(kind, engine)
-        .with_lambda(a.f64("lambda").map_err(anyhow::Error::msg)?)
-        .with_seed(a.u64("seed").map_err(anyhow::Error::msg)?)
-        .with_rule(parse_rule(a.req("rule").map_err(anyhow::Error::msg)?)?))
+        .with_lambda(a.f64("lambda").map_err(Error::Config)?)
+        .with_seed(a.u64("seed").map_err(Error::Config)?)
+        .with_rule(parse_rule(a.req("rule").map_err(Error::Config)?)?))
 }
 
 fn cmd_info() -> Result<()> {
@@ -179,15 +201,19 @@ fn cmd_info() -> Result<()> {
 
 fn cmd_data_gen(argv: Vec<String>) -> Result<()> {
     let mut spec = common_data_opts();
-    spec.push(OptSpec { name: "out", help: "output LIBSVM path (train set; .test appended for test)", default: Some("dataset.libsvm"), is_flag: false });
-    spec.push(OptSpec { name: "help", help: "show help", default: None, is_flag: true });
-    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    spec.push(opt(
+        "out",
+        "output LIBSVM path (train set; .test appended for test)",
+        Some("dataset.libsvm"),
+    ));
+    spec.push(flag("help", "show help"));
+    let a = Args::parse(argv, &spec).map_err(Error::Config)?;
     if a.flag("help") {
         println!("{}", usage("hck data-gen", "generate a synthetic data set", &spec));
         return Ok(());
     }
     let (train, test) = load_data(&a)?;
-    let out = a.req("out").map_err(anyhow::Error::msg)?;
+    let out = a.req("out").map_err(Error::Config)?;
     data::libsvm::write(&train, out)?;
     data::libsvm::write(&test, &format!("{out}.test"))?;
     println!(
@@ -204,9 +230,9 @@ fn cmd_data_gen(argv: Vec<String>) -> Result<()> {
 
 fn cmd_train(argv: Vec<String>) -> Result<()> {
     let mut spec = model_opts();
-    spec.push(OptSpec { name: "save", help: "save the fitted hierarchical model to this path", default: None, is_flag: false });
-    spec.push(OptSpec { name: "help", help: "show help", default: None, is_flag: true });
-    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    spec.push(opt("save", "save the fitted hierarchical model to this path", None));
+    spec.push(flag("help", "show help"));
+    let a = Args::parse(argv, &spec).map_err(Error::Config)?;
     if a.flag("help") {
         println!("{}", usage("hck train", "train a kernel model", &spec));
         return Ok(());
@@ -257,18 +283,18 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
 
 fn cmd_predict(argv: Vec<String>) -> Result<()> {
     let spec = vec![
-        OptSpec { name: "model", help: "path of a model saved by `hck train --save`", default: None, is_flag: false },
-        OptSpec { name: "data", help: "LIBSVM file of query points", default: None, is_flag: false },
-        OptSpec { name: "quiet", help: "only print the summary metric", default: None, is_flag: true },
-        OptSpec { name: "help", help: "show help", default: None, is_flag: true },
+        opt("model", "path of a model saved by `hck train --save`", None),
+        opt("data", "LIBSVM file of query points", None),
+        flag("quiet", "only print the summary metric"),
+        flag("help", "show help"),
     ];
-    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    let a = Args::parse(argv, &spec).map_err(Error::Config)?;
     if a.flag("help") {
         println!("{}", usage("hck predict", "predict with a saved model", &spec));
         return Ok(());
     }
-    let model_path = a.req("model").map_err(anyhow::Error::msg)?;
-    let data_path = a.req("data").map_err(anyhow::Error::msg)?;
+    let model_path = a.req("model").map_err(Error::Config)?;
+    let data_path = a.req("data").map_err(Error::Config)?;
     let (factors, w) = hck::hkernel::load_model(model_path)?;
     let queries = data::libsvm::load(data_path, data_path)?;
     if queries.d() > factors.x.cols() {
@@ -308,12 +334,12 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let mut spec = model_opts();
     spec.extend([
-        OptSpec { name: "port", help: "TCP port", default: Some("7878"), is_flag: false },
-        OptSpec { name: "max-batch", help: "dynamic batch size cap", default: Some("64"), is_flag: false },
-        OptSpec { name: "max-wait-ms", help: "batching window (ms)", default: Some("2"), is_flag: false },
-        OptSpec { name: "help", help: "show help", default: None, is_flag: true },
+        opt("port", "TCP port", Some("7878")),
+        opt("max-batch", "dynamic batch size cap", Some("64")),
+        opt("max-wait-ms", "batching window (ms)", Some("2")),
+        flag("help", "show help"),
     ]);
-    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    let a = Args::parse(argv, &spec).map_err(Error::Config)?;
     if a.flag("help") {
         println!("{}", usage("hck serve", "train, then serve predictions over TCP", &spec));
         return Ok(());
@@ -323,16 +349,17 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     eprintln!("training {} on {} (n={})...", cfg.engine.name(), train.name, train.n());
     let model = KrrModel::fit_dataset(&cfg, &train)?;
     let policy = BatchPolicy {
-        max_batch: a.usize("max-batch").map_err(anyhow::Error::msg)?,
+        max_batch: a.usize("max-batch").map_err(Error::Config)?,
         max_wait: std::time::Duration::from_millis(
-            a.u64("max-wait-ms").map_err(anyhow::Error::msg)?,
+            a.u64("max-wait-ms").map_err(Error::Config)?,
         ),
     };
     let svc = Arc::new(PredictionService::start(Arc::new(model), policy));
-    let port = a.usize("port").map_err(anyhow::Error::msg)?;
+    let port = a.usize("port").map_err(Error::Config)?;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
     eprintln!(
-        "serving on 127.0.0.1:{port} — send {{\"features\": [...]}} lines; {{\"cmd\":\"shutdown\"}} to stop"
+        "serving on 127.0.0.1:{port} — send {{\"features\": [...]}} lines; \
+         {{\"cmd\":\"shutdown\"}} to stop"
     );
     let conns = serve_tcp(listener, svc.clone())?;
     let snap = svc.metrics.snapshot();
@@ -345,16 +372,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
 
 fn cmd_likelihood(argv: Vec<String>) -> Result<()> {
     let mut spec = model_opts();
-    spec.push(OptSpec { name: "mle", help: "run golden-section MLE over sigma", default: None, is_flag: true });
-    spec.push(OptSpec { name: "help", help: "show help", default: None, is_flag: true });
-    let a = Args::parse(argv, &spec).map_err(anyhow::Error::msg)?;
+    spec.push(flag("mle", "run golden-section MLE over sigma"));
+    spec.push(flag("help", "show help"));
+    let a = Args::parse(argv, &spec).map_err(Error::Config)?;
     if a.flag("help") {
         println!("{}", usage("hck likelihood", "GP log-likelihood / MLE", &spec));
         return Ok(());
     }
     let (train, _) = load_data(&a)?;
     let cfg = build_config(&a)?;
-    let r = a.usize("r").map_err(anyhow::Error::msg)?;
+    let r = a.usize("r").map_err(Error::Config)?;
     let mut hcfg = hck::hkernel::HConfig::new(cfg.kind, r).with_seed(cfg.seed);
     hcfg.n0 = r;
     if a.flag("mle") {

@@ -167,6 +167,58 @@ impl Table {
     }
 }
 
+/// Machine-readable benchmark emission.
+///
+/// Collects flat row objects and writes one JSON document
+/// `{"bench": ..., "rows": [...]}` — the format every CI perf artifact
+/// (`BENCH_*.json`) uses, so successive PRs have a comparable perf
+/// trajectory. Encoding goes through [`crate::util::json::Json`], whose
+/// BTreeMap-backed objects serialize deterministically.
+#[derive(Debug)]
+pub struct BenchJson {
+    name: String,
+    rows: Vec<crate::util::json::Json>,
+}
+
+impl BenchJson {
+    /// Start a report for the named benchmark.
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Append one measurement row from key/value pairs.
+    pub fn row(&mut self, pairs: Vec<(&str, crate::util::json::Json)>) {
+        self.rows.push(crate::util::json::Json::obj(pairs));
+    }
+
+    /// Number of rows collected so far.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether no rows have been collected.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Serialize the report to a compact JSON string.
+    pub fn encode(&self) -> String {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("rows", Json::Arr(self.rows.clone())),
+        ])
+        .encode()
+    }
+
+    /// Write the report to a file (one JSON document + trailing newline).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut text = self.encode();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+}
+
 /// Mean and (population) standard deviation of a sample.
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     if xs.is_empty() {
@@ -232,6 +284,38 @@ mod tests {
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("name"));
         assert!(lines[3].starts_with("longer"));
+    }
+
+    #[test]
+    fn bench_json_roundtrip() {
+        use crate::util::json::Json;
+        let mut r = BenchJson::new("hotpath");
+        assert!(r.is_empty());
+        r.row(vec![
+            ("n", Json::Num(50000.0)),
+            ("threads", Json::Num(4.0)),
+            ("ns_per_op", Json::Num(123.5)),
+        ]);
+        assert_eq!(r.len(), 1);
+        let parsed = Json::parse(&r.encode()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("hotpath"));
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("n").unwrap().as_usize(), Some(50000));
+        assert_eq!(rows[0].get("ns_per_op").unwrap().as_f64(), Some(123.5));
+    }
+
+    #[test]
+    fn bench_json_writes_file() {
+        let mut r = BenchJson::new("t");
+        r.row(vec![("k", crate::util::json::Json::Num(1.0))]);
+        let path = std::env::temp_dir()
+            .join(format!("hck_bench_json_{}.json", std::process::id()));
+        let path = path.to_string_lossy().into_owned();
+        r.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.ends_with('\n'));
+        assert!(crate::util::json::Json::parse(text.trim()).is_ok());
     }
 
     #[test]

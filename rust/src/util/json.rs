@@ -214,9 +214,13 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
-            self.i += 1;
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') => {
+                    self.i += 1;
+                }
+                _ => break,
+            }
         }
         std::str::from_utf8(&self.b[start..self.i])
             .ok()

@@ -1,9 +1,10 @@
 //! Shared substrates: PRNG, JSON, CLI argument parsing, timing, benchmark
-//! harness. These are hand-rolled because the build is fully offline and the
-//! vendored crate set is minimal.
+//! harness, and the scoped-thread parallel executor. These are hand-rolled
+//! because the build is fully offline and the vendored crate set is minimal.
 
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod parallel;
 pub mod rng;
 pub mod timer;

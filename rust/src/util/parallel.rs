@@ -1,0 +1,229 @@
+//! Scoped-thread parallel executor for the structured-matrix hot paths.
+//!
+//! The offline crate set has no `rayon`, so this module provides the
+//! minimal primitives the hierarchical kernel needs: run a bag of
+//! independent work items across a fixed number of scoped threads
+//! ([`run_parallel`]) and an order-preserving parallel map
+//! ([`parallel_map`]). Both degenerate to a plain sequential loop when
+//! `threads <= 1` or the item count is tiny, so the single-threaded path
+//! has zero overhead and is trivially deterministic.
+//!
+//! **Determinism policy.** Callers in `hkernel` are written so that every
+//! work item computes its outputs independently (no shared accumulator)
+//! and results are *applied* in a fixed sequential order afterwards.
+//! Floating-point results are therefore bitwise identical for every
+//! thread count, which is what lets the test suite assert
+//! `T threads == 1 thread` exactly (see `rust/tests/integration.rs`).
+//!
+//! The global default thread count comes from the `HCK_THREADS`
+//! environment variable (clamped to >= 1), falling back to
+//! `std::thread::available_parallelism()` capped at 16 — the structured
+//! algebra is memory-bandwidth bound well before that.
+
+use std::sync::OnceLock;
+
+/// Hard cap on the default worker count; beyond this the O(nr) kernels
+/// are bandwidth-bound and extra threads only add spawn cost.
+const MAX_DEFAULT_THREADS: usize = 16;
+
+/// Problem-size floor for the adaptive entry points: below this many
+/// training points the scoped-thread spawns cost more than the block
+/// arithmetic they parallelize, so [`auto_threads`] stays serial.
+pub const AUTO_MIN_N: usize = 4096;
+
+/// The thread count the hierarchical hot paths actually use for a
+/// problem of `n` points: 1 below [`AUTO_MIN_N`], else
+/// [`default_threads`]. Exposed so telemetry can record the true count.
+pub fn auto_threads(n: usize) -> usize {
+    if n < AUTO_MIN_N {
+        1
+    } else {
+        default_threads()
+    }
+}
+
+/// The process-wide default thread count: `HCK_THREADS` if set (>= 1),
+/// otherwise `available_parallelism()` capped at 16. Cached after the
+/// first call.
+pub fn default_threads() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(v) = std::env::var("HCK_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_DEFAULT_THREADS)
+    })
+}
+
+/// Run `f` over every item on up to `threads` scoped threads.
+///
+/// Items are dealt round-robin so neighbouring (similar-cost) items
+/// spread across workers. With `threads <= 1` (or fewer than two items)
+/// this is exactly a sequential `for` loop — the deterministic fallback.
+///
+/// `f` must be safe to call concurrently (`Sync`); each item is consumed
+/// exactly once.
+pub fn run_parallel<T: Send>(threads: usize, items: Vec<T>, f: impl Fn(T) + Sync) {
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        for item in items {
+            f(item);
+        }
+        return;
+    }
+    let mut bins: Vec<Vec<T>> = (0..threads).map(|_| Vec::new()).collect();
+    for (k, item) in items.into_iter().enumerate() {
+        bins[k % threads].push(item);
+    }
+    let fref = &f;
+    std::thread::scope(|s| {
+        // Run the first bin on the current thread; spawn the rest.
+        let mut bins = bins.into_iter();
+        let own = bins.next().unwrap_or_default();
+        for bin in bins {
+            s.spawn(move || {
+                for item in bin {
+                    fref(item);
+                }
+            });
+        }
+        for item in own {
+            fref(item);
+        }
+    });
+}
+
+/// Order-preserving parallel map: `out[i] = f(&inputs[i])`.
+///
+/// The output order matches the input order regardless of scheduling, so
+/// downstream sequential reductions stay deterministic.
+pub fn parallel_map<I: Sync, O: Send>(
+    threads: usize,
+    inputs: &[I],
+    f: impl Fn(&I) -> O + Sync,
+) -> Vec<O> {
+    let mut out: Vec<Option<O>> = (0..inputs.len()).map(|_| None).collect();
+    {
+        let items: Vec<(usize, &mut Option<O>)> = out.iter_mut().enumerate().collect();
+        run_parallel(threads, items, |(i, slot)| {
+            *slot = Some(f(&inputs[i]));
+        });
+    }
+    out.into_iter().map(|o| o.expect("parallel_map slot unfilled")).collect()
+}
+
+/// Split `buf` into mutable sub-slices covering the half-open ranges
+/// `ranges` (which must be sorted, disjoint and within bounds). Used to
+/// hand each partition-tree leaf its own disjoint window of a shared
+/// output vector.
+pub fn disjoint_slices<'a, T>(
+    mut buf: &'a mut [T],
+    ranges: &[(usize, usize)],
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut offset = 0usize;
+    for &(lo, hi) in ranges {
+        assert!(lo >= offset && hi >= lo, "ranges must be sorted and disjoint");
+        let (_skip, rest) = buf.split_at_mut(lo - offset);
+        let (mine, rest) = rest.split_at_mut(hi - lo);
+        out.push(mine);
+        buf = rest;
+        offset = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn run_parallel_visits_every_item_once() {
+        for threads in [1usize, 2, 3, 8] {
+            let counter = AtomicUsize::new(0);
+            let items: Vec<usize> = (0..100).collect();
+            run_parallel(threads, items, |i| {
+                counter.fetch_add(i + 1, Ordering::SeqCst);
+            });
+            // sum of 1..=100
+            assert_eq!(counter.load(Ordering::SeqCst), 5050, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_parallel_empty_and_single() {
+        run_parallel(4, Vec::<usize>::new(), |_| panic!("no items"));
+        let hits = AtomicUsize::new(0);
+        run_parallel(4, vec![7usize], |v| {
+            assert_eq!(v, 7);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let inputs: Vec<usize> = (0..257).collect();
+        for threads in [1usize, 2, 5] {
+            let out = parallel_map(threads, &inputs, |&i| i * 3);
+            assert_eq!(out.len(), 257);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * 3);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        // Same closure, same inputs: thread count must not change values.
+        let inputs: Vec<f64> = (0..64).map(|i| (i as f64) * 0.37 + 0.1).collect();
+        let f = |x: &f64| (x.sin() * 1e3).exp().sqrt() + x.ln();
+        let seq = parallel_map(1, &inputs, f);
+        for threads in [2usize, 4, 16] {
+            let par = parallel_map(threads, &inputs, f);
+            assert_eq!(seq, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn disjoint_slices_windows() {
+        let mut buf: Vec<i32> = (0..10).collect();
+        let ranges = [(0usize, 3usize), (3, 5), (7, 10)];
+        let slices = disjoint_slices(&mut buf, &ranges);
+        assert_eq!(slices.len(), 3);
+        assert_eq!(slices[0], &[0, 1, 2]);
+        assert_eq!(slices[1], &[3, 4]);
+        assert_eq!(slices[2], &[7, 8, 9]);
+    }
+
+    #[test]
+    fn disjoint_slices_parallel_write() {
+        let n = 1000;
+        let mut buf = vec![0usize; n];
+        let ranges: Vec<(usize, usize)> = (0..10).map(|k| (k * 100, (k + 1) * 100)).collect();
+        {
+            let slices = disjoint_slices(&mut buf, &ranges);
+            let items: Vec<(usize, &mut [usize])> =
+                slices.into_iter().enumerate().collect();
+            run_parallel(4, items, |(k, s)| {
+                for (j, v) in s.iter_mut().enumerate() {
+                    *v = k * 100 + j;
+                }
+            });
+        }
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
+    }
+}

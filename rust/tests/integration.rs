@@ -88,6 +88,93 @@ fn hierarchical_factors_via_pjrt_evaluator() {
     assert!(w.iter().all(|v| v.is_finite()));
 }
 
+/// Property (ISSUE 1 acceptance): the parallel matvec with T threads
+/// matches both the densified reference and the 1-thread result to
+/// ≤ 1e-10 across random trees, ranks, leaf sizes and split rules.
+#[test]
+fn parallel_matvec_matches_dense_reference_and_single_thread() {
+    use hck::hkernel::hmatvec_with_threads;
+    use hck::partition::SplitRule;
+    let cases: &[(usize, usize, usize, SplitRule, u64)] = &[
+        (120, 8, 8, SplitRule::RandomProjection, 1),
+        (97, 6, 13, SplitRule::RandomProjection, 2),
+        (150, 12, 5, SplitRule::KdTree, 3),
+        (132, 9, 11, SplitRule::KMeans { k: 3, iters: 10 }, 4),
+    ];
+    for &(n, r, n0, rule, seed) in cases {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 5, |_, _| rng.uniform(0.0, 1.0));
+        let mut cfg = HConfig::new(Gaussian::new(0.6), r)
+            .with_seed(seed * 11 + 1)
+            .with_rule(rule);
+        cfg.n0 = n0;
+        let f = HFactors::build(&x, cfg).unwrap();
+        let k = hck::hkernel::densify::densify(&f);
+        for trial in 0..2 {
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut dense = vec![0.0; n];
+            hck::linalg::gemv(1.0, &k, hck::linalg::Trans::No, &b, 0.0, &mut dense);
+            let y1 = hmatvec_with_threads(&f, &b, 1);
+            for threads in [1usize, 2, 3, 4, 8] {
+                let yt = hmatvec_with_threads(&f, &b, threads);
+                for i in 0..n {
+                    let scale = 1.0 + dense[i].abs();
+                    assert!(
+                        (yt[i] - dense[i]).abs() <= 1e-10 * scale,
+                        "vs dense: n={n} r={r} rule={rule:?} trial={trial} threads={threads} \
+                         i={i}: {} vs {}",
+                        yt[i],
+                        dense[i]
+                    );
+                    assert!(
+                        (yt[i] - y1[i]).abs() <= 1e-10 * scale,
+                        "vs 1 thread: n={n} threads={threads} i={i}"
+                    );
+                }
+                // The schedule is single-writer with ordered application,
+                // so the match is in fact bitwise.
+                assert_eq!(yt, y1, "threads={threads}");
+            }
+        }
+    }
+}
+
+/// The parallel leaf factorization must not change the solver: factor,
+/// solve and logdet agree with the dense reference whatever HCK_THREADS
+/// happens to be (the leaf states are computed independently and the
+/// log-det is reduced in post-order).
+#[test]
+fn parallel_solver_factor_matches_dense() {
+    let mut rng = Rng::new(7);
+    let n = 140;
+    let x = Mat::from_fn(n, 4, |_, _| rng.uniform(0.0, 1.0));
+    let mut cfg = HConfig::new(Gaussian::new(0.5), 10).with_seed(9);
+    cfg.n0 = 10;
+    let f = HFactors::build(&x, cfg).unwrap();
+    let lambda = 0.05;
+    let solver = HSolver::factor(&f, lambda).unwrap();
+    let mut k = hck::hkernel::densify::densify(&f);
+    k.add_diag(lambda);
+    let chol = hck::linalg::Cholesky::new_jittered(&k, 10).unwrap();
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let got = solver.solve(&y);
+    let want = chol.solve(&y);
+    for i in 0..n {
+        assert!(
+            (got[i] - want[i]).abs() <= 1e-8 * (1.0 + want[i].abs()),
+            "solve i={i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+    assert!(
+        (solver.logdet() - chol.logdet()).abs() < 1e-7 * (1.0 + chol.logdet().abs()),
+        "logdet {} vs {}",
+        solver.logdet(),
+        chol.logdet()
+    );
+}
+
 #[test]
 fn end_to_end_training_all_table1_sets() {
     // Scaled-down: every Table-1 analogue trains and beats the trivial

@@ -162,6 +162,64 @@ fn main() {
     ]);
     table.print();
 
+    // ---- batched out-of-sample: per-query loop vs leaf-grouped gemms
+    // vs the sharded scatter/gather path (the ISSUE-2 throughput rows).
+    // The loop is the pre-refactor `predict_batch` behavior; the grouped
+    // path shares leaf kernel blocks and path climbs across co-routed
+    // queries; the sharded path fans the batch out over per-subtree
+    // workers first. ----
+    let batch_sizes: &[usize] = if quick { &[16, 64] } else { &[16, 64, 256, 1024] };
+    let max_b = *batch_sizes.last().unwrap();
+    let q_all = Mat::from_fn(max_b, test.d(), |i, j| test.x[(i % test.n(), j)]);
+    let shard_depth = hck::shard::depth_for_shards(&f.tree, 4);
+    let sharded = hck::shard::ShardedPredictor::new(&pred, shard_depth);
+    println!(
+        "\n— batched out-of-sample (n={eh_n}, r={eh_r}, {} shards at depth {shard_depth}) —",
+        sharded.shards()
+    );
+    let mut table =
+        Table::new(&["batch", "loop/q", "grouped/q", "sharded/q", "grouped speedup"]);
+    for &bsz in batch_sizes {
+        let q = q_all.row_range(0, bsz);
+        let m_loop = bench.run("oos_loop", || {
+            let mut acc = 0.0;
+            for i in 0..q.rows() {
+                acc += pred.predict(q.row(i))[0];
+            }
+            acc
+        });
+        let m_grp = bench.run("oos_grouped", || pred.predict_batch(&q));
+        let m_shd = bench.run("oos_sharded", || {
+            hck::coordinator::Predictor::predict_batch(&sharded, &q)
+        });
+        let per_q = |med: f64| med / bsz as f64;
+        table.row(&[
+            bsz.to_string(),
+            fmt_secs(per_q(m_loop.median())),
+            fmt_secs(per_q(m_grp.median())),
+            fmt_secs(per_q(m_shd.median())),
+            format!("{:.2}x", m_loop.median() / m_grp.median()),
+        ]);
+        for (op, med) in [
+            ("oos_loop", m_loop.median()),
+            ("oos_grouped", m_grp.median()),
+            ("oos_sharded", m_shd.median()),
+        ] {
+            let mut row = vec![
+                ("op", Json::Str(op.into())),
+                ("n", Json::Num(eh_n as f64)),
+                ("r", Json::Num(eh_r as f64)),
+                ("batch", Json::Num(bsz as f64)),
+                ("ns_per_query", Json::Num(per_q(med) * 1e9)),
+            ];
+            if op == "oos_sharded" {
+                row.push(("shards", Json::Num(sharded.shards() as f64)));
+            }
+            report.row(row);
+        }
+    }
+    table.print();
+
     // ---- parallel matvec thread scaling (the perf gate rows) ----
     let scaling_cases: &[(usize, usize)] =
         if quick { &[(6000, 64)] } else { &[(8000, 64), (50000, 128)] };

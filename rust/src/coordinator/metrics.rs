@@ -86,7 +86,53 @@ impl Metrics {
             p95_us: pct(95.0),
             p99_us: pct(99.0),
             elapsed_secs: elapsed,
+            shards: Vec::new(),
         }
+    }
+}
+
+/// Point-in-time counters of one shard worker (sharded serving mode);
+/// attached to [`MetricsSnapshot::shards`] by
+/// [`super::service::PredictionService::snapshot`].
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    /// Shard index.
+    pub shard: usize,
+    /// Global tree-order row range the shard owns.
+    pub rows_lo: usize,
+    /// End of the owned range (exclusive).
+    pub rows_hi: usize,
+    /// Sub-batches submitted but not yet finished.
+    pub queue_depth: usize,
+    /// Sub-batches served.
+    pub batches: u64,
+    /// Queries served.
+    pub requests: u64,
+    /// Mean sub-batch size.
+    pub mean_batch_size: f64,
+    /// Mean evaluation time per query, in ns (queueing excluded).
+    pub ns_per_query: f64,
+    /// Queries whose worker never replied (a panic contained to that
+    /// sub-batch, or a dead worker). Those rows are returned as NaN
+    /// (`null` on the wire), so a non-zero count here is the health
+    /// signal to watch.
+    pub dropped: u64,
+}
+
+impl ShardSnapshot {
+    /// JSON encoding (one row of the snapshot's "shards" array).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("rows_lo", Json::Num(self.rows_lo as f64)),
+            ("rows_hi", Json::Num(self.rows_hi as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("mean_batch_size", Json::Num(self.mean_batch_size)),
+            ("ns_per_query", Json::Num(self.ns_per_query)),
+            ("dropped", Json::Num(self.dropped as f64)),
+        ])
     }
 }
 
@@ -101,12 +147,15 @@ pub struct MetricsSnapshot {
     pub p95_us: f64,
     pub p99_us: f64,
     pub elapsed_secs: f64,
+    /// Per-shard counters when the model behind the service is sharded
+    /// (empty for single-replica predictors).
+    pub shards: Vec<ShardSnapshot>,
 }
 
 impl MetricsSnapshot {
     /// JSON encoding for the wire protocol / bench logs.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("requests", Json::Num(self.requests as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("mean_batch_size", Json::Num(self.mean_batch_size)),
@@ -115,7 +164,14 @@ impl MetricsSnapshot {
             ("p95_us", Json::Num(self.p95_us)),
             ("p99_us", Json::Num(self.p99_us)),
             ("elapsed_secs", Json::Num(self.elapsed_secs)),
-        ])
+        ];
+        if !self.shards.is_empty() {
+            pairs.push((
+                "shards",
+                Json::Arr(self.shards.iter().map(|s| s.to_json()).collect()),
+            ));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -151,5 +207,30 @@ mod tests {
         let enc = m.snapshot().to_json().encode();
         let parsed = Json::parse(&enc).unwrap();
         assert_eq!(parsed.get("requests").unwrap().as_usize(), Some(1));
+        // No shards → no shards key.
+        assert!(parsed.get("shards").is_none());
+    }
+
+    #[test]
+    fn shard_rows_serialize() {
+        let m = Metrics::new();
+        m.record_batch(&[1e-3]);
+        let mut snap = m.snapshot();
+        snap.shards.push(ShardSnapshot {
+            shard: 1,
+            rows_lo: 64,
+            rows_hi: 128,
+            queue_depth: 0,
+            batches: 3,
+            requests: 12,
+            mean_batch_size: 4.0,
+            ns_per_query: 1500.0,
+            dropped: 0,
+        });
+        let parsed = Json::parse(&snap.to_json().encode()).unwrap();
+        let shards = parsed.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].get("requests").unwrap().as_usize(), Some(12));
+        assert_eq!(shards[0].get("rows_hi").unwrap().as_usize(), Some(128));
     }
 }

@@ -10,11 +10,16 @@
 //! requests until `max_batch` or `max_wait` elapses — the standard
 //! dynamic-batching policy of model servers (vLLM-style), scaled to this
 //! paper's predictor.
+//!
+//! In sharded mode the batcher stays in front and a
+//! [`crate::shard::ShardedPredictor`] fans each flushed batch out across
+//! per-shard worker queues; per-shard counters surface through
+//! [`MetricsSnapshot::shards`].
 
 pub mod metrics;
 pub mod protocol;
 pub mod service;
 
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 pub use protocol::serve_tcp;
 pub use service::{BatchPolicy, PredictionService, Predictor};

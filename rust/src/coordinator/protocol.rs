@@ -74,7 +74,7 @@ pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Js
     };
     if let Some(cmd) = parsed.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
-            "metrics" => svc.metrics.snapshot().to_json(),
+            "metrics" => svc.snapshot().to_json(),
             "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
             "shutdown" => {
                 stop.store(true, Ordering::SeqCst);

@@ -8,8 +8,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Anything that can serve batched predictions. Implemented by
-/// [`crate::learn::KrrModel`]; custom predictors (e.g. a long-lived
-/// Algorithm-3 [`crate::hkernel::HPredictor`]) can plug in too.
+/// [`crate::learn::KrrModel`] and [`crate::shard::ShardedPredictor`];
+/// custom predictors (e.g. a long-lived Algorithm-3
+/// [`crate::hkernel::HPredictor`]) can plug in too.
 pub trait Predictor: Send + Sync + 'static {
     /// Predict raw outputs for a batch of query rows.
     fn predict_batch(&self, q: &Mat) -> Mat;
@@ -17,6 +18,10 @@ pub trait Predictor: Send + Sync + 'static {
     fn dim(&self) -> usize;
     /// Number of output columns.
     fn outputs(&self) -> usize;
+    /// Per-shard counters, when the predictor is sharded (default: none).
+    fn shard_metrics(&self) -> Vec<super::metrics::ShardSnapshot> {
+        Vec::new()
+    }
 }
 
 impl Predictor for crate::learn::KrrModel {
@@ -24,12 +29,10 @@ impl Predictor for crate::learn::KrrModel {
         self.predict(q)
     }
     fn dim(&self) -> usize {
-        // KrrModel does not retain d explicitly; infer lazily is not
-        // possible, so store via config? The hierarchical engine knows.
-        self.hierarchical_parts().map(|(f, _)| f.x.cols()).unwrap_or(0)
+        self.dim()
     }
     fn outputs(&self) -> usize {
-        self.hierarchical_parts().map(|(_, w)| w.cols()).unwrap_or(1)
+        self.outputs()
     }
 }
 
@@ -58,6 +61,10 @@ struct Request {
 pub struct PredictionService {
     tx: SyncSender<Request>,
     pub metrics: Arc<Metrics>,
+    /// Shared handle to the predictor (the batcher thread holds another
+    /// clone); kept so [`PredictionService::snapshot`] can attach
+    /// per-shard counters.
+    model: Arc<dyn Predictor>,
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
     dim: usize,
@@ -72,16 +79,25 @@ impl PredictionService {
         let dim = model.dim();
         let m2 = metrics.clone();
         let s2 = stop.clone();
+        let model2 = model.clone();
         let join = std::thread::Builder::new()
             .name("hck-batcher".into())
-            .spawn(move || batcher_loop(model, rx, m2, s2, policy))
+            .spawn(move || batcher_loop(model2, rx, m2, s2, policy))
             .expect("spawn batcher");
-        PredictionService { tx, metrics, stop, join: Some(join), dim }
+        PredictionService { tx, metrics, model, stop, join: Some(join), dim }
     }
 
     /// Feature dimension the service expects (0 if unknown).
     pub fn dim(&self) -> usize {
         self.dim
+    }
+
+    /// Service-level counters with the predictor's per-shard counters
+    /// attached (empty `shards` for single-replica predictors).
+    pub fn snapshot(&self) -> super::metrics::MetricsSnapshot {
+        let mut snap = self.metrics.snapshot();
+        snap.shards = self.model.shard_metrics();
+        snap
     }
 
     /// Synchronous predict: enqueue and wait for the batch to flush.

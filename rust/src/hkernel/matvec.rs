@@ -169,12 +169,32 @@ pub fn hmatvec_with_threads(f: &HFactors, b: &[f64], threads: usize) -> Vec<f64>
     y
 }
 
-/// Multi-column matvec Y = K_hierarchical B (tree order), column by column.
+/// Multi-column matvec Y = K_hierarchical B (tree order).
+///
+/// Columns are independent, so for multi-rhs blocks the columns fan out
+/// across the thread pool; any threads left over (m smaller than the
+/// pool) go to the level-parallel traversal *inside* each column, so
+/// narrow blocks on wide machines keep their intra-column speedup.
+/// Since the per-column traversal is bitwise identical for every thread
+/// count, so is the block result.
 pub fn hmatvec_mat(f: &HFactors, b: &crate::linalg::Mat) -> crate::linalg::Mat {
-    let mut y = crate::linalg::Mat::zeros(b.rows(), b.cols());
-    for j in 0..b.cols() {
-        let col = hmatvec(f, &b.col(j));
-        y.set_col(j, &col);
+    let m = b.cols();
+    let mut y = crate::linalg::Mat::zeros(b.rows(), m);
+    let threads = auto_threads(f.n());
+    let outer = threads.min(m);
+    if outer > 1 {
+        let inner = (threads / outer).max(1);
+        let cols: Vec<usize> = (0..m).collect();
+        let results =
+            parallel_map(outer, &cols, |&j| hmatvec_with_threads(f, &b.col(j), inner));
+        for (j, col) in results.iter().enumerate() {
+            y.set_col(j, col);
+        }
+    } else {
+        for j in 0..m {
+            let col = hmatvec(f, &b.col(j));
+            y.set_col(j, &col);
+        }
     }
     y
 }

@@ -13,7 +13,7 @@
 //! one-vs-all multiclass classifier evaluates all classes in one walk.
 
 use super::build::HFactors;
-use crate::linalg::{gemv, matmul, Mat, Trans};
+use crate::linalg::{gemm, gemv, matmul, Mat, Trans};
 
 /// Precomputed out-of-sample predictor for a fixed weight block `W`
 /// (n x m, original order) — typically `W = (A + λI)^{-1} Y`.
@@ -21,15 +21,25 @@ use crate::linalg::{gemv, matmul, Mat, Trans};
 /// Owns an `Arc` of the factors so fitted models can cache a long-lived
 /// predictor (the precomputation is O(nr·m); rebuilding it per query
 /// batch would dominate serving latency).
+///
+/// Fields are crate-visible so [`crate::shard::split_predictor`] can
+/// extract the per-node path state (`c`, leaf weight blocks, leaf rows)
+/// when cutting the model into subtree shards.
 pub struct HPredictor {
-    f: std::sync::Arc<HFactors>,
-    /// Weights in tree order (n x m).
-    w_tree: Mat,
+    pub(crate) f: std::sync::Arc<HFactors>,
     /// c_m per non-root node (r_{p(m)} x m).
-    c: Vec<Option<Mat>>,
-    /// Original-row coordinates of each leaf's points (cached for the leaf
-    /// kernel vector evaluation).
-    leaf_rows: Vec<Option<Vec<usize>>>,
+    pub(crate) c: Vec<Option<Mat>>,
+    /// Per leaf: materialized point block (n_j x d), gathered once so
+    /// both the scalar walk and the grouped batch path evaluate leaf
+    /// kernels without per-call row copies. This is the predictor's one
+    /// deliberate duplication (n·d words next to `f.x`) — the serving
+    /// layout, same as [`crate::shard::Shard::leaf_x`].
+    pub(crate) leaf_x: Vec<Option<Mat>>,
+    /// Per leaf: weight block in tree order (n_j x m). The full tree-order
+    /// weight copy is *not* retained — these blocks are its only owner.
+    pub(crate) leaf_w: Vec<Option<Mat>>,
+    /// Number of outputs m.
+    m: usize,
 }
 
 impl HPredictor {
@@ -79,16 +89,21 @@ impl HPredictor {
             }
         }
 
-        let mut leaf_rows: Vec<Option<Vec<usize>>> = (0..nn).map(|_| None).collect();
+        // Materialized leaf blocks (tree order): the serving layout; the
+        // tree-order weight copy itself is dropped when `new` returns.
+        let mut leaf_x: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+        let mut leaf_w: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
         for &l in &f.tree.leaves() {
-            leaf_rows[l] = Some(f.tree.node_points(l).to_vec());
+            leaf_x[l] = Some(f.x.select_rows(f.tree.node_points(l)));
+            let nd = &f.tree.nodes[l];
+            leaf_w[l] = Some(w_tree.row_range(nd.lo, nd.hi));
         }
-        HPredictor { f, w_tree, c, leaf_rows }
+        HPredictor { f, c, leaf_x, leaf_w, m }
     }
 
     /// Number of outputs m.
     pub fn outputs(&self) -> usize {
-        self.w_tree.cols()
+        self.m
     }
 
     /// Predict for one query point: returns the m-vector
@@ -99,15 +114,15 @@ impl HPredictor {
         let kind = f.config.kind;
         let path = f.tree.route(x);
         let leaf = *path.last().unwrap();
-        let nd = &f.tree.nodes[leaf];
 
-        // Leaf term: w_jᵀ k(X_j, x).
-        let rows = self.leaf_rows[leaf].as_ref().unwrap();
+        // Leaf term: w_jᵀ k(X_j, x) over the materialized leaf blocks.
+        let x_leaf = self.leaf_x[leaf].as_ref().unwrap();
+        let w_leaf = self.leaf_w[leaf].as_ref().unwrap();
         let mut z = vec![0.0; m];
-        for (k_local, &orig) in rows.iter().enumerate() {
-            let kv = kind.eval(f.x.row(orig), x);
+        for k_local in 0..x_leaf.rows() {
+            let kv = kind.eval(x_leaf.row(k_local), x);
             if kv != 0.0 {
-                let wrow = self.w_tree.row(nd.lo + k_local);
+                let wrow = w_leaf.row(k_local);
                 for (zi, wi) in z.iter_mut().zip(wrow.iter()) {
                     *zi += kv * wi;
                 }
@@ -202,16 +217,107 @@ impl HPredictor {
         v
     }
 
-    /// Predict a batch of query points (rows of `q`), returning an
-    /// (q.rows() x m) matrix.
-    pub fn predict_batch(&self, q: &Mat) -> Mat {
-        let mut out = Mat::zeros(q.rows(), self.outputs());
-        for i in 0..q.rows() {
-            let z = self.predict(q.row(i));
-            out.row_mut(i).copy_from_slice(&z);
-        }
-        out
+    /// Borrow the underlying factors.
+    pub fn factors(&self) -> &std::sync::Arc<HFactors> {
+        &self.f
     }
+
+    /// Evaluate a group of queries (rows of `q`) that all route to the
+    /// same `leaf`, as gemms across the group: one kernel block
+    /// `K(X_leaf, Q)` for the leaf term, one `K(X̲_p, Q)` + triangular
+    /// solve for the shared `d` state, then the path climb as r×r-by-g
+    /// matrix products. Returns a (q.rows() x m) block.
+    ///
+    /// This is the grouped counterpart of [`HPredictor::predict`]: every
+    /// query on the same leaf shares the whole root path, so the scalar
+    /// walk batches into dense products with no per-query branching.
+    pub fn predict_leaf_group(&self, leaf: usize, q: &Mat) -> Mat {
+        let f = self.f.as_ref();
+        let m = self.outputs();
+        let g = q.rows();
+        let kind = f.config.kind;
+
+        // Leaf term: Z = W_leafᵀ K(X_leaf, Q)  (m x g), on the leaf
+        // blocks materialized at construction.
+        let x_leaf = self.leaf_x[leaf].as_ref().unwrap();
+        let kq = crate::kernels::kernel_cross(kind, x_leaf, q);
+        let w_leaf = self.leaf_w[leaf].as_ref().unwrap();
+        let mut z = matmul(w_leaf, Trans::Yes, &kq, Trans::No);
+
+        let path = {
+            // Path root → leaf via parent pointers (routing already done).
+            let mut p = vec![leaf];
+            let mut cur = leaf;
+            while let Some(par) = f.tree.nodes[cur].parent {
+                p.push(par);
+                cur = par;
+            }
+            p.reverse();
+            p
+        };
+        if path.len() > 1 {
+            // Shared d state: D = Σ_{p(leaf)}^{-1} K(X̲_{p(leaf)}, Q)  (r x g).
+            let parent = f.tree.nodes[leaf].parent.unwrap();
+            let lm = f.landmarks[parent].as_ref().unwrap();
+            let kp = crate::kernels::kernel_cross(kind, lm, q);
+            let mut d = f.sigma_chol[parent].as_ref().unwrap().solve_mat(&kp);
+
+            for idx in (1..path.len()).rev() {
+                let mnode = path[idx];
+                if let Some(cm) = &self.c[mnode] {
+                    // Z += c_mᵀ D
+                    gemm(1.0, cm, Trans::Yes, &d, Trans::No, 1.0, &mut z);
+                }
+                if idx >= 2 {
+                    let w = f.w[path[idx - 1]].as_ref().unwrap();
+                    d = matmul(w, Trans::Yes, &d, Trans::No);
+                }
+            }
+        }
+        // Transpose to request-major (g x m).
+        Mat::from_fn(g, m, |i, j| z[(j, i)])
+    }
+
+    /// Predict a batch of query points (rows of `q`), returning a
+    /// (q.rows() x m) matrix. Queries are grouped by their routed leaf and
+    /// each group is evaluated with [`HPredictor::predict_leaf_group`]
+    /// (gemms across the group) instead of a per-query scalar walk;
+    /// results come back in request order.
+    pub fn predict_batch(&self, q: &Mat) -> Mat {
+        grouped_eval(
+            q,
+            self.outputs(),
+            |x| self.f.tree.route_leaf(x),
+            |leaf, sub| self.predict_leaf_group(leaf, sub),
+        )
+    }
+}
+
+/// Group the rows of `q` by a routing key, evaluate each group as one
+/// block, and scatter the results back in request order. Shared by
+/// [`HPredictor::predict_batch`] and [`crate::shard::Shard::predict_batch`]
+/// (same grouping semantics, different route/eval pairs). The BTreeMap
+/// keeps the group evaluation order deterministic.
+pub(crate) fn grouped_eval(
+    q: &Mat,
+    outputs: usize,
+    route: impl Fn(&[f64]) -> usize,
+    mut eval: impl FnMut(usize, &Mat) -> Mat,
+) -> Mat {
+    let mut out = Mat::zeros(q.rows(), outputs);
+    let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for i in 0..q.rows() {
+        groups.entry(route(q.row(i))).or_default().push(i);
+    }
+    for (key, idx) in groups {
+        let sub = q.select_rows(&idx);
+        let block = eval(key, &sub);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(block.row(k));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -355,18 +461,51 @@ mod tests {
         assert!((got - want).abs() < 1e-12);
     }
 
+    /// The grouped-gemm batch path must agree with the scalar walk to
+    /// ≤ 1e-10 (the kernel block goes through the gemm expansion rather
+    /// than per-pair distance evaluation, so the match is numerical, not
+    /// bitwise) — across kernels, multi-output weights and batch sizes
+    /// large enough that leaves receive multi-query groups.
     #[test]
     fn batch_matches_single() {
-        let f = build(36, 5, 6, Gaussian::new(0.8), 7);
-        let mut rng = Rng::new(11);
-        let w = Mat::from_fn(36, 3, |_, _| rng.normal());
+        for (seed, kind) in [(7u64, Gaussian::new(0.8)), (8, Laplace::new(0.6))] {
+            let f = build(72, 5, 6, kind, seed);
+            let mut rng = Rng::new(seed * 13);
+            let w = Mat::from_fn(72, 3, |_, _| rng.normal());
+            let pred = HPredictor::new(f.clone(), &w);
+            for qn in [1usize, 5, 64] {
+                let q = Mat::from_fn(qn, 3, |_, _| rng.uniform(0.0, 1.0));
+                let batch = pred.predict_batch(&q);
+                for i in 0..qn {
+                    let single = pred.predict(q.row(i));
+                    for j in 0..3 {
+                        assert!(
+                            (batch[(i, j)] - single[j]).abs()
+                                <= 1e-10 * (1.0 + single[j].abs()),
+                            "qn={qn} i={i} j={j}: {} vs {}",
+                            batch[(i, j)],
+                            single[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_group_matches_predict_on_training_leaves() {
+        // Route training points (guaranteed multi-query groups when the
+        // batch is larger than the leaf count).
+        let f = build(60, 6, 10, Gaussian::new(0.5), 9);
+        let mut rng = Rng::new(17);
+        let w = Mat::from_fn(60, 2, |_, _| rng.normal());
         let pred = HPredictor::new(f.clone(), &w);
-        let q = Mat::from_fn(5, 3, |_, _| rng.uniform(0.0, 1.0));
+        let q = Mat::from_fn(40, 3, |i, j| f.x[(i % 60, j)]);
         let batch = pred.predict_batch(&q);
-        for i in 0..5 {
+        for i in 0..40 {
             let single = pred.predict(q.row(i));
-            for j in 0..3 {
-                assert_eq!(batch[(i, j)], single[j]);
+            for j in 0..2 {
+                assert!((batch[(i, j)] - single[j]).abs() <= 1e-10 * (1.0 + single[j].abs()));
             }
         }
     }

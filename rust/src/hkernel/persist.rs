@@ -86,6 +86,258 @@ pub fn load_model(path: &str) -> Result<(HFactors, Mat)> {
     Ok((f, w))
 }
 
+const SHARD_MAGIC: &[u8; 4] = b"HCKS";
+
+/// Save one serving shard to a file, so a worker process can load only
+/// its slice of the model (the replicated entry/top path state rides
+/// along — a shard file is self-contained).
+pub fn save_shard(s: &crate::shard::Shard, path: &str) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut out = BufWriter::new(file);
+    out.write_all(SHARD_MAGIC)?;
+    wu64(&mut out, s.id as u64)?;
+    wu64(&mut out, s.root_global as u64)?;
+    write_kind(&mut out, s.kind)?;
+    wu64(&mut out, s.dim as u64)?;
+    wu64(&mut out, s.outputs as u64)?;
+    wu64(&mut out, s.nodes.len() as u64)?;
+    for nd in &s.nodes {
+        write_node(&mut out, nd)?;
+    }
+    for l in 0..s.nodes.len() {
+        write_opt_mat(&mut out, &s.leaf_x[l])?;
+        write_opt_mat(&mut out, &s.leaf_w[l])?;
+        write_opt_mat(&mut out, &s.c[l])?;
+        write_opt_mat(&mut out, &s.landmarks[l])?;
+        write_opt_mat(&mut out, &s.sigma[l])?;
+        write_opt_mat(&mut out, &s.wfac[l])?;
+    }
+    match &s.entry {
+        None => wu64(&mut out, 0)?,
+        Some(e) => {
+            wu64(&mut out, 1)?;
+            write_mat(&mut out, &e.landmarks)?;
+            write_mat(&mut out, &e.sigma)?;
+        }
+    }
+    wu64(&mut out, s.top.len() as u64)?;
+    for step in &s.top {
+        write_mat(&mut out, &step.w)?;
+        write_mat(&mut out, &step.c)?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Load a shard saved by [`save_shard`] (Σ Choleskys are recomputed).
+pub fn load_shard(path: &str) -> Result<crate::shard::Shard> {
+    let file = std::fs::File::open(path)?;
+    let mut inp = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    inp.read_exact(&mut magic)?;
+    if &magic != SHARD_MAGIC {
+        return Err(Error::data("not an HCKS shard file"));
+    }
+    let id = ru64(&mut inp)? as usize;
+    let root_global = ru64(&mut inp)? as usize;
+    let kind = read_kind(&mut inp)?;
+    let dim = ru64(&mut inp)? as usize;
+    let outputs = ru64(&mut inp)? as usize;
+    let nn = ru64(&mut inp)? as usize;
+    if nn == 0 || nn > (1usize << 32) {
+        return Err(Error::data("corrupt shard file (node count)"));
+    }
+    // Counts come from the file: grow the vectors by actual reads (a
+    // truncated/corrupt file errors on read_exact) rather than
+    // pre-allocating attacker-chosen capacities.
+    let mut nodes = Vec::new();
+    for _ in 0..nn {
+        nodes.push(read_node(&mut inp)?);
+    }
+    let mut leaf_x = Vec::new();
+    let mut leaf_w = Vec::new();
+    let mut c = Vec::new();
+    let mut landmarks = Vec::new();
+    let mut sigma: Vec<Option<Mat>> = Vec::new();
+    let mut sigma_chol = Vec::new();
+    let mut wfac = Vec::new();
+    for _ in 0..nn {
+        leaf_x.push(read_opt_mat(&mut inp)?);
+        leaf_w.push(read_opt_mat(&mut inp)?);
+        c.push(read_opt_mat(&mut inp)?);
+        landmarks.push(read_opt_mat(&mut inp)?);
+        let sig = read_opt_mat(&mut inp)?;
+        let chol = match &sig {
+            Some(s) => Some(Cholesky::new_jittered(s, 30)?),
+            None => None,
+        };
+        sigma.push(sig);
+        sigma_chol.push(chol);
+        wfac.push(read_opt_mat(&mut inp)?);
+    }
+    let entry = match ru64(&mut inp)? {
+        0 => None,
+        1 => {
+            let landmarks = read_mat(&mut inp)?;
+            let sigma = read_mat(&mut inp)?;
+            let chol = Cholesky::new_jittered(&sigma, 30)?;
+            Some(crate::shard::EntryState { landmarks, sigma, chol })
+        }
+        _ => return Err(Error::data("corrupt shard file (entry tag)")),
+    };
+    let nt = ru64(&mut inp)? as usize;
+    // The top path is one entry per tree level above the cut; anything
+    // beyond a few dozen is corrupt.
+    if nt > (1usize << 16) {
+        return Err(Error::data("corrupt shard file (top path too long)"));
+    }
+    let mut top = Vec::new();
+    for _ in 0..nt {
+        let w = read_mat(&mut inp)?;
+        let cm = read_mat(&mut inp)?;
+        top.push(crate::shard::TopStep { w, c: cm });
+    }
+    let shard = crate::shard::Shard {
+        id,
+        root_global,
+        kind,
+        dim,
+        outputs,
+        nodes,
+        leaf_x,
+        leaf_w,
+        c,
+        landmarks,
+        sigma,
+        sigma_chol,
+        wfac,
+        entry,
+        top,
+    };
+    validate_shard(&shard)?;
+    Ok(shard)
+}
+
+/// Structural invariants the serving paths unwrap on: a corrupt file
+/// that decodes cleanly must still fail at load time, not panic inside
+/// a worker thread.
+fn validate_shard(s: &crate::shard::Shard) -> Result<()> {
+    let bad = |what: &str| Err(Error::data(format!("corrupt shard file ({what})")));
+    let nn = s.nodes.len();
+    for (l, nd) in s.nodes.iter().enumerate() {
+        if nd.children.len() == 1 {
+            return bad("single-child node");
+        }
+        for &ch in &nd.children {
+            if ch >= nn || s.nodes[ch].parent != Some(l) {
+                return bad("child link");
+            }
+        }
+        if let Some(p) = nd.parent {
+            if p >= nn || !s.nodes[p].children.contains(&l) {
+                return bad("parent link");
+            }
+        } else if l != 0 {
+            return bad("non-root without parent");
+        }
+        if nd.is_leaf() {
+            let (Some(x), Some(w)) = (&s.leaf_x[l], &s.leaf_w[l]) else {
+                return bad("leaf without blocks");
+            };
+            if x.rows() != nd.hi.saturating_sub(nd.lo)
+                || w.rows() != x.rows()
+                || x.cols() != s.dim
+                || w.cols() != s.outputs
+            {
+                return bad("leaf block shape");
+            }
+            if nd.split.is_some() {
+                return bad("leaf with split");
+            }
+        } else {
+            let (Some(lm), Some(sig)) = (&s.landmarks[l], &s.sigma[l]) else {
+                return bad("inner node without landmark state");
+            };
+            if s.sigma_chol[l].is_none() {
+                return bad("inner node without landmark state");
+            }
+            if lm.cols() != s.dim || sig.rows() != lm.rows() || sig.cols() != lm.rows() {
+                return bad("landmark state shape");
+            }
+            if nd.split.is_none() {
+                return bad("inner node without split");
+            }
+            // The climb into every inner node below the global root needs
+            // its W factor: a silent None would skip a climb, not panic.
+            if (l != 0 || s.c[0].is_some()) && s.wfac[l].is_none() {
+                return bad("inner node without W");
+            }
+            if let Some(w) = &s.wfac[l] {
+                if w.rows() != lm.rows() {
+                    return bad("W shape");
+                }
+            }
+        }
+        if l != 0 {
+            // c_l lives in the parent's landmark space; W_l maps into it.
+            let Some(cm) = &s.c[l] else {
+                return bad("non-root node without c state");
+            };
+            let p = nd.parent.unwrap();
+            let Some(rp) = s.landmarks[p].as_ref().map(|m| m.rows()) else {
+                return bad("parent landmark state");
+            };
+            if cm.rows() != rp || cm.cols() != s.outputs {
+                return bad("c shape");
+            }
+            if let Some(w) = &s.wfac[l] {
+                if w.cols() != rp {
+                    return bad("W shape");
+                }
+            }
+        }
+    }
+    // Above-the-cut state: the shard-root c, the entry landmarks and the
+    // replicated climb must chain dimensionally, or the first query
+    // through them panics in a worker instead of failing the load.
+    if let Some(c0) = &s.c[0] {
+        if c0.cols() != s.outputs {
+            return bad("c shape");
+        }
+        if s.nodes[0].is_leaf() {
+            let Some(e) = &s.entry else {
+                return bad("missing entry state");
+            };
+            if c0.rows() != e.landmarks.rows() {
+                return bad("c shape");
+            }
+        } else if s.wfac[0].as_ref().map(|w| w.cols()) != Some(c0.rows()) {
+            return bad("W shape");
+        }
+        let mut cur = c0.rows();
+        for step in &s.top {
+            if step.w.rows() != cur
+                || step.c.rows() != step.w.cols()
+                || step.c.cols() != s.outputs
+            {
+                return bad("top step shape");
+            }
+            cur = step.w.cols();
+        }
+    } else if !s.top.is_empty() {
+        return bad("top path without c state");
+    }
+    if let Some(e) = &s.entry {
+        if e.landmarks.cols() != s.dim
+            || e.sigma.rows() != e.landmarks.rows()
+            || e.sigma.cols() != e.landmarks.rows()
+        {
+            return bad("entry state shape");
+        }
+    }
+    Ok(())
+}
+
 // ---- primitives ----
 
 fn wu64(out: &mut impl Write, v: u64) -> Result<()> {
@@ -265,33 +517,54 @@ fn read_rule(inp: &mut impl Read) -> Result<SplitRule> {
     })
 }
 
+fn write_node(out: &mut impl Write, nd: &Node) -> Result<()> {
+    wu64(out, nd.parent.map(|p| p as u64 + 1).unwrap_or(0))?;
+    write_usizes(out, &nd.children)?;
+    wu64(out, nd.lo as u64)?;
+    wu64(out, nd.hi as u64)?;
+    wu64(out, nd.depth as u64)?;
+    match &nd.split {
+        None => wu64(out, 0)?,
+        Some(Split::Hyperplane { dir, threshold }) => {
+            wu64(out, 1)?;
+            write_f64s(out, dir)?;
+            wf64(out, *threshold)?;
+        }
+        Some(Split::Axis { axis, threshold }) => {
+            wu64(out, 2)?;
+            wu64(out, *axis as u64)?;
+            wf64(out, *threshold)?;
+        }
+        Some(Split::Centers { centers }) => {
+            wu64(out, 3)?;
+            write_mat(out, centers)?;
+        }
+    }
+    Ok(())
+}
+fn read_node(inp: &mut impl Read) -> Result<Node> {
+    let parent_raw = ru64(inp)?;
+    let parent = if parent_raw == 0 { None } else { Some(parent_raw as usize - 1) };
+    let children = read_usizes(inp)?;
+    let lo = ru64(inp)? as usize;
+    let hi = ru64(inp)? as usize;
+    let depth = ru64(inp)? as usize;
+    let split = match ru64(inp)? {
+        0 => None,
+        1 => Some(Split::Hyperplane { dir: read_f64s(inp)?, threshold: rf64(inp)? }),
+        2 => Some(Split::Axis { axis: ru64(inp)? as usize, threshold: rf64(inp)? }),
+        3 => Some(Split::Centers { centers: read_mat(inp)? }),
+        _ => return Err(Error::data("corrupt model file (split tag)")),
+    };
+    Ok(Node { parent, children, lo, hi, split, depth })
+}
+
 fn write_tree(out: &mut impl Write, t: &PartitionTree) -> Result<()> {
     wu64(out, t.n0 as u64)?;
     write_usizes(out, &t.perm)?;
     wu64(out, t.nodes.len() as u64)?;
     for nd in &t.nodes {
-        wu64(out, nd.parent.map(|p| p as u64 + 1).unwrap_or(0))?;
-        write_usizes(out, &nd.children)?;
-        wu64(out, nd.lo as u64)?;
-        wu64(out, nd.hi as u64)?;
-        wu64(out, nd.depth as u64)?;
-        match &nd.split {
-            None => wu64(out, 0)?,
-            Some(Split::Hyperplane { dir, threshold }) => {
-                wu64(out, 1)?;
-                write_f64s(out, dir)?;
-                wf64(out, *threshold)?;
-            }
-            Some(Split::Axis { axis, threshold }) => {
-                wu64(out, 2)?;
-                wu64(out, *axis as u64)?;
-                wf64(out, *threshold)?;
-            }
-            Some(Split::Centers { centers }) => {
-                wu64(out, 3)?;
-                write_mat(out, centers)?;
-            }
-        }
+        write_node(out, nd)?;
     }
     Ok(())
 }
@@ -301,20 +574,7 @@ fn read_tree(inp: &mut impl Read) -> Result<PartitionTree> {
     let nn = ru64(inp)? as usize;
     let mut nodes = Vec::with_capacity(nn);
     for _ in 0..nn {
-        let parent_raw = ru64(inp)?;
-        let parent = if parent_raw == 0 { None } else { Some(parent_raw as usize - 1) };
-        let children = read_usizes(inp)?;
-        let lo = ru64(inp)? as usize;
-        let hi = ru64(inp)? as usize;
-        let depth = ru64(inp)? as usize;
-        let split = match ru64(inp)? {
-            0 => None,
-            1 => Some(Split::Hyperplane { dir: read_f64s(inp)?, threshold: rf64(inp)? }),
-            2 => Some(Split::Axis { axis: ru64(inp)? as usize, threshold: rf64(inp)? }),
-            3 => Some(Split::Centers { centers: read_mat(inp)? }),
-            _ => return Err(Error::data("corrupt model file (split tag)")),
-        };
-        nodes.push(Node { parent, children, lo, hi, split, depth });
+        nodes.push(read_node(inp)?);
     }
     Ok(PartitionTree { nodes, perm, n0 })
 }
@@ -369,6 +629,46 @@ mod tests {
                 assert_eq!(p1.predict(&q), p2.predict(&q), "rule {tag}");
             }
         }
+    }
+
+    #[test]
+    fn shard_roundtrip_preserves_predictions() {
+        let (f, w) = fitted(SplitRule::RandomProjection, 21);
+        let f = Arc::new(f);
+        let pred = HPredictor::new(f.clone(), &w);
+        let depth = 2.min(f.tree.depth());
+        let shards = crate::shard::split_predictor(&pred, depth);
+        let mut rng = Rng::new(23);
+        let q = Mat::from_fn(12, 4, |_, _| rng.uniform(0.0, 1.0));
+        for s in shards {
+            let path = tmpfile(&format!("shard{}", s.id));
+            let want = s.predict_batch(&q);
+            save_shard(&s, &path).unwrap();
+            let s2 = load_shard(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(s2.id, s.id);
+            assert_eq!(s2.nodes.len(), s.nodes.len());
+            assert_eq!(s2.row_range(), s.row_range());
+            // Same factors, same walk: predictions are bit-identical.
+            let got = s2.predict_batch(&q);
+            for i in 0..q.rows() {
+                assert_eq!(got.row(i), want.row(i), "shard {} row {i}", s.id);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_rejects_model_file_and_vice_versa() {
+        let (f, w) = fitted(SplitRule::RandomProjection, 25);
+        let path = tmpfile("crossmagic");
+        save_model(&f, &w, &path).unwrap();
+        assert!(load_shard(&path).is_err());
+        let f = Arc::new(f);
+        let pred = HPredictor::new(f.clone(), &w);
+        let shards = crate::shard::split_predictor(&pred, 1.min(f.tree.depth()));
+        save_shard(&shards[0], &path).unwrap();
+        assert!(load_model(&path).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -67,10 +67,13 @@ impl<'a> HSolver<'a> {
     /// since λ′ is already inside the factors).
     ///
     /// The per-leaf factorizations (one n0×n0 Cholesky + the Z/S blocks
-    /// each) are independent and run across the scoped-thread pool; the
-    /// r×r inner-node chain stays on the post-order. Per-node log-det
-    /// contributions are summed in post-order afterwards, so the result
-    /// is bitwise identical for every thread count.
+    /// each) are independent and run across the scoped-thread pool. The
+    /// r×r inner-node chain runs **level-synchronously** (as in
+    /// [`crate::hkernel::matvec`]): a node needs only its children's `S`
+    /// blocks, so all inner nodes of one depth factor concurrently,
+    /// deepest level first. Results are applied in node-id order and the
+    /// per-node log-det contributions are summed in post-order, so the
+    /// result is bitwise identical for every thread count.
     pub fn factor(f: &'a HFactors, lambda: f64) -> Result<HSolver<'a>> {
         let nn = f.tree.nodes.len();
         let mut leaf: Vec<Option<LeafState>> = (0..nn).map(|_| None).collect();
@@ -92,45 +95,20 @@ impl<'a> HSolver<'a> {
             ld[i] = ldj;
         }
 
-        // --- Inner nodes (sequential post-order; children S ready). ---
-        for &i in &post {
-            let nd = &f.tree.nodes[i];
-            if nd.is_leaf() {
+        // --- Inner nodes (level-synchronous, deepest first): children S
+        // blocks are finalized one level down, so every node of a level
+        // is independent given the levels below. ---
+        for ids in inner_levels(f).iter().rev() {
+            if ids.is_empty() {
                 continue;
             }
-            let r_i = f.landmark_idx[i].len();
-            // Ŝ_i = Σ_children S_child
-            let mut shat = Mat::zeros(r_i, r_i);
-            for &ch in &nd.children {
-                shat.axpy(1.0, s[ch].as_ref().unwrap());
+            let outs = parallel_map(threads, ids, |&i| inner_factor(f, i, &s));
+            for (&i, res) in ids.iter().zip(outs) {
+                let (state, si, ldi) = res?;
+                node[i] = Some(state);
+                s[i] = si;
+                ld[i] = ldi;
             }
-            shat.symmetrize();
-            // G_i
-            let sig = f.sigma[i].as_ref().unwrap();
-            let mut g = sig.clone();
-            if let Some(p) = nd.parent {
-                let w = f.w[i].as_ref().unwrap();
-                let sp = f.sigma[p].as_ref().unwrap();
-                let wsp = matmul(w, Trans::No, sp, Trans::No);
-                gemm(-1.0, &wsp, Trans::No, w, Trans::Yes, 1.0, &mut g);
-                g.symmetrize();
-            }
-            // (I + G Ŝ)
-            let mut igs = matmul(&g, Trans::No, &shat, Trans::No);
-            igs.add_diag(1.0);
-            let lu = Lu::new(&igs)?;
-            ld[i] = lu.logabsdet();
-            if nd.parent.is_some() {
-                // T_i = Ŝ − Ŝ Φ(Ŝ), S_i = W_iᵀ T_i W_i
-                let phi_s = phi(&g, &lu, &shat);
-                let mut t = shat.clone();
-                gemm(-1.0, &shat, Trans::No, &phi_s, Trans::No, 1.0, &mut t);
-                let w = f.w[i].as_ref().unwrap();
-                let tw = matmul(&t, Trans::No, w, Trans::No);
-                let si = matmul(w, Trans::Yes, &tw, Trans::No);
-                s[i] = Some(si);
-            }
-            node[i] = Some(NodeState { shat, g, lu });
         }
 
         // Deterministic reduction: the same order the sequential
@@ -154,6 +132,14 @@ impl<'a> HSolver<'a> {
 
     /// Solve (A + λI) W = Y for a block of right-hand sides, **tree
     /// order**. O(n·n0 + n·r + (n/n0)·r²) per column after factoring.
+    ///
+    /// Both sweeps engage the scoped-thread pool: the upward pass
+    /// parallelizes across leaves, the downward pass runs
+    /// level-synchronously (each node's correction depends only on its
+    /// parent's, so whole levels run concurrently, shallowest first) and
+    /// finishes with a parallel per-leaf write into disjoint row
+    /// windows. Work items are applied in node-id order — the output is
+    /// bitwise identical for every thread count.
     pub fn solve_mat(&self, y: &Mat) -> Mat {
         let n = self.f.n();
         assert_eq!(y.rows(), n, "solve rhs rows");
@@ -209,43 +195,70 @@ impl<'a> HSolver<'a> {
             that[i] = Some(th);
         }
 
-        // ---- Downward: incoming corrections q, finish at leaves. ----
-        let mut out = Mat::zeros(n, m);
-        let mut q: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
-        for &i in post.iter().rev() {
-            let nd = &self.f.tree.nodes[i];
-            if nd.is_leaf() {
+        // ---- Downward (level-synchronous, shallowest first): per inner
+        // node, u_i = q_i + Φ(t̂_i − Ŝ_i q_i) with q_i = W_i u_{p(i)}
+        // computed on the fly from the parent's (finalized) u; the root
+        // has q = 0. Nodes of one level only read one level up. ----
+        let mut u: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
+        for ids in inner_levels(self.f).iter() {
+            if ids.is_empty() {
                 continue;
             }
-            let st = self.node[i].as_ref().unwrap();
-            let th = that[i].as_ref().unwrap();
-            // u_i = q_i + Φ(t̂_i − Ŝ_i q_i); root has q = 0.
-            let u_i = match &q[i] {
-                None => phi(&st.g, &st.lu, th),
-                Some(qi) => {
-                    let mut rhs = th.clone();
-                    gemm(-1.0, &st.shat, Trans::No, qi, Trans::No, 1.0, &mut rhs);
-                    let mut u = phi(&st.g, &st.lu, &rhs);
-                    u.axpy(1.0, qi);
-                    u
-                }
-            };
-            for &ch in &nd.children {
-                if self.f.tree.nodes[ch].is_leaf() {
-                    // w_ch = z_ch − Z_ch u_i
-                    let st_l = self.leaf[ch].as_ref().unwrap();
-                    let mut wch = z[ch].take().unwrap();
-                    gemm(-1.0, &st_l.zu, Trans::No, &u_i, Trans::No, 1.0, &mut wch);
-                    let (lo, hi) = (self.f.tree.nodes[ch].lo, self.f.tree.nodes[ch].hi);
-                    for (k, row) in (lo..hi).enumerate() {
-                        out.row_mut(row).copy_from_slice(wch.row(k));
+            let outs = parallel_map(threads, ids, |&i| {
+                let st = self.node[i].as_ref().unwrap();
+                let th = that[i].as_ref().unwrap();
+                match self.f.tree.nodes[i].parent {
+                    None => phi(&st.g, &st.lu, th),
+                    Some(p) => {
+                        // q_i = W_i u_p
+                        let w = self.f.w[i].as_ref().unwrap();
+                        let qi = matmul(w, Trans::No, u[p].as_ref().unwrap(), Trans::No);
+                        let mut rhs = th.clone();
+                        gemm(-1.0, &st.shat, Trans::No, &qi, Trans::No, 1.0, &mut rhs);
+                        let mut ui = phi(&st.g, &st.lu, &rhs);
+                        ui.axpy(1.0, &qi);
+                        ui
                     }
-                } else {
-                    // q_ch = W_ch u_i
-                    let w = self.f.w[ch].as_ref().unwrap();
-                    q[ch] = Some(matmul(w, Trans::No, &u_i, Trans::No));
                 }
+            });
+            for (&i, ui) in ids.iter().zip(outs) {
+                u[i] = Some(ui);
             }
+        }
+
+        // ---- Leaf finish (parallel over disjoint row windows):
+        // w_ch = z_ch − Z_ch u_{p(ch)}. ----
+        let mut out = Mat::zeros(n, m);
+        let ranges: Vec<(usize, usize)> = leaves
+            .iter()
+            .map(|&l| {
+                let nd = &self.f.tree.nodes[l];
+                (nd.lo * m, nd.hi * m)
+            })
+            .collect();
+        {
+            let slices = crate::util::parallel::disjoint_slices(out.as_mut_slice(), &ranges);
+            // Move each leaf's z block into its work item (each is
+            // consumed exactly once) — no extra O(n·m) copy.
+            let items: Vec<(usize, Mat, &mut [f64])> = leaves
+                .iter()
+                .zip(slices)
+                .map(|(&l, window)| (l, z[l].take().unwrap(), window))
+                .collect();
+            crate::util::parallel::run_parallel(threads, items, |(l, mut wch, window)| {
+                let p = self.f.tree.nodes[l].parent.unwrap();
+                let st_l = self.leaf[l].as_ref().unwrap();
+                gemm(
+                    -1.0,
+                    &st_l.zu,
+                    Trans::No,
+                    u[p].as_ref().unwrap(),
+                    Trans::No,
+                    1.0,
+                    &mut wch,
+                );
+                window.copy_from_slice(wch.as_slice());
+            });
         }
         out
     }
@@ -275,6 +288,67 @@ impl<'a> HSolver<'a> {
 fn phi(g: &Mat, lu: &Lu, m: &Mat) -> Mat {
     let gm = matmul(g, Trans::No, m, Trans::No);
     lu.solve_mat(&gm)
+}
+
+/// Inner (nonleaf) node ids grouped by depth, index = depth. The
+/// level-synchronous schedule of [`HSolver::factor`] and
+/// [`HSolver::solve_mat`] walks these groups deepest-first (upward) or
+/// shallowest-first (downward).
+fn inner_levels(f: &HFactors) -> Vec<Vec<usize>> {
+    let mut levels: Vec<Vec<usize>> = vec![Vec::new(); f.tree.depth() + 1];
+    for (i, nd) in f.tree.nodes.iter().enumerate() {
+        if !nd.is_leaf() {
+            levels[nd.depth].push(i);
+        }
+    }
+    levels
+}
+
+/// Factorization work for one inner node: Ŝ_i from the children's S
+/// blocks, G_i, the LU of (I + G Ŝ), and this node's outgoing S_i.
+/// Reads only finalized deeper-level state — the parallel unit of the
+/// inner pass of [`HSolver::factor`]. Returns (state, S_i, logdet
+/// contribution).
+fn inner_factor(
+    f: &HFactors,
+    i: usize,
+    s: &[Option<Mat>],
+) -> Result<(NodeState, Option<Mat>, f64)> {
+    let nd = &f.tree.nodes[i];
+    let r_i = f.landmark_idx[i].len();
+    // Ŝ_i = Σ_children S_child
+    let mut shat = Mat::zeros(r_i, r_i);
+    for &ch in &nd.children {
+        shat.axpy(1.0, s[ch].as_ref().unwrap());
+    }
+    shat.symmetrize();
+    // G_i
+    let sig = f.sigma[i].as_ref().unwrap();
+    let mut g = sig.clone();
+    if let Some(p) = nd.parent {
+        let w = f.w[i].as_ref().unwrap();
+        let sp = f.sigma[p].as_ref().unwrap();
+        let wsp = matmul(w, Trans::No, sp, Trans::No);
+        gemm(-1.0, &wsp, Trans::No, w, Trans::Yes, 1.0, &mut g);
+        g.symmetrize();
+    }
+    // (I + G Ŝ)
+    let mut igs = matmul(&g, Trans::No, &shat, Trans::No);
+    igs.add_diag(1.0);
+    let lu = Lu::new(&igs)?;
+    let ldi = lu.logabsdet();
+    let si = if nd.parent.is_some() {
+        // T_i = Ŝ − Ŝ Φ(Ŝ), S_i = W_iᵀ T_i W_i
+        let phi_s = phi(&g, &lu, &shat);
+        let mut t = shat.clone();
+        gemm(-1.0, &shat, Trans::No, &phi_s, Trans::No, 1.0, &mut t);
+        let w = f.w[i].as_ref().unwrap();
+        let tw = matmul(&t, Trans::No, w, Trans::No);
+        Some(matmul(w, Trans::Yes, &tw, Trans::No))
+    } else {
+        None
+    };
+    Ok((NodeState { shat, g, lu }, si, ldi))
 }
 
 /// Factorization work for one leaf: the Schur complement

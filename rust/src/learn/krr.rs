@@ -125,6 +125,11 @@ pub struct KrrModel {
     /// Estimated memory footprint in f64 words (the paper's §5 model:
     /// ≈ 4nr hierarchical, ≈ nr for the others).
     pub memory_words: usize,
+    /// Feature dimension d, recorded at fit time so every engine can
+    /// report it (the serving layer validates request lengths with it).
+    dim: usize,
+    /// Output columns m, recorded at fit time.
+    n_outputs: usize,
     cfg: TrainConfig,
 }
 
@@ -182,7 +187,14 @@ impl KrrModel {
                 (FittedEngine::Exact(m), n * n)
             }
         };
-        Ok(KrrModel { engine, phases, memory_words, cfg: cfg.clone() })
+        Ok(KrrModel {
+            engine,
+            phases,
+            memory_words,
+            dim: x.cols(),
+            n_outputs: y.cols(),
+            cfg: cfg.clone(),
+        })
     }
 
     /// Convenience: train on a [`Dataset`] (encodes targets per task).
@@ -214,11 +226,31 @@ impl KrrModel {
         &self.cfg
     }
 
+    /// Feature dimension d the model was trained on (any engine).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of output columns m (any engine).
+    pub fn outputs(&self) -> usize {
+        self.n_outputs
+    }
+
     /// Borrow the hierarchical factors, if this is the hierarchical engine
     /// (used by the coordinator for the low-latency serving path).
     pub fn hierarchical_parts(&self) -> Option<(&HFactors, &Mat)> {
         match &self.engine {
             FittedEngine::Hierarchical { factors, w, .. } => Some((factors, w)),
+            _ => None,
+        }
+    }
+
+    /// Borrow the long-lived Algorithm-3 predictor, if this is the
+    /// hierarchical engine (the input to
+    /// [`crate::shard::split_predictor`]).
+    pub fn hierarchical_predictor(&self) -> Option<&HPredictor> {
+        match &self.engine {
+            FittedEngine::Hierarchical { predictor, .. } => Some(predictor),
             _ => None,
         }
     }
@@ -322,6 +354,26 @@ mod tests {
             (hier - exact).abs() < 0.02,
             "full-rank hierarchical {hier} vs exact {exact}"
         );
+    }
+
+    /// The serving layer rejects every request when `dim() == 0`
+    /// (ISSUE 2 satellite): the dimension must be recorded at fit time
+    /// for *every* engine, not inferred from hierarchical internals.
+    #[test]
+    fn dim_and_outputs_recorded_for_all_engines() {
+        let (train, _) = small_regression();
+        for spec in [
+            EngineSpec::Hierarchical { rank: 40 },
+            EngineSpec::Nystrom { rank: 40 },
+            EngineSpec::Fourier { rank: 40 },
+            EngineSpec::Independent { n0: 40 },
+            EngineSpec::Exact,
+        ] {
+            let cfg = TrainConfig::new(Gaussian::new(0.5), spec).with_seed(2);
+            let model = KrrModel::fit_dataset(&cfg, &train).unwrap();
+            assert_eq!(model.dim(), train.d(), "{}", spec.name());
+            assert_eq!(model.outputs(), 1, "{}", spec.name());
+        }
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub mod runtime;
 pub mod kernels;
 pub mod linalg;
 pub mod partition;
+pub mod shard;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -337,6 +337,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         opt("port", "TCP port", Some("7878")),
         opt("max-batch", "dynamic batch size cap", Some("64")),
         opt("max-wait-ms", "batching window (ms)", Some("2")),
+        opt("shards", "shard workers (0 = single replica)", Some("0")),
+        opt("shard-depth", "tree depth of the shard cut (default: fits --shards)", None),
         flag("help", "show help"),
     ]);
     let a = Args::parse(argv, &spec).map_err(Error::Config)?;
@@ -354,7 +356,37 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             a.u64("max-wait-ms").map_err(Error::Config)?,
         ),
     };
-    let svc = Arc::new(PredictionService::start(Arc::new(model), policy));
+
+    // Sharded mode: cut the partition tree at --shard-depth (or the
+    // smallest depth yielding at least --shards subtrees) and spawn one
+    // worker per shard behind the dynamic batcher.
+    let n_shards = a.usize("shards").map_err(Error::Config)?;
+    let shard_depth = a
+        .get("shard-depth")
+        .map(|v| v.parse::<usize>().map_err(|_| anyhow!("bad --shard-depth '{v}'")))
+        .transpose()?;
+    let svc = if n_shards > 0 || shard_depth.is_some() {
+        let (sharded, depth, tree_depth) = {
+            let pred = model.hierarchical_predictor().ok_or_else(|| {
+                anyhow!("--shards/--shard-depth require the hierarchical engine")
+            })?;
+            let tree = &pred.factors().tree;
+            let depth = shard_depth
+                .unwrap_or_else(|| hck::shard::depth_for_shards(tree, n_shards.max(1)));
+            (hck::shard::ShardedPredictor::new(pred, depth), depth, tree.depth())
+        };
+        // The shards own their slices (plus the small top-path replica);
+        // drop the unsharded model so serving holds one copy, not two.
+        drop(model);
+        eprintln!(
+            "sharded serving: {} workers at tree depth {depth} (tree depth {tree_depth})",
+            sharded.shards()
+        );
+        Arc::new(PredictionService::start(Arc::new(sharded), policy))
+    } else {
+        Arc::new(PredictionService::start(Arc::new(model), policy))
+    };
+
     let port = a.usize("port").map_err(Error::Config)?;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
     eprintln!(
@@ -362,11 +394,25 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
          {{\"cmd\":\"shutdown\"}} to stop"
     );
     let conns = serve_tcp(listener, svc.clone())?;
-    let snap = svc.metrics.snapshot();
+    let snap = svc.snapshot();
     eprintln!(
         "served {} requests over {} connections; {:.0} rps, p50 {:.0} µs, p99 {:.0} µs",
         snap.requests, conns, snap.throughput_rps, snap.p50_us, snap.p99_us
     );
+    for s in &snap.shards {
+        eprintln!(
+            "  shard {} rows [{}, {}): {} queries in {} batches \
+             (mean {:.1}/batch), {:.0} ns/query, queue {}",
+            s.shard,
+            s.rows_lo,
+            s.rows_hi,
+            s.requests,
+            s.batches,
+            s.mean_batch_size,
+            s.ns_per_query,
+            s.queue_depth
+        );
+    }
     Ok(())
 }
 

@@ -22,4 +22,4 @@ pub mod kmeans;
 pub mod tree;
 
 pub use kmeans::kmeans_lloyd;
-pub use tree::{Node, PartitionTree, Split, SplitRule};
+pub use tree::{follow_split, Node, PartitionTree, Split, SplitRule};

@@ -144,35 +144,7 @@ impl PartitionTree {
         let mut path = vec![0usize];
         let mut id = 0usize;
         while let Some(split) = &self.nodes[id].split {
-            let children = &self.nodes[id].children;
-            let next = match split {
-                Split::Hyperplane { dir, threshold } => {
-                    if dot(x, dir) <= *threshold {
-                        children[0]
-                    } else {
-                        children[1]
-                    }
-                }
-                Split::Axis { axis, threshold } => {
-                    if x[*axis] <= *threshold {
-                        children[0]
-                    } else {
-                        children[1]
-                    }
-                }
-                Split::Centers { centers } => {
-                    let mut best = 0usize;
-                    let mut bestd = f64::INFINITY;
-                    for c in 0..centers.rows() {
-                        let d2 = sqdist(x, centers.row(c));
-                        if d2 < bestd {
-                            bestd = d2;
-                            best = c;
-                        }
-                    }
-                    children[best]
-                }
-            };
+            let next = follow_split(split, &self.nodes[id].children, x);
             path.push(next);
             id = next;
         }
@@ -251,6 +223,41 @@ impl PartitionTree {
         // tree for routing via `FlatRouter` below. Here we encode the flat
         // tree's split as None and let callers route with the deep tree.
         PartitionTree { nodes, perm: self.perm.clone(), n0: self.n0 }
+    }
+}
+
+/// Apply one split decision: which child of a node owns `x`. Shared by
+/// the in-tree routing above and the shard router, which walks a prefix
+/// of the tree (`crate::shard::ShardRouter`) or a detached subtree
+/// (`crate::shard::Shard`) with the same semantics.
+pub fn follow_split(split: &Split, children: &[usize], x: &[f64]) -> usize {
+    match split {
+        Split::Hyperplane { dir, threshold } => {
+            if dot(x, dir) <= *threshold {
+                children[0]
+            } else {
+                children[1]
+            }
+        }
+        Split::Axis { axis, threshold } => {
+            if x[*axis] <= *threshold {
+                children[0]
+            } else {
+                children[1]
+            }
+        }
+        Split::Centers { centers } => {
+            let mut best = 0usize;
+            let mut bestd = f64::INFINITY;
+            for c in 0..centers.rows() {
+                let d2 = sqdist(x, centers.row(c));
+                if d2 < bestd {
+                    bestd = d2;
+                    best = c;
+                }
+            }
+            children[best]
+        }
     }
 }
 

@@ -1,0 +1,233 @@
+//! Sharded serving of a fitted hierarchical model.
+//!
+//! The Algorithm-3 out-of-sample path touches one root-to-leaf path per
+//! query — O(r² log(n/r) + dr) after precomputation — so a fitted model
+//! partitions naturally along the tree: cut the partition tree at depth
+//! D and every subtree below the cut becomes a **shard** that can answer
+//! any query routed into its domain *by itself*. This is the
+//! block-partitioned direction of the Rebrova et al. / Tu et al. line of
+//! work (PAPERS.md), applied to serving rather than factorization.
+//!
+//! - [`split`]: cut a fitted [`crate::hkernel::HPredictor`] into
+//!   [`Shard`]s. Each shard owns its subtree's factors (leaf blocks,
+//!   leaf weight rows, landmark Grams, `W` climbs), the precomputed
+//!   Algorithm-3 `c` state of its nodes, and a **replicated copy of the
+//!   top-of-tree path state** (the `c`/`W` pairs from just above the
+//!   shard root to the child of the global root), so no shard ever needs
+//!   another shard — or the coordinator — to finish a prediction.
+//! - [`router`]: walks only the top D levels of the tree to map a query
+//!   to its shard.
+//! - [`worker`]: one thread + queue per shard, and a
+//!   [`worker::ShardedPredictor`] that scatters a batch across the
+//!   workers, gathers the per-shard results and reassembles them in
+//!   request order. It implements [`crate::coordinator::Predictor`], so
+//!   it drops behind the existing dynamic batcher unchanged.
+//!
+//! Within a shard, co-routed queries are grouped by destination leaf and
+//! evaluated as gemms across the group (leaf kernel block, shared-path
+//! climb), mirroring [`crate::hkernel::HPredictor::predict_batch`].
+//!
+//! Shards serialize independently ([`crate::hkernel::persist::save_shard`]),
+//! so a worker process can load only its slice of the model.
+
+pub mod router;
+pub mod split;
+pub mod worker;
+
+pub use router::ShardRouter;
+pub use split::{boundary_nodes, depth_for_shards, split_predictor};
+pub use worker::{ShardWorker, ShardedPredictor};
+
+use crate::kernels::{kernel_cross, KernelKind};
+use crate::linalg::{gemm, matmul, Cholesky, Mat, Trans};
+use crate::partition::{follow_split, Node};
+
+/// Landmark state of the shard root's *global parent*, replicated into
+/// the shard: the `d` recurrence of Algorithm 3 starts at the routed
+/// leaf's parent, which for a single-leaf shard lies above the cut.
+pub struct EntryState {
+    /// Landmark coordinates X̲_p (r x d).
+    pub landmarks: Mat,
+    /// Σ_p = K′(X̲_p, X̲_p) (kept for persistence).
+    pub sigma: Mat,
+    /// Cholesky of Σ_p (derived from `sigma`; rebuilt on load).
+    pub chol: Cholesky,
+}
+
+/// One step of the replicated top-of-tree climb: after a shard finishes
+/// its in-subtree path, each remaining ancestor `g` contributes
+/// `d ← W_gᵀ d` followed by `z += c_gᵀ d` (eqs. 18/21 continued above
+/// the cut). Steps are ordered from just above the shard root up to the
+/// child of the global root.
+pub struct TopStep {
+    /// W_g (r_g x r_{p(g)}).
+    pub w: Mat,
+    /// c_g (r_{p(g)} x m).
+    pub c: Mat,
+}
+
+/// A self-contained subtree shard of a fitted hierarchical model.
+///
+/// Node ids are **local** (the shard root is node 0); `Node::lo`/`hi`
+/// keep their **global** tree-order positions so shard leaves remain
+/// identifiable against the unsharded tree (and weight blocks stay
+/// addressable during the split). All factor storage is owned — a worker
+/// holding a `Shard` needs nothing else to serve its domain.
+pub struct Shard {
+    /// Shard index (ascending by global row range).
+    pub id: usize,
+    /// Global node id of the subtree root (diagnostics / persistence).
+    pub root_global: usize,
+    /// Base kernel.
+    pub kind: KernelKind,
+    /// Feature dimension d.
+    pub dim: usize,
+    /// Output columns m.
+    pub outputs: usize,
+    /// Local subtree nodes (parent/children are local ids; lo/hi global).
+    pub nodes: Vec<Node>,
+    /// Per local leaf: coordinates of the leaf's training points (n_j x d).
+    pub leaf_x: Vec<Option<Mat>>,
+    /// Per local leaf: weight block in tree order (n_j x m).
+    pub leaf_w: Vec<Option<Mat>>,
+    /// Per local node: Algorithm-3 `c` matrix (r_{p} x m). `None` only at
+    /// a local root that is also the global root.
+    pub c: Vec<Option<Mat>>,
+    /// Per local nonleaf: landmark coordinates (r x d).
+    pub landmarks: Vec<Option<Mat>>,
+    /// Per local nonleaf: Σ = K′(X̲, X̲).
+    pub sigma: Vec<Option<Mat>>,
+    /// Per local nonleaf: Cholesky of Σ (derived; rebuilt on load).
+    pub sigma_chol: Vec<Option<Cholesky>>,
+    /// Per local inner node that is not the global root: the W factor
+    /// used when the path climbs *into* this node.
+    pub wfac: Vec<Option<Mat>>,
+    /// Landmark state of the shard root's global parent (`None` iff the
+    /// shard root is the global root).
+    pub entry: Option<EntryState>,
+    /// Replicated climb steps above the shard root (empty iff the shard
+    /// root is the global root or a direct child of it).
+    pub top: Vec<TopStep>,
+}
+
+impl Shard {
+    /// Number of training rows owned by this shard.
+    pub fn len(&self) -> usize {
+        self.nodes[0].hi - self.nodes[0].lo
+    }
+
+    /// Whether the shard owns no rows (never true for a well-formed cut).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Global tree-order row range `[lo, hi)` of the shard's domain.
+    pub fn row_range(&self) -> (usize, usize) {
+        (self.nodes[0].lo, self.nodes[0].hi)
+    }
+
+    /// Route a query from the shard root to a **local** leaf id.
+    pub fn route_leaf(&self, x: &[f64]) -> usize {
+        let mut id = 0usize;
+        while let Some(split) = &self.nodes[id].split {
+            id = follow_split(split, &self.nodes[id].children, x);
+        }
+        id
+    }
+
+    /// Evaluate a group of queries (rows of `q`) that all route to the
+    /// same local `leaf`, as gemms across the group. Returns a
+    /// (q.rows() x m) block — the shard-local mirror of
+    /// [`crate::hkernel::HPredictor::predict_leaf_group`], continued
+    /// through the replicated [`TopStep`] climb above the cut.
+    pub fn predict_leaf_group(&self, leaf: usize, q: &Mat) -> Mat {
+        let m = self.outputs;
+        let g = q.rows();
+        let nd = &self.nodes[leaf];
+
+        // Leaf term: Z = W_leafᵀ K(X_leaf, Q)  (m x g).
+        let x_leaf = self.leaf_x[leaf].as_ref().unwrap();
+        let kq = kernel_cross(self.kind, x_leaf, q);
+        let w_leaf = self.leaf_w[leaf].as_ref().unwrap();
+        let mut z = matmul(w_leaf, Trans::Yes, &kq, Trans::No);
+
+        // Local path root → leaf via parent pointers.
+        let mut path = vec![leaf];
+        let mut cur = leaf;
+        while let Some(p) = self.nodes[cur].parent {
+            path.push(p);
+            cur = p;
+        }
+        path.reverse();
+
+        // d initialization at the routed leaf's parent: in-shard when the
+        // leaf is below the shard root, else the replicated entry state.
+        let init = if path.len() > 1 {
+            let p = self.nodes[leaf].parent.unwrap();
+            Some((self.landmarks[p].as_ref().unwrap(), self.sigma_chol[p].as_ref().unwrap()))
+        } else {
+            self.entry.as_ref().map(|e| (&e.landmarks, &e.chol))
+        };
+        let Some((lm, chol)) = init else {
+            // Single-node global tree: the leaf term is the prediction.
+            return Mat::from_fn(g, m, |i, j| z[(j, i)]);
+        };
+        let kp = kernel_cross(self.kind, lm, q);
+        let mut d = chol.solve_mat(&kp);
+
+        // Climb the in-shard path bottom-up (includes the shard root's
+        // own c, which lives in its global parent's landmark space).
+        for idx in (0..path.len()).rev() {
+            let mnode = path[idx];
+            let Some(cm) = &self.c[mnode] else {
+                // Local root == global root: nothing above.
+                return Mat::from_fn(g, m, |i, j| z[(j, i)]);
+            };
+            gemm(1.0, cm, Trans::Yes, &d, Trans::No, 1.0, &mut z);
+            if idx >= 1 {
+                if let Some(w) = &self.wfac[path[idx - 1]] {
+                    d = matmul(w, Trans::Yes, &d, Trans::No);
+                }
+            }
+        }
+        // Replicated climb above the cut.
+        for step in &self.top {
+            d = matmul(&step.w, Trans::Yes, &d, Trans::No);
+            gemm(1.0, &step.c, Trans::Yes, &d, Trans::No, 1.0, &mut z);
+        }
+        Mat::from_fn(g, m, |i, j| z[(j, i)])
+    }
+
+    /// Predict a batch of queries already routed to this shard, grouping
+    /// co-routed queries by destination leaf. Results in request order.
+    pub fn predict_batch(&self, q: &Mat) -> Mat {
+        crate::hkernel::oos::grouped_eval(
+            q,
+            self.outputs,
+            |x| self.route_leaf(x),
+            |leaf, sub| self.predict_leaf_group(leaf, sub),
+        )
+    }
+
+    /// Memory footprint of the shard's owned factors, in f64 words
+    /// (replicated entry/top state included).
+    pub fn memory_words(&self) -> usize {
+        let mat = |m: &Option<Mat>| m.as_ref().map_or(0, |m| m.rows() * m.cols());
+        let mut words = 0;
+        for i in 0..self.nodes.len() {
+            words += mat(&self.leaf_x[i])
+                + mat(&self.leaf_w[i])
+                + mat(&self.c[i])
+                + mat(&self.landmarks[i])
+                + mat(&self.sigma[i])
+                + mat(&self.wfac[i]);
+        }
+        if let Some(e) = &self.entry {
+            words += e.landmarks.rows() * e.landmarks.cols() + e.sigma.rows() * e.sigma.cols();
+        }
+        for s in &self.top {
+            words += s.w.rows() * s.w.cols() + s.c.rows() * s.c.cols();
+        }
+        words
+    }
+}

@@ -1,0 +1,127 @@
+//! Query → shard routing over the top levels of the partition tree.
+
+use crate::partition::{follow_split, Node, PartitionTree};
+
+/// Routes queries by walking only the tree levels **above** the shard
+/// cut: the walk starts at the global root and stops at the first
+/// boundary node, returning that shard's index. O(D · d) per query —
+/// independent of the shard subtree sizes.
+pub struct ShardRouter {
+    /// The top nodes of the tree, re-indexed compactly: the global root
+    /// is node 0 and children of retained inner nodes follow. Boundary
+    /// nodes are retained without children.
+    nodes: Vec<Node>,
+    /// For each retained node: `Some(shard)` iff it is a boundary node.
+    shard_of: Vec<Option<usize>>,
+    n_shards: usize,
+}
+
+impl ShardRouter {
+    /// Build a router for the given boundary (as produced by
+    /// [`super::split::boundary_nodes`]; shard ids follow its order).
+    pub fn new(tree: &PartitionTree, boundary: &[usize]) -> ShardRouter {
+        let shard_by_global: std::collections::HashMap<usize, usize> =
+            boundary.iter().enumerate().map(|(s, &g)| (g, s)).collect();
+        // Keep only the nodes on or above the cut, breadth-first so
+        // parents precede children in the compact index.
+        let mut keep = Vec::new();
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        while let Some(g) = queue.pop_front() {
+            keep.push(g);
+            if !shard_by_global.contains_key(&g) {
+                for &c in &tree.nodes[g].children {
+                    queue.push_back(c);
+                }
+            }
+        }
+        let local_of: std::collections::HashMap<usize, usize> =
+            keep.iter().enumerate().map(|(l, &g)| (g, l)).collect();
+        let mut nodes = Vec::with_capacity(keep.len());
+        let mut shard_of = Vec::with_capacity(keep.len());
+        for &g in &keep {
+            let nd = &tree.nodes[g];
+            let is_boundary = shard_by_global.contains_key(&g);
+            nodes.push(Node {
+                parent: nd.parent.map(|p| local_of[&p]),
+                children: if is_boundary {
+                    Vec::new()
+                } else {
+                    nd.children.iter().map(|c| local_of[c]).collect()
+                },
+                lo: nd.lo,
+                hi: nd.hi,
+                split: if is_boundary { None } else { nd.split.clone() },
+                depth: nd.depth,
+            });
+            shard_of.push(shard_by_global.get(&g).copied());
+        }
+        ShardRouter { nodes, shard_of, n_shards: boundary.len() }
+    }
+
+    /// Number of shards behind this router.
+    pub fn shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Route a query to its shard index.
+    pub fn route(&self, x: &[f64]) -> usize {
+        let mut id = 0usize;
+        loop {
+            if let Some(s) = self.shard_of[id] {
+                return s;
+            }
+            let split = self.nodes[id]
+                .split
+                .as_ref()
+                .expect("router invariant: non-boundary nodes keep their split");
+            id = follow_split(split, &self.nodes[id].children, x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::partition::SplitRule;
+    use crate::shard::split::boundary_nodes;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn router_agrees_with_full_tree_walk() {
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(200, 4, |_, _| rng.uniform(0.0, 1.0));
+        for rule in [SplitRule::RandomProjection, SplitRule::KMeans { k: 3, iters: 8 }] {
+            let tree = PartitionTree::build(&x, 10, rule, &mut rng);
+            for depth in 0..=tree.depth() {
+                let boundary = boundary_nodes(&tree, depth);
+                let router = ShardRouter::new(&tree, &boundary);
+                assert_eq!(router.shards(), boundary.len());
+                for _ in 0..50 {
+                    let q: Vec<f64> = (0..4).map(|_| rng.uniform(-0.2, 1.2)).collect();
+                    // The full walk's leaf must lie inside the routed
+                    // shard's row range: the router truncates the same
+                    // deterministic walk at the cut.
+                    let leaf = tree.route_leaf(&q);
+                    let s = router.route(&q);
+                    let b = boundary[s];
+                    assert!(
+                        tree.nodes[leaf].lo >= tree.nodes[b].lo
+                            && tree.nodes[leaf].hi <= tree.nodes[b].hi,
+                        "rule {rule:?} depth {depth}: leaf {leaf} outside shard {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_router() {
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(40, 3, |_, _| rng.uniform(0.0, 1.0));
+        let tree = PartitionTree::build(&x, 8, SplitRule::RandomProjection, &mut rng);
+        let router = ShardRouter::new(&tree, &boundary_nodes(&tree, 0));
+        assert_eq!(router.shards(), 1);
+        assert_eq!(router.route(&[0.5, 0.5, 0.5]), 0);
+    }
+}

@@ -1,0 +1,235 @@
+//! Cutting a fitted model into subtree shards at a tree depth.
+
+use super::{EntryState, Shard, TopStep};
+use crate::hkernel::HPredictor;
+use crate::partition::{Node, PartitionTree};
+
+/// The shard boundary at `depth`: every node at exactly `depth`, plus
+/// every leaf shallower than `depth` (subtrees that bottom out early).
+/// The boundary nodes' row ranges partition `[0, n)`; results are sorted
+/// ascending by range start. `depth = 0` yields the single shard `[root]`.
+pub fn boundary_nodes(tree: &PartitionTree, depth: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut stack = vec![0usize];
+    while let Some(id) = stack.pop() {
+        let nd = &tree.nodes[id];
+        if nd.depth == depth || (nd.is_leaf() && nd.depth < depth) {
+            out.push(id);
+        } else {
+            for &c in &nd.children {
+                stack.push(c);
+            }
+        }
+    }
+    out.sort_by_key(|&i| tree.nodes[i].lo);
+    out
+}
+
+/// Smallest depth whose boundary has at least `want` shards, capped at
+/// the tree depth (beyond which every shard is a single leaf).
+pub fn depth_for_shards(tree: &PartitionTree, want: usize) -> usize {
+    let want = want.max(1);
+    let max = tree.depth();
+    for d in 0..=max {
+        if boundary_nodes(tree, d).len() >= want {
+            return d;
+        }
+    }
+    max
+}
+
+/// Split a fitted predictor into self-contained [`Shard`]s at `depth`.
+///
+/// Each shard clones its slice of the factors (subtree nodes, leaf
+/// blocks + weight rows, landmark Grams, `W` climbs, Algorithm-3 `c`
+/// state) and replicates the shared top-of-tree path state (entry
+/// landmarks + the `c`/`W` climb steps above the cut), so the union of
+/// shards answers exactly like the unsharded predictor with no shared
+/// storage between workers.
+pub fn split_predictor(pred: &HPredictor, depth: usize) -> Vec<Shard> {
+    let f = pred.f.as_ref();
+    let tree = &f.tree;
+    let m = pred.outputs();
+    let boundary = boundary_nodes(tree, depth);
+
+    boundary
+        .iter()
+        .enumerate()
+        .map(|(sid, &b)| {
+            // Collect the subtree below (and including) b in preorder;
+            // preorder keeps parents before children, so local parent
+            // links resolve forward like the global tree's.
+            let mut subtree = Vec::new();
+            let mut stack = vec![b];
+            while let Some(id) = stack.pop() {
+                subtree.push(id);
+                for &c in tree.nodes[id].children.iter().rev() {
+                    stack.push(c);
+                }
+            }
+            let mut local_of = std::collections::HashMap::new();
+            for (l, &g) in subtree.iter().enumerate() {
+                local_of.insert(g, l);
+            }
+
+            let nn = subtree.len();
+            let mut nodes = Vec::with_capacity(nn);
+            let mut leaf_x: Vec<Option<crate::linalg::Mat>> = (0..nn).map(|_| None).collect();
+            let mut leaf_w: Vec<Option<crate::linalg::Mat>> = (0..nn).map(|_| None).collect();
+            let mut c: Vec<Option<crate::linalg::Mat>> = (0..nn).map(|_| None).collect();
+            let mut landmarks: Vec<Option<crate::linalg::Mat>> =
+                (0..nn).map(|_| None).collect();
+            let mut sigma: Vec<Option<crate::linalg::Mat>> = (0..nn).map(|_| None).collect();
+            let mut sigma_chol: Vec<Option<crate::linalg::Cholesky>> =
+                (0..nn).map(|_| None).collect();
+            let mut wfac: Vec<Option<crate::linalg::Mat>> = (0..nn).map(|_| None).collect();
+
+            for (l, &g) in subtree.iter().enumerate() {
+                let nd = &tree.nodes[g];
+                nodes.push(Node {
+                    parent: if g == b { None } else { nd.parent.map(|p| local_of[&p]) },
+                    children: nd.children.iter().map(|ch| local_of[ch]).collect(),
+                    lo: nd.lo,
+                    hi: nd.hi,
+                    split: nd.split.clone(),
+                    depth: nd.depth,
+                });
+                c[l] = pred.c[g].clone();
+                if nd.is_leaf() {
+                    leaf_x[l] = pred.leaf_x[g].clone();
+                    leaf_w[l] = pred.leaf_w[g].clone();
+                } else {
+                    landmarks[l] = f.landmarks[g].clone();
+                    sigma[l] = f.sigma[g].clone();
+                    sigma_chol[l] = f.sigma_chol[g].clone();
+                    if g != 0 {
+                        wfac[l] = f.w[g].clone();
+                    }
+                }
+            }
+
+            // Replicated entry state: the shard root's global parent.
+            let entry = tree.nodes[b].parent.map(|p| EntryState {
+                landmarks: f.landmarks[p].as_ref().unwrap().clone(),
+                sigma: f.sigma[p].as_ref().unwrap().clone(),
+                chol: f.sigma_chol[p].as_ref().unwrap().clone(),
+            });
+
+            // Replicated climb steps: ancestors of b from just above the
+            // shard root up to the child of the global root.
+            let mut top = Vec::new();
+            let mut anc = tree.nodes[b].parent;
+            while let Some(g) = anc {
+                if tree.nodes[g].parent.is_some() {
+                    top.push(TopStep {
+                        w: f.w[g].as_ref().unwrap().clone(),
+                        c: pred.c[g].as_ref().unwrap().clone(),
+                    });
+                }
+                anc = tree.nodes[g].parent;
+            }
+
+            Shard {
+                id: sid,
+                root_global: b,
+                kind: f.config.kind,
+                dim: f.x.cols(),
+                outputs: m,
+                nodes,
+                leaf_x,
+                leaf_w,
+                c,
+                landmarks,
+                sigma,
+                sigma_chol,
+                wfac,
+                entry,
+                top,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hkernel::{HConfig, HFactors};
+    use crate::kernels::Gaussian;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn fitted(n: usize, r: usize, n0: usize, seed: u64) -> (Arc<HFactors>, HPredictor) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 3, |_, _| rng.uniform(0.0, 1.0));
+        let mut cfg = HConfig::new(Gaussian::new(0.6), r).with_seed(seed + 5);
+        cfg.n0 = n0;
+        let f = Arc::new(HFactors::build(&x, cfg).unwrap());
+        let w = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let pred = HPredictor::new(f.clone(), &w);
+        (f, pred)
+    }
+
+    #[test]
+    fn boundary_partitions_rows() {
+        let (f, _) = fitted(96, 8, 8, 1);
+        for depth in 0..=f.tree.depth() + 1 {
+            let b = boundary_nodes(&f.tree, depth);
+            let mut pos = 0;
+            for &id in &b {
+                assert_eq!(f.tree.nodes[id].lo, pos, "depth {depth}");
+                pos = f.tree.nodes[id].hi;
+            }
+            assert_eq!(pos, 96);
+        }
+        // Depth 0 is the single root shard; beyond the tree depth the
+        // boundary is exactly the leaf set.
+        assert_eq!(boundary_nodes(&f.tree, 0), vec![0]);
+        assert_eq!(
+            boundary_nodes(&f.tree, f.tree.depth() + 3),
+            f.tree.leaves()
+        );
+    }
+
+    #[test]
+    fn depth_for_shards_monotone() {
+        let (f, _) = fitted(128, 8, 8, 2);
+        assert_eq!(depth_for_shards(&f.tree, 1), 0);
+        let d4 = depth_for_shards(&f.tree, 4);
+        assert!(boundary_nodes(&f.tree, d4).len() >= 4);
+        assert!(boundary_nodes(&f.tree, d4.saturating_sub(1)).len() < 4 || d4 == 0);
+        // Impossible requests cap at the leaf level.
+        assert_eq!(depth_for_shards(&f.tree, 10_000), f.tree.depth());
+    }
+
+    #[test]
+    fn shards_are_self_contained_slices() {
+        let (f, pred) = fitted(120, 6, 6, 3);
+        let depth = 2.min(f.tree.depth());
+        let shards = split_predictor(&pred, depth);
+        let mut covered = 0;
+        for s in &shards {
+            let (lo, hi) = s.row_range();
+            assert_eq!(lo, covered);
+            covered = hi;
+            assert_eq!(s.outputs, 2);
+            assert_eq!(s.dim, 3);
+            // Local root has no parent; every local leaf carries blocks.
+            assert!(s.nodes[0].parent.is_none());
+            for (l, nd) in s.nodes.iter().enumerate() {
+                if nd.is_leaf() {
+                    assert!(s.leaf_x[l].is_some() && s.leaf_w[l].is_some());
+                    assert_eq!(s.leaf_x[l].as_ref().unwrap().rows(), nd.hi - nd.lo);
+                } else {
+                    assert!(s.landmarks[l].is_some() && s.sigma_chol[l].is_some());
+                }
+            }
+            // Top replication matches the shard root's global depth.
+            let gd = f.tree.nodes[s.root_global].depth;
+            assert_eq!(s.top.len(), gd.saturating_sub(1));
+            assert_eq!(s.entry.is_some(), gd > 0);
+            assert!(s.memory_words() > 0);
+        }
+        assert_eq!(covered, 120);
+    }
+}

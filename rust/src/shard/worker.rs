@@ -1,0 +1,302 @@
+//! Shard worker threads and the multi-replica scatter/gather predictor.
+
+use super::router::ShardRouter;
+use super::split::{boundary_nodes, split_predictor};
+use super::Shard;
+use crate::coordinator::metrics::ShardSnapshot;
+use crate::coordinator::Predictor;
+use crate::hkernel::HPredictor;
+use crate::linalg::Mat;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-shard serving counters, updated by the worker thread and read by
+/// [`ShardedPredictor::shard_metrics`].
+#[derive(Default)]
+struct WorkerMetrics {
+    /// Jobs submitted but not yet finished (instantaneous queue depth).
+    queued: AtomicUsize,
+    /// Sub-batches served.
+    batches: AtomicU64,
+    /// Queries served.
+    requests: AtomicU64,
+    /// Wall time spent inside `Shard::predict_batch`, in ns.
+    busy_ns: AtomicU64,
+    /// Queries the worker never answered (dead/panicked worker thread).
+    dropped: AtomicU64,
+}
+
+/// One sub-batch of co-routed queries plus its reply channel.
+struct Job {
+    q: Mat,
+    resp: SyncSender<Mat>,
+}
+
+/// A long-lived thread owning one [`Shard`] and draining its queue.
+pub struct ShardWorker {
+    id: usize,
+    row_range: (usize, usize),
+    tx: SyncSender<Job>,
+    metrics: Arc<WorkerMetrics>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardWorker {
+    /// Spawn the worker thread around a shard.
+    pub fn spawn(shard: Shard) -> ShardWorker {
+        let id = shard.id;
+        let row_range = shard.row_range();
+        let (tx, rx) = sync_channel::<Job>(1024);
+        let metrics = Arc::new(WorkerMetrics::default());
+        let m2 = metrics.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("hck-shard-{id}"))
+            .spawn(move || {
+                // Channel disconnect (all senders dropped) ends the loop.
+                while let Ok(job) = rx.recv() {
+                    let t = Instant::now();
+                    // A panic must not kill the worker for the rest of the
+                    // service lifetime: contain it to this sub-batch. The
+                    // shard is immutable (&self evaluation), so reuse after
+                    // an unwind is sound; the caller sees the dropped reply
+                    // and NaN-fills just these rows.
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || shard.predict_batch(&job.q),
+                    ));
+                    match out {
+                        Ok(out) => {
+                            m2.busy_ns
+                                .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            m2.batches.fetch_add(1, Ordering::Relaxed);
+                            m2.requests.fetch_add(job.q.rows() as u64, Ordering::Relaxed);
+                            m2.queued.fetch_sub(1, Ordering::Relaxed);
+                            let _ = job.resp.send(out);
+                        }
+                        Err(_) => {
+                            m2.queued.fetch_sub(1, Ordering::Relaxed);
+                            // Dropping job.resp without a send surfaces the
+                            // failure to the gather side (recv error →
+                            // NaN rows + dropped count).
+                        }
+                    }
+                }
+            })
+            .expect("spawn shard worker");
+        ShardWorker { id, row_range, tx, metrics, join: Some(join) }
+    }
+
+    /// Enqueue a sub-batch; the reply arrives on the returned receiver.
+    fn submit(&self, q: Mat) -> std::sync::mpsc::Receiver<Mat> {
+        let (rtx, rrx) = sync_channel(1);
+        self.metrics.queued.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(Job { q, resp: rtx }).is_err() {
+            self.metrics.queued.fetch_sub(1, Ordering::Relaxed);
+        }
+        rrx
+    }
+
+    /// Point-in-time view of this worker's counters.
+    pub fn snapshot(&self) -> ShardSnapshot {
+        let batches = self.metrics.batches.load(Ordering::Relaxed);
+        let requests = self.metrics.requests.load(Ordering::Relaxed);
+        let busy_ns = self.metrics.busy_ns.load(Ordering::Relaxed);
+        ShardSnapshot {
+            shard: self.id,
+            rows_lo: self.row_range.0,
+            rows_hi: self.row_range.1,
+            queue_depth: self.metrics.queued.load(Ordering::Relaxed),
+            batches,
+            requests,
+            mean_batch_size: if batches > 0 { requests as f64 / batches as f64 } else { 0.0 },
+            ns_per_query: if requests > 0 { busy_ns as f64 / requests as f64 } else { 0.0 },
+            dropped: self.metrics.dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        // Replacing tx closes the worker's channel; recv() then errors
+        // and the thread exits.
+        drop(std::mem::replace(&mut self.tx, sync_channel(1).0));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Multi-replica serving front: a [`ShardRouter`] over the top tree
+/// levels plus one [`ShardWorker`] per shard. `predict_batch` scatters a
+/// batch across the per-shard queues, the workers evaluate their
+/// sub-batches concurrently (leaf-grouped gemms inside each shard), and
+/// the results are gathered back **in request order**. Implements
+/// [`Predictor`], so it slots behind the coordinator's dynamic batcher.
+pub struct ShardedPredictor {
+    router: ShardRouter,
+    workers: Vec<ShardWorker>,
+    dim: usize,
+    outputs: usize,
+}
+
+impl ShardedPredictor {
+    /// Split a fitted predictor at `depth` and spawn one worker per
+    /// shard.
+    pub fn new(pred: &HPredictor, depth: usize) -> ShardedPredictor {
+        let f = pred.factors();
+        let boundary = boundary_nodes(&f.tree, depth);
+        let router = ShardRouter::new(&f.tree, &boundary);
+        let shards = split_predictor(pred, depth);
+        Self::from_parts(router, shards, f.x.cols(), pred.outputs())
+    }
+
+    /// Assemble from pre-built parts (e.g. shards loaded from disk).
+    ///
+    /// Shards must arrive in boundary order (ascending row range, ids
+    /// 0..k) — the router returns positional indices, so an out-of-order
+    /// vector (say, a directory glob that sorts "shard10" before
+    /// "shard2") would misroute every query while still returning
+    /// finite numbers. Checked here instead.
+    pub fn from_parts(
+        router: ShardRouter,
+        shards: Vec<Shard>,
+        dim: usize,
+        outputs: usize,
+    ) -> ShardedPredictor {
+        assert_eq!(router.shards(), shards.len(), "router/shard count mismatch");
+        let mut covered = None;
+        for (i, s) in shards.iter().enumerate() {
+            assert_eq!(s.id, i, "shard {} passed at position {i}: not in boundary order", s.id);
+            let (lo, hi) = s.row_range();
+            if let Some(prev) = covered {
+                assert_eq!(lo, prev, "shard {i} row range [{lo}, {hi}) leaves a gap");
+            }
+            covered = Some(hi);
+        }
+        let workers = shards.into_iter().map(ShardWorker::spawn).collect();
+        ShardedPredictor { router, workers, dim, outputs }
+    }
+
+    /// Number of shards (== workers).
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Predictor for ShardedPredictor {
+    fn predict_batch(&self, q: &Mat) -> Mat {
+        // Scatter: request indices per destination shard.
+        let mut per: Vec<Vec<usize>> = (0..self.workers.len()).map(|_| Vec::new()).collect();
+        for i in 0..q.rows() {
+            per[self.router.route(q.row(i))].push(i);
+        }
+        // Dispatch every non-empty sub-batch before blocking on replies,
+        // so the workers run concurrently.
+        let mut pending = Vec::new();
+        for (sid, idx) in per.into_iter().enumerate() {
+            if idx.is_empty() {
+                continue;
+            }
+            let sub = q.select_rows(&idx);
+            let rrx = self.workers[sid].submit(sub);
+            pending.push((sid, idx, rrx));
+        }
+        // Gather in request order.
+        let mut out = Mat::zeros(q.rows(), self.outputs);
+        for (sid, idx, rrx) in pending {
+            match rrx.recv() {
+                Ok(block) => {
+                    for (k, &i) in idx.iter().enumerate() {
+                        out.row_mut(i).copy_from_slice(block.row(k));
+                    }
+                }
+                Err(_) => {
+                    // The worker died (panicked or its queue closed).
+                    // Return NaN — encoded as null on the JSON wire — so
+                    // clients cannot mistake the rows for predictions,
+                    // and count the drop in the shard's metrics.
+                    for &i in &idx {
+                        out.row_mut(i).fill(f64::NAN);
+                    }
+                    self.workers[sid]
+                        .metrics
+                        .dropped
+                        .fetch_add(idx.len() as u64, Ordering::Relaxed);
+                    eprintln!(
+                        "shard {sid} worker dropped a sub-batch of {} queries",
+                        idx.len()
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn outputs(&self) -> usize {
+        self.outputs
+    }
+
+    fn shard_metrics(&self) -> Vec<ShardSnapshot> {
+        self.workers.iter().map(|w| w.snapshot()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hkernel::{HConfig, HFactors};
+    use crate::kernels::Gaussian;
+    use crate::util::rng::Rng;
+
+    fn fitted(n: usize, seed: u64) -> HPredictor {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 3, |_, _| rng.uniform(0.0, 1.0));
+        let mut cfg = HConfig::new(Gaussian::new(0.6), 6).with_seed(seed);
+        cfg.n0 = 6;
+        let f = std::sync::Arc::new(HFactors::build(&x, cfg).unwrap());
+        let w = Mat::from_fn(n, 2, |_, _| rng.normal());
+        HPredictor::new(f, &w)
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_and_counts_metrics() {
+        let pred = fitted(90, 11);
+        let depth = 1;
+        let sharded = ShardedPredictor::new(&pred, depth);
+        assert!(sharded.shards() >= 2);
+        let mut rng = Rng::new(7);
+        let q = Mat::from_fn(33, 3, |_, _| rng.uniform(0.0, 1.0));
+        let want = pred.predict_batch(&q);
+        let got = sharded.predict_batch(&q);
+        for i in 0..33 {
+            for j in 0..2 {
+                assert!(
+                    (got[(i, j)] - want[(i, j)]).abs() <= 1e-10 * (1.0 + want[(i, j)].abs()),
+                    "({i},{j}): {} vs {}",
+                    got[(i, j)],
+                    want[(i, j)]
+                );
+            }
+        }
+        let snaps = sharded.shard_metrics();
+        assert_eq!(snaps.len(), sharded.shards());
+        let served: u64 = snaps.iter().map(|s| s.requests).sum();
+        assert_eq!(served, 33);
+        assert!(snaps.iter().all(|s| s.queue_depth == 0 && s.dropped == 0));
+        assert!(snaps.iter().any(|s| s.ns_per_query > 0.0));
+    }
+
+    #[test]
+    fn workers_shut_down_cleanly() {
+        let pred = fitted(60, 13);
+        let sharded = ShardedPredictor::new(&pred, 1);
+        let q = Mat::from_fn(4, 3, |i, j| (i + j) as f64 * 0.1);
+        let _ = sharded.predict_batch(&q);
+        drop(sharded); // must join without hanging
+    }
+}

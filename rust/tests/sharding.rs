@@ -1,0 +1,207 @@
+//! ISSUE 2 acceptance: sharded serving must be indistinguishable (≤1e-10,
+//! request-order stable) from the single-replica Algorithm-3 path — for
+//! every shard depth from 0 (one shard = whole tree) through the leaf
+//! level (one shard per leaf), for multi-output weight matrices, and
+//! under concurrent clients through the dynamic batcher.
+
+use hck::coordinator::{BatchPolicy, PredictionService, Predictor};
+use hck::hkernel::{HConfig, HFactors, HPredictor};
+use hck::kernels::{Gaussian, KernelKind, Laplace};
+use hck::linalg::Mat;
+use hck::partition::SplitRule;
+use hck::shard::{boundary_nodes, split_predictor, ShardRouter, ShardedPredictor};
+use hck::util::rng::Rng;
+use std::sync::Arc;
+
+#[allow(clippy::too_many_arguments)]
+fn fitted(
+    n: usize,
+    d: usize,
+    r: usize,
+    n0: usize,
+    m: usize,
+    kind: KernelKind,
+    rule: SplitRule,
+    seed: u64,
+) -> (Arc<HFactors>, HPredictor) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, d, |_, _| rng.uniform(0.0, 1.0));
+    let mut cfg = HConfig::new(kind, r).with_seed(seed * 7 + 3).with_rule(rule);
+    cfg.n0 = n0;
+    let f = Arc::new(HFactors::build(&x, cfg).unwrap());
+    let w = Mat::from_fn(n, m, |_, _| rng.normal());
+    let pred = HPredictor::new(f.clone(), &w);
+    (f, pred)
+}
+
+fn assert_close(got: &Mat, want: &Mat, tag: &str) {
+    assert_eq!(got.shape(), want.shape(), "{tag}: shape");
+    for i in 0..got.rows() {
+        for j in 0..got.cols() {
+            assert!(
+                (got[(i, j)] - want[(i, j)]).abs() <= 1e-10 * (1.0 + want[(i, j)].abs()),
+                "{tag} ({i},{j}): {} vs {}",
+                got[(i, j)],
+                want[(i, j)]
+            );
+        }
+    }
+}
+
+/// Property (ISSUE 2 acceptance): for **every** shard depth 0..=leaf
+/// level, the sharded scatter/gather path equals the unsharded predictor
+/// to ≤ 1e-10 on multi-output weights, in request order — across
+/// kernels, split rules and batch sizes (including batches that leave
+/// some shards idle).
+#[test]
+fn sharded_matches_unsharded_at_every_depth() {
+    let cases: &[(KernelKind, SplitRule, usize, u64)] = &[
+        (Gaussian::new(0.6), SplitRule::RandomProjection, 3, 1),
+        (Laplace::new(0.9), SplitRule::RandomProjection, 2, 2),
+        (Gaussian::new(0.5), SplitRule::KMeans { k: 3, iters: 8 }, 3, 3),
+    ];
+    for &(kind, rule, m, seed) in cases {
+        let (f, pred) = fitted(150, 4, 6, 8, m, kind, rule, seed);
+        let mut rng = Rng::new(seed * 31 + 1);
+        // Queries: random points plus training points (multi-query leaf
+        // groups guaranteed).
+        let q = Mat::from_fn(90, 4, |i, j| {
+            if i < 45 {
+                rng.uniform(-0.1, 1.1)
+            } else {
+                f.x[((i * 3) % 150, j)]
+            }
+        });
+        // Scalar reference (the Algorithm-3 walk, one query at a time).
+        let mut want = Mat::zeros(q.rows(), m);
+        for i in 0..q.rows() {
+            want.row_mut(i).copy_from_slice(&pred.predict(q.row(i)));
+        }
+        // Grouped unsharded batch path.
+        assert_close(&pred.predict_batch(&q), &want, "unsharded grouped");
+
+        for depth in 0..=f.tree.depth() {
+            let sharded = ShardedPredictor::new(&pred, depth);
+            assert_eq!(sharded.shards(), boundary_nodes(&f.tree, depth).len());
+            let got = sharded.predict_batch(&q);
+            assert_close(&got, &want, &format!("depth {depth} (rule {rule:?})"));
+            // A batch of one (most shards idle) and an empty-ish small
+            // batch keep request order too.
+            let got1 = sharded.predict_batch(&q.row_range(0, 1));
+            assert_close(&got1, &want.row_range(0, 1), &format!("depth {depth} single"));
+        }
+    }
+}
+
+/// Direct shard evaluation (no workers): the union of shards covers
+/// every query, each shard agreeing with the unsharded predictor on the
+/// queries routed to it.
+#[test]
+fn shard_local_evaluation_matches() {
+    let (f, pred) = fitted(120, 3, 5, 6, 2, Gaussian::new(0.7), SplitRule::RandomProjection, 9);
+    let mut rng = Rng::new(77);
+    let q = Mat::from_fn(60, 3, |_, _| rng.uniform(0.0, 1.0));
+    for depth in 0..=f.tree.depth() {
+        let boundary = boundary_nodes(&f.tree, depth);
+        let router = ShardRouter::new(&f.tree, &boundary);
+        let shards = split_predictor(&pred, depth);
+        for i in 0..q.rows() {
+            let s = router.route(q.row(i));
+            let got = shards[s].predict_batch(&q.row_range(i, i + 1));
+            let want = pred.predict(q.row(i));
+            for j in 0..2 {
+                assert!(
+                    (got[(0, j)] - want[j]).abs() <= 1e-10 * (1.0 + want[j].abs()),
+                    "depth {depth} shard {s} query {i}: {} vs {}",
+                    got[(0, j)],
+                    want[j]
+                );
+            }
+        }
+    }
+}
+
+/// Router consistency (ISSUE 2 satellite): the shard-local walk lands in
+/// exactly the leaf the unsharded tree walk finds, for every query and
+/// every cut depth.
+#[test]
+fn router_and_shard_walk_find_the_unsharded_leaf() {
+    for (rule, seed) in [
+        (SplitRule::RandomProjection, 4u64),
+        (SplitRule::KdTree, 5),
+        (SplitRule::KMeans { k: 3, iters: 10 }, 6),
+    ] {
+        let (f, pred) = fitted(130, 4, 5, 7, 1, Gaussian::new(0.6), rule, seed);
+        let mut rng = Rng::new(seed + 100);
+        for depth in 0..=f.tree.depth() {
+            let boundary = boundary_nodes(&f.tree, depth);
+            let router = ShardRouter::new(&f.tree, &boundary);
+            let shards = split_predictor(&pred, depth);
+            for _ in 0..40 {
+                let x: Vec<f64> = (0..4).map(|_| rng.uniform(-0.2, 1.2)).collect();
+                let global_leaf = f.tree.route_leaf(&x);
+                let s = router.route(&x);
+                let local_leaf = shards[s].route_leaf(&x);
+                let nd = &shards[s].nodes[local_leaf];
+                let gnd = &f.tree.nodes[global_leaf];
+                assert_eq!(
+                    (nd.lo, nd.hi),
+                    (gnd.lo, gnd.hi),
+                    "rule {rule:?} depth {depth}: shard walk diverged from tree walk"
+                );
+            }
+        }
+    }
+}
+
+/// End-to-end: concurrent clients through the dynamic batcher in front
+/// of the sharded predictor see single-replica results, under several
+/// client thread counts; per-shard metrics account for every request.
+#[test]
+fn batcher_over_sharded_predictor_serves_identically() {
+    let (f, pred) = fitted(140, 3, 6, 8, 2, Gaussian::new(0.5), SplitRule::RandomProjection, 12);
+    let depth = 2.min(f.tree.depth());
+    let mut rng = Rng::new(5);
+    let q = Mat::from_fn(48, 3, |_, _| rng.uniform(0.0, 1.0));
+    let want = pred.predict_batch(&q);
+
+    for client_threads in [1usize, 2, 4, 8] {
+        let sharded = ShardedPredictor::new(&pred, depth);
+        let svc = Arc::new(PredictionService::start(
+            Arc::new(sharded),
+            BatchPolicy { max_batch: 16, max_wait: std::time::Duration::from_millis(4) },
+        ));
+        assert_eq!(svc.dim(), 3);
+        let mut handles = Vec::new();
+        for t in 0..client_threads {
+            let svc = svc.clone();
+            let rows: Vec<(usize, Vec<f64>)> = (0..q.rows())
+                .filter(|i| i % client_threads == t)
+                .map(|i| (i, q.row(i).to_vec()))
+                .collect();
+            let expect: Vec<Vec<f64>> =
+                rows.iter().map(|(i, _)| want.row(*i).to_vec()).collect();
+            handles.push(std::thread::spawn(move || {
+                for ((_, feats), exp) in rows.into_iter().zip(expect) {
+                    let got = svc.predict(feats).unwrap();
+                    for j in 0..exp.len() {
+                        assert!(
+                            (got[j] - exp[j]).abs() <= 1e-10 * (1.0 + exp[j].abs()),
+                            "{} vs {}",
+                            got[j],
+                            exp[j]
+                        );
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = svc.snapshot();
+        assert_eq!(snap.requests as usize, q.rows(), "clients={client_threads}");
+        let shard_served: u64 = snap.shards.iter().map(|s| s.requests).sum();
+        assert_eq!(shard_served as usize, q.rows(), "clients={client_threads}");
+        assert!(snap.shards.iter().all(|s| s.queue_depth == 0));
+    }
+}

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Perf gate over BENCH_*.json telemetry.
+
+Compares the current benchmark report against a baseline from the
+previous CI run and fails (exit 1) when any matching op regresses by
+more than the threshold. Rows are matched on their identity keys
+(op, n, r, threads, batch, shards); the measured value is ns_per_op or
+ns_per_query. Skips gracefully (exit 0) when the baseline is missing or
+unreadable — the first run on a fresh repository has no history.
+
+Usage: perf_gate.py BASELINE.json CURRENT.json [--threshold 0.25]
+"""
+
+import json
+import sys
+
+KEY_FIELDS = ("op", "n", "r", "threads", "batch", "shards")
+VALUE_FIELDS = ("ns_per_op", "ns_per_query")
+
+
+def load_rows(path):
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    rows = {}
+    for row in doc.get("rows", []):
+        key = tuple(row.get(k) for k in KEY_FIELDS)
+        value = next(
+            (row[v] for v in VALUE_FIELDS if isinstance(row.get(v), (int, float))),
+            None,
+        )
+        if value is not None and value > 0:
+            rows[key] = value
+    return rows
+
+
+def main(argv):
+    args = []
+    threshold = 0.25
+    it = iter(argv)
+    for a in it:
+        if a == "--threshold":
+            threshold = float(next(it, "0.25"))
+        elif a.startswith("--threshold="):
+            threshold = float(a.split("=", 1)[1])
+        else:
+            args.append(a)
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    baseline_path, current_path = args
+
+    try:
+        baseline = load_rows(baseline_path)
+    except (OSError, ValueError) as exc:
+        print(f"perf gate: no usable baseline ({exc}); skipping")
+        return 0
+    try:
+        current = load_rows(current_path)
+    except (OSError, ValueError) as exc:
+        print(f"perf gate: current report unreadable ({exc})")
+        return 1
+    if not baseline:
+        print("perf gate: baseline has no comparable rows; skipping")
+        return 0
+
+    failures = []
+    compared = 0
+    for key, base in sorted(baseline.items(), key=str):
+        cur = current.get(key)
+        if cur is None:
+            continue  # op removed or renamed: not a regression
+        compared += 1
+        ratio = cur / base
+        label = " ".join(f"{k}={v}" for k, v in zip(KEY_FIELDS, key) if v is not None)
+        status = "FAIL" if ratio > 1.0 + threshold else "ok"
+        print(f"  [{status}] {label}: {base:.0f} -> {cur:.0f} ns ({ratio - 1.0:+.1%})")
+        if ratio > 1.0 + threshold:
+            failures.append(label)
+
+    if compared == 0:
+        print("perf gate: no overlapping rows between baseline and current; skipping")
+        return 0
+    if failures:
+        print(
+            f"perf gate: {len(failures)}/{compared} ops regressed "
+            f">{threshold:.0%}: {', '.join(failures)}"
+        )
+        return 1
+    print(f"perf gate: {compared} ops within {threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

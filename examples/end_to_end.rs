@@ -21,6 +21,7 @@ use hck::hkernel::{HConfig, HFactors, HPredictor, HSolver};
 use hck::kernels::{Gaussian, NativeEvaluator};
 use hck::learn::{EngineSpec, KrrModel, TrainConfig};
 use hck::linalg::Mat;
+use hck::model::Model;
 use hck::partition::PartitionTree;
 use hck::runtime::{PjrtBlockEvaluator, PjrtEngine};
 use hck::util::bench::Table;
@@ -138,14 +139,30 @@ fn main() -> Result<()> {
     }
     table.print();
 
-    // ---- 5. Serving ----
-    println!("\n--- serving coordinator (dynamic batching) ---");
-    let cfg = TrainConfig::new(Gaussian::new(SIGMA), EngineSpec::Hierarchical { rank: RANK })
-        .with_lambda(LAMBDA)
-        .with_seed(1);
-    let model = KrrModel::fit_dataset(&cfg, &train)?;
-    let svc = Arc::new(PredictionService::start(
-        Arc::new(model),
+    // ---- 5. Serving (artifact-first: save → load_any → serve; the
+    // serving process never retrains) ----
+    println!("\n--- serving coordinator (dynamic batching, HCKM artifact) ---");
+    let mspec = hck::model::ModelSpec::krr(
+        TrainConfig::new(Gaussian::new(SIGMA), EngineSpec::Hierarchical { rank: RANK })
+            .with_lambda(LAMBDA)
+            .with_seed(1),
+    );
+    let model: Box<dyn Model> = hck::model::fit(&mspec, &train)?;
+    let artifact = std::env::temp_dir().join("end_to_end.hckm");
+    let artifact = artifact.to_string_lossy().into_owned();
+    model.save(&artifact)?;
+    drop(model);
+    let t = Timer::start();
+    let loaded = hck::model::load_any(&artifact)?;
+    println!(
+        "artifact: {} reloaded in {:.3}s ({})",
+        artifact,
+        t.secs(),
+        loaded.schema().summary()
+    );
+    std::fs::remove_file(&artifact).ok();
+    let svc = Arc::new(PredictionService::start_model(
+        Arc::from(loaded),
         BatchPolicy { max_batch: 128, max_wait: std::time::Duration::from_millis(2) },
     ));
     let clients = 8;

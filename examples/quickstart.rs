@@ -1,12 +1,15 @@
-//! Quickstart: train the hierarchically compositional kernel on a small
-//! synthetic regression problem and compare it with the exact kernel.
+//! Quickstart: the unified `Model` API — fit the hierarchically
+//! compositional kernel through one `ModelSpec`, compare with the exact
+//! kernel, and round-trip the fitted model through a self-describing
+//! `HCKM` artifact.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use hck::error::Result;
 use hck::data::{spec_by_name, synthetic};
 use hck::kernels::Gaussian;
-use hck::learn::{EngineSpec, KrrModel, TrainConfig};
+use hck::learn::{metrics, EngineSpec, TrainConfig};
+use hck::model::{fit, load_any, Model, ModelSpec};
 
 fn main() -> Result<()> {
     // 1. Data: a cadata-like regression set (8 attributes in [0,1]).
@@ -14,28 +17,37 @@ fn main() -> Result<()> {
     let (train, test) = synthetic::generate(spec, 2000, 500, 42);
     println!("data: {} — {} train / {} test, d = {}", train.name, train.n(), test.n(), train.d());
 
-    // 2. Train the paper's kernel: rank r = 128 per tree level
-    //    (n0 = r by the size rule, eq. 22), Gaussian base kernel.
-    let cfg = TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 128 })
-        .with_lambda(0.01)
-        .with_seed(1);
-    let model = KrrModel::fit_dataset(&cfg, &train)?;
-    let err = model.evaluate(&test);
-    println!(
-        "hierarchical (r=128): relative error {err:.4}  [train {}]",
-        model.phases.summary()
+    // 2. Train the paper's kernel through the unified surface: one
+    //    ModelSpec covers every engine (and GP/KPCA — see `hck train`).
+    let mspec = ModelSpec::krr(
+        TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 128 })
+            .with_lambda(0.01)
+            .with_seed(1),
     );
+    let model: Box<dyn Model> = fit(&mspec, &train)?;
+    let preds = model.predict_batch(&test.x);
+    let (err, _) = metrics::score(&test, &preds);
+    println!("hierarchical (r=128): relative error {err:.4}  [{}]", model.schema().summary());
 
-    // 3. Reference: the exact dense kernel (O(n^3) — fine at n=2000).
-    let exact = KrrModel::fit_dataset(
-        &TrainConfig::new(Gaussian::new(0.5), EngineSpec::Exact).with_lambda(0.01),
+    // 3. Reference: the exact dense kernel (O(n^3) — fine at n=2000),
+    //    through the same spec type.
+    let exact = fit(
+        &ModelSpec::krr(TrainConfig::new(Gaussian::new(0.5), EngineSpec::Exact).with_lambda(0.01)),
         &train,
     )?;
-    println!("exact dense:          relative error {:.4}", exact.evaluate(&test));
+    let (exact_err, _) = metrics::score(&test, &exact.predict_batch(&test.x));
+    println!("exact dense:          relative error {exact_err:.4}");
 
-    // 4. Out-of-sample prediction for a single new point (Algorithm 3
-    //    under the hood — O(r² log(n/r)) per query).
-    let pred = model.predict(&test.x.row_range(0, 1));
-    println!("first test point: predicted {:.4}, target {:.4}", pred[(0, 0)], test.y[0]);
+    // 4. Save a self-describing artifact and reload it without knowing
+    //    the kind — predictions are identical (`hck serve --model` runs
+    //    on exactly this path, no retraining).
+    let path = std::env::temp_dir().join("quickstart.hckm");
+    let path = path.to_string_lossy();
+    model.save(&path)?;
+    let loaded = load_any(&path)?;
+    println!("reloaded artifact: {}", loaded.schema().summary());
+    let p0 = loaded.predict_batch(&test.x.row_range(0, 1));
+    println!("first test point: predicted {:.4}, target {:.4}", p0[(0, 0)], test.y[0]);
+    std::fs::remove_file(path.as_ref()).ok();
     Ok(())
 }

@@ -1,6 +1,8 @@
-//! Serving demo: train a model, expose it over the TCP JSON protocol,
-//! drive it with in-process clients, print the metrics — the same wiring
-//! `hck serve` offers as a long-running process.
+//! Serving demo, artifact-first: train through the unified `Model` API,
+//! save a self-describing `HCKM` artifact, reload it (as `hck serve
+//! --model` would in another process), expose it over the TCP JSON
+//! protocol, and drive it with a client — no retraining anywhere on the
+//! serving path.
 //!
 //! Run: `cargo run --release --example serve`
 
@@ -8,7 +10,8 @@ use hck::error::Result;
 use hck::coordinator::{serve_tcp, BatchPolicy, PredictionService};
 use hck::data::{spec_by_name, synthetic};
 use hck::kernels::Gaussian;
-use hck::learn::{EngineSpec, KrrModel, TrainConfig};
+use hck::learn::{EngineSpec, TrainConfig};
+use hck::model::{fit, load_any, Model, ModelSpec};
 use hck::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -18,12 +21,22 @@ fn main() -> Result<()> {
     let spec = spec_by_name("ijcnn1").unwrap();
     let (train, test) = synthetic::generate(spec, 3000, 200, 5);
     println!("training hierarchical model on {} (n={})...", train.name, train.n());
-    let cfg = TrainConfig::new(Gaussian::new(0.4), EngineSpec::Hierarchical { rank: 96 })
-        .with_seed(2);
-    let model = KrrModel::fit_dataset(&cfg, &train)?;
+    let mspec = ModelSpec::krr(
+        TrainConfig::new(Gaussian::new(0.4), EngineSpec::Hierarchical { rank: 96 }).with_seed(2),
+    );
+    let model: Box<dyn Model> = fit(&mspec, &train)?;
 
-    let svc = Arc::new(PredictionService::start(
-        Arc::new(model),
+    // Persist + reload: the server side only ever sees the artifact.
+    let path = std::env::temp_dir().join("serve_demo.hckm");
+    let path = path.to_string_lossy().into_owned();
+    model.save(&path)?;
+    drop(model);
+    let loaded = load_any(&path)?;
+    std::fs::remove_file(&path).ok();
+    println!("serving artifact: {}", loaded.schema().summary());
+
+    let svc = Arc::new(PredictionService::start_model(
+        Arc::from(loaded),
         BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(1) },
     ));
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;

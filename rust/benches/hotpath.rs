@@ -291,6 +291,36 @@ fn main() {
         fmt_secs(m.median())
     );
 
+    // ---- HCKM artifact load (the serve-side cold start: read factors,
+    // recompute Choleskys, rebuild the Algorithm-3 predictor) ----
+    let (art_n, art_r) = if quick { (1000usize, 24usize) } else { (4000, 64) };
+    println!("\n— HCKM artifact load (hierarchical, n={art_n}, r={art_r}) —");
+    let (art_train, _) = dataset("cadata", art_n, 10, 9);
+    let art_spec = hck::model::ModelSpec::krr(
+        hck::learn::TrainConfig::new(
+            Gaussian::new(0.5),
+            hck::learn::EngineSpec::Hierarchical { rank: art_r },
+        )
+        .with_seed(7),
+    );
+    let art_model = hck::model::fit(&art_spec, &art_train).expect("fit artifact model");
+    let art_path = std::env::temp_dir()
+        .join(format!("hck_bench_artifact_{}.hckm", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    hck::model::Model::save(art_model.as_ref(), &art_path).expect("save artifact");
+    let m = bench.run("artifact_load", || {
+        hck::model::load_any(&art_path).expect("load artifact")
+    });
+    std::fs::remove_file(&art_path).ok();
+    println!("load_any: {} per load", fmt_secs(m.median()));
+    report.row(vec![
+        ("op", Json::Str("artifact_load".into())),
+        ("n", Json::Num(art_n as f64)),
+        ("r", Json::Num(art_r as f64)),
+        ("ns_per_op", Json::Num(m.median() * 1e9)),
+    ]);
+
     // Cargo runs bench binaries with cwd = the package root (rust/);
     // anchor the telemetry at the workspace root so CI picks it up at a
     // fixed path regardless of the invoking directory.

@@ -33,6 +33,22 @@ impl ExactKrr {
     pub fn alpha(&self) -> &Mat {
         &self.alpha
     }
+
+    /// Internal view for [`crate::model`] persistence: (x, α).
+    pub(crate) fn parts(&self) -> (&Mat, &Mat) {
+        (&self.x, &self.alpha)
+    }
+
+    /// Rebuild from persisted parts (x and α stored verbatim —
+    /// predictions are bit-identical).
+    pub(crate) fn from_parts(kind: KernelKind, x: Mat, alpha: Mat) -> Result<ExactKrr> {
+        if alpha.rows() != x.rows() {
+            return Err(crate::error::Error::data(
+                "exact artifact: coefficient rows do not match training size",
+            ));
+        }
+        Ok(ExactKrr { kind, x, alpha })
+    }
 }
 
 #[cfg(test)]

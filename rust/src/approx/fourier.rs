@@ -97,6 +97,20 @@ impl FourierKrr {
     pub fn memory_words(&self, n_train: usize) -> usize {
         n_train * self.features.dim()
     }
+
+    /// Internal view for [`crate::model`] persistence: (ω, b, w).
+    pub(crate) fn parts(&self) -> (&Mat, &[f64], &Mat) {
+        (&self.features.omega, &self.features.b, &self.w)
+    }
+
+    /// Rebuild from persisted parts — the sampled frequencies and phases
+    /// are stored verbatim, so the reloaded feature map is bit-identical.
+    pub(crate) fn from_parts(omega: Mat, b: Vec<f64>, w: Mat) -> Result<FourierKrr> {
+        if b.len() != omega.rows() || w.rows() != omega.rows() {
+            return Err(Error::data("fourier artifact: inconsistent feature shapes"));
+        }
+        Ok(FourierKrr { features: FourierFeatures { omega, b }, w })
+    }
 }
 
 #[cfg(test)]

@@ -99,6 +99,40 @@ impl IndependentKrr {
     pub fn tree(&self) -> &PartitionTree {
         &self.tree
     }
+
+    /// Internal view for [`crate::model`] persistence:
+    /// (tree, x, per-node α).
+    pub(crate) fn parts(&self) -> (&PartitionTree, &Mat, &[Option<Mat>]) {
+        (&self.tree, &self.x, &self.alpha)
+    }
+
+    /// Rebuild from persisted parts (the per-leaf dual coefficients are
+    /// stored verbatim, so predictions are bit-identical).
+    pub(crate) fn from_parts(
+        kind: KernelKind,
+        tree: PartitionTree,
+        x: Mat,
+        alpha: Vec<Option<Mat>>,
+    ) -> Result<IndependentKrr> {
+        if alpha.len() != tree.nodes.len() || tree.perm.len() != x.rows() {
+            return Err(crate::error::Error::data(
+                "independent artifact: tree/coefficient shapes disagree",
+            ));
+        }
+        for &leaf in &tree.leaves() {
+            let Some(a) = &alpha[leaf] else {
+                return Err(crate::error::Error::data(
+                    "independent artifact: leaf without coefficients",
+                ));
+            };
+            if a.rows() != tree.nodes[leaf].len() {
+                return Err(crate::error::Error::data(
+                    "independent artifact: coefficient rows do not match leaf size",
+                ));
+            }
+        }
+        Ok(IndependentKrr { kind, tree, x, alpha })
+    }
 }
 
 #[cfg(test)]

@@ -36,6 +36,16 @@ impl NystromFeatures {
         self.landmarks.rows()
     }
 
+    /// Rebuild from persisted landmark coordinates (the Gram Cholesky is
+    /// recomputed deterministically, so the feature map is bit-identical
+    /// to the saved one). Used by [`crate::model`] artifact loading.
+    pub(crate) fn from_landmarks(kind: KernelKind, landmarks: Mat) -> Result<NystromFeatures> {
+        let mut kll = kernel_cross(kind, &landmarks, &landmarks);
+        kll.symmetrize();
+        let chol = Cholesky::new_jittered(&kll, 30)?;
+        Ok(NystromFeatures { kind, landmarks, chol })
+    }
+
     /// φ(Q) for a block of points: rows are L^{-1} k(X̲, q), i.e. we solve
     /// Lᵀ-systems against rows of K(Q, X̲).
     pub fn transform(&self, q: &Mat) -> Mat {
@@ -76,6 +86,21 @@ impl NystromKrr {
     /// paper's Section 5 memory model counts r words per training point).
     pub fn memory_words(&self, n_train: usize) -> usize {
         n_train * self.features.dim()
+    }
+
+    /// Internal view for [`crate::model`] persistence: (landmarks, w).
+    pub(crate) fn parts(&self) -> (&Mat, &Mat) {
+        (&self.features.landmarks, &self.w)
+    }
+
+    /// Rebuild from persisted parts (see [`NystromFeatures::from_landmarks`]).
+    pub(crate) fn from_parts(kind: KernelKind, landmarks: Mat, w: Mat) -> Result<NystromKrr> {
+        if w.rows() != landmarks.rows() {
+            return Err(crate::error::Error::data(
+                "nystrom artifact: weight rows do not match landmark count",
+            ));
+        }
+        Ok(NystromKrr { features: NystromFeatures::from_landmarks(kind, landmarks)?, w })
     }
 }
 

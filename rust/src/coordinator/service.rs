@@ -87,6 +87,17 @@ impl PredictionService {
         PredictionService { tx, metrics, model, stop, join: Some(join), dim }
     }
 
+    /// Start the batcher around any artifact-loaded [`crate::model::Model`]
+    /// — the uniform serving entry point for `hck serve --model` (the
+    /// service needs no engine-specific plumbing; the model describes
+    /// itself through its schema).
+    pub fn start_model(
+        model: Arc<dyn crate::model::Model>,
+        policy: BatchPolicy,
+    ) -> PredictionService {
+        Self::start(Arc::new(model), policy)
+    }
+
     /// Feature dimension the service expects (0 if unknown).
     pub fn dim(&self) -> usize {
         self.dim

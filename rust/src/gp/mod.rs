@@ -73,6 +73,38 @@ impl GpRegressor {
     pub fn factors(&self) -> &HFactors {
         &self.factors
     }
+
+    /// The noise variance λ the posterior was fitted with.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// α = (K + λI)^{-1} y in **original order** (the weight column the
+    /// posterior-mean predictor evaluates against).
+    pub fn alpha_original(&self) -> Vec<f64> {
+        self.factors.from_tree_order(&self.alpha_tree)
+    }
+
+    /// Internal view for [`crate::model`] persistence:
+    /// (factors, λ, α in tree order, log-likelihood).
+    pub(crate) fn parts(&self) -> (&std::sync::Arc<HFactors>, f64, &[f64], f64) {
+        (&self.factors, self.lambda, &self.alpha_tree, self.log_likelihood)
+    }
+
+    /// Reassemble from persisted parts without re-solving.
+    pub(crate) fn from_parts(
+        factors: std::sync::Arc<HFactors>,
+        lambda: f64,
+        alpha_tree: Vec<f64>,
+        log_likelihood: f64,
+    ) -> Result<GpRegressor> {
+        if alpha_tree.len() != factors.n() {
+            return Err(crate::error::Error::data(
+                "gp artifact: coefficient length does not match training size",
+            ));
+        }
+        Ok(GpRegressor { factors, lambda, alpha_tree, log_likelihood })
+    }
 }
 
 /// Sample realizations of the zero-mean Gaussian process prior with

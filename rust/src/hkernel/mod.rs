@@ -24,7 +24,9 @@ pub mod persist;
 pub mod solve;
 
 pub use build::{size_rule, size_rule_from_rank, HConfig, HFactors};
-pub use persist::{load_model, load_shard, save_model, save_shard};
+pub use persist::{
+    load_model, load_router, load_shard, save_model, save_router, save_shard,
+};
 pub use matvec::{hmatvec, hmatvec_mat, hmatvec_original, hmatvec_with_threads};
 pub use oos::HPredictor;
 pub use solve::HSolver;

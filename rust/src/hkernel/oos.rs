@@ -174,11 +174,19 @@ impl HPredictor {
     /// order** (O(n) per query; used by GP posterior variance, which needs
     /// the column itself rather than an inner product).
     pub fn column(f: &HFactors, x: &[f64]) -> Vec<f64> {
+        let agg = super::densify::aggregate_bases(f);
+        Self::column_with_agg(f, &agg, x)
+    }
+
+    /// [`HPredictor::column`] with the aggregate bases precomputed by the
+    /// caller — the repeated-query path (e.g. the out-of-sample KPCA
+    /// transform), which would otherwise rebuild the O(n·r) bases per
+    /// column.
+    pub fn column_with_agg(f: &HFactors, agg: &[Option<Mat>], x: &[f64]) -> Vec<f64> {
         let kind = f.config.kind;
         let path = f.tree.route(x);
         let leaf = *path.last().unwrap();
         let n = f.n();
-        let agg = super::densify::aggregate_bases(f);
         let mut v = vec![0.0; n];
         let nd = &f.tree.nodes[leaf];
         for (k_local, &orig) in f.tree.node_points(leaf).iter().enumerate() {

@@ -23,18 +23,7 @@ pub fn save_model(f: &HFactors, w: &Mat, path: &str) -> Result<()> {
     let file = std::fs::File::create(path)?;
     let mut out = BufWriter::new(file);
     out.write_all(MAGIC)?;
-    write_config(&mut out, &f.config)?;
-    write_tree(&mut out, &f.tree)?;
-    write_mat(&mut out, &f.x)?;
-    let nn = f.tree.nodes.len();
-    for i in 0..nn {
-        write_usizes(&mut out, &f.landmark_idx[i])?;
-        write_opt_mat(&mut out, &f.landmarks[i])?;
-        write_opt_mat(&mut out, &f.sigma[i])?;
-        write_opt_mat(&mut out, &f.w[i])?;
-        write_opt_mat(&mut out, &f.u[i])?;
-        write_opt_mat(&mut out, &f.a_leaf[i])?;
-    }
+    write_factors(&mut out, f)?;
     write_mat(&mut out, w)?;
     out.flush()?;
     Ok(())
@@ -49,10 +38,215 @@ pub fn load_model(path: &str) -> Result<(HFactors, Mat)> {
     if &magic != MAGIC {
         return Err(Error::data("not an HCK1 model file"));
     }
-    let config = read_config(&mut inp)?;
-    let tree = read_tree(&mut inp)?;
-    let x = read_mat(&mut inp)?;
+    let f = read_factors(&mut inp)?;
+    let w = read_mat(&mut inp)?;
+    if w.rows() != f.x.rows() {
+        return Err(Error::data("weight rows do not match training size"));
+    }
+    Ok((f, w))
+}
+
+/// Serialize the full factor state (config, tree, training points,
+/// per-node blocks). Shared by the legacy `HCK1` format and the typed
+/// `HCKM` artifacts of [`crate::model`].
+pub(crate) fn write_factors(out: &mut impl Write, f: &HFactors) -> Result<()> {
+    write_config(out, &f.config)?;
+    write_tree(out, &f.tree)?;
+    write_mat(out, &f.x)?;
+    let nn = f.tree.nodes.len();
+    for i in 0..nn {
+        write_usizes(out, &f.landmark_idx[i])?;
+        write_opt_mat(out, &f.landmarks[i])?;
+        write_opt_mat(out, &f.sigma[i])?;
+        write_opt_mat(out, &f.w[i])?;
+        write_opt_mat(out, &f.u[i])?;
+        write_opt_mat(out, &f.a_leaf[i])?;
+    }
+    Ok(())
+}
+
+/// A split must be able to address every child index
+/// [`crate::partition::follow_split`] can produce — two children for
+/// hyperplane/axis cuts, one center per child for k-means cuts — and,
+/// when the feature dimension is known, must index/match it. Shared by
+/// every loader whose query walk goes through a decoded split.
+pub(crate) fn validate_split(split: &Split, n_children: usize, d: Option<usize>) -> Result<()> {
+    let bad = |what: &str| Err(Error::data(format!("corrupt model file ({what})")));
+    match split {
+        Split::Hyperplane { dir, .. } => {
+            if n_children != 2 {
+                return bad("split arity");
+            }
+            if let Some(d) = d {
+                if dir.len() != d {
+                    return bad("split dimension");
+                }
+            }
+        }
+        Split::Axis { axis, .. } => {
+            if n_children != 2 {
+                return bad("split arity");
+            }
+            if let Some(d) = d {
+                if *axis >= d {
+                    return bad("split dimension");
+                }
+            }
+        }
+        Split::Centers { centers } => {
+            if centers.rows() != n_children || n_children == 0 {
+                return bad("split arity");
+            }
+            if let Some(d) = d {
+                if centers.cols() != d {
+                    return bad("split dimension");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Structural invariants of a decoded partition tree over `n` points of
+/// dimension `d` — everything the routing walks, `node_points`, and the
+/// level-synchronous solver schedule index or unwrap on. Shared by the
+/// factor loader and the independent-engine payload of
+/// [`crate::model::persist`]: a corrupt tree that decodes cleanly must
+/// fail the load, not panic (or cycle forever) inside a serving thread.
+pub(crate) fn validate_tree(t: &PartitionTree, n: usize, d: usize) -> Result<()> {
+    let bad = |what: &str| Err(Error::data(format!("corrupt model file ({what})")));
+    let nn = t.nodes.len();
+    if nn == 0 {
+        return bad("empty tree");
+    }
+    // perm must be a permutation of 0..n (node_points slices it and the
+    // order maps are built from it).
+    if t.perm.len() != n || n == 0 {
+        return bad("permutation length");
+    }
+    let mut seen = vec![false; n];
+    for &p in &t.perm {
+        if p >= n || seen[p] {
+            return bad("permutation");
+        }
+        seen[p] = true;
+    }
+    let root = &t.nodes[0];
+    if root.parent.is_some() || root.lo != 0 || root.hi != n || root.depth != 0 {
+        return bad("root range");
+    }
+    for (i, nd) in t.nodes.iter().enumerate() {
+        if nd.lo > nd.hi || nd.hi > n {
+            return bad("node range");
+        }
+        if nd.children.len() == 1 {
+            return bad("single-child node");
+        }
+        // Children must partition [lo, hi) in order, one level deeper
+        // (the level-synchronous solver schedules by depth), with ids
+        // strictly after the parent's (the builder's parent-before-child
+        // id order; also guarantees every walk terminates).
+        let mut pos = nd.lo;
+        for &ch in &nd.children {
+            if ch >= nn || ch <= i {
+                return bad("child link");
+            }
+            let c = &t.nodes[ch];
+            if c.parent != Some(i) || c.lo != pos || c.depth != nd.depth + 1 {
+                return bad("child link");
+            }
+            pos = c.hi;
+        }
+        if !nd.children.is_empty() && pos != nd.hi {
+            return bad("child coverage");
+        }
+        if let Some(p) = nd.parent {
+            if p >= nn || !t.nodes[p].children.contains(&i) {
+                return bad("parent link");
+            }
+        } else if i != 0 {
+            return bad("non-root without parent");
+        }
+        if nd.is_leaf() {
+            if nd.split.is_some() {
+                return bad("leaf with split");
+            }
+        } else {
+            let Some(split) = &nd.split else {
+                return bad("inner node without split");
+            };
+            validate_split(split, nd.children.len(), Some(d))?;
+        }
+    }
+    Ok(())
+}
+
+/// Structural invariants of decoded factors — the tree plus everything
+/// `HPredictor` and `HSolver` unwrap on per node. A corrupt file that
+/// decodes cleanly must fail the load with a data error here, not panic
+/// later inside a serving thread.
+fn validate_factors(f: &HFactors) -> Result<()> {
+    let bad = |what: &str| Err(Error::data(format!("corrupt model file ({what})")));
+    let n = f.x.rows();
+    let d = f.x.cols();
+    validate_tree(&f.tree, n, d)?;
+    for (i, nd) in f.tree.nodes.iter().enumerate() {
+        if nd.is_leaf() {
+            let ni = nd.hi - nd.lo;
+            let Some(a) = &f.a_leaf[i] else {
+                return bad("leaf without diagonal block");
+            };
+            if a.rows() != ni || a.cols() != ni {
+                return bad("leaf block shape");
+            }
+            if let Some(p) = nd.parent {
+                let Some(u) = &f.u[i] else {
+                    return bad("leaf without basis");
+                };
+                if u.rows() != ni || u.cols() != f.landmark_idx[p].len() {
+                    return bad("leaf basis shape");
+                }
+            }
+        } else {
+            let (Some(lm), Some(sig)) = (&f.landmarks[i], &f.sigma[i]) else {
+                return bad("inner node without landmark state");
+            };
+            if f.sigma_chol[i].is_none() {
+                return bad("inner node without landmark state");
+            }
+            let r_i = f.landmark_idx[i].len();
+            if lm.rows() != r_i || lm.cols() != d || sig.rows() != r_i || sig.cols() != r_i {
+                return bad("landmark state shape");
+            }
+            if f.landmark_idx[i].iter().any(|&ix| ix >= n) {
+                return bad("landmark index");
+            }
+            if let Some(p) = nd.parent {
+                let Some(w) = &f.w[i] else {
+                    return bad("inner node without W");
+                };
+                if w.rows() != r_i || w.cols() != f.landmark_idx[p].len() {
+                    return bad("W shape");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read factor state written by [`write_factors`]. The Σ Cholesky
+/// factors are recomputed (deterministically, from the stored Σ blocks),
+/// so loaded factors predict bit-identically to the saved ones. The
+/// decoded structure is validated ([`validate_factors`]) so corrupt
+/// files fail the load instead of panicking in a serving thread.
+pub(crate) fn read_factors(inp: &mut impl Read) -> Result<HFactors> {
+    let config = read_config(inp)?;
+    let tree = read_tree(inp)?;
+    let x = read_mat(inp)?;
     let nn = tree.nodes.len();
+    if nn == 0 {
+        return Err(Error::data("corrupt model file (empty tree)"));
+    }
     let mut f = HFactors {
         x,
         landmark_idx: Vec::with_capacity(nn),
@@ -66,24 +260,21 @@ pub fn load_model(path: &str) -> Result<(HFactors, Mat)> {
         config,
     };
     for _ in 0..nn {
-        f.landmark_idx.push(read_usizes(&mut inp)?);
-        f.landmarks.push(read_opt_mat(&mut inp)?);
-        let sigma = read_opt_mat(&mut inp)?;
+        f.landmark_idx.push(read_usizes(inp)?);
+        f.landmarks.push(read_opt_mat(inp)?);
+        let sigma = read_opt_mat(inp)?;
         let chol = match &sigma {
             Some(s) => Some(Cholesky::new_jittered(s, 30)?),
             None => None,
         };
         f.sigma.push(sigma);
         f.sigma_chol.push(chol);
-        f.w.push(read_opt_mat(&mut inp)?);
-        f.u.push(read_opt_mat(&mut inp)?);
-        f.a_leaf.push(read_opt_mat(&mut inp)?);
+        f.w.push(read_opt_mat(inp)?);
+        f.u.push(read_opt_mat(inp)?);
+        f.a_leaf.push(read_opt_mat(inp)?);
     }
-    let w = read_mat(&mut inp)?;
-    if w.rows() != f.x.rows() {
-        return Err(Error::data("weight rows do not match training size"));
-    }
-    Ok((f, w))
+    validate_factors(&f)?;
+    Ok(f)
 }
 
 const SHARD_MAGIC: &[u8; 4] = b"HCKS";
@@ -218,6 +409,97 @@ pub fn load_shard(path: &str) -> Result<crate::shard::Shard> {
     Ok(shard)
 }
 
+const ROUTER_MAGIC: &[u8; 4] = b"HCKR";
+
+/// Save a query→shard router (the top-of-tree walk state) to a file, so
+/// a serving process can route into a directory of shard files without
+/// the full model (`hck shard --out dir/` writes one next to the shards).
+pub fn save_router(r: &crate::shard::ShardRouter, path: &str) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut out = BufWriter::new(file);
+    out.write_all(ROUTER_MAGIC)?;
+    let (nodes, shard_of, n_shards) = r.parts();
+    wu64(&mut out, n_shards as u64)?;
+    wu64(&mut out, nodes.len() as u64)?;
+    for nd in nodes {
+        write_node(&mut out, nd)?;
+    }
+    for s in shard_of {
+        wu64(&mut out, s.map(|v| v as u64 + 1).unwrap_or(0))?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Load a router saved by [`save_router`], validating the invariants the
+/// routing walk relies on (every non-boundary node keeps its split and
+/// in-range children; every boundary node maps to a valid shard).
+pub fn load_router(path: &str) -> Result<crate::shard::ShardRouter> {
+    let file = std::fs::File::open(path)?;
+    let mut inp = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    inp.read_exact(&mut magic)?;
+    if &magic != ROUTER_MAGIC {
+        return Err(Error::data("not an HCKR router file"));
+    }
+    let bad = |what: &str| Err(Error::data(format!("corrupt router file ({what})")));
+    let n_shards = ru64(&mut inp)? as usize;
+    let nn = ru64(&mut inp)? as usize;
+    if nn == 0 || nn > (1usize << 32) {
+        return bad("node count");
+    }
+    // Every shard is one retained node, so the count is bounded by the
+    // node count; an unbounded value would abort on allocation below
+    // instead of erroring.
+    if n_shards == 0 || n_shards > nn {
+        return bad("shard count");
+    }
+    let mut nodes = Vec::new();
+    for _ in 0..nn {
+        nodes.push(read_node(&mut inp)?);
+    }
+    let mut shard_of = Vec::with_capacity(nn);
+    for _ in 0..nn {
+        shard_of.push(match ru64(&mut inp)? {
+            0 => None,
+            v => Some(v as usize - 1),
+        });
+    }
+    let mut seen = vec![false; n_shards];
+    for (id, nd) in nodes.iter().enumerate() {
+        match shard_of[id] {
+            Some(s) => {
+                if s >= n_shards || seen[s] {
+                    return bad("shard index");
+                }
+                seen[s] = true;
+            }
+            None => {
+                // `route` follows this node's split; a missing split, an
+                // out-of-range child, or a split whose arity disagrees
+                // with the child count would panic mid-query. (The
+                // feature dimension is not recorded here; the shard-dir
+                // loader re-checks splits against the shards' dim.)
+                let Some(split) = &nd.split else {
+                    return bad("non-boundary node without split");
+                };
+                validate_split(split, nd.children.len(), None)?;
+                // The breadth-first compaction puts children strictly
+                // after their parent, which also guarantees the routing
+                // walk terminates; reject anything else (a cycle would
+                // hang `route` forever).
+                if nd.children.iter().any(|&c| c >= nn || c <= id) {
+                    return bad("child link");
+                }
+            }
+        }
+    }
+    if seen.iter().any(|s| !s) {
+        return bad("unreached shard");
+    }
+    Ok(crate::shard::ShardRouter::from_parts(nodes, shard_of, n_shards))
+}
+
 /// Structural invariants the serving paths unwrap on: a corrupt file
 /// that decodes cleanly must still fail at load time, not panic inside
 /// a worker thread.
@@ -264,9 +546,13 @@ fn validate_shard(s: &crate::shard::Shard) -> Result<()> {
             if lm.cols() != s.dim || sig.rows() != lm.rows() || sig.cols() != lm.rows() {
                 return bad("landmark state shape");
             }
-            if nd.split.is_none() {
+            let Some(split) = &nd.split else {
                 return bad("inner node without split");
-            }
+            };
+            // The in-shard routing walk follows this split over the
+            // node's children; arity/dimension mismatches would panic
+            // per query instead of failing the load.
+            validate_split(split, nd.children.len(), Some(s.dim))?;
             // The climb into every inner node below the global root needs
             // its W factor: a silent None would skip a climb, not panic.
             if (l != 0 || s.c[0].is_some()) && s.wfac[l].is_none() {
@@ -340,26 +626,26 @@ fn validate_shard(s: &crate::shard::Shard) -> Result<()> {
 
 // ---- primitives ----
 
-fn wu64(out: &mut impl Write, v: u64) -> Result<()> {
+pub(crate) fn wu64(out: &mut impl Write, v: u64) -> Result<()> {
     out.write_all(&v.to_le_bytes())?;
     Ok(())
 }
-fn wf64(out: &mut impl Write, v: f64) -> Result<()> {
+pub(crate) fn wf64(out: &mut impl Write, v: f64) -> Result<()> {
     out.write_all(&v.to_le_bytes())?;
     Ok(())
 }
-fn ru64(inp: &mut impl Read) -> Result<u64> {
+pub(crate) fn ru64(inp: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     inp.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
-fn rf64(inp: &mut impl Read) -> Result<f64> {
+pub(crate) fn rf64(inp: &mut impl Read) -> Result<f64> {
     let mut b = [0u8; 8];
     inp.read_exact(&mut b)?;
     Ok(f64::from_le_bytes(b))
 }
 
-fn write_f64s(out: &mut impl Write, v: &[f64]) -> Result<()> {
+pub(crate) fn write_f64s(out: &mut impl Write, v: &[f64]) -> Result<()> {
     wu64(out, v.len() as u64)?;
     let mut bytes = Vec::with_capacity(v.len() * 8);
     for x in v {
@@ -368,7 +654,7 @@ fn write_f64s(out: &mut impl Write, v: &[f64]) -> Result<()> {
     out.write_all(&bytes)?;
     Ok(())
 }
-fn read_f64s(inp: &mut impl Read) -> Result<Vec<f64>> {
+pub(crate) fn read_f64s(inp: &mut impl Read) -> Result<Vec<f64>> {
     let n = ru64(inp)? as usize;
     if n > (1usize << 34) {
         return Err(Error::data("corrupt model file (vector too large)"));
@@ -381,14 +667,14 @@ fn read_f64s(inp: &mut impl Read) -> Result<Vec<f64>> {
         .collect())
 }
 
-fn write_usizes(out: &mut impl Write, v: &[usize]) -> Result<()> {
+pub(crate) fn write_usizes(out: &mut impl Write, v: &[usize]) -> Result<()> {
     wu64(out, v.len() as u64)?;
     for &x in v {
         wu64(out, x as u64)?;
     }
     Ok(())
 }
-fn read_usizes(inp: &mut impl Read) -> Result<Vec<usize>> {
+pub(crate) fn read_usizes(inp: &mut impl Read) -> Result<Vec<usize>> {
     let n = ru64(inp)? as usize;
     if n > (1usize << 32) {
         return Err(Error::data("corrupt model file (index list too large)"));
@@ -396,12 +682,12 @@ fn read_usizes(inp: &mut impl Read) -> Result<Vec<usize>> {
     (0..n).map(|_| ru64(inp).map(|v| v as usize)).collect()
 }
 
-fn write_mat(out: &mut impl Write, m: &Mat) -> Result<()> {
+pub(crate) fn write_mat(out: &mut impl Write, m: &Mat) -> Result<()> {
     wu64(out, m.rows() as u64)?;
     wu64(out, m.cols() as u64)?;
     write_f64s(out, m.as_slice())
 }
-fn read_mat(inp: &mut impl Read) -> Result<Mat> {
+pub(crate) fn read_mat(inp: &mut impl Read) -> Result<Mat> {
     let rows = ru64(inp)? as usize;
     let cols = ru64(inp)? as usize;
     let data = read_f64s(inp)?;
@@ -410,7 +696,7 @@ fn read_mat(inp: &mut impl Read) -> Result<Mat> {
     }
     Ok(Mat::from_vec(rows, cols, data))
 }
-fn write_opt_mat(out: &mut impl Write, m: &Option<Mat>) -> Result<()> {
+pub(crate) fn write_opt_mat(out: &mut impl Write, m: &Option<Mat>) -> Result<()> {
     match m {
         None => wu64(out, 0),
         Some(m) => {
@@ -419,7 +705,7 @@ fn write_opt_mat(out: &mut impl Write, m: &Option<Mat>) -> Result<()> {
         }
     }
 }
-fn read_opt_mat(inp: &mut impl Read) -> Result<Option<Mat>> {
+pub(crate) fn read_opt_mat(inp: &mut impl Read) -> Result<Option<Mat>> {
     match ru64(inp)? {
         0 => Ok(None),
         1 => Ok(Some(read_mat(inp)?)),
@@ -429,7 +715,7 @@ fn read_opt_mat(inp: &mut impl Read) -> Result<Option<Mat>> {
 
 // ---- config / kernel / tree ----
 
-fn write_config(out: &mut impl Write, c: &HConfig) -> Result<()> {
+pub(crate) fn write_config(out: &mut impl Write, c: &HConfig) -> Result<()> {
     write_kind(out, c.kind)?;
     wu64(out, c.rank as u64)?;
     wu64(out, c.n0 as u64)?;
@@ -439,7 +725,7 @@ fn write_config(out: &mut impl Write, c: &HConfig) -> Result<()> {
     wu64(out, c.avoid_parent_landmarks as u64)?;
     Ok(())
 }
-fn read_config(inp: &mut impl Read) -> Result<HConfig> {
+pub(crate) fn read_config(inp: &mut impl Read) -> Result<HConfig> {
     Ok(HConfig {
         kind: read_kind(inp)?,
         rank: ru64(inp)? as usize,
@@ -451,7 +737,7 @@ fn read_config(inp: &mut impl Read) -> Result<HConfig> {
     })
 }
 
-fn write_kind(out: &mut impl Write, k: KernelKind) -> Result<()> {
+pub(crate) fn write_kind(out: &mut impl Write, k: KernelKind) -> Result<()> {
     match k {
         KernelKind::Gaussian { sigma } => {
             wu64(out, 0)?;
@@ -477,7 +763,7 @@ fn write_kind(out: &mut impl Write, k: KernelKind) -> Result<()> {
         }
     }
 }
-fn read_kind(inp: &mut impl Read) -> Result<KernelKind> {
+pub(crate) fn read_kind(inp: &mut impl Read) -> Result<KernelKind> {
     Ok(match ru64(inp)? {
         0 => KernelKind::Gaussian { sigma: rf64(inp)? },
         1 => KernelKind::Laplace { sigma: rf64(inp)? },
@@ -492,7 +778,7 @@ fn read_kind(inp: &mut impl Read) -> Result<KernelKind> {
     })
 }
 
-fn write_rule(out: &mut impl Write, r: SplitRule) -> Result<()> {
+pub(crate) fn write_rule(out: &mut impl Write, r: SplitRule) -> Result<()> {
     match r {
         SplitRule::RandomProjection => wu64(out, 0),
         SplitRule::Pca { iters } => {
@@ -507,7 +793,7 @@ fn write_rule(out: &mut impl Write, r: SplitRule) -> Result<()> {
         }
     }
 }
-fn read_rule(inp: &mut impl Read) -> Result<SplitRule> {
+pub(crate) fn read_rule(inp: &mut impl Read) -> Result<SplitRule> {
     Ok(match ru64(inp)? {
         0 => SplitRule::RandomProjection,
         1 => SplitRule::Pca { iters: ru64(inp)? as usize },
@@ -517,7 +803,7 @@ fn read_rule(inp: &mut impl Read) -> Result<SplitRule> {
     })
 }
 
-fn write_node(out: &mut impl Write, nd: &Node) -> Result<()> {
+pub(crate) fn write_node(out: &mut impl Write, nd: &Node) -> Result<()> {
     wu64(out, nd.parent.map(|p| p as u64 + 1).unwrap_or(0))?;
     write_usizes(out, &nd.children)?;
     wu64(out, nd.lo as u64)?;
@@ -542,7 +828,7 @@ fn write_node(out: &mut impl Write, nd: &Node) -> Result<()> {
     }
     Ok(())
 }
-fn read_node(inp: &mut impl Read) -> Result<Node> {
+pub(crate) fn read_node(inp: &mut impl Read) -> Result<Node> {
     let parent_raw = ru64(inp)?;
     let parent = if parent_raw == 0 { None } else { Some(parent_raw as usize - 1) };
     let children = read_usizes(inp)?;
@@ -559,7 +845,7 @@ fn read_node(inp: &mut impl Read) -> Result<Node> {
     Ok(Node { parent, children, lo, hi, split, depth })
 }
 
-fn write_tree(out: &mut impl Write, t: &PartitionTree) -> Result<()> {
+pub(crate) fn write_tree(out: &mut impl Write, t: &PartitionTree) -> Result<()> {
     wu64(out, t.n0 as u64)?;
     write_usizes(out, &t.perm)?;
     wu64(out, t.nodes.len() as u64)?;
@@ -568,7 +854,7 @@ fn write_tree(out: &mut impl Write, t: &PartitionTree) -> Result<()> {
     }
     Ok(())
 }
-fn read_tree(inp: &mut impl Read) -> Result<PartitionTree> {
+pub(crate) fn read_tree(inp: &mut impl Read) -> Result<PartitionTree> {
     let n0 = ru64(inp)? as usize;
     let perm = read_usizes(inp)?;
     let nn = ru64(inp)? as usize;
@@ -675,6 +961,49 @@ mod tests {
     fn rejects_garbage() {
         let path = tmpfile("garbage");
         std::fs::write(&path, b"definitely not a model").unwrap();
+        assert!(load_model(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Files that *decode* cleanly but violate the structural invariants
+    /// the predictors unwrap on must fail the load, not panic later in a
+    /// serving thread.
+    #[test]
+    fn rejects_structurally_corrupt_factors() {
+        // A leaf whose basis block is missing (an Option tag flipped).
+        let (mut f, w) = fitted(SplitRule::RandomProjection, 33);
+        let leaf = f.tree.leaves()[0];
+        assert!(f.u[leaf].is_some());
+        f.u[leaf] = None;
+        let path = tmpfile("corrupt_basis");
+        save_model(&f, &w, &path).unwrap();
+        assert!(load_model(&path).is_err());
+        std::fs::remove_file(&path).ok();
+
+        // A permutation with a duplicated entry.
+        let (mut f, w) = fitted(SplitRule::RandomProjection, 35);
+        f.tree.perm[0] = f.tree.perm[1];
+        let path = tmpfile("corrupt_perm");
+        save_model(&f, &w, &path).unwrap();
+        assert!(load_model(&path).is_err());
+        std::fs::remove_file(&path).ok();
+
+        // A k-means split whose center count disagrees with its children
+        // (routing would index children out of bounds per query).
+        let (mut f, w) = fitted(SplitRule::KMeans { k: 3, iters: 10 }, 37);
+        let inner = f
+            .tree
+            .nonleaves()
+            .into_iter()
+            .find(|&i| matches!(f.tree.nodes[i].split, Some(Split::Centers { .. })))
+            .expect("kmeans tree has a Centers split");
+        let truncated = match &f.tree.nodes[inner].split {
+            Some(Split::Centers { centers }) => centers.row_range(0, centers.rows() - 1),
+            _ => unreachable!(),
+        };
+        f.tree.nodes[inner].split = Some(Split::Centers { centers: truncated });
+        let path = tmpfile("corrupt_split");
+        save_model(&f, &w, &path).unwrap();
         assert!(load_model(&path).is_err());
         std::fs::remove_file(&path).ok();
     }

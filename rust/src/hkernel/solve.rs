@@ -133,19 +133,22 @@ impl<'a> HSolver<'a> {
     /// Solve (A + λI) W = Y for a block of right-hand sides, **tree
     /// order**. O(n·n0 + n·r + (n/n0)·r²) per column after factoring.
     ///
-    /// Both sweeps engage the scoped-thread pool: the upward pass
-    /// parallelizes across leaves, the downward pass runs
-    /// level-synchronously (each node's correction depends only on its
-    /// parent's, so whole levels run concurrently, shallowest first) and
-    /// finishes with a parallel per-leaf write into disjoint row
-    /// windows. Work items are applied in node-id order — the output is
-    /// bitwise identical for every thread count.
+    /// Every sweep engages the persistent worker pool: the upward pass
+    /// parallelizes across leaves and then runs the t̂/t accumulation
+    /// level-synchronously (a node needs only its children's finalized
+    /// `t` blocks, so all inner nodes of one depth run concurrently,
+    /// deepest level first), the downward pass runs level-synchronously
+    /// the other way (each node's correction depends only on its
+    /// parent's, shallowest first), and the finish is a parallel
+    /// per-leaf write into disjoint row windows. Work items are applied
+    /// in node-id order and each node accumulates its children in the
+    /// tree's fixed child order — the output is bitwise identical for
+    /// every thread count.
     pub fn solve_mat(&self, y: &Mat) -> Mat {
         let n = self.f.n();
         assert_eq!(y.rows(), n, "solve rhs rows");
         let m = y.cols();
         let nn = self.f.tree.nodes.len();
-        let post = self.f.tree.postorder();
 
         // Single-leaf tree.
         if nn == 1 {
@@ -153,7 +156,8 @@ impl<'a> HSolver<'a> {
         }
 
         // ---- Upward: per-leaf z (parallel — each leaf's triangular
-        // solves are independent), then per-node t̂ / t in post-order. ----
+        // solves are independent), then per-node t̂ / t level by level,
+        // deepest first. ----
         let mut z: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
         let mut t: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
         let mut that: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
@@ -173,26 +177,41 @@ impl<'a> HSolver<'a> {
             z[i] = Some(zi);
             t[i] = Some(ti);
         }
-        for &i in &post {
-            let nd = &self.f.tree.nodes[i];
-            if nd.is_leaf() {
-                continue; // handled by the parallel pass above
+        // A node's children all sit exactly one level deeper (leaf
+        // children were finalized by the leaf pass above, inner children
+        // by the previous — deeper — iteration), so every node of a
+        // level is independent given the levels below.
+        let levels = inner_levels(self.f);
+        for ids in levels.iter().rev() {
+            if ids.is_empty() {
+                continue;
             }
-            let st = self.node[i].as_ref().unwrap();
-            let r_i = st.shat.rows();
-            let mut th = Mat::zeros(r_i, m);
-            for &ch in &nd.children {
-                th.axpy(1.0, t[ch].as_ref().unwrap());
+            let outs = parallel_map(threads, ids, |&i| {
+                let nd = &self.f.tree.nodes[i];
+                let st = self.node[i].as_ref().unwrap();
+                let r_i = st.shat.rows();
+                let mut th = Mat::zeros(r_i, m);
+                for &ch in &nd.children {
+                    th.axpy(1.0, t[ch].as_ref().unwrap());
+                }
+                let ti = if nd.parent.is_some() {
+                    // t_i = W_iᵀ (t̂ − Ŝ Φ(t̂))
+                    let phi_t = phi(&st.g, &st.lu, &th);
+                    let mut corr = th.clone();
+                    gemm(-1.0, &st.shat, Trans::No, &phi_t, Trans::No, 1.0, &mut corr);
+                    let w = self.f.w[i].as_ref().unwrap();
+                    Some(matmul(w, Trans::Yes, &corr, Trans::No))
+                } else {
+                    None
+                };
+                (th, ti)
+            });
+            for (&i, (th, ti)) in ids.iter().zip(outs) {
+                that[i] = Some(th);
+                if let Some(ti) = ti {
+                    t[i] = Some(ti);
+                }
             }
-            if nd.parent.is_some() {
-                // t_i = W_iᵀ (t̂ − Ŝ Φ(t̂))
-                let phi_t = phi(&st.g, &st.lu, &th);
-                let mut corr = th.clone();
-                gemm(-1.0, &st.shat, Trans::No, &phi_t, Trans::No, 1.0, &mut corr);
-                let w = self.f.w[i].as_ref().unwrap();
-                t[i] = Some(matmul(w, Trans::Yes, &corr, Trans::No));
-            }
-            that[i] = Some(th);
         }
 
         // ---- Downward (level-synchronous, shallowest first): per inner
@@ -200,7 +219,7 @@ impl<'a> HSolver<'a> {
         // computed on the fly from the parent's (finalized) u; the root
         // has q = 0. Nodes of one level only read one level up. ----
         let mut u: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
-        for ids in inner_levels(self.f).iter() {
+        for ids in levels.iter() {
             if ids.is_empty() {
                 continue;
             }

@@ -10,8 +10,8 @@
 //! Figure 8 compares embeddings across kernels by the alignment
 //! difference min_M ‖U − Ũ M‖_F / ‖U‖_F (a least-squares solve).
 
-use crate::error::Result;
-use crate::hkernel::{hmatvec, HFactors};
+use crate::error::{Error, Result};
+use crate::hkernel::{hmatvec, HFactors, HPredictor};
 use crate::kernels::{kernel_block, KernelKind};
 use crate::linalg::{lanczos_topk, lstsq, matmul, sym_eig, Mat, Trans};
 use crate::util::rng::Rng;
@@ -123,6 +123,146 @@ pub fn kpca_embed_hierarchical(
     Ok(f.rows_from_tree_order(&emb_tree))
 }
 
+/// A fitted, persistable kernel-PCA transform on the hierarchical
+/// kernel: the training eigenbasis of the centered kernel matrix plus
+/// the centering statistics needed to embed **new** points (the
+/// Nyström-style out-of-sample extension u(x) = Λ^{-1/2} Vᵀ k̃(X, x)),
+/// evaluated at O(n) per query through the fast column materialization
+/// of [`HPredictor::column_with_agg`] — no densification anywhere.
+///
+/// This is the [`crate::model::Model`] face of Section 5.6: it fits,
+/// transforms batches, and round-trips through the `HCKM` artifact
+/// format like the supervised models.
+pub struct KpcaTransformer {
+    factors: std::sync::Arc<HFactors>,
+    /// V Λ^{-1/2} (n x dim, tree order): maps a doubly centered kernel
+    /// column onto the embedding coordinates.
+    proj: Mat,
+    /// Per-row means of the training kernel matrix (tree order).
+    row_means: Vec<f64>,
+    /// Grand mean of the training kernel matrix.
+    grand_mean: f64,
+    /// Training embedding U = V Λ^{1/2} (n x dim, **original order**).
+    train_embedding: Mat,
+    /// Aggregate bases for column materialization (derived state —
+    /// recomputed deterministically on artifact load).
+    agg: Vec<Option<Mat>>,
+}
+
+impl KpcaTransformer {
+    /// Fit the transform: Lanczos on the centered O(nr) matvec for the
+    /// top `dim` eigenpairs, plus the centering statistics (one extra
+    /// matvec). `iters = 0` picks the default `dim + 40` budget.
+    pub fn fit(
+        factors: std::sync::Arc<HFactors>,
+        dim: usize,
+        iters: usize,
+        rng: &mut Rng,
+    ) -> Result<KpcaTransformer> {
+        let f = factors.as_ref();
+        let n = f.n();
+        let dim = dim.max(1).min(n);
+        let iters = if iters == 0 { dim + 40 } else { iters };
+        let center = |v: &[f64]| -> Vec<f64> {
+            let mean = v.iter().sum::<f64>() / n as f64;
+            v.iter().map(|x| x - mean).collect()
+        };
+        let (wv, v) = lanczos_topk(n, dim, iters.max(dim + 2), rng, |b| {
+            let kb = hmatvec(f, &center(b));
+            center(&kb)
+        })?;
+        let dim = dim.min(wv.len());
+        let mut proj = Mat::zeros(n, dim);
+        for c in 0..dim {
+            let lam = wv[c].max(0.0);
+            if lam <= 1e-12 {
+                continue; // numerically null direction: embed to 0
+            }
+            let s = 1.0 / lam.sqrt();
+            for i in 0..n {
+                proj[(i, c)] = s * v[(i, c)];
+            }
+        }
+        let train_tree = scale_embedding(&wv, &v, dim);
+        let train_embedding = f.rows_from_tree_order(&train_tree);
+        // Centering statistics: row means of K from one matvec K·1.
+        let k1 = hmatvec(f, &vec![1.0; n]);
+        let row_means: Vec<f64> = k1.iter().map(|s| s / n as f64).collect();
+        let grand_mean = row_means.iter().sum::<f64>() / n as f64;
+        let agg = crate::hkernel::densify::aggregate_bases(f);
+        Ok(KpcaTransformer { factors, proj, row_means, grand_mean, train_embedding, agg })
+    }
+
+    /// Embedding dimension.
+    pub fn dim(&self) -> usize {
+        self.proj.cols()
+    }
+
+    /// The underlying hierarchical factors.
+    pub fn factors(&self) -> &std::sync::Arc<HFactors> {
+        &self.factors
+    }
+
+    /// Embedding of the training points (original row order), identical
+    /// in convention to [`kpca_embed_hierarchical`].
+    pub fn train_embedding(&self) -> &Mat {
+        &self.train_embedding
+    }
+
+    /// Embed query rows: u(x) = Λ^{-1/2} Vᵀ k̃(X, x), where k̃ applies
+    /// the training centering to the kernel column of x. At a training
+    /// point this reproduces that row of [`Self::train_embedding`]
+    /// (exactly, up to Lanczos convergence).
+    pub fn transform(&self, q: &Mat) -> Mat {
+        let f = self.factors.as_ref();
+        let n = f.n();
+        let dim = self.dim();
+        let mut out = Mat::zeros(q.rows(), dim);
+        for i in 0..q.rows() {
+            let col = HPredictor::column_with_agg(f, &self.agg, q.row(i));
+            let cmean = col.iter().sum::<f64>() / n as f64;
+            let ct: Vec<f64> = (0..n)
+                .map(|j| col[j] - cmean - self.row_means[j] + self.grand_mean)
+                .collect();
+            for c in 0..dim {
+                let mut acc = 0.0;
+                for (j, &v) in ct.iter().enumerate() {
+                    acc += self.proj[(j, c)] * v;
+                }
+                out[(i, c)] = acc;
+            }
+        }
+        out
+    }
+
+    /// Internal view for [`crate::model`] persistence:
+    /// (factors, proj, row means, grand mean, training embedding).
+    pub(crate) fn parts(&self) -> (&std::sync::Arc<HFactors>, &Mat, &[f64], f64, &Mat) {
+        (&self.factors, &self.proj, &self.row_means, self.grand_mean, &self.train_embedding)
+    }
+
+    /// Reassemble from persisted parts; the aggregate bases are derived
+    /// state and recomputed deterministically.
+    pub(crate) fn from_parts(
+        factors: std::sync::Arc<HFactors>,
+        proj: Mat,
+        row_means: Vec<f64>,
+        grand_mean: f64,
+        train_embedding: Mat,
+    ) -> Result<KpcaTransformer> {
+        let n = factors.n();
+        if proj.rows() != n
+            || row_means.len() != n
+            || train_embedding.rows() != n
+            || train_embedding.cols() != proj.cols()
+        {
+            return Err(Error::data("kpca artifact: inconsistent shapes"));
+        }
+        let agg = crate::hkernel::densify::aggregate_bases(&factors);
+        Ok(KpcaTransformer { factors, proj, row_means, grand_mean, train_embedding, agg })
+    }
+}
+
 fn scale_embedding(w: &[f64], v: &Mat, dim: usize) -> Mat {
     let n = v.rows();
     let dim = dim.min(w.len());
@@ -204,6 +344,33 @@ mod tests {
         let u_lanczos = kpca_embed_hierarchical(&f, 3, 60, &mut rng).unwrap();
         let diff = alignment_difference(&u_dense, &u_lanczos).unwrap();
         assert!(diff < 1e-6, "alignment diff {diff}");
+    }
+
+    /// The out-of-sample extension evaluated *at a training point* must
+    /// reproduce that row of the training embedding: with iters = n the
+    /// Lanczos eigenpairs are exact, so u(x_i) = Λ^{-1/2} Vᵀ K̃ e_i
+    /// = Λ^{1/2} V_{i,·} identically.
+    #[test]
+    fn transformer_oos_matches_train_embedding_at_training_points() {
+        let x = cloud(50, 3, 11);
+        let mut cfg = HConfig::new(Gaussian::new(0.5), 7).with_seed(12);
+        cfg.n0 = 7;
+        let f = std::sync::Arc::new(crate::hkernel::HFactors::build(&x, cfg).unwrap());
+        let mut rng = Rng::new(13);
+        let t = KpcaTransformer::fit(f, 3, 50, &mut rng).unwrap();
+        assert_eq!(t.dim(), 3);
+        let u = t.transform(&x);
+        let want = t.train_embedding();
+        for i in 0..50 {
+            for c in 0..3 {
+                assert!(
+                    (u[(i, c)] - want[(i, c)]).abs() < 1e-5 * (1.0 + want[(i, c)].abs()),
+                    "({i},{c}): {} vs {}",
+                    u[(i, c)],
+                    want[(i, c)]
+                );
+            }
+        }
     }
 
     #[test]

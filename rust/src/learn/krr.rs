@@ -103,7 +103,10 @@ impl TrainConfig {
     }
 }
 
-enum FittedEngine {
+/// The engine-specific fitted state. Crate-visible so the [`crate::model`]
+/// persistence layer can serialize each variant's parts and rebuild a
+/// [`KrrModel`] from an artifact without refitting.
+pub(crate) enum FittedEngine {
     Hierarchical {
         factors: std::sync::Arc<HFactors>,
         w: Mat,
@@ -253,6 +256,25 @@ impl KrrModel {
             FittedEngine::Hierarchical { predictor, .. } => Some(predictor),
             _ => None,
         }
+    }
+
+    /// Internal view of the fitted engine state, for [`crate::model`]
+    /// artifact serialization.
+    pub(crate) fn engine(&self) -> &FittedEngine {
+        &self.engine
+    }
+
+    /// Reassemble a model from artifact parts without refitting. Phase
+    /// timings are empty (nothing was trained); `memory_words` is the
+    /// value recorded at fit time and carried by the artifact.
+    pub(crate) fn from_engine(
+        engine: FittedEngine,
+        cfg: TrainConfig,
+        dim: usize,
+        n_outputs: usize,
+        memory_words: usize,
+    ) -> KrrModel {
+        KrrModel { engine, phases: Phases::new(), memory_words, dim, n_outputs, cfg }
     }
 }
 

@@ -11,6 +11,7 @@ pub mod metrics;
 pub use cv::{grid_search, GridResult};
 pub use kpca::{
     alignment_difference, kpca_embed_dense, kpca_embed_features, kpca_embed_hierarchical,
+    KpcaTransformer,
 };
 pub use krr::{EngineSpec, KrrModel, TrainConfig};
 pub use metrics::{accuracy, relative_error, rmse};

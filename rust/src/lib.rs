@@ -36,6 +36,7 @@ pub mod error;
 pub mod gp;
 pub mod hkernel;
 pub mod learn;
+pub mod model;
 pub mod runtime;
 pub mod kernels;
 pub mod linalg;

@@ -1,18 +1,30 @@
 //! `hck` — command-line entry point for the hierarchically compositional
 //! kernel library.
 //!
+//! The CLI is **artifact-first**: training produces a self-describing
+//! `HCKM` model file, and every downstream command consumes artifacts —
+//! nothing retrains in-process.
+//!
 //! Subcommands:
 //!   info       artifact + data set inventory
 //!   data-gen   emit a synthetic Table-1 analogue as LIBSVM text
-//!   train      train any engine on a data set, report metric + timings
-//!   serve      train, then serve predictions over TCP (JSON lines)
+//!   train      fit any model (krr/gp/kpca), report metric, --save artifact
+//!   predict    load an HCKM artifact and predict a LIBSVM file
+//!   shard      cut an HCKM artifact into a self-contained shard directory
+//!   serve      serve an HCKM artifact or a shard directory over TCP
 //!   likelihood GP log-marginal likelihood / MLE bandwidth search
+//!
+//! Typical pipeline:
+//!   hck train --dataset cadata --r 128 --save m.hckm
+//!   hck shard --model m.hckm --out shards/ --shards 8
+//!   hck serve --shard-dir shards/ --port 7878
 
 use hck::error::{Error, Result};
 use hck::coordinator::{serve_tcp, BatchPolicy, PredictionService};
 use hck::data::{self, Dataset};
 use hck::kernels::KernelKind;
-use hck::learn::{EngineSpec, KrrModel, TrainConfig};
+use hck::learn::{EngineSpec, TrainConfig};
+use hck::model::{self, Model, ModelKind, ModelSpec};
 use hck::partition::SplitRule;
 use hck::util::args::{usage, Args, OptSpec};
 use hck::util::timer::Timer;
@@ -49,6 +61,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "data-gen" => cmd_data_gen(rest),
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
+        "shard" => cmd_shard(rest),
         "serve" => cmd_serve(rest),
         "likelihood" => cmd_likelihood(rest),
         "help" | "--help" | "-h" => {
@@ -68,10 +81,16 @@ fn print_help() {
          subcommands:\n\
            info        show artifact inventory and Table-1 data set specs\n\
            data-gen    generate a synthetic data set (LIBSVM format)\n\
-           train       train a kernel model and report test metric\n\
-           predict     load a saved model and predict a LIBSVM file\n\
-           serve       train, then serve predictions over TCP\n\
+           train       fit a model (krr/gp/kpca) and save an HCKM artifact\n\
+           predict     load an HCKM artifact and predict a LIBSVM file\n\
+           shard       cut an HCKM artifact into a serving shard directory\n\
+           serve       serve an artifact or shard directory over TCP\n\
            likelihood  GP log-likelihood / MLE bandwidth search\n\
+         \n\
+         artifact pipeline:\n\
+           hck train --dataset cadata --r 128 --save m.hckm\n\
+           hck shard --model m.hckm --out shards/ --shards 8\n\
+           hck serve --shard-dir shards/ --port 7878\n\
          \n\
          run 'hck <subcommand> --help' for options"
     );
@@ -97,18 +116,23 @@ fn common_data_opts() -> Vec<OptSpec> {
     ]
 }
 
-/// Resolve (train, test) from --data or --dataset options.
-fn load_data(a: &Args) -> Result<(Dataset, Dataset)> {
+/// Resolve (train, test, normalization) from --data or --dataset options.
+/// The normalization ranges (present for LIBSVM files, which get the
+/// paper's [0, 1] attribute scaling) ride into the artifact so serving
+/// can preprocess raw queries identically.
+#[allow(clippy::type_complexity)]
+fn load_data(a: &Args) -> Result<(Dataset, Dataset, Option<Vec<(f64, f64)>>)> {
     let seed = a.u64("seed").map_err(Error::Config)?;
     if let Some(path) = a.get("data") {
         let mut ds = data::libsvm::load(path, path)?;
-        data::preprocess::normalize_unit(&mut ds);
+        let ranges = data::preprocess::normalize_unit(&mut ds);
         let removed = data::preprocess::dedup_conflicts(&mut ds);
         if removed > 0 {
             eprintln!("removed {removed} duplicate/conflicting records");
         }
         let mut rng = hck::util::rng::Rng::new(seed);
-        Ok(data::preprocess::train_test_split(&ds, 0.2, &mut rng))
+        let (train, test) = data::preprocess::train_test_split(&ds, 0.2, &mut rng);
+        Ok((train, test, Some(ranges)))
     } else {
         let name = a.req("dataset").map_err(Error::Config)?;
         let spec = data::spec_by_name(name)
@@ -117,7 +141,8 @@ fn load_data(a: &Args) -> Result<(Dataset, Dataset)> {
         let n_test = a.usize("n-test").map_err(Error::Config)?;
         let nt = if n_train == 0 { spec.default_n_train } else { n_train };
         let ns = if n_test == 0 { spec.default_n_test } else { n_test };
-        Ok(data::synthetic::generate(spec, nt, ns, seed))
+        let (train, test) = data::synthetic::generate(spec, nt, ns, seed);
+        Ok((train, test, None))
     }
 }
 
@@ -131,7 +156,7 @@ fn model_opts() -> Vec<OptSpec> {
         ),
         opt("r", "rank / leaf size", Some("128")),
         opt("kernel", "family:sigma, e.g. gaussian:0.5", Some("gaussian:0.5")),
-        opt("lambda", "ridge regularization", Some("0.01")),
+        opt("lambda", "ridge regularization / GP noise", Some("0.01")),
         opt("rule", "rp | pca | kd | kmeans", Some("rp")),
     ]);
     o
@@ -163,6 +188,38 @@ fn build_config(a: &Args) -> Result<TrainConfig> {
         .with_lambda(a.f64("lambda").map_err(Error::Config)?)
         .with_seed(a.u64("seed").map_err(Error::Config)?)
         .with_rule(parse_rule(a.req("rule").map_err(Error::Config)?)?))
+}
+
+/// The hierarchical factor config implied by the shared options (GP and
+/// KPCA always run on the hierarchical kernel).
+fn build_hconfig(a: &Args) -> Result<hck::hkernel::HConfig> {
+    let cfg = build_config(a)?;
+    let r = a.usize("r").map_err(Error::Config)?;
+    let mut hcfg = hck::hkernel::HConfig::new(cfg.kind, r)
+        .with_seed(cfg.seed)
+        .with_rule(cfg.rule);
+    hcfg.n0 = r.max(1);
+    Ok(hcfg)
+}
+
+/// Assemble the unified [`ModelSpec`] from CLI options.
+fn build_model_spec(a: &Args, norm: Option<Vec<(f64, f64)>>) -> Result<ModelSpec> {
+    let spec = match a.req("algo").map_err(Error::Config)? {
+        "krr" => ModelSpec::krr(build_config(a)?),
+        "gp" => {
+            let lambda = a.f64("lambda").map_err(Error::Config)?;
+            ModelSpec::gp(build_hconfig(a)?, lambda)
+        }
+        "kpca" => {
+            let dim = a.usize("embed-dim").map_err(Error::Config)?;
+            ModelSpec::kpca(build_hconfig(a)?, dim.max(1))
+        }
+        other => return Err(anyhow!("unknown algo '{other}' (krr | gp | kpca)")),
+    };
+    Ok(match norm {
+        Some(ranges) => spec.with_normalization(ranges),
+        None => spec,
+    })
 }
 
 fn cmd_info() -> Result<()> {
@@ -212,7 +269,7 @@ fn cmd_data_gen(argv: Vec<String>) -> Result<()> {
         println!("{}", usage("hck data-gen", "generate a synthetic data set", &spec));
         return Ok(());
     }
-    let (train, test) = load_data(&a)?;
+    let (train, test, _) = load_data(&a)?;
     let out = a.req("out").map_err(Error::Config)?;
     data::libsvm::write(&train, out)?;
     data::libsvm::write(&test, &format!("{out}.test"))?;
@@ -230,83 +287,84 @@ fn cmd_data_gen(argv: Vec<String>) -> Result<()> {
 
 fn cmd_train(argv: Vec<String>) -> Result<()> {
     let mut spec = model_opts();
-    spec.push(opt("save", "save the fitted hierarchical model to this path", None));
+    spec.extend([
+        opt("algo", "krr | gp | kpca (one fit surface for all of them)", Some("krr")),
+        opt("embed-dim", "KPCA embedding dimension", Some("8")),
+        opt("save", "save the fitted model as a self-describing HCKM artifact", None),
+    ]);
     spec.push(flag("help", "show help"));
     let a = Args::parse(argv, &spec).map_err(Error::Config)?;
     if a.flag("help") {
-        println!("{}", usage("hck train", "train a kernel model", &spec));
+        println!("{}", usage("hck train", "fit a model, optionally save an artifact", &spec));
         return Ok(());
     }
-    let (train, test) = load_data(&a)?;
-    let cfg = build_config(&a)?;
+    let (train, test, norm) = load_data(&a)?;
+    let mspec = build_model_spec(&a, norm)?;
     println!(
-        "training {} on {} (n={} d={} task={:?}), kernel {}:{}, λ={}",
-        cfg.engine.name(),
+        "training on {} (n={} d={} task={:?})",
         train.name,
         train.n(),
         train.d(),
-        train.task,
-        cfg.kind.family(),
-        cfg.kind.sigma(),
-        cfg.lambda
+        train.task
     );
     let t = Timer::start();
-    let model = KrrModel::fit_dataset(&cfg, &train)?;
+    let model: Box<dyn Model> = model::fit(&mspec, &train)?;
     let train_secs = t.secs();
-    let t2 = Timer::start();
-    let metric = model.evaluate(&test);
-    let test_secs = t2.secs();
-    let metric_name = match train.task {
-        data::Task::Regression => "relative error",
-        _ => "accuracy",
-    };
-    println!("{metric_name}: {metric:.4}");
-    println!("train: {train_secs:.3}s ({})", model.phases.summary());
-    println!(
-        "test:  {test_secs:.3}s ({:.1} µs/query)",
-        test_secs * 1e6 / test.n().max(1) as f64
-    );
-    println!(
-        "memory estimate: {:.1} MB ({} words)",
-        model.memory_words as f64 * 8e-6,
-        model.memory_words
-    );
+    println!("fitted {} in {train_secs:.3}s", model.schema().summary());
+    if model.schema().kind == ModelKind::Kpca {
+        println!("embedding dimension {}", model.outputs());
+        if test.n() > 0 {
+            let emb = model.predict_batch(&test.x.row_range(0, 1));
+            println!("first test point embeds to {:?}", emb.row(0));
+        }
+    } else {
+        let t2 = Timer::start();
+        let preds = model.predict_batch(&test.x);
+        let test_secs = t2.secs();
+        let (metric, higher_better) = hck::learn::metrics::score(&test, &preds);
+        println!(
+            "{}: {metric:.4}",
+            if higher_better { "accuracy" } else { "relative error" }
+        );
+        println!(
+            "test:  {test_secs:.3}s ({:.1} µs/query)",
+            test_secs * 1e6 / test.n().max(1) as f64
+        );
+    }
     if let Some(path) = a.get("save") {
-        let (factors, w) = model.hierarchical_parts().ok_or_else(|| {
-            anyhow!("--save currently supports the hierarchical engine only")
-        })?;
-        hck::hkernel::save_model(factors, w, path)?;
-        println!("saved model to {path}");
+        model.save(path)?;
+        println!("saved HCKM artifact to {path}");
     }
     Ok(())
 }
 
 fn cmd_predict(argv: Vec<String>) -> Result<()> {
     let spec = vec![
-        opt("model", "path of a model saved by `hck train --save`", None),
+        opt("model", "HCKM artifact from `hck train --save`", None),
         opt("data", "LIBSVM file of query points", None),
         flag("quiet", "only print the summary metric"),
         flag("help", "show help"),
     ];
     let a = Args::parse(argv, &spec).map_err(Error::Config)?;
     if a.flag("help") {
-        println!("{}", usage("hck predict", "predict with a saved model", &spec));
+        println!("{}", usage("hck predict", "predict with a saved artifact", &spec));
         return Ok(());
     }
     let model_path = a.req("model").map_err(Error::Config)?;
     let data_path = a.req("data").map_err(Error::Config)?;
-    let (factors, w) = hck::hkernel::load_model(model_path)?;
+    let model: Box<dyn Model> = model::load_any(model_path)?;
+    eprintln!("loaded {}: {}", model_path, model.schema().summary());
     let queries = data::libsvm::load(data_path, data_path)?;
-    if queries.d() > factors.x.cols() {
+    let d = model.dim();
+    if queries.d() > d {
         return Err(anyhow!(
-            "query dimension {} exceeds model dimension {}",
-            queries.d(),
-            factors.x.cols()
+            "query dimension {} exceeds model dimension {d}",
+            queries.d()
         ));
     }
     // Pad query features to the model dimension if the sparse file
-    // happened to omit trailing attributes.
-    let d = factors.x.cols();
+    // happened to omit trailing attributes, then apply the artifact's
+    // recorded normalization (identity when it carries none).
     let q = hck::linalg::Mat::from_fn(queries.n(), d, |i, j| {
         if j < queries.d() {
             queries.x[(i, j)]
@@ -314,77 +372,148 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
             0.0
         }
     });
-    let pred = hck::hkernel::HPredictor::new(std::sync::Arc::new(factors), &w);
-    let out = pred.predict_batch(&q);
+    let q = model.normalize(&q);
+    let out = model.predict_batch(&q);
     if !a.flag("quiet") {
         for i in 0..out.rows() {
             let row: Vec<String> = out.row(i).iter().map(|v| format!("{v:.6}")).collect();
             println!("{}", row.join(" "));
         }
     }
-    let (metric, hib) = hck::learn::metrics::score(&queries, &out);
-    eprintln!(
-        "{}: {metric:.4} over {} queries",
-        if hib { "accuracy" } else { "relative error" },
-        queries.n()
+    if model.schema().kind == ModelKind::Kpca {
+        eprintln!("embedded {} queries into {} dimensions", queries.n(), out.cols());
+    } else {
+        let (metric, hib) = hck::learn::metrics::score(&queries, &out);
+        eprintln!(
+            "{}: {metric:.4} over {} queries",
+            if hib { "accuracy" } else { "relative error" },
+            queries.n()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_shard(argv: Vec<String>) -> Result<()> {
+    let spec = vec![
+        opt("model", "HCKM artifact (hierarchical-factor models)", None),
+        opt("out", "output shard directory", Some("shards")),
+        opt("shards", "minimum shard count (picks the cut depth)", Some("4")),
+        opt("depth", "explicit tree cut depth (overrides --shards)", None),
+        flag("help", "show help"),
+    ];
+    let a = Args::parse(argv, &spec).map_err(Error::Config)?;
+    if a.flag("help") {
+        println!(
+            "{}",
+            usage("hck shard", "cut an artifact into a serving shard directory", &spec)
+        );
+        return Ok(());
+    }
+    let model_path = a.req("model").map_err(Error::Config)?;
+    let model: Box<dyn Model> = model::load_any(model_path)?;
+    let pred = model.hierarchical_predictor().ok_or_else(|| {
+        anyhow!(
+            "sharding requires a hierarchical-factor model; '{}' has none",
+            model.schema().kind.name()
+        )
+    })?;
+    let tree = &pred.factors().tree;
+    let depth = match a.get("depth") {
+        Some(v) => v.parse::<usize>().map_err(|_| anyhow!("bad --depth '{v}'"))?,
+        None => {
+            let want = a.usize("shards").map_err(Error::Config)?;
+            hck::shard::depth_for_shards(tree, want.max(1))
+        }
+    };
+    let out = a.req("out").map_err(Error::Config)?;
+    let norm = model.schema().normalization.as_deref();
+    let n = hck::shard::save_shard_dir(pred, depth, out, norm)?;
+    println!(
+        "wrote {n} shards at tree depth {depth} (tree depth {}) to {out}/ — \
+         serve with `hck serve --shard-dir {out}`",
+        tree.depth()
     );
     Ok(())
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
-    let mut spec = model_opts();
-    spec.extend([
+    let spec = vec![
+        opt("model", "HCKM artifact from `hck train --save`", None),
+        opt("shard-dir", "shard directory from `hck shard --out`", None),
         opt("port", "TCP port", Some("7878")),
         opt("max-batch", "dynamic batch size cap", Some("64")),
         opt("max-wait-ms", "batching window (ms)", Some("2")),
-        opt("shards", "shard workers (0 = single replica)", Some("0")),
-        opt("shard-depth", "tree depth of the shard cut (default: fits --shards)", None),
+        opt("shards", "cut an in-process shard layer from --model (0 = off)", Some("0")),
+        opt("shard-depth", "tree depth of the in-process cut (default: fits --shards)", None),
         flag("help", "show help"),
-    ]);
+    ];
     let a = Args::parse(argv, &spec).map_err(Error::Config)?;
     if a.flag("help") {
-        println!("{}", usage("hck serve", "train, then serve predictions over TCP", &spec));
+        println!(
+            "{}",
+            usage("hck serve", "serve a saved artifact or shard directory over TCP", &spec)
+        );
         return Ok(());
     }
-    let (train, _) = load_data(&a)?;
-    let cfg = build_config(&a)?;
-    eprintln!("training {} on {} (n={})...", cfg.engine.name(), train.name, train.n());
-    let model = KrrModel::fit_dataset(&cfg, &train)?;
     let policy = BatchPolicy {
         max_batch: a.usize("max-batch").map_err(Error::Config)?,
         max_wait: std::time::Duration::from_millis(
             a.u64("max-wait-ms").map_err(Error::Config)?,
         ),
     };
-
-    // Sharded mode: cut the partition tree at --shard-depth (or the
-    // smallest depth yielding at least --shards subtrees) and spawn one
-    // worker per shard behind the dynamic batcher.
     let n_shards = a.usize("shards").map_err(Error::Config)?;
     let shard_depth = a
         .get("shard-depth")
         .map(|v| v.parse::<usize>().map_err(|_| anyhow!("bad --shard-depth '{v}'")))
         .transpose()?;
-    let svc = if n_shards > 0 || shard_depth.is_some() {
-        let (sharded, depth, tree_depth) = {
-            let pred = model.hierarchical_predictor().ok_or_else(|| {
-                anyhow!("--shards/--shard-depth require the hierarchical engine")
-            })?;
-            let tree = &pred.factors().tree;
-            let depth = shard_depth
-                .unwrap_or_else(|| hck::shard::depth_for_shards(tree, n_shards.max(1)));
-            (hck::shard::ShardedPredictor::new(pred, depth), depth, tree.depth())
-        };
-        // The shards own their slices (plus the small top-path replica);
-        // drop the unsharded model so serving holds one copy, not two.
-        drop(model);
-        eprintln!(
-            "sharded serving: {} workers at tree depth {depth} (tree depth {tree_depth})",
-            sharded.shards()
-        );
-        Arc::new(PredictionService::start(Arc::new(sharded), policy))
-    } else {
-        Arc::new(PredictionService::start(Arc::new(model), policy))
+
+    let svc = match (a.get("model"), a.get("shard-dir")) {
+        (Some(_), Some(_)) => {
+            return Err(anyhow!("pass either --model or --shard-dir, not both"))
+        }
+        (None, None) => {
+            return Err(anyhow!(
+                "serve consumes artifacts: pass --model m.hckm (from `hck train --save`) \
+                 or --shard-dir dir/ (from `hck shard`)"
+            ))
+        }
+        (None, Some(dir)) => {
+            // Shards straight from disk: each worker owns only its slice.
+            let sharded = hck::shard::load_shard_dir(dir)?;
+            eprintln!(
+                "serving {} shards from {dir} (loaded from disk, no retraining)",
+                sharded.shards()
+            );
+            Arc::new(PredictionService::start(Arc::new(sharded), policy))
+        }
+        (Some(path), None) => {
+            let model: Box<dyn Model> = model::load_any(path)?;
+            eprintln!("loaded {path}: {}", model.schema().summary());
+            if n_shards > 0 || shard_depth.is_some() {
+                let sharded = {
+                    let pred = model.hierarchical_predictor().ok_or_else(|| {
+                        anyhow!("--shards/--shard-depth require a hierarchical-factor model")
+                    })?;
+                    let tree = &pred.factors().tree;
+                    let depth = shard_depth
+                        .unwrap_or_else(|| hck::shard::depth_for_shards(tree, n_shards.max(1)));
+                    eprintln!(
+                        "sharded serving: cut at tree depth {depth} (tree depth {})",
+                        tree.depth()
+                    );
+                    // from_model carries the artifact's normalization
+                    // stats onto the sharded path.
+                    hck::shard::ShardedPredictor::from_model(model.as_ref(), depth)?
+                };
+                // The shards own their slices (plus the small top-path
+                // replica); drop the unsharded model so serving holds one
+                // copy, not two.
+                drop(model);
+                Arc::new(PredictionService::start(Arc::new(sharded), policy))
+            } else {
+                Arc::new(PredictionService::start_model(Arc::from(model), policy))
+            }
+        }
     };
 
     let port = a.usize("port").map_err(Error::Config)?;
@@ -425,7 +554,7 @@ fn cmd_likelihood(argv: Vec<String>) -> Result<()> {
         println!("{}", usage("hck likelihood", "GP log-likelihood / MLE", &spec));
         return Ok(());
     }
-    let (train, _) = load_data(&a)?;
+    let (train, _, _) = load_data(&a)?;
     let cfg = build_config(&a)?;
     let r = a.usize("r").map_err(Error::Config)?;
     let mut hcfg = hck::hkernel::HConfig::new(cfg.kind, r).with_seed(cfg.seed);

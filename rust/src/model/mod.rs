@@ -1,0 +1,550 @@
+//! Unified model surface: one `fit → predict → save → serve` API across
+//! every learner in the crate, with self-describing artifacts.
+//!
+//! The paper's promise is one kernel machinery serving regression,
+//! classification, and KPCA at O(nr) memory; this module is the single
+//! entry point that delivers it. A [`ModelSpec`] says *what* to fit
+//! (any of the five KRR engines, the GP posterior, or a KPCA transform);
+//! [`fit`] returns a type-erased [`Model`] that predicts in batches,
+//! reports its own [`ModelSchema`] (kind, dims, task, preprocessing
+//! stats), saves itself to a versioned `HCKM` artifact, and — when the
+//! hierarchical engine backs it — exposes the Algorithm-3 predictor for
+//! partition-tree sharding. [`load_any`] reads any `HCKM` file back into
+//! a `Box<dyn Model>` without the caller knowing the kind.
+//!
+//! # Walkthrough: train → save → shard → serve
+//!
+//! ```no_run
+//! use hck::data::{spec_by_name, synthetic};
+//! use hck::kernels::Gaussian;
+//! use hck::learn::{EngineSpec, TrainConfig};
+//! use hck::model::{fit, load_any, Model, ModelSpec};
+//!
+//! // 1. Train any engine through one spec type.
+//! let (train, test) = synthetic::generate(spec_by_name("cadata").unwrap(), 2000, 500, 1);
+//! let spec = ModelSpec::krr(
+//!     TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 128 }),
+//! );
+//! let model: Box<dyn Model> = fit(&spec, &train)?;
+//!
+//! // 2. Save a self-describing artifact; reload without knowing the kind.
+//! model.save("m.hckm")?;
+//! let loaded = load_any("m.hckm")?;
+//! assert_eq!(loaded.schema().dim, train.d());
+//! let preds = loaded.predict_batch(&test.x);
+//!
+//! // 3. Cut the artifact into self-contained serving shards on disk
+//! //    (the schema's normalization stats ride along) …
+//! let pred = loaded.hierarchical_predictor().expect("hierarchical engine");
+//! hck::shard::save_shard_dir(pred, 2, "shards/", loaded.schema().normalization.as_deref())?;
+//!
+//! // 4. … and serve them from another process, no retraining:
+//! //    `hck serve --shard-dir shards/` (or in-process:)
+//! let sharded = hck::shard::load_shard_dir("shards/")?;
+//! let svc = hck::coordinator::PredictionService::start(
+//!     std::sync::Arc::new(sharded),
+//!     hck::coordinator::BatchPolicy::default(),
+//! );
+//! # let _ = (preds, svc);
+//! # Ok::<(), hck::Error>(())
+//! ```
+//!
+//! The same flow drives the CLI: `hck train --save m.hckm`,
+//! `hck predict --model m.hckm`, `hck shard --model m.hckm --out dir/`,
+//! `hck serve --model m.hckm | --shard-dir dir/`.
+
+pub mod persist;
+
+pub use persist::{load_any, FORMAT_VERSION};
+
+use crate::data::{Dataset, Task};
+use crate::error::Result;
+use crate::gp::GpRegressor;
+use crate::hkernel::{HConfig, HFactors, HPredictor};
+use crate::learn::krr::EngineSpec;
+use crate::learn::{KpcaTransformer, KrrModel, TrainConfig};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Which learner an artifact holds. Doubles as the `HCKM` header tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// KRR on the paper's hierarchically compositional kernel.
+    KrrHierarchical,
+    /// KRR on the Nyström low-rank kernel.
+    KrrNystrom,
+    /// KRR on random Fourier features.
+    KrrFourier,
+    /// KRR on the cross-domain independent kernel.
+    KrrIndependent,
+    /// KRR on the exact dense kernel.
+    KrrExact,
+    /// Gaussian-process posterior mean on the hierarchical kernel.
+    Gp,
+    /// Kernel-PCA transform on the hierarchical kernel.
+    Kpca,
+}
+
+impl ModelKind {
+    /// Stable short name (CLI reports, artifact listings).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::KrrHierarchical => "krr-hierarchical",
+            ModelKind::KrrNystrom => "krr-nystrom",
+            ModelKind::KrrFourier => "krr-fourier",
+            ModelKind::KrrIndependent => "krr-independent",
+            ModelKind::KrrExact => "krr-exact",
+            ModelKind::Gp => "gp",
+            ModelKind::Kpca => "kpca",
+        }
+    }
+
+    /// The kind a fitted KRR engine maps to.
+    pub fn of_engine(engine: EngineSpec) -> ModelKind {
+        match engine {
+            EngineSpec::Hierarchical { .. } => ModelKind::KrrHierarchical,
+            EngineSpec::Nystrom { .. } => ModelKind::KrrNystrom,
+            EngineSpec::Fourier { .. } => ModelKind::KrrFourier,
+            EngineSpec::Independent { .. } => ModelKind::KrrIndependent,
+            EngineSpec::Exact => ModelKind::KrrExact,
+        }
+    }
+}
+
+/// Self-describing metadata carried by every fitted model and serialized
+/// into the `HCKM` header, so a loaded artifact knows how to validate and
+/// preprocess requests without side-channel configuration.
+#[derive(Debug, Clone)]
+pub struct ModelSchema {
+    /// Which learner this is.
+    pub kind: ModelKind,
+    /// Feature dimension d the model was trained on.
+    pub dim: usize,
+    /// Output columns per prediction (m; embedding dim for KPCA).
+    pub outputs: usize,
+    /// The training task (decides how raw outputs decode to labels).
+    pub task: Task,
+    /// Per-column (min, max) ranges of the `[0, 1]` normalization applied
+    /// to the training features, when the training pipeline normalized
+    /// (see [`crate::data::preprocess::normalize_unit`]). `None` when the
+    /// model was trained on raw features.
+    pub normalization: Option<Vec<(f64, f64)>>,
+}
+
+impl ModelSchema {
+    /// One-line human-readable description.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} (d={}, outputs={}, task={:?}{})",
+            self.kind.name(),
+            self.dim,
+            self.outputs,
+            self.task,
+            if self.normalization.is_some() { ", normalized features" } else { "" }
+        )
+    }
+}
+
+/// A fitted model behind one uniform surface: batch prediction, schema
+/// introspection, artifact persistence, and (when hierarchical factors
+/// back it) access to the Algorithm-3 predictor for sharding. All
+/// implementations are `Send + Sync`, so an `Arc<dyn Model>` drops
+/// straight behind [`crate::coordinator::PredictionService`].
+pub trait Model: Send + Sync {
+    /// Predict raw outputs for a batch of query rows (q.rows() x outputs).
+    fn predict_batch(&self, q: &Mat) -> Mat;
+
+    /// The model's self-description (also the artifact header).
+    fn schema(&self) -> &ModelSchema;
+
+    /// Write a self-describing `HCKM` artifact; [`load_any`] restores it.
+    fn save(&self, path: &str) -> Result<()>;
+
+    /// The long-lived Algorithm-3 predictor, when the model is backed by
+    /// hierarchical factors — the input to partition-tree sharding
+    /// ([`crate::shard::split_predictor`] / [`crate::shard::save_shard_dir`]).
+    fn hierarchical_predictor(&self) -> Option<&HPredictor> {
+        None
+    }
+
+    /// Feature dimension d (from the schema).
+    fn dim(&self) -> usize {
+        self.schema().dim
+    }
+
+    /// Output columns m (from the schema).
+    fn outputs(&self) -> usize {
+        self.schema().outputs
+    }
+
+    /// Apply the artifact's recorded feature normalization to raw query
+    /// rows (identity when the model was trained on raw features). The
+    /// queries must already have the model's dimension.
+    fn normalize(&self, q: &Mat) -> Mat {
+        let mut out = q.clone();
+        if let Some(ranges) = &self.schema().normalization {
+            crate::data::preprocess::apply_normalization(&mut out, ranges);
+        }
+        out
+    }
+}
+
+/// Every `Arc<dyn Model>` is a coordinator predictor: artifact-loaded
+/// models drop behind the dynamic batcher (and the TCP front) without
+/// engine-specific plumbing. The serving path applies the artifact's
+/// recorded feature normalization here, so TCP clients send **raw**
+/// features and get the same answers as `hck predict --model` (which
+/// normalizes explicitly).
+impl crate::coordinator::Predictor for Arc<dyn Model> {
+    fn predict_batch(&self, q: &Mat) -> Mat {
+        if self.schema().normalization.is_some() {
+            Model::predict_batch(self.as_ref(), &self.normalize(q))
+        } else {
+            Model::predict_batch(self.as_ref(), q)
+        }
+    }
+    fn dim(&self) -> usize {
+        self.schema().dim
+    }
+    fn outputs(&self) -> usize {
+        self.schema().outputs
+    }
+}
+
+/// The algorithm half of a [`ModelSpec`].
+#[derive(Debug, Clone)]
+pub enum Algo {
+    /// Kernel ridge regression / one-vs-all classification, any engine.
+    Krr(TrainConfig),
+    /// GP posterior mean on the hierarchical kernel with noise λ.
+    Gp {
+        /// Hierarchical factor configuration.
+        config: HConfig,
+        /// Noise variance λ.
+        lambda: f64,
+    },
+    /// Kernel-PCA transform on the hierarchical kernel.
+    Kpca {
+        /// Hierarchical factor configuration.
+        config: HConfig,
+        /// Embedding dimension.
+        dim: usize,
+        /// Lanczos iteration budget (0 = auto).
+        iters: usize,
+    },
+}
+
+/// What to fit: an algorithm plus optional preprocessing stats to bake
+/// into the artifact. Builder-style construction:
+///
+/// ```
+/// use hck::kernels::Gaussian;
+/// use hck::learn::{EngineSpec, TrainConfig};
+/// use hck::model::ModelSpec;
+/// let spec = ModelSpec::krr(
+///     TrainConfig::new(Gaussian::new(0.5), EngineSpec::Nystrom { rank: 64 }),
+/// );
+/// assert!(spec.normalization.is_none());
+/// ```
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Which learner to fit.
+    pub algo: Algo,
+    /// Per-column (min, max) normalization already applied to the
+    /// training features; recorded in the artifact so the serving side
+    /// can preprocess raw queries identically.
+    pub normalization: Option<Vec<(f64, f64)>>,
+}
+
+impl ModelSpec {
+    /// KRR (any engine) spec.
+    pub fn krr(config: TrainConfig) -> ModelSpec {
+        ModelSpec { algo: Algo::Krr(config), normalization: None }
+    }
+
+    /// GP regression spec.
+    pub fn gp(config: HConfig, lambda: f64) -> ModelSpec {
+        ModelSpec { algo: Algo::Gp { config, lambda }, normalization: None }
+    }
+
+    /// KPCA spec with the default Lanczos budget.
+    pub fn kpca(config: HConfig, dim: usize) -> ModelSpec {
+        ModelSpec { algo: Algo::Kpca { config, dim, iters: 0 }, normalization: None }
+    }
+
+    /// Record the preprocessing applied to the training features.
+    pub fn with_normalization(mut self, ranges: Vec<(f64, f64)>) -> Self {
+        self.normalization = Some(ranges);
+        self
+    }
+
+    /// Fit on a data set (sugar for [`fit`]).
+    pub fn fit(&self, ds: &Dataset) -> Result<Box<dyn Model>> {
+        fit(self, ds)
+    }
+}
+
+/// Fit a [`ModelSpec`] on a data set, returning the type-erased model.
+pub fn fit(spec: &ModelSpec, ds: &Dataset) -> Result<Box<dyn Model>> {
+    match &spec.algo {
+        Algo::Krr(cfg) => {
+            let model = KrrModel::fit_dataset(cfg, ds)?;
+            Ok(Box::new(FittedKrr::new(model, ds.task, spec.normalization.clone())))
+        }
+        Algo::Gp { config, lambda } => {
+            let gp = GpRegressor::fit(&ds.x, &ds.y, config.clone(), *lambda)?;
+            Ok(Box::new(FittedGp::new(gp, ds.task, spec.normalization.clone())))
+        }
+        Algo::Kpca { config, dim, iters } => {
+            let factors = Arc::new(HFactors::build(&ds.x, config.clone())?);
+            // Fork the embedding randomness off the factor seed so spec →
+            // model is a pure function.
+            let mut rng = Rng::new(config.seed ^ 0x6b70_6361);
+            let t = KpcaTransformer::fit(factors, *dim, *iters, &mut rng)?;
+            Ok(Box::new(FittedKpca::new(t, ds.task, spec.normalization.clone())))
+        }
+    }
+}
+
+// ---- concrete Model implementations ----
+
+/// [`Model`] face of a fitted [`KrrModel`] (any engine).
+pub struct FittedKrr {
+    pub(crate) model: KrrModel,
+    schema: ModelSchema,
+}
+
+impl FittedKrr {
+    pub(crate) fn new(
+        model: KrrModel,
+        task: Task,
+        normalization: Option<Vec<(f64, f64)>>,
+    ) -> FittedKrr {
+        let schema = ModelSchema {
+            kind: ModelKind::of_engine(model.config().engine),
+            dim: model.dim(),
+            outputs: model.outputs(),
+            task,
+            normalization,
+        };
+        FittedKrr { model, schema }
+    }
+
+    /// The underlying KRR model (metrics, phase timings, engine access).
+    pub fn krr(&self) -> &KrrModel {
+        &self.model
+    }
+}
+
+impl Model for FittedKrr {
+    fn predict_batch(&self, q: &Mat) -> Mat {
+        self.model.predict(q)
+    }
+    fn schema(&self) -> &ModelSchema {
+        &self.schema
+    }
+    fn save(&self, path: &str) -> Result<()> {
+        persist::save_krr(self, path)
+    }
+    fn hierarchical_predictor(&self) -> Option<&HPredictor> {
+        self.model.hierarchical_predictor()
+    }
+}
+
+/// [`Model`] face of a fitted [`GpRegressor`]: the posterior mean served
+/// through a long-lived Algorithm-3 predictor (built once at fit/load).
+pub struct FittedGp {
+    pub(crate) gp: GpRegressor,
+    predictor: HPredictor,
+    schema: ModelSchema,
+}
+
+impl FittedGp {
+    pub(crate) fn new(
+        gp: GpRegressor,
+        task: Task,
+        normalization: Option<Vec<(f64, f64)>>,
+    ) -> FittedGp {
+        let (factors, _, _, _) = gp.parts();
+        let factors = factors.clone();
+        let alpha = gp.alpha_original();
+        let w = Mat::from_vec(alpha.len(), 1, alpha);
+        let predictor = HPredictor::new(factors.clone(), &w);
+        let schema = ModelSchema {
+            kind: ModelKind::Gp,
+            dim: factors.x.cols(),
+            outputs: 1,
+            task,
+            normalization,
+        };
+        FittedGp { gp, predictor, schema }
+    }
+
+    /// The underlying GP (posterior variance, log-likelihood).
+    pub fn gp(&self) -> &GpRegressor {
+        &self.gp
+    }
+}
+
+impl Model for FittedGp {
+    fn predict_batch(&self, q: &Mat) -> Mat {
+        self.predictor.predict_batch(q)
+    }
+    fn schema(&self) -> &ModelSchema {
+        &self.schema
+    }
+    fn save(&self, path: &str) -> Result<()> {
+        persist::save_gp(self, path)
+    }
+    fn hierarchical_predictor(&self) -> Option<&HPredictor> {
+        Some(&self.predictor)
+    }
+}
+
+/// [`Model`] face of a fitted [`KpcaTransformer`]: `predict_batch` is the
+/// out-of-sample embedding (one row per query, `dim` columns).
+pub struct FittedKpca {
+    pub(crate) transformer: KpcaTransformer,
+    schema: ModelSchema,
+}
+
+impl FittedKpca {
+    pub(crate) fn new(
+        transformer: KpcaTransformer,
+        task: Task,
+        normalization: Option<Vec<(f64, f64)>>,
+    ) -> FittedKpca {
+        let schema = ModelSchema {
+            kind: ModelKind::Kpca,
+            dim: transformer.factors().x.cols(),
+            outputs: transformer.dim(),
+            task,
+            normalization,
+        };
+        FittedKpca { transformer, schema }
+    }
+
+    /// The underlying transform (training embedding, factors).
+    pub fn transformer(&self) -> &KpcaTransformer {
+        &self.transformer
+    }
+}
+
+impl Model for FittedKpca {
+    fn predict_batch(&self, q: &Mat) -> Mat {
+        self.transformer.transform(q)
+    }
+    fn schema(&self) -> &ModelSchema {
+        &self.schema
+    }
+    fn save(&self, path: &str) -> Result<()> {
+        persist::save_kpca(self, path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{spec_by_name, synthetic};
+    use crate::kernels::Gaussian;
+
+    fn small() -> (Dataset, Dataset) {
+        let spec = spec_by_name("cadata").unwrap();
+        synthetic::generate(spec, 300, 60, 31)
+    }
+
+    #[test]
+    fn fit_dispatches_all_kinds() {
+        let (train, test) = small();
+        let cases: Vec<(ModelSpec, ModelKind, usize)> = vec![
+            (
+                ModelSpec::krr(TrainConfig::new(
+                    Gaussian::new(0.5),
+                    EngineSpec::Hierarchical { rank: 24 },
+                )),
+                ModelKind::KrrHierarchical,
+                1,
+            ),
+            (
+                ModelSpec::krr(TrainConfig::new(
+                    Gaussian::new(0.5),
+                    EngineSpec::Nystrom { rank: 24 },
+                )),
+                ModelKind::KrrNystrom,
+                1,
+            ),
+            (
+                ModelSpec::gp(HConfig::new(Gaussian::new(0.5), 16).with_seed(2), 0.05),
+                ModelKind::Gp,
+                1,
+            ),
+            (
+                ModelSpec::kpca(HConfig::new(Gaussian::new(0.5), 16).with_seed(3), 4),
+                ModelKind::Kpca,
+                4,
+            ),
+        ];
+        for (spec, kind, outputs) in cases {
+            let model = fit(&spec, &train).unwrap();
+            let schema = model.schema();
+            assert_eq!(schema.kind, kind);
+            assert_eq!(schema.dim, train.d());
+            assert_eq!(schema.outputs, outputs, "{}", kind.name());
+            let preds = model.predict_batch(&test.x);
+            assert_eq!(preds.shape(), (test.n(), outputs));
+            assert!(preds.as_slice().iter().all(|v| v.is_finite()), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn gp_and_hierarchical_expose_shardable_predictor() {
+        let (train, _) = small();
+        let hier = fit(
+            &ModelSpec::krr(TrainConfig::new(
+                Gaussian::new(0.5),
+                EngineSpec::Hierarchical { rank: 24 },
+            )),
+            &train,
+        )
+        .unwrap();
+        assert!(hier.hierarchical_predictor().is_some());
+        let gp = fit(
+            &ModelSpec::gp(HConfig::new(Gaussian::new(0.5), 16).with_seed(5), 0.05),
+            &train,
+        )
+        .unwrap();
+        assert!(gp.hierarchical_predictor().is_some());
+        let nys = fit(
+            &ModelSpec::krr(TrainConfig::new(
+                Gaussian::new(0.5),
+                EngineSpec::Nystrom { rank: 24 },
+            )),
+            &train,
+        )
+        .unwrap();
+        assert!(nys.hierarchical_predictor().is_none());
+    }
+
+    #[test]
+    fn normalize_applies_recorded_ranges() {
+        let (train, _) = small();
+        let d = train.d();
+        let ranges: Vec<(f64, f64)> = (0..d).map(|_| (0.0, 2.0)).collect();
+        let spec = ModelSpec::krr(TrainConfig::new(
+            Gaussian::new(0.5),
+            EngineSpec::Nystrom { rank: 16 },
+        ))
+        .with_normalization(ranges);
+        let model = fit(&spec, &train).unwrap();
+        let q = Mat::from_fn(2, d, |_, _| 1.0);
+        let norm = model.normalize(&q);
+        assert!(norm.as_slice().iter().all(|&v| (v - 0.5).abs() < 1e-15));
+        // GP predictor through the Predictor impl (Arc<dyn Model>).
+        let arc: Arc<dyn Model> = Arc::from(model);
+        use crate::coordinator::Predictor as _;
+        assert_eq!(arc.dim(), d);
+        let out = arc.predict_batch(&q);
+        assert_eq!(out.rows(), 2);
+    }
+}

@@ -1,0 +1,385 @@
+//! The versioned `HCKM` artifact format: self-describing persistence for
+//! every [`Model`] kind.
+//!
+//! Layout (little-endian, tagged stream like the `HCK1`/`HCKS` formats
+//! it generalizes):
+//!
+//! ```text
+//! "HCKM" | version u64 | schema (kind, dim, outputs, task, norm stats)
+//!        | kind-specific payload
+//! ```
+//!
+//! The header alone tells a loader what the artifact is — model kind,
+//! feature dimension, output columns, task type, and the feature
+//! normalization applied at training time — so [`load_any`] can dispatch
+//! and a server can validate/preprocess requests without side-channel
+//! configuration. Payloads reuse the factor/tree/matrix primitives of
+//! [`crate::hkernel::persist`]; everything derived (Cholesky factors,
+//! Algorithm-3 predictor state, KPCA aggregate bases) is recomputed
+//! deterministically on load, so a reloaded model predicts
+//! bit-identically to the saved one.
+//!
+//! Wrong magic, wrong version, truncated files, and structurally
+//! inconsistent payloads are all rejected with a data error — never a
+//! panic in the serving path.
+
+use super::{FittedGp, FittedKpca, FittedKrr, Model, ModelKind, ModelSchema};
+use crate::approx::{ExactKrr, FourierKrr, IndependentKrr, NystromKrr};
+use crate::data::Task;
+use crate::error::{Error, Result};
+use crate::gp::GpRegressor;
+use crate::hkernel::persist::{
+    read_f64s, read_factors, read_kind, read_mat, read_opt_mat, read_rule, read_tree, rf64,
+    ru64, wf64, write_f64s, write_factors, write_kind, write_mat, write_opt_mat, write_rule,
+    write_tree, wu64,
+};
+use crate::hkernel::HPredictor;
+use crate::learn::krr::{EngineSpec, FittedEngine, KrrModel, TrainConfig};
+use crate::learn::KpcaTransformer;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::sync::Arc;
+
+const MAGIC: &[u8; 4] = b"HCKM";
+
+/// Current `HCKM` format version. Bumped on breaking layout changes;
+/// [`load_any`] rejects any other version.
+pub const FORMAT_VERSION: u64 = 1;
+
+/// Load any `HCKM` artifact as a type-erased [`Model`] — the caller does
+/// not need to know what kind of model the file holds.
+pub fn load_any(path: &str) -> Result<Box<dyn Model>> {
+    let file = std::fs::File::open(path)?;
+    let mut inp = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    inp.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::data("not an HCKM model artifact (bad magic)"));
+    }
+    let version = ru64(&mut inp)?;
+    if version != FORMAT_VERSION {
+        return Err(Error::data(format!(
+            "unsupported HCKM version {version} (this build reads version {FORMAT_VERSION})"
+        )));
+    }
+    let schema = read_schema(&mut inp)?;
+    match schema.kind {
+        ModelKind::KrrHierarchical
+        | ModelKind::KrrNystrom
+        | ModelKind::KrrFourier
+        | ModelKind::KrrIndependent
+        | ModelKind::KrrExact => read_krr(&mut inp, schema),
+        ModelKind::Gp => read_gp(&mut inp, schema),
+        ModelKind::Kpca => read_kpca(&mut inp, schema),
+    }
+}
+
+// ---- schema ----
+
+fn kind_tag(kind: ModelKind) -> u64 {
+    match kind {
+        ModelKind::KrrHierarchical => 0,
+        ModelKind::KrrNystrom => 1,
+        ModelKind::KrrFourier => 2,
+        ModelKind::KrrIndependent => 3,
+        ModelKind::KrrExact => 4,
+        ModelKind::Gp => 5,
+        ModelKind::Kpca => 6,
+    }
+}
+
+fn kind_from_tag(tag: u64) -> Result<ModelKind> {
+    Ok(match tag {
+        0 => ModelKind::KrrHierarchical,
+        1 => ModelKind::KrrNystrom,
+        2 => ModelKind::KrrFourier,
+        3 => ModelKind::KrrIndependent,
+        4 => ModelKind::KrrExact,
+        5 => ModelKind::Gp,
+        6 => ModelKind::Kpca,
+        _ => return Err(Error::data("corrupt HCKM artifact (model kind tag)")),
+    })
+}
+
+fn write_schema(out: &mut impl Write, s: &ModelSchema) -> Result<()> {
+    wu64(out, kind_tag(s.kind))?;
+    wu64(out, s.dim as u64)?;
+    wu64(out, s.outputs as u64)?;
+    match s.task {
+        Task::Regression => wu64(out, 0)?,
+        Task::Binary => wu64(out, 1)?,
+        Task::Multiclass(k) => {
+            wu64(out, 2)?;
+            wu64(out, k as u64)?;
+        }
+    }
+    match &s.normalization {
+        None => wu64(out, 0)?,
+        Some(ranges) => {
+            wu64(out, 1)?;
+            wu64(out, ranges.len() as u64)?;
+            for &(lo, hi) in ranges {
+                wf64(out, lo)?;
+                wf64(out, hi)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_schema(inp: &mut impl Read) -> Result<ModelSchema> {
+    let kind = kind_from_tag(ru64(inp)?)?;
+    let dim = ru64(inp)? as usize;
+    let outputs = ru64(inp)? as usize;
+    if dim == 0 || dim > (1usize << 32) || outputs == 0 || outputs > (1usize << 32) {
+        return Err(Error::data("corrupt HCKM artifact (schema dims)"));
+    }
+    let task = match ru64(inp)? {
+        0 => Task::Regression,
+        1 => Task::Binary,
+        2 => Task::Multiclass(ru64(inp)? as usize),
+        _ => return Err(Error::data("corrupt HCKM artifact (task tag)")),
+    };
+    let normalization = match ru64(inp)? {
+        0 => None,
+        1 => {
+            let d = ru64(inp)? as usize;
+            if d != dim {
+                return Err(Error::data(
+                    "corrupt HCKM artifact (normalization dimension mismatch)",
+                ));
+            }
+            let mut ranges = Vec::with_capacity(d);
+            for _ in 0..d {
+                ranges.push((rf64(inp)?, rf64(inp)?));
+            }
+            Some(ranges)
+        }
+        _ => return Err(Error::data("corrupt HCKM artifact (normalization tag)")),
+    };
+    Ok(ModelSchema { kind, dim, outputs, task, normalization })
+}
+
+fn open_for_write(path: &str, schema: &ModelSchema) -> Result<BufWriter<std::fs::File>> {
+    let file = std::fs::File::create(path)?;
+    let mut out = BufWriter::new(file);
+    out.write_all(MAGIC)?;
+    wu64(&mut out, FORMAT_VERSION)?;
+    write_schema(&mut out, schema)?;
+    Ok(out)
+}
+
+// ---- train config (KRR payload prefix) ----
+
+fn write_train_config(out: &mut impl Write, cfg: &TrainConfig) -> Result<()> {
+    write_kind(out, cfg.kind)?;
+    wf64(out, cfg.lambda)?;
+    wf64(out, cfg.lambda_prime)?;
+    wu64(out, cfg.seed)?;
+    write_rule(out, cfg.rule)?;
+    match cfg.engine {
+        EngineSpec::Hierarchical { rank } => {
+            wu64(out, 0)?;
+            wu64(out, rank as u64)?;
+        }
+        EngineSpec::Nystrom { rank } => {
+            wu64(out, 1)?;
+            wu64(out, rank as u64)?;
+        }
+        EngineSpec::Fourier { rank } => {
+            wu64(out, 2)?;
+            wu64(out, rank as u64)?;
+        }
+        EngineSpec::Independent { n0 } => {
+            wu64(out, 3)?;
+            wu64(out, n0 as u64)?;
+        }
+        EngineSpec::Exact => wu64(out, 4)?,
+    }
+    Ok(())
+}
+
+fn read_train_config(inp: &mut impl Read) -> Result<TrainConfig> {
+    let kind = read_kind(inp)?;
+    let lambda = rf64(inp)?;
+    let lambda_prime = rf64(inp)?;
+    let seed = ru64(inp)?;
+    let rule = read_rule(inp)?;
+    let engine = match ru64(inp)? {
+        0 => EngineSpec::Hierarchical { rank: ru64(inp)? as usize },
+        1 => EngineSpec::Nystrom { rank: ru64(inp)? as usize },
+        2 => EngineSpec::Fourier { rank: ru64(inp)? as usize },
+        3 => EngineSpec::Independent { n0: ru64(inp)? as usize },
+        4 => EngineSpec::Exact,
+        _ => return Err(Error::data("corrupt HCKM artifact (engine tag)")),
+    };
+    Ok(TrainConfig { kind, lambda, engine, rule, seed, lambda_prime })
+}
+
+// ---- KRR ----
+
+pub(crate) fn save_krr(m: &FittedKrr, path: &str) -> Result<()> {
+    let mut out = open_for_write(path, m.schema())?;
+    let krr = &m.model;
+    write_train_config(&mut out, krr.config())?;
+    wu64(&mut out, krr.memory_words as u64)?;
+    match krr.engine() {
+        FittedEngine::Hierarchical { factors, w, .. } => {
+            write_factors(&mut out, factors)?;
+            write_mat(&mut out, w)?;
+        }
+        FittedEngine::Nystrom(e) => {
+            let (landmarks, w) = e.parts();
+            write_mat(&mut out, landmarks)?;
+            write_mat(&mut out, w)?;
+        }
+        FittedEngine::Fourier(e) => {
+            let (omega, b, w) = e.parts();
+            write_mat(&mut out, omega)?;
+            write_f64s(&mut out, b)?;
+            write_mat(&mut out, w)?;
+        }
+        FittedEngine::Independent(e) => {
+            let (tree, x, alpha) = e.parts();
+            write_tree(&mut out, tree)?;
+            write_mat(&mut out, x)?;
+            for a in alpha {
+                write_opt_mat(&mut out, a)?;
+            }
+        }
+        FittedEngine::Exact(e) => {
+            let (x, alpha) = e.parts();
+            write_mat(&mut out, x)?;
+            write_mat(&mut out, alpha)?;
+        }
+    }
+    out.flush()?;
+    Ok(())
+}
+
+fn read_krr(inp: &mut impl Read, schema: ModelSchema) -> Result<Box<dyn Model>> {
+    let bad = |what: &str| Err(Error::data(format!("corrupt HCKM artifact ({what})")));
+    let cfg = read_train_config(inp)?;
+    if ModelKind::of_engine(cfg.engine) != schema.kind {
+        return bad("engine does not match schema kind");
+    }
+    let memory_words = ru64(inp)? as usize;
+    let engine = match cfg.engine {
+        EngineSpec::Hierarchical { .. } => {
+            let f = read_factors(inp)?;
+            let w = read_mat(inp)?;
+            if f.x.cols() != schema.dim || w.rows() != f.n() || w.cols() != schema.outputs {
+                return bad("hierarchical payload shapes");
+            }
+            let factors = Arc::new(f);
+            let predictor = HPredictor::new(factors.clone(), &w);
+            FittedEngine::Hierarchical { factors, w, predictor }
+        }
+        EngineSpec::Nystrom { .. } => {
+            let landmarks = read_mat(inp)?;
+            let w = read_mat(inp)?;
+            if landmarks.cols() != schema.dim || w.cols() != schema.outputs {
+                return bad("nystrom payload shapes");
+            }
+            FittedEngine::Nystrom(NystromKrr::from_parts(cfg.kind, landmarks, w)?)
+        }
+        EngineSpec::Fourier { .. } => {
+            let omega = read_mat(inp)?;
+            let b = read_f64s(inp)?;
+            let w = read_mat(inp)?;
+            if omega.cols() != schema.dim || w.cols() != schema.outputs {
+                return bad("fourier payload shapes");
+            }
+            FittedEngine::Fourier(FourierKrr::from_parts(omega, b, w)?)
+        }
+        EngineSpec::Independent { .. } => {
+            let tree = read_tree(inp)?;
+            let x = read_mat(inp)?;
+            // The prediction path routes through this tree per query —
+            // structural corruption must fail here, like the
+            // hierarchical payload's validate_factors.
+            crate::hkernel::persist::validate_tree(&tree, x.rows(), x.cols())?;
+            let mut alpha = Vec::new();
+            for _ in 0..tree.nodes.len() {
+                alpha.push(read_opt_mat(inp)?);
+            }
+            if x.cols() != schema.dim
+                || alpha.iter().flatten().any(|a| a.cols() != schema.outputs)
+            {
+                return bad("independent payload shapes");
+            }
+            FittedEngine::Independent(IndependentKrr::from_parts(cfg.kind, tree, x, alpha)?)
+        }
+        EngineSpec::Exact => {
+            let x = read_mat(inp)?;
+            let alpha = read_mat(inp)?;
+            if x.cols() != schema.dim || alpha.cols() != schema.outputs {
+                return bad("exact payload shapes");
+            }
+            FittedEngine::Exact(ExactKrr::from_parts(cfg.kind, x, alpha)?)
+        }
+    };
+    let model =
+        KrrModel::from_engine(engine, cfg, schema.dim, schema.outputs, memory_words);
+    Ok(Box::new(FittedKrr::new(model, schema.task, schema.normalization)))
+}
+
+// ---- GP ----
+
+pub(crate) fn save_gp(m: &FittedGp, path: &str) -> Result<()> {
+    let mut out = open_for_write(path, m.schema())?;
+    let (factors, lambda, alpha_tree, log_likelihood) = m.gp.parts();
+    wf64(&mut out, lambda)?;
+    wf64(&mut out, log_likelihood)?;
+    write_factors(&mut out, factors)?;
+    write_f64s(&mut out, alpha_tree)?;
+    out.flush()?;
+    Ok(())
+}
+
+fn read_gp(inp: &mut impl Read, schema: ModelSchema) -> Result<Box<dyn Model>> {
+    let lambda = rf64(inp)?;
+    let log_likelihood = rf64(inp)?;
+    let f = read_factors(inp)?;
+    if f.x.cols() != schema.dim {
+        return Err(Error::data("corrupt HCKM artifact (gp payload shapes)"));
+    }
+    let alpha_tree = read_f64s(inp)?;
+    let gp = GpRegressor::from_parts(Arc::new(f), lambda, alpha_tree, log_likelihood)?;
+    Ok(Box::new(FittedGp::new(gp, schema.task, schema.normalization)))
+}
+
+// ---- KPCA ----
+
+pub(crate) fn save_kpca(m: &FittedKpca, path: &str) -> Result<()> {
+    let mut out = open_for_write(path, m.schema())?;
+    let (factors, proj, row_means, grand_mean, train_embedding) = m.transformer.parts();
+    wf64(&mut out, grand_mean)?;
+    write_factors(&mut out, factors)?;
+    write_mat(&mut out, proj)?;
+    write_f64s(&mut out, row_means)?;
+    write_mat(&mut out, train_embedding)?;
+    out.flush()?;
+    Ok(())
+}
+
+fn read_kpca(inp: &mut impl Read, schema: ModelSchema) -> Result<Box<dyn Model>> {
+    let grand_mean = rf64(inp)?;
+    let f = read_factors(inp)?;
+    if f.x.cols() != schema.dim {
+        return Err(Error::data("corrupt HCKM artifact (kpca payload shapes)"));
+    }
+    let proj = read_mat(inp)?;
+    let row_means = read_f64s(inp)?;
+    let train_embedding = read_mat(inp)?;
+    if proj.cols() != schema.outputs {
+        return Err(Error::data("corrupt HCKM artifact (kpca payload shapes)"));
+    }
+    let t = KpcaTransformer::from_parts(
+        Arc::new(f),
+        proj,
+        row_means,
+        grand_mean,
+        train_embedding,
+    )?;
+    Ok(Box::new(FittedKpca::new(t, schema.task, schema.normalization)))
+}

@@ -38,9 +38,175 @@ pub use router::ShardRouter;
 pub use split::{boundary_nodes, depth_for_shards, split_predictor};
 pub use worker::{ShardWorker, ShardedPredictor};
 
+use crate::error::{Error, Result};
+use crate::hkernel::HPredictor;
 use crate::kernels::{kernel_cross, KernelKind};
 use crate::linalg::{gemm, matmul, Cholesky, Mat, Trans};
 use crate::partition::{follow_split, Node};
+
+/// Cut a fitted predictor at `depth` and write a **self-contained shard
+/// directory**: one `HCKR` router file (`router.hckr`), one `HCKS` file
+/// per shard (`shard0000.hcks`, …), and — when the model carries
+/// feature-normalization stats — a `norm.hckn` file so the sharded
+/// serving path preprocesses raw queries identically. Another process
+/// can serve the directory with [`load_shard_dir`] — no model, no
+/// retraining (`hck shard --model m.hckm --out dir/` →
+/// `hck serve --shard-dir dir/`). Returns the number of shards written.
+pub fn save_shard_dir(
+    pred: &HPredictor,
+    depth: usize,
+    dir: &str,
+    normalization: Option<&[(f64, f64)]>,
+) -> Result<usize> {
+    std::fs::create_dir_all(dir)?;
+    let dir = std::path::Path::new(dir);
+    // A re-shard over an existing directory must not leave files from a
+    // previous (different) cut behind — stale shardNNNN.hcks beyond the
+    // new count (or a stale norm.hckn) would make the directory
+    // unservable or silently wrong.
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        let stale = p.extension().map(|x| x == "hcks").unwrap_or(false)
+            || p.file_name().map(|f| f == "norm.hckn").unwrap_or(false);
+        if stale {
+            std::fs::remove_file(&p)?;
+        }
+    }
+    let tree = &pred.factors().tree;
+    let boundary = boundary_nodes(tree, depth);
+    let router = ShardRouter::new(tree, &boundary);
+    crate::hkernel::save_router(&router, &dir.join("router.hckr").to_string_lossy())?;
+    if let Some(ranges) = normalization {
+        save_norm_file(&dir.join("norm.hckn"), ranges)?;
+    }
+    let shards = split_predictor(pred, depth);
+    for s in &shards {
+        let path = dir.join(format!("shard{:04}.hcks", s.id));
+        crate::hkernel::save_shard(s, &path.to_string_lossy())?;
+    }
+    Ok(shards.len())
+}
+
+/// Load a shard directory written by [`save_shard_dir`] into a ready
+/// [`ShardedPredictor`] (router + one long-lived worker per shard, with
+/// the recorded feature normalization re-attached when present).
+pub fn load_shard_dir(dir: &str) -> Result<ShardedPredictor> {
+    let dirp = std::path::Path::new(dir);
+    let router = crate::hkernel::load_router(&dirp.join("router.hckr").to_string_lossy())?;
+    let mut shard_paths: Vec<std::path::PathBuf> = std::fs::read_dir(dirp)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "hcks").unwrap_or(false))
+        .collect();
+    shard_paths.sort();
+    let mut shards = Vec::with_capacity(shard_paths.len());
+    for p in &shard_paths {
+        shards.push(crate::hkernel::load_shard(&p.to_string_lossy())?);
+    }
+    shards.sort_by_key(|s| s.id);
+    // Validate here with errors (a bad directory must not assert inside
+    // `from_parts` and take the server down with a panic).
+    if shards.is_empty() {
+        return Err(Error::data(format!("shard directory '{dir}' holds no .hcks files")));
+    }
+    if shards.len() != router.shards() {
+        return Err(Error::data(format!(
+            "shard directory '{dir}' holds {} shards but the router expects {}",
+            shards.len(),
+            router.shards()
+        )));
+    }
+    // Shards must tile [0, n) exactly: start at row 0 with no gaps
+    // between consecutive shards (a shard mixed in from a different cut
+    // of the same model would otherwise serve silently wrong rows).
+    let mut covered = 0usize;
+    for (i, s) in shards.iter().enumerate() {
+        if s.id != i {
+            return Err(Error::data(format!(
+                "shard directory '{dir}': missing or duplicate shard id {i}"
+            )));
+        }
+        let (lo, hi) = s.row_range();
+        if lo != covered {
+            return Err(Error::data(format!(
+                "shard directory '{dir}': shard {i} covers rows [{lo}, {hi}) \
+                 but coverage so far ends at {covered}"
+            )));
+        }
+        if s.dim != shards[0].dim || s.outputs != shards[0].outputs {
+            return Err(Error::data(format!(
+                "shard directory '{dir}': shard {i} disagrees on dim/outputs"
+            )));
+        }
+        covered = hi;
+    }
+    let (dim, outputs) = (shards[0].dim, shards[0].outputs);
+    // The router file does not record the feature dimension; re-check
+    // its splits against the shards' dim so a mismatched router fails
+    // here instead of panicking mid-route.
+    {
+        let (nodes, shard_of, _) = router.parts();
+        for (nd, of) in nodes.iter().zip(shard_of) {
+            if of.is_none() {
+                let split = nd.split.as_ref().expect("validated by load_router");
+                crate::hkernel::persist::validate_split(split, nd.children.len(), Some(dim))?;
+            }
+        }
+    }
+    let norm_path = dirp.join("norm.hckn");
+    let normalization = if norm_path.exists() {
+        let ranges = load_norm_file(&norm_path)?;
+        if ranges.len() != dim {
+            return Err(Error::data(format!(
+                "shard directory '{dir}': norm.hckn has {} columns but the shards expect {dim}",
+                ranges.len()
+            )));
+        }
+        Some(ranges)
+    } else {
+        None
+    };
+    Ok(ShardedPredictor::from_parts(router, shards, dim, outputs)
+        .with_normalization(normalization))
+}
+
+const NORM_MAGIC: &[u8; 4] = b"HCKN";
+
+/// Write the per-column (min, max) normalization ranges of a shard
+/// directory (`norm.hckn`), over the shared persist primitives.
+fn save_norm_file(path: &std::path::Path, ranges: &[(f64, f64)]) -> Result<()> {
+    use crate::hkernel::persist::{wf64, wu64};
+    use std::io::Write as _;
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    out.write_all(NORM_MAGIC)?;
+    wu64(&mut out, ranges.len() as u64)?;
+    for &(lo, hi) in ranges {
+        wf64(&mut out, lo)?;
+        wf64(&mut out, hi)?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Read `norm.hckn` written by [`save_norm_file`].
+fn load_norm_file(path: &std::path::Path) -> Result<Vec<(f64, f64)>> {
+    use crate::hkernel::persist::{rf64, ru64};
+    use std::io::Read as _;
+    let mut inp = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    inp.read_exact(&mut magic)?;
+    if &magic != NORM_MAGIC {
+        return Err(Error::data("not an HCKN normalization file"));
+    }
+    let d = ru64(&mut inp)? as usize;
+    if d > (1usize << 24) {
+        return Err(Error::data("corrupt normalization file (column count)"));
+    }
+    let mut ranges = Vec::with_capacity(d);
+    for _ in 0..d {
+        ranges.push((rf64(&mut inp)?, rf64(&mut inp)?));
+    }
+    Ok(ranges)
+}
 
 /// Landmark state of the shard root's *global parent*, replicated into
 /// the shard: the `d` recurrence of Algorithm 3 starts at the routed

@@ -63,6 +63,22 @@ impl ShardRouter {
         self.n_shards
     }
 
+    /// Internal view for persistence ([`crate::hkernel::persist::save_router`]).
+    pub(crate) fn parts(&self) -> (&[Node], &[Option<usize>], usize) {
+        (&self.nodes, &self.shard_of, self.n_shards)
+    }
+
+    /// Reassemble from persisted parts. The caller
+    /// ([`crate::hkernel::persist::load_router`]) validates the routing
+    /// invariants before handing the router out.
+    pub(crate) fn from_parts(
+        nodes: Vec<Node>,
+        shard_of: Vec<Option<usize>>,
+        n_shards: usize,
+    ) -> ShardRouter {
+        ShardRouter { nodes, shard_of, n_shards }
+    }
+
     /// Route a query to its shard index.
     pub fn route(&self, x: &[f64]) -> usize {
         let mut id = 0usize;

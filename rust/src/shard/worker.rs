@@ -138,6 +138,11 @@ pub struct ShardedPredictor {
     workers: Vec<ShardWorker>,
     dim: usize,
     outputs: usize,
+    /// Per-column (min, max) feature normalization applied to every
+    /// incoming batch before routing, when the model that produced the
+    /// shards was trained on normalized features (see
+    /// [`crate::model::ModelSchema::normalization`]). `None` = identity.
+    normalization: Option<Vec<(f64, f64)>>,
 }
 
 impl ShardedPredictor {
@@ -175,17 +180,56 @@ impl ShardedPredictor {
             covered = Some(hi);
         }
         let workers = shards.into_iter().map(ShardWorker::spawn).collect();
-        ShardedPredictor { router, workers, dim, outputs }
+        ShardedPredictor { router, workers, dim, outputs, normalization: None }
     }
 
     /// Number of shards (== workers).
     pub fn shards(&self) -> usize {
         self.workers.len()
     }
+
+    /// Record feature-normalization ranges to apply to every batch
+    /// before routing (`None` clears them). The shard-directory loader
+    /// and [`ShardedPredictor::from_model`] use this to carry the
+    /// artifact's preprocessing stats onto the sharded serving path.
+    pub fn with_normalization(mut self, ranges: Option<Vec<(f64, f64)>>) -> Self {
+        self.normalization = ranges;
+        self
+    }
+
+    /// Split any hierarchical-backed [`crate::model::Model`] (e.g. one
+    /// loaded from an `HCKM` artifact) at `depth`, carrying the model's
+    /// recorded feature normalization onto the sharded path. Errors for
+    /// engines without a partition tree instead of panicking.
+    pub fn from_model(
+        model: &dyn crate::model::Model,
+        depth: usize,
+    ) -> crate::error::Result<ShardedPredictor> {
+        let pred = model.hierarchical_predictor().ok_or_else(|| {
+            crate::error::Error::config(format!(
+                "sharding requires a hierarchical-factor model; '{}' has none",
+                model.schema().kind.name()
+            ))
+        })?;
+        Ok(ShardedPredictor::new(pred, depth)
+            .with_normalization(model.schema().normalization.clone()))
+    }
 }
 
 impl Predictor for ShardedPredictor {
     fn predict_batch(&self, q: &Mat) -> Mat {
+        // Apply the recorded training normalization (raw features on the
+        // wire, exactly like the unsharded Arc<dyn Model> path).
+        let normalized;
+        let q = match &self.normalization {
+            Some(ranges) => {
+                let mut m = q.clone();
+                crate::data::preprocess::apply_normalization(&mut m, ranges);
+                normalized = m;
+                &normalized
+            }
+            None => q,
+        };
         // Scatter: request indices per destination shard.
         let mut per: Vec<Vec<usize>> = (0..self.workers.len()).map(|_| Vec::new()).collect();
         for i in 0..q.rows() {

@@ -1,34 +1,47 @@
-//! Scoped-thread parallel executor for the structured-matrix hot paths.
+//! Persistent worker-pool executor for the structured-matrix hot paths.
 //!
 //! The offline crate set has no `rayon`, so this module provides the
 //! minimal primitives the hierarchical kernel needs: run a bag of
-//! independent work items across a fixed number of scoped threads
+//! independent work items across a fixed number of worker threads
 //! ([`run_parallel`]) and an order-preserving parallel map
 //! ([`parallel_map`]). Both degenerate to a plain sequential loop when
 //! `threads <= 1` or the item count is tiny, so the single-threaded path
 //! has zero overhead and is trivially deterministic.
 //!
+//! **Worker pool.** Workers are long-lived threads fed through
+//! per-worker channels, spawned lazily on first use and reused for the
+//! lifetime of the process (ROADMAP "Persistent worker pool") — a call
+//! no longer pays thread spawn/join on every matvec, which matters for
+//! the serving path at small batch sizes. `run_parallel` still blocks
+//! until every dispatched item has completed (even when an item panics),
+//! so borrowed captures behave exactly as they did under scoped threads.
+//! Calls made *from inside* a pool worker run sequentially instead of
+//! re-entering the pool, which makes nested use safe by construction.
+//!
 //! **Determinism policy.** Callers in `hkernel` are written so that every
 //! work item computes its outputs independently (no shared accumulator)
 //! and results are *applied* in a fixed sequential order afterwards.
-//! Floating-point results are therefore bitwise identical for every
-//! thread count, which is what lets the test suite assert
-//! `T threads == 1 thread` exactly (see `rust/tests/integration.rs`).
+//! Items are dealt to workers round-robin independent of scheduling, so
+//! floating-point results are bitwise identical for every thread count,
+//! which is what lets the test suite assert `T threads == 1 thread`
+//! exactly (see `rust/tests/integration.rs`).
 //!
 //! The global default thread count comes from the `HCK_THREADS`
 //! environment variable (clamped to >= 1), falling back to
 //! `std::thread::available_parallelism()` capped at 16 — the structured
 //! algebra is memory-bandwidth bound well before that.
 
-use std::sync::OnceLock;
+use std::cell::Cell;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Mutex, OnceLock};
 
 /// Hard cap on the default worker count; beyond this the O(nr) kernels
-/// are bandwidth-bound and extra threads only add spawn cost.
+/// are bandwidth-bound and extra threads only add dispatch cost.
 const MAX_DEFAULT_THREADS: usize = 16;
 
 /// Problem-size floor for the adaptive entry points: below this many
-/// training points the scoped-thread spawns cost more than the block
-/// arithmetic they parallelize, so [`auto_threads`] stays serial.
+/// training points even pool dispatch costs more than the block
+/// arithmetic it parallelizes, so [`auto_threads`] stays serial.
 pub const AUTO_MIN_N: usize = 4096;
 
 /// The thread count the hierarchical hot paths actually use for a
@@ -60,17 +73,84 @@ pub fn default_threads() -> usize {
     })
 }
 
-/// Run `f` over every item on up to `threads` scoped threads.
+/// A unit of pool work. Jobs are erased to `'static`; [`run_parallel`]
+/// guarantees the underlying borrows outlive execution by blocking on a
+/// completion channel before returning.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Erase a borrowed job's lifetime so it can travel through the
+/// process-wide pool channels.
+///
+/// # Safety
+/// The caller must not return (or otherwise invalidate the job's
+/// borrows) until the job has finished executing. [`run_parallel`]
+/// enforces this with a completion channel it drains before returning on
+/// every path, including unwinding ones.
+unsafe fn erase_job<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(
+        job,
+    )
+}
+
+/// The process-wide pool: one channel per worker, grown on demand.
+/// Workers are indexed, and [`run_parallel`] deals bin `k` to worker
+/// `k`, so a given (threads, item-count) shape always lands on the same
+/// threads — scheduling never reorders the work assignment.
+struct Pool {
+    senders: Mutex<Vec<Sender<Job>>>,
+}
+
+thread_local! {
+    /// Set once inside every pool worker; used to force nested
+    /// `run_parallel` calls onto the sequential path (re-entering the
+    /// pool from a worker could deadlock on the worker's own queue).
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool { senders: Mutex::new(Vec::new()) })
+}
+
+impl Pool {
+    /// Hand `job` to worker `idx`, spawning workers up to that index on
+    /// first use. Workers never exit: their receiving channel is owned by
+    /// the global pool and lives for the process.
+    fn submit(&self, idx: usize, job: Job) {
+        let mut senders = self.senders.lock().unwrap();
+        while senders.len() <= idx {
+            let id = senders.len();
+            let (tx, rx) = channel::<Job>();
+            std::thread::Builder::new()
+                .name(format!("hck-pool-{id}"))
+                .spawn(move || {
+                    IS_POOL_WORKER.with(|w| w.set(true));
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn hck pool worker");
+            senders.push(tx);
+        }
+        senders[idx].send(job).expect("hck pool worker died");
+    }
+}
+
+/// Run `f` over every item on up to `threads` threads of the persistent
+/// worker pool.
 ///
 /// Items are dealt round-robin so neighbouring (similar-cost) items
-/// spread across workers. With `threads <= 1` (or fewer than two items)
+/// spread across workers; bin 0 runs inline on the calling thread, bins
+/// 1.. go to pool workers. With `threads <= 1` (or fewer than two items)
 /// this is exactly a sequential `for` loop — the deterministic fallback.
 ///
 /// `f` must be safe to call concurrently (`Sync`); each item is consumed
-/// exactly once.
+/// exactly once. The call returns only after every item has run, so `f`
+/// may freely borrow from the caller's stack. A panic in any item is
+/// re-raised here after the remaining items finish.
 pub fn run_parallel<T: Send>(threads: usize, items: Vec<T>, f: impl Fn(T) + Sync) {
     let threads = threads.max(1).min(items.len());
-    if threads <= 1 {
+    if threads <= 1 || IS_POOL_WORKER.with(|w| w.get()) {
         for item in items {
             f(item);
         }
@@ -80,22 +160,76 @@ pub fn run_parallel<T: Send>(threads: usize, items: Vec<T>, f: impl Fn(T) + Sync
     for (k, item) in items.into_iter().enumerate() {
         bins[k % threads].push(item);
     }
+    let mut bins = bins.into_iter();
+    let own = bins.next().unwrap_or_default();
+
     let fref = &f;
-    std::thread::scope(|s| {
-        // Run the first bin on the current thread; spawn the rest.
-        let mut bins = bins.into_iter();
-        let own = bins.next().unwrap_or_default();
-        for bin in bins {
-            s.spawn(move || {
-                for item in bin {
-                    fref(item);
-                }
-            });
-        }
+    // First pool-worker panic payload, re-raised after the drain so the
+    // caller sees the original assertion/message, as under scoped
+    // threads.
+    let worker_panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>> =
+        Mutex::new(None);
+    let (done_tx, done_rx) = channel::<()>();
+    // Dispatch under catch_unwind so the completion wait below runs on
+    // every path: an undispatched job never runs (it is dropped inside
+    // the failed submit before being counted), so the count of
+    // successfully dispatched jobs is exactly the number of completion
+    // signals to wait for.
+    let mut dispatched = 0usize;
+    let dispatch_result = {
+        let dispatched = &mut dispatched;
+        let worker_panic = &worker_panic;
+        let done_tx = &done_tx;
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            for (k, bin) in bins.enumerate() {
+                let tx = done_tx.clone();
+                // SAFETY: the job borrows `f` and `worker_panic` from
+                // this stack frame. run_parallel blocks on `done_rx`
+                // below until every dispatched job has signalled
+                // completion — on panicking paths too (unwinds are
+                // caught and re-raised only after the wait) — so the
+                // borrows strictly outlive every execution.
+                let job = unsafe {
+                    erase_job(Box::new(move || {
+                        let res =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                for item in bin {
+                                    fref(item);
+                                }
+                            }));
+                        if let Err(payload) = res {
+                            let mut slot = worker_panic.lock().unwrap();
+                            slot.get_or_insert(payload);
+                        }
+                        // Always signal, panic or not — the caller's
+                        // completion wait keeps the captures alive.
+                        let _ = tx.send(());
+                    }))
+                };
+                pool().submit(k, job);
+                *dispatched += 1;
+            }
+        }))
+    };
+
+    // Run bin 0 inline; contain a panic until the pool workers drain.
+    let own_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         for item in own {
             fref(item);
         }
-    });
+    }));
+    for _ in 0..dispatched {
+        let _ = done_rx.recv();
+    }
+    if let Err(p) = dispatch_result {
+        std::panic::resume_unwind(p);
+    }
+    if let Err(p) = own_result {
+        std::panic::resume_unwind(p);
+    }
+    if let Some(p) = worker_panic.lock().unwrap().take() {
+        std::panic::resume_unwind(p);
+    }
 }
 
 /// Order-preserving parallel map: `out[i] = f(&inputs[i])`.
@@ -194,6 +328,67 @@ mod tests {
             let par = parallel_map(threads, &inputs, f);
             assert_eq!(seq, par, "threads={threads}");
         }
+    }
+
+    /// The pool is persistent: a second identical call runs on exactly
+    /// the same worker threads (bin k always lands on worker k), with no
+    /// fresh spawns in between.
+    #[test]
+    fn pool_threads_are_reused_across_calls() {
+        use std::collections::BTreeSet;
+        use std::sync::Mutex;
+        let observe = || {
+            let ids: Mutex<BTreeSet<String>> = Mutex::new(BTreeSet::new());
+            let items: Vec<usize> = (0..12).collect();
+            run_parallel(3, items, |_| {
+                let name = std::thread::current()
+                    .name()
+                    .unwrap_or("unnamed")
+                    .to_string();
+                ids.lock().unwrap().insert(name);
+                // Give every bin a chance to land on its own thread.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            });
+            ids.into_inner().unwrap()
+        };
+        let first = observe();
+        let second = observe();
+        assert_eq!(first, second, "same bins must reuse the same pool workers");
+        assert!(
+            first.iter().any(|n| n.starts_with("hck-pool-")),
+            "expected pool workers to participate: {first:?}"
+        );
+    }
+
+    /// Nested calls from inside a pool worker degrade to sequential
+    /// instead of deadlocking on the worker's own queue.
+    #[test]
+    fn nested_run_parallel_completes() {
+        let counter = AtomicUsize::new(0);
+        let outer: Vec<usize> = (0..8).collect();
+        run_parallel(4, outer, |_| {
+            let inner: Vec<usize> = (0..8).collect();
+            run_parallel(4, inner, |_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    /// The ORIGINAL payload must surface (not a generic wrapper), so
+    /// assertion messages from parallel work items stay diagnosable.
+    #[test]
+    #[should_panic(expected = "boom at item 5")]
+    fn worker_panic_propagates_with_payload() {
+        let items: Vec<usize> = (0..16).collect();
+        run_parallel(4, items, |i| {
+            // Panic only off the inline bin (bin 0 holds 0, 4, 8, 12) so
+            // the propagation path under test is the pool's, not the
+            // caller's own resume_unwind; item 5 sits in pool bin 1.
+            if i == 5 {
+                panic!("boom at item {i}");
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! ISSUE 3 acceptance: every model kind round-trips through the `HCKM`
+//! artifact format via `load_any` with identical predictions; corrupt
+//! artifacts are rejected; and sharded-from-disk serving matches
+//! in-process predictions at every cut depth.
+
+use hck::coordinator::Predictor;
+use hck::data::{spec_by_name, synthetic, Dataset};
+use hck::hkernel::HConfig;
+use hck::kernels::Gaussian;
+use hck::learn::{EngineSpec, TrainConfig};
+use hck::linalg::Mat;
+use hck::model::{fit, load_any, Model, ModelKind, ModelSpec};
+use hck::util::rng::Rng;
+
+fn tmppath(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("hck_model_artifact_{tag}_{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn regression_data() -> (Dataset, Dataset) {
+    let spec = spec_by_name("cadata").unwrap();
+    synthetic::generate(spec, 400, 80, 17)
+}
+
+fn assert_close(got: &Mat, want: &Mat, tol: f64, what: &str) {
+    assert_eq!(got.shape(), want.shape(), "{what}: shape");
+    for i in 0..want.rows() {
+        for j in 0..want.cols() {
+            assert!(
+                (got[(i, j)] - want[(i, j)]).abs() <= tol * (1.0 + want[(i, j)].abs()),
+                "{what} ({i},{j}): {} vs {}",
+                got[(i, j)],
+                want[(i, j)]
+            );
+        }
+    }
+}
+
+/// Every engine/model kind saves and reloads through `load_any` with
+/// identical predictions (≤ 1e-12 — the payloads store the fitted state
+/// verbatim and derived state is recomputed deterministically).
+#[test]
+fn every_model_kind_roundtrips_via_load_any() {
+    let (train, test) = regression_data();
+    let hcfg = |seed: u64| HConfig::new(Gaussian::new(0.5), 24).with_seed(seed);
+    let specs: Vec<(&str, ModelSpec, ModelKind)> = vec![
+        (
+            "hier",
+            ModelSpec::krr(
+                TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 32 })
+                    .with_seed(1),
+            ),
+            ModelKind::KrrHierarchical,
+        ),
+        (
+            "nystrom",
+            ModelSpec::krr(
+                TrainConfig::new(Gaussian::new(0.5), EngineSpec::Nystrom { rank: 32 })
+                    .with_seed(2),
+            ),
+            ModelKind::KrrNystrom,
+        ),
+        (
+            "fourier",
+            ModelSpec::krr(
+                TrainConfig::new(Gaussian::new(0.5), EngineSpec::Fourier { rank: 32 })
+                    .with_seed(3),
+            ),
+            ModelKind::KrrFourier,
+        ),
+        (
+            "independent",
+            ModelSpec::krr(
+                TrainConfig::new(Gaussian::new(0.5), EngineSpec::Independent { n0: 32 })
+                    .with_seed(4),
+            ),
+            ModelKind::KrrIndependent,
+        ),
+        (
+            "exact",
+            ModelSpec::krr(
+                TrainConfig::new(Gaussian::new(0.5), EngineSpec::Exact).with_seed(5),
+            ),
+            ModelKind::KrrExact,
+        ),
+        ("gp", ModelSpec::gp(hcfg(6), 0.05), ModelKind::Gp),
+        ("kpca", ModelSpec::kpca(hcfg(7), 4), ModelKind::Kpca),
+    ];
+    for (tag, spec, kind) in specs {
+        let model: Box<dyn Model> = fit(&spec, &train).unwrap();
+        let want = model.predict_batch(&test.x);
+        let path = tmppath(tag);
+        model.save(&path).unwrap();
+        let loaded = load_any(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // The schema survives the trip.
+        assert_eq!(loaded.schema().kind, kind, "{tag}");
+        assert_eq!(loaded.schema().dim, train.d(), "{tag}");
+        assert_eq!(loaded.schema().outputs, model.outputs(), "{tag}");
+        assert_eq!(loaded.schema().task, train.task, "{tag}");
+        // And so do the predictions.
+        let got = loaded.predict_batch(&test.x);
+        assert_close(&got, &want, 1e-12, tag);
+    }
+}
+
+/// Multi-output (one-vs-all multiclass) weights round-trip too.
+#[test]
+fn multiclass_artifact_roundtrips() {
+    let spec = spec_by_name("acoustic").unwrap();
+    let (train, test) = synthetic::generate(spec, 300, 60, 23);
+    let mspec = ModelSpec::krr(
+        TrainConfig::new(Gaussian::new(0.6), EngineSpec::Hierarchical { rank: 24 })
+            .with_seed(9)
+            .with_lambda(0.05),
+    );
+    let model = fit(&mspec, &train).unwrap();
+    assert_eq!(model.outputs(), train.task.n_outputs());
+    let want = model.predict_batch(&test.x);
+    let path = tmppath("multiclass");
+    model.save(&path).unwrap();
+    let loaded = load_any(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.schema().task, train.task);
+    assert_close(&loaded.predict_batch(&test.x), &want, 1e-12, "multiclass");
+}
+
+/// Preprocessing stats recorded in the spec ride through the artifact
+/// and keep applying to raw queries.
+#[test]
+fn normalization_stats_ride_through_artifact() {
+    let (train, _) = regression_data();
+    let d = train.d();
+    let ranges: Vec<(f64, f64)> = (0..d).map(|j| (0.0, 2.0 + j as f64)).collect();
+    let mspec = ModelSpec::krr(
+        TrainConfig::new(Gaussian::new(0.5), EngineSpec::Nystrom { rank: 16 }).with_seed(3),
+    )
+    .with_normalization(ranges.clone());
+    let model = fit(&mspec, &train).unwrap();
+    let path = tmppath("norm");
+    model.save(&path).unwrap();
+    let loaded = load_any(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.schema().normalization.as_ref(), Some(&ranges));
+    let raw = Mat::from_fn(3, d, |_, j| 1.0 + j as f64);
+    assert_eq!(loaded.normalize(&raw), model.normalize(&raw));
+}
+
+/// Both serving paths preprocess raw queries with the artifact's
+/// recorded normalization: the batcher-facing `Arc<dyn Model>` predictor
+/// and the sharded-from-disk path must answer a RAW query exactly like
+/// `Model::predict_batch` on explicitly normalized features.
+#[test]
+fn serving_paths_apply_recorded_normalization() {
+    use std::sync::Arc;
+    let (train, _) = regression_data();
+    let d = train.d();
+    let ranges: Vec<(f64, f64)> = (0..d).map(|j| (-1.0, 3.0 + j as f64)).collect();
+    let mspec = ModelSpec::krr(
+        TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 16 })
+            .with_seed(7),
+    )
+    .with_normalization(ranges.clone());
+    let model = fit(&mspec, &train).unwrap();
+    let mut rng = Rng::new(41);
+    let raw = Mat::from_fn(20, d, |_, _| rng.uniform(-1.0, 4.0));
+    let want = model.predict_batch(&model.normalize(&raw));
+
+    // Unsharded serving path (what PredictionService::start_model runs).
+    let arc: Arc<dyn Model> = Arc::from(model);
+    let got = Predictor::predict_batch(&arc, &raw);
+    assert_close(&got, &want, 1e-12, "arc predictor");
+
+    // Sharded-from-disk serving path (norm.hckn rides with the shards).
+    let pred = arc.hierarchical_predictor().unwrap();
+    let dir = tmppath("normsharddir");
+    hck::shard::save_shard_dir(pred, 1, &dir, Some(&ranges)).unwrap();
+    let sharded = hck::shard::load_shard_dir(&dir).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let got = sharded.predict_batch(&raw);
+    assert_close(&got, &want, 1e-10, "sharded with norm");
+}
+
+/// Garbage, wrong-magic, truncated, and future-version files are all
+/// rejected with an error — never a panic, never a silently wrong model.
+#[test]
+fn rejects_garbage_wrong_magic_truncation_and_version_mismatch() {
+    // A valid artifact to corrupt.
+    let (train, _) = regression_data();
+    let mspec = ModelSpec::krr(
+        TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 16 })
+            .with_seed(2),
+    );
+    let model = fit(&mspec, &train).unwrap();
+    let path = tmppath("victim");
+    model.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // Garbage / not an artifact at all.
+    let p = tmppath("garbage");
+    std::fs::write(&p, b"definitely not a model").unwrap();
+    assert!(load_any(&p).is_err());
+    // Wrong magic (another format's file must not parse as HCKM).
+    let mut wrong = bytes.clone();
+    wrong[..4].copy_from_slice(b"HCK1");
+    std::fs::write(&p, &wrong).unwrap();
+    assert!(load_any(&p).is_err());
+    // Truncated at half.
+    std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(load_any(&p).is_err());
+    // Version bump (bytes 4..12 are the little-endian format version).
+    let mut future = bytes.clone();
+    future[4] = future[4].wrapping_add(1);
+    std::fs::write(&p, &future).unwrap();
+    let err = load_any(&p).unwrap_err().to_string();
+    assert!(err.contains("version"), "want a version error, got: {err}");
+    std::fs::remove_file(&p).ok();
+
+    // The original still loads after all that.
+    assert!(load_any(&path).is_ok());
+    std::fs::remove_file(&path).ok();
+}
+
+/// ISSUE 3 acceptance: shards saved to disk and served from a shard
+/// directory match the in-process model to ≤ 1e-10 at **every** cut
+/// depth, and GP models (hierarchical factors underneath) shard too.
+#[test]
+fn sharded_from_disk_matches_in_process_at_every_depth() {
+    let (train, test) = regression_data();
+    let mspec = ModelSpec::krr(
+        TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 12 })
+            .with_seed(11),
+    );
+    let model = fit(&mspec, &train).unwrap();
+    let want = model.predict_batch(&test.x);
+    let pred = model.hierarchical_predictor().expect("hierarchical model");
+    let tree_depth = pred.factors().tree.depth();
+    assert!(tree_depth >= 2, "need a real tree for the depth sweep");
+    for depth in 0..=tree_depth {
+        let dir = tmppath(&format!("sharddir_{depth}"));
+        let n = hck::shard::save_shard_dir(pred, depth, &dir, None).unwrap();
+        let sharded = hck::shard::load_shard_dir(&dir).unwrap();
+        assert_eq!(sharded.shards(), n, "depth {depth}");
+        assert_eq!(sharded.dim(), train.d());
+        let got = sharded.predict_batch(&test.x);
+        assert_close(&got, &want, 1e-10, &format!("depth {depth}"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn gp_artifact_shards_from_disk() {
+    let (train, test) = regression_data();
+    let model = fit(
+        &ModelSpec::gp(HConfig::new(Gaussian::new(0.5), 16).with_seed(13), 0.05),
+        &train,
+    )
+    .unwrap();
+    let want = model.predict_batch(&test.x);
+    let path = tmppath("gp_artifact");
+    model.save(&path).unwrap();
+    let loaded = load_any(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let pred = loaded.hierarchical_predictor().expect("gp is hierarchical-backed");
+    let dir = tmppath("gp_sharddir");
+    hck::shard::save_shard_dir(pred, 1, &dir, None).unwrap();
+    let sharded = hck::shard::load_shard_dir(&dir).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let got = sharded.predict_batch(&test.x);
+    assert_close(&got, &want, 1e-10, "gp shards");
+}
+
+/// Re-sharding into the same directory replaces the previous cut's
+/// files — stale shards from a deeper cut must not survive and poison
+/// the loader.
+#[test]
+fn resharding_a_directory_replaces_stale_files() {
+    let (train, test) = regression_data();
+    let model = fit(
+        &ModelSpec::krr(
+            TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 12 })
+                .with_seed(43),
+        ),
+        &train,
+    )
+    .unwrap();
+    let pred = model.hierarchical_predictor().unwrap();
+    let dir = tmppath("resharddir");
+    let n2 = hck::shard::save_shard_dir(pred, 2, &dir, None).unwrap();
+    let n1 = hck::shard::save_shard_dir(pred, 1, &dir, None).unwrap();
+    assert!(n2 > n1, "depth 2 must cut more shards ({n2}) than depth 1 ({n1})");
+    let sharded = hck::shard::load_shard_dir(&dir).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(sharded.shards(), n1);
+    let got = sharded.predict_batch(&test.x);
+    assert_close(&got, &model.predict_batch(&test.x), 1e-10, "reshard");
+}
+
+/// A broken shard directory is an error, not a panic or a misrouting.
+#[test]
+fn shard_dir_loading_rejects_inconsistent_directories() {
+    let (train, _) = regression_data();
+    let model = fit(
+        &ModelSpec::krr(
+            TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 12 })
+                .with_seed(19),
+        ),
+        &train,
+    )
+    .unwrap();
+    let pred = model.hierarchical_predictor().unwrap();
+    let dir = tmppath("badsharddir");
+    let n = hck::shard::save_shard_dir(pred, 1, &dir, None).unwrap();
+    assert!(n >= 2);
+    // Remove one shard file: count mismatch.
+    let victim = format!("{dir}/shard0001.hcks");
+    std::fs::remove_file(&victim).unwrap();
+    assert!(hck::shard::load_shard_dir(&dir).is_err());
+    // Remove the router: not servable at all.
+    std::fs::remove_file(format!("{dir}/router.hckr")).unwrap();
+    assert!(hck::shard::load_shard_dir(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+
+    // An empty directory has neither router nor shards.
+    let empty = tmppath("emptysharddir");
+    std::fs::create_dir_all(&empty).unwrap();
+    assert!(hck::shard::load_shard_dir(&empty).is_err());
+    std::fs::remove_dir_all(&empty).ok();
+
+    // And random queries on a healthy reload still route identically to
+    // the unsharded walk (randomized spot check).
+    let dir2 = tmppath("goodsharddir");
+    hck::shard::save_shard_dir(pred, 2, &dir2, None).unwrap();
+    let sharded = hck::shard::load_shard_dir(&dir2).unwrap();
+    std::fs::remove_dir_all(&dir2).ok();
+    let mut rng = Rng::new(29);
+    let q = Mat::from_fn(40, train.d(), |_, _| rng.uniform(-0.2, 1.2));
+    let got = sharded.predict_batch(&q);
+    let want = model.predict_batch(&q);
+    assert_close(&got, &want, 1e-10, "random queries");
+}

@@ -220,6 +220,25 @@ fn main() {
     }
     table.print();
 
+    // ---- batched GP posterior variance (protocol v2's `variance`
+    // capability): one column materialization + one blocked solve per
+    // batch through the long-lived HVariance state. ----
+    let var_batch = if quick { 16usize } else { 64 };
+    let hv = hck::hkernel::HVariance::new(f.clone(), 0.01).expect("variance state");
+    let qv = q_all.row_range(0, var_batch);
+    let m_var = bench.run("oos_variance", || hv.variance_batch(&qv));
+    println!(
+        "\n— GP posterior variance (batch {var_batch}): {} per query —",
+        fmt_secs(m_var.median() / var_batch as f64)
+    );
+    report.row(vec![
+        ("op", Json::Str("oos_variance".into())),
+        ("n", Json::Num(eh_n as f64)),
+        ("r", Json::Num(eh_r as f64)),
+        ("batch", Json::Num(var_batch as f64)),
+        ("ns_per_query", Json::Num(m_var.median() * 1e9 / var_batch as f64)),
+    ]);
+
     // ---- parallel matvec thread scaling (the perf gate rows) ----
     let scaling_cases: &[(usize, usize)] =
         if quick { &[(6000, 64)] } else { &[(8000, 64), (50000, 128)] };
@@ -268,8 +287,11 @@ fn main() {
     println!("\n— coordinator batching overhead (trivial model) —");
     struct Noop;
     impl hck::coordinator::Predictor for Noop {
-        fn predict_batch(&self, q: &Mat) -> Mat {
-            Mat::zeros(q.rows(), 1)
+        fn predict(
+            &self,
+            req: &hck::infer::PredictRequest,
+        ) -> hck::infer::InferResult<hck::infer::PredictResponse> {
+            Ok(hck::infer::PredictResponse::of_mean(Mat::zeros(req.queries.rows(), 1)))
         }
         fn dim(&self) -> usize {
             4

@@ -112,10 +112,13 @@ pub struct ShardSnapshot {
     pub mean_batch_size: f64,
     /// Mean evaluation time per query, in ns (queueing excluded).
     pub ns_per_query: f64,
-    /// Queries whose worker never replied (a panic contained to that
-    /// sub-batch, or a dead worker). Those rows are returned as NaN
-    /// (`null` on the wire), so a non-zero count here is the health
-    /// signal to watch.
+    /// Queries whose worker-side evaluation failed — a panic contained
+    /// to one sub-batch, a failed variance factorization, or a dead
+    /// worker thread. The affected requests receive typed
+    /// `PredictError::Shard`/`Internal` replies, so a non-zero count
+    /// here signals worker-level faults. Requests rejected *before*
+    /// reaching a worker (bad dimensions, unsupported capabilities) are
+    /// not counted here — they never enter a shard queue.
     pub dropped: u64,
 }
 

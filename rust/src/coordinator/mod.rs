@@ -22,4 +22,4 @@ pub mod service;
 
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 pub use protocol::serve_tcp;
-pub use service::{BatchPolicy, PredictionService, Predictor};
+pub use service::{BatchPolicy, PredictionService, Predictor, QueryReply};

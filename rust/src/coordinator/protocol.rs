@@ -1,13 +1,31 @@
-//! TCP wire protocol: newline-delimited JSON.
+//! TCP wire protocol: newline-delimited JSON, versions 1 and 2.
 //!
-//! Requests:
+//! **v1 frames** (unchanged, still accepted — existing clients keep
+//! getting correct mean predictions):
 //!   {"features": [f, ...]}            → {"prediction": [...], "latency_ms": x}
 //!   {"cmd": "metrics"}                → metrics snapshot object
 //!   {"cmd": "ping"}                   → {"ok": true}
 //!   {"cmd": "shutdown"}               → {"ok": true} and the server stops
-//! Malformed input → {"error": "..."}.
+//!   malformed input                   → {"error": "..."} (plain string)
+//!
+//! **v2 frames** (typed, capability-based — [`crate::infer`]):
+//!   {"v": 2, "queries": [[...], ...],
+//!    "want": {"variance": true, "leaf_route": true}}
+//!     → {"v": 2, "mean": [[...], ...], "variance": [...],
+//!        "routes": [{"shard": s|null, "rows_lo": l, "rows_hi": h}, ...],
+//!        "per_query_ns": x, "latency_ms": y}
+//!   {"cmd": "schema"}                 → model schema + capability set
+//!   errors → {"v": 2, "error": {"kind": "bad_request" | "unsupported" |
+//!             "shard_failure" | "internal", "message": "..."}}
+//!
+//! A v2 frame is recognized by `"v": 2` or a `"queries"`/`"want"` key;
+//! `"queries"` may be replaced by a single `"features"` row. All rows of
+//! one frame are submitted before any reply is awaited, so a frame forms
+//! one dynamic batch. Malformed frames produce typed error replies and
+//! never kill the connection or the batcher ("bad frame ≠ dead worker").
 
 use super::service::PredictionService;
+use crate::infer::{InferResult, PredictError, Want};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -76,6 +94,7 @@ pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Js
         return match cmd {
             "metrics" => svc.snapshot().to_json(),
             "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
+            "schema" => schema_reply(svc),
             "shutdown" => {
                 stop.store(true, Ordering::SeqCst);
                 Json::obj(vec![("ok", Json::Bool(true))])
@@ -83,6 +102,17 @@ pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Js
             other => Json::obj(vec![("error", Json::Str(format!("unknown cmd '{other}'")))]),
         };
     }
+    // v2 frames are marked explicitly or carry v2-only keys.
+    let is_v2 = parsed.get("v").and_then(|v| v.as_usize()) == Some(2)
+        || parsed.get("queries").is_some()
+        || parsed.get("want").is_some();
+    if is_v2 {
+        return match v2_reply(&parsed, svc) {
+            Ok(reply) => reply,
+            Err(e) => Json::obj(vec![("v", Json::Num(2.0)), ("error", e.to_json())]),
+        };
+    }
+    // ---- v1 path, byte-compatible with existing clients. ----
     let Some(features) = parsed.get("features").and_then(|f| f.to_f64s()) else {
         return Json::obj(vec![("error", Json::Str("missing 'features'".into()))]);
     };
@@ -102,22 +132,195 @@ pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Js
     }
 }
 
+/// The `schema` command: dimension, outputs, capability set, supported
+/// protocol versions, and — when the predictor wraps a self-describing
+/// artifact — the full model schema.
+fn schema_reply(svc: &PredictionService) -> Json {
+    let mut pairs = vec![
+        ("dim", Json::Num(svc.dim() as f64)),
+        ("capabilities", svc.capabilities().to_json()),
+        (
+            "protocol_versions",
+            Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]),
+        ),
+    ];
+    if let Some(model) = svc.schema_json() {
+        pairs.push(("model", model));
+    }
+    Json::obj(pairs)
+}
+
+/// Serve one v2 frame: parse queries + want, submit every row before
+/// gathering (one frame = one dynamic batch), assemble the typed reply.
+fn v2_reply(parsed: &Json, svc: &PredictionService) -> InferResult<Json> {
+    let rows = parse_queries(parsed)?;
+    let want = parse_want(parsed.get("want"))?;
+    // Validate the whole frame before submitting anything: a frame with
+    // one bad row must not enqueue (and evaluate, and count in the
+    // metrics) its good rows only to discard their results. `submit`
+    // re-runs the same checks per row — deliberate: this loop buys
+    // frame atomicity, submit's copy guards direct callers, and both
+    // call the same helpers so they cannot drift; the double scan is
+    // O(rows·d), noise next to evaluation.
+    svc.capabilities().check(want)?;
+    for row in &rows {
+        crate::infer::validate_features(row, svc.dim())?;
+    }
+    let t = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(rows.len());
+    for row in rows {
+        receivers.push(svc.submit(row, want)?);
+    }
+    let mut replies = Vec::with_capacity(receivers.len());
+    for rrx in receivers {
+        let reply = rrx
+            .recv()
+            .map_err(|_| PredictError::Internal("service dropped request".into()))??;
+        replies.push(reply);
+    }
+    let mut pairs = vec![
+        ("v", Json::Num(2.0)),
+        (
+            "mean",
+            Json::Arr(replies.iter().map(|r| Json::from_f64s(&r.mean)).collect()),
+        ),
+    ];
+    if want.variance {
+        pairs.push((
+            "variance",
+            Json::Arr(
+                replies
+                    .iter()
+                    .map(|r| match r.variance {
+                        Some(v) => Json::Num(v),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    if want.leaf_route {
+        pairs.push((
+            "routes",
+            Json::Arr(
+                replies
+                    .iter()
+                    .map(|r| match &r.route {
+                        Some(route) => route.to_json(),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    let mean_ns =
+        replies.iter().map(|r| r.per_query_ns).sum::<f64>() / replies.len().max(1) as f64;
+    pairs.push(("per_query_ns", Json::Num(mean_ns)));
+    pairs.push(("latency_ms", Json::Num(t.elapsed().as_secs_f64() * 1e3)));
+    Ok(Json::obj(pairs))
+}
+
+/// Extract the query rows of a v2 frame: `"queries"` (array of feature
+/// arrays) or a single `"features"` row.
+fn parse_queries(parsed: &Json) -> InferResult<Vec<Vec<f64>>> {
+    if let Some(queries) = parsed.get("queries") {
+        let arr = queries
+            .as_arr()
+            .ok_or_else(|| PredictError::BadRequest("'queries' must be an array".into()))?;
+        if arr.is_empty() {
+            return Err(PredictError::BadRequest("'queries' is empty".into()));
+        }
+        arr.iter()
+            .enumerate()
+            .map(|(i, row)| {
+                row.to_f64s().ok_or_else(|| {
+                    PredictError::BadRequest(format!(
+                        "query {i} is not an array of numbers"
+                    ))
+                })
+            })
+            .collect()
+    } else if let Some(features) = parsed.get("features").and_then(|f| f.to_f64s()) {
+        Ok(vec![features])
+    } else {
+        Err(PredictError::BadRequest(
+            "missing 'queries' (or 'features')".into(),
+        ))
+    }
+}
+
+/// Parse the `"want"` flag object (absent = mean only). Unknown keys —
+/// and `"mean": false`, which the protocol cannot honor (the mean is
+/// always served) — are rejected so client mistakes fail loudly instead
+/// of silently serving something else.
+fn parse_want(want: Option<&Json>) -> InferResult<Want> {
+    let Some(want) = want else {
+        return Ok(Want::mean_only());
+    };
+    let Json::Obj(map) = want else {
+        return Err(PredictError::BadRequest("'want' must be an object".into()));
+    };
+    let mut out = Want::mean_only();
+    for (key, val) in map {
+        let flag = val.as_bool().ok_or_else(|| {
+            PredictError::BadRequest(format!("want.{key} must be a boolean"))
+        })?;
+        match key.as_str() {
+            "mean" => {
+                if !flag {
+                    return Err(PredictError::BadRequest(
+                        "want.mean cannot be false — the mean is always served".into(),
+                    ));
+                }
+            }
+            "variance" => out.variance = flag,
+            "leaf_route" => out.leaf_route = flag,
+            other => {
+                return Err(PredictError::BadRequest(format!(
+                    "unknown want flag '{other}' (mean | variance | leaf_route)"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::service::{BatchPolicy, Predictor};
+    use crate::infer::{Capabilities, LeafRoute, PredictRequest, PredictResponse};
     use crate::linalg::Mat;
 
     struct Echo;
     impl Predictor for Echo {
-        fn predict_batch(&self, q: &Mat) -> Mat {
-            Mat::from_fn(q.rows(), 1, |i, _| q.row(i)[0] * 2.0)
+        fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+            let q = &req.queries;
+            let mean = Mat::from_fn(q.rows(), 1, |i, _| q.row(i)[0] * 2.0);
+            let variance = if req.want.variance {
+                Some((0..q.rows()).map(|i| q.row(i)[1].abs()).collect())
+            } else {
+                None
+            };
+            let routes = if req.want.leaf_route {
+                Some(
+                    (0..q.rows())
+                        .map(|_| LeafRoute { shard: Some(0), rows_lo: 0, rows_hi: 4 })
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            Ok(PredictResponse { mean, variance, routes, per_query_ns: 10.0 })
         }
         fn dim(&self) -> usize {
             2
         }
         fn outputs(&self) -> usize {
             1
+        }
+        fn capabilities(&self) -> Capabilities {
+            Capabilities { mean: true, variance: true, leaf_route: true }
         }
     }
 
@@ -144,6 +347,10 @@ mod tests {
         );
         let m = handle_line(r#"{"cmd": "metrics"}"#, &s, &stop);
         assert!(m.get("requests").is_some());
+        let sch = handle_line(r#"{"cmd": "schema"}"#, &s, &stop);
+        assert_eq!(sch.get("dim").unwrap().as_usize(), Some(2));
+        let caps = sch.get("capabilities").unwrap();
+        assert_eq!(caps.get("variance").unwrap().as_bool(), Some(true));
         assert!(!stop.load(Ordering::SeqCst));
         handle_line(r#"{"cmd": "shutdown"}"#, &s, &stop);
         assert!(stop.load(Ordering::SeqCst));
@@ -162,6 +369,74 @@ mod tests {
     }
 
     #[test]
+    fn v2_frame_serves_requested_columns() {
+        let s = svc();
+        let stop = AtomicBool::new(false);
+        let out = handle_line(
+            r#"{"v": 2, "queries": [[3.0, 1.0], [1.0, -2.0]],
+                "want": {"variance": true, "leaf_route": true}}"#,
+            &s,
+            &stop,
+        );
+        let mean = out.get("mean").unwrap().as_arr().unwrap();
+        assert_eq!(mean.len(), 2);
+        assert_eq!(mean[0].to_f64s().unwrap(), vec![6.0]);
+        assert_eq!(mean[1].to_f64s().unwrap(), vec![2.0]);
+        let var = out.get("variance").unwrap().as_arr().unwrap();
+        assert_eq!(var[1].as_f64(), Some(2.0));
+        let routes = out.get("routes").unwrap().as_arr().unwrap();
+        assert_eq!(routes[0].get("rows_hi").unwrap().as_usize(), Some(4));
+        assert!(out.get("per_query_ns").unwrap().as_f64().unwrap() >= 0.0);
+
+        // Mean-only v2 frame: no optional columns in the reply.
+        let out = handle_line(r#"{"v": 2, "features": [2.0, 0.0]}"#, &s, &stop);
+        assert_eq!(
+            out.get("mean").unwrap().as_arr().unwrap()[0].to_f64s().unwrap(),
+            vec![4.0]
+        );
+        assert!(out.get("variance").is_none() && out.get("routes").is_none());
+    }
+
+    #[test]
+    fn v2_errors_are_typed_and_do_not_kill_the_loop() {
+        let s = svc();
+        let stop = AtomicBool::new(false);
+        // Wrong dimension → typed bad_request.
+        let out = handle_line(r#"{"v": 2, "queries": [[1.0]]}"#, &s, &stop);
+        let err = out.get("error").unwrap();
+        assert_eq!(err.get("kind").unwrap().as_str(), Some("bad_request"));
+        // Non-finite feature (JSON null → NaN is unparseable; use a huge
+        // exponent that overflows to inf).
+        let out = handle_line(r#"{"v": 2, "queries": [[1e999, 0.0]]}"#, &s, &stop);
+        assert_eq!(
+            out.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("bad_request")
+        );
+        // Unknown want flag → typed bad_request naming the flag.
+        let out = handle_line(
+            r#"{"v": 2, "queries": [[1.0, 1.0]], "want": {"varaince": true}}"#,
+            &s,
+            &stop,
+        );
+        let msg = out.get("error").unwrap().get("message").unwrap().as_str().unwrap();
+        assert!(msg.contains("varaince"), "{msg}");
+        // want.mean = false cannot be honored — loud rejection.
+        let out = handle_line(
+            r#"{"v": 2, "queries": [[1.0, 1.0]], "want": {"mean": false}}"#,
+            &s,
+            &stop,
+        );
+        assert_eq!(
+            out.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("bad_request")
+        );
+        // The service survives all of it.
+        let out = handle_line(r#"{"v": 2, "features": [1.0, 0.0]}"#, &s, &stop);
+        assert!(out.get("error").is_none());
+        assert!(!stop.load(Ordering::SeqCst));
+    }
+
+    #[test]
     fn tcp_roundtrip() {
         use std::io::{BufRead, BufReader, Write};
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
@@ -176,6 +451,16 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         let resp = Json::parse(line.trim()).unwrap();
         assert_eq!(resp.get("prediction").unwrap().to_f64s().unwrap(), vec![4.0]);
+        // v2 on the same connection.
+        conn.write_all(b"{\"v\": 2, \"queries\": [[2.0, 3.0]], \"want\": {\"variance\": true}}\n")
+            .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            resp.get("variance").unwrap().as_arr().unwrap()[0].as_f64(),
+            Some(3.0)
+        );
         conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();

@@ -1,38 +1,95 @@
 //! The prediction service: request queue → dynamic batcher → model.
+//!
+//! The service speaks the typed inference protocol end to end: requests
+//! enter as (features, [`Want`]) pairs, the batcher folds a dynamic batch
+//! into one [`PredictRequest`] for the cheap columns (mean, routes) plus
+//! a second sub-batch call covering only the members that asked for the
+//! expensive variance column, and every client gets back its own slice
+//! of the [`crate::infer::PredictResponse`] — or a typed, clonable
+//! [`PredictError`]. Malformed requests are rejected at enqueue time and
+//! never reach (or panic inside) the batcher thread; a member whose
+//! evaluation fails cannot error unrelated requests merged into the
+//! same batch (the batcher re-evaluates members individually on
+//! failure).
 
 use super::metrics::Metrics;
+use crate::infer::{
+    Capabilities, InferResult, LeafRoute, PredictError, PredictRequest, PredictResponse, Want,
+};
 use crate::linalg::Mat;
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Anything that can serve batched predictions. Implemented by
-/// [`crate::learn::KrrModel`] and [`crate::shard::ShardedPredictor`];
-/// custom predictors (e.g. a long-lived Algorithm-3
-/// [`crate::hkernel::HPredictor`]) can plug in too.
+/// Anything that can serve typed batched predictions. Implemented by
+/// [`crate::learn::KrrModel`], [`crate::shard::ShardedPredictor`] and
+/// `Arc<dyn` [`crate::model::Model`]`>`; custom predictors can plug in
+/// by implementing [`Predictor::predict`].
 pub trait Predictor: Send + Sync + 'static {
-    /// Predict raw outputs for a batch of query rows.
-    fn predict_batch(&self, q: &Mat) -> Mat;
-    /// Expected feature dimension.
+    /// Serve one typed request — the single inference entry point.
+    fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse>;
+
+    /// Expected feature dimension (0 = unknown; skips validation).
     fn dim(&self) -> usize;
+
     /// Number of output columns.
     fn outputs(&self) -> usize;
+
+    /// What this predictor can serve (default: mean only).
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::mean_only()
+    }
+
+    /// Full model schema as JSON, when the predictor wraps a
+    /// self-describing artifact (the TCP `schema` command).
+    fn schema_json(&self) -> Option<Json> {
+        None
+    }
+
     /// Per-shard counters, when the predictor is sharded (default: none).
     fn shard_metrics(&self) -> Vec<super::metrics::ShardSnapshot> {
         Vec::new()
     }
+
+    /// Mean-only convenience (benches/tests); panics on a rejected
+    /// request — use [`Predictor::predict`] for typed errors.
+    fn predict_batch(&self, q: &Mat) -> Mat {
+        match self.predict(&PredictRequest::mean_of(q)) {
+            Ok(resp) => resp.mean,
+            Err(e) => panic!("predict_batch: {e}"),
+        }
+    }
 }
 
 impl Predictor for crate::learn::KrrModel {
-    fn predict_batch(&self, q: &Mat) -> Mat {
-        self.predict(q)
+    fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+        crate::infer::validate_queries(&req.queries, self.dim())?;
+        Predictor::capabilities(self).check(req.want)?;
+        let t = Instant::now();
+        let mean = crate::learn::KrrModel::predict(self, &req.queries);
+        let routes = if req.want.leaf_route {
+            let pred = self.hierarchical_predictor().expect("capability-checked");
+            Some(crate::model::routes_of_tree(&pred.factors().tree, &req.queries))
+        } else {
+            None
+        };
+        let per_query_ns = t.elapsed().as_nanos() as f64 / req.queries.rows() as f64;
+        Ok(PredictResponse { mean, variance: None, routes, per_query_ns })
     }
     fn dim(&self) -> usize {
         self.dim()
     }
     fn outputs(&self) -> usize {
         self.outputs()
+    }
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            mean: true,
+            variance: false,
+            leaf_route: self.hierarchical_predictor().is_some(),
+        }
     }
 }
 
@@ -51,10 +108,25 @@ impl Default for BatchPolicy {
     }
 }
 
+/// One query's slice of a batched [`PredictResponse`] — what a client of
+/// [`PredictionService::predict_typed`] receives.
+#[derive(Debug, Clone)]
+pub struct QueryReply {
+    /// Predicted mean (one entry per output column).
+    pub mean: Vec<f64>,
+    /// Posterior variance σ², when requested.
+    pub variance: Option<f64>,
+    /// Routed partition-tree leaf, when requested.
+    pub route: Option<LeafRoute>,
+    /// Per-query evaluation time of the batch this query rode in (ns).
+    pub per_query_ns: f64,
+}
+
 struct Request {
     features: Vec<f64>,
+    want: Want,
     enqueued: Instant,
-    resp: SyncSender<Vec<f64>>,
+    resp: SyncSender<InferResult<QueryReply>>,
 }
 
 /// Handle to a running prediction service (batcher thread owns the model).
@@ -68,6 +140,7 @@ pub struct PredictionService {
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
     dim: usize,
+    caps: Capabilities,
 }
 
 impl PredictionService {
@@ -77,6 +150,7 @@ impl PredictionService {
         let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
         let dim = model.dim();
+        let caps = model.capabilities();
         let m2 = metrics.clone();
         let s2 = stop.clone();
         let model2 = model.clone();
@@ -84,7 +158,7 @@ impl PredictionService {
             .name("hck-batcher".into())
             .spawn(move || batcher_loop(model2, rx, m2, s2, policy))
             .expect("spawn batcher");
-        PredictionService { tx, metrics, model, stop, join: Some(join), dim }
+        PredictionService { tx, metrics, model, stop, join: Some(join), dim, caps }
     }
 
     /// Start the batcher around any artifact-loaded [`crate::model::Model`]
@@ -103,6 +177,16 @@ impl PredictionService {
         self.dim
     }
 
+    /// What the predictor behind this service can serve.
+    pub fn capabilities(&self) -> Capabilities {
+        self.caps
+    }
+
+    /// The predictor's full schema JSON, when it wraps an artifact.
+    pub fn schema_json(&self) -> Option<Json> {
+        self.model.schema_json()
+    }
+
     /// Service-level counters with the predictor's per-shard counters
     /// attached (empty `shards` for single-replica predictors).
     pub fn snapshot(&self) -> super::metrics::MetricsSnapshot {
@@ -111,13 +195,35 @@ impl PredictionService {
         snap
     }
 
-    /// Synchronous predict: enqueue and wait for the batch to flush.
-    pub fn predict(&self, features: Vec<f64>) -> crate::error::Result<Vec<f64>> {
+    /// Validate and enqueue one query without blocking on the reply; the
+    /// receiver resolves when the batch flushes. The TCP layer uses this
+    /// to dispatch every row of a multi-query frame before gathering, so
+    /// one frame becomes one dynamic batch instead of N round trips.
+    pub fn submit(
+        &self,
+        features: Vec<f64>,
+        want: Want,
+    ) -> InferResult<Receiver<InferResult<QueryReply>>> {
+        crate::infer::validate_features(&features, self.dim)?;
+        self.caps.check(want)?;
         let (rtx, rrx) = sync_channel(1);
         self.tx
-            .send(Request { features, enqueued: Instant::now(), resp: rtx })
-            .map_err(|_| crate::error::Error::serve("service stopped"))?;
-        rrx.recv().map_err(|_| crate::error::Error::serve("service dropped request"))
+            .send(Request { features, want, enqueued: Instant::now(), resp: rtx })
+            .map_err(|_| PredictError::Internal("service stopped".into()))?;
+        Ok(rrx)
+    }
+
+    /// Synchronous typed predict: enqueue and wait for the batch to flush.
+    pub fn predict_typed(&self, features: Vec<f64>, want: Want) -> InferResult<QueryReply> {
+        let rrx = self.submit(features, want)?;
+        rrx.recv()
+            .map_err(|_| PredictError::Internal("service dropped request".into()))?
+    }
+
+    /// Synchronous mean-only predict (the v1 surface, kept for existing
+    /// clients and examples).
+    pub fn predict(&self, features: Vec<f64>) -> crate::error::Result<Vec<f64>> {
+        Ok(self.predict_typed(features, Want::mean_only())?.mean)
     }
 
     /// Stop the batcher and join it.
@@ -184,24 +290,133 @@ fn batcher_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        // Dispatch.
-        let batch = std::mem::take(&mut pending);
-        let d = batch[0].features.len();
+        // Dispatch the batch as one typed request (plus a variance
+        // sub-batch below). Enqueue-time validation checks each row
+        // against the model dimension; when the model reports dim() == 0
+        // (unknown), rows of a different length than the batch's first
+        // cannot be merged — reject them with a typed error instead of
+        // silently zero-filling.
+        let full = std::mem::take(&mut pending);
+        let d = full[0].features.len();
+        let (batch, mismatched): (Vec<Request>, Vec<Request>) =
+            full.into_iter().partition(|req| req.features.len() == d);
+        for req in mismatched {
+            let _ = req.resp.send(Err(PredictError::BadRequest(format!(
+                "expected {d} features (from the first request of the batch), got {}",
+                req.features.len()
+            ))));
+        }
+        if batch.is_empty() {
+            continue;
+        }
         let mut q = Mat::zeros(batch.len(), d);
+        let mut want_all = Want::mean_only();
+        let mut var_idx: Vec<usize> = Vec::new();
         for (i, req) in batch.iter().enumerate() {
-            if req.features.len() == d {
-                q.row_mut(i).copy_from_slice(&req.features);
+            q.row_mut(i).copy_from_slice(&req.features);
+            if req.want.leaf_route {
+                want_all.leaf_route = true;
+            }
+            if req.want.variance {
+                var_idx.push(i);
             }
         }
-        let preds = model.predict_batch(&q);
+        // Variance is the one expensive optional column (an O(n·r)
+        // kernel column + solve per query): when only *some* members
+        // asked, evaluate it as a second call over just their rows, so
+        // mean-only members of a mixed batch never pay for it; when
+        // *every* member asked, fold it into the single main call (no
+        // second pass, no recomputed means). Routes are a cheap tree
+        // walk, so folding them across the batch is always fine.
+        let all_variance = var_idx.len() == batch.len() && !var_idx.is_empty();
+        if all_variance {
+            want_all.variance = true;
+        }
+        let q_var = if all_variance || var_idx.is_empty() {
+            None
+        } else {
+            Some(q.select_rows(&var_idx))
+        };
+        let resp = model.predict(&PredictRequest::new(q, want_all));
+        let var_resp = match (&resp, q_var) {
+            (Ok(_), Some(qv)) => {
+                Some(model.predict(&PredictRequest::new(qv, Want::mean_only().with_variance())))
+            }
+            _ => None,
+        };
         let done = Instant::now();
         // Record metrics BEFORE releasing responders, so a client that
         // returns from predict() always observes its own request counted.
         let lats: Vec<f64> =
             batch.iter().map(|r| (done - r.enqueued).as_secs_f64()).collect();
         metrics.record_batch(&lats);
-        for (i, req) in batch.into_iter().enumerate() {
-            let _ = req.resp.send(preds.row(i).to_vec());
+        match resp {
+            Ok(resp) => {
+                // var_idx was built in batch order, so a running cursor
+                // maps each variance-requesting member to its row of the
+                // variance sub-batch.
+                let mut vk = 0usize;
+                for (i, req) in batch.into_iter().enumerate() {
+                    let route = if req.want.leaf_route {
+                        resp.routes.as_ref().map(|r| r[i])
+                    } else {
+                        None
+                    };
+                    let reply = if req.want.variance {
+                        let k = vk;
+                        vk += 1;
+                        match &var_resp {
+                            Some(Ok(v)) => Ok(QueryReply {
+                                mean: resp.mean.row(i).to_vec(),
+                                variance: v.variance.as_ref().map(|vv| vv[k]),
+                                route,
+                                per_query_ns: v.per_query_ns,
+                            }),
+                            Some(Err(e)) => Err(e.clone()),
+                            // No sub-batch ran: the whole batch wanted
+                            // variance and the main call carried it.
+                            None => Ok(QueryReply {
+                                mean: resp.mean.row(i).to_vec(),
+                                variance: resp.variance.as_ref().map(|v| v[i]),
+                                route,
+                                per_query_ns: resp.per_query_ns,
+                            }),
+                        }
+                    } else {
+                        Ok(QueryReply {
+                            mean: resp.mean.row(i).to_vec(),
+                            variance: None,
+                            route,
+                            per_query_ns: resp.per_query_ns,
+                        })
+                    };
+                    let _ = req.resp.send(reply);
+                }
+            }
+            Err(e) if batch.len() == 1 => {
+                let req = batch.into_iter().next().expect("single-member batch");
+                let _ = req.resp.send(Err(e));
+            }
+            Err(_) => {
+                // Contain the failure: re-evaluate each member on its
+                // own so one member's failing column or shard cannot
+                // error unrelated requests merged into the same dynamic
+                // batch. Error batches are rare (validation happens at
+                // enqueue), so the per-member retry cost is acceptable.
+                for req in batch {
+                    let mut q1 = Mat::zeros(1, req.features.len());
+                    q1.row_mut(0).copy_from_slice(&req.features);
+                    let reply = model.predict(&PredictRequest::new(q1, req.want)).map(
+                        |resp| QueryReply {
+                            mean: resp.mean.row(0).to_vec(),
+                            variance: resp.variance.as_ref().map(|v| v[0]),
+                            route: resp.routes.as_ref().map(|r| r[0]),
+                            per_query_ns: resp.per_query_ns,
+                        },
+                    );
+                    let _ = req.resp.send(reply);
+                }
+            }
         }
     }
 }
@@ -213,8 +428,11 @@ mod tests {
     /// A trivial predictor: output = [sum of features].
     struct SumModel;
     impl Predictor for SumModel {
-        fn predict_batch(&self, q: &Mat) -> Mat {
-            Mat::from_fn(q.rows(), 1, |i, _| q.row(i).iter().sum())
+        fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+            let q = &req.queries;
+            Ok(PredictResponse::of_mean(Mat::from_fn(q.rows(), 1, |i, _| {
+                q.row(i).iter().sum()
+            })))
         }
         fn dim(&self) -> usize {
             3
@@ -265,5 +483,82 @@ mod tests {
         let svc = PredictionService::start(Arc::new(SumModel), BatchPolicy::default());
         let _ = svc.predict(vec![0.0; 3]).unwrap();
         svc.shutdown(); // must not hang or panic
+    }
+
+    /// Malformed requests come back as typed errors at enqueue time and
+    /// never poison the batcher: good requests keep working afterwards.
+    #[test]
+    fn bad_requests_error_without_killing_the_service() {
+        let svc = PredictionService::start(Arc::new(SumModel), BatchPolicy::default());
+        let err = svc.predict_typed(vec![1.0], Want::mean_only()).unwrap_err();
+        assert_eq!(err.kind(), "bad_request");
+        let err = svc
+            .predict_typed(vec![0.0, f64::NAN, 1.0], Want::mean_only())
+            .unwrap_err();
+        assert_eq!(err.kind(), "bad_request");
+        let err = svc.predict_typed(vec![], Want::mean_only()).unwrap_err();
+        assert_eq!(err.kind(), "bad_request");
+        // Capability negotiation: SumModel serves the mean only.
+        let err = svc
+            .predict_typed(vec![0.0; 3], Want::mean_only().with_variance())
+            .unwrap_err();
+        assert_eq!(err.kind(), "unsupported");
+        // The worker loop is still alive.
+        let ok = svc.predict_typed(vec![1.0, 1.0, 1.0], Want::mean_only()).unwrap();
+        assert_eq!(ok.mean, vec![3.0]);
+        assert!(ok.variance.is_none() && ok.route.is_none());
+        svc.shutdown();
+    }
+
+    /// A predictor that fails whole batches containing a poison marker —
+    /// the shape of a shard failure or a broken variance factorization.
+    struct Poison;
+    impl Predictor for Poison {
+        fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+            let q = &req.queries;
+            if (0..q.rows()).any(|i| q.row(i)[0] == 13.0) {
+                return Err(PredictError::Internal("poisoned".into()));
+            }
+            Ok(PredictResponse::of_mean(Mat::from_fn(q.rows(), 1, |i, _| {
+                q.row(i).iter().sum()
+            })))
+        }
+        fn dim(&self) -> usize {
+            3
+        }
+        fn outputs(&self) -> usize {
+            1
+        }
+    }
+
+    /// One member's evaluation failure must not error unrelated requests
+    /// merged into the same dynamic batch: the batcher re-evaluates the
+    /// members individually and only the failing one sees the error.
+    #[test]
+    fn batch_errors_are_contained_to_the_failing_member() {
+        let svc = Arc::new(PredictionService::start(
+            Arc::new(Poison),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(30) },
+        ));
+        let mut handles = Vec::new();
+        for k in 0..4 {
+            let s = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let feats = if k == 0 {
+                    vec![13.0, 0.0, 0.0]
+                } else {
+                    vec![k as f64, 1.0, 0.0]
+                };
+                (k, s.predict_typed(feats, Want::mean_only()))
+            }));
+        }
+        for h in handles {
+            let (k, res) = h.join().unwrap();
+            if k == 0 {
+                assert_eq!(res.unwrap_err().kind(), "internal");
+            } else {
+                assert_eq!(res.unwrap().mean, vec![k as f64 + 1.0]);
+            }
+        }
     }
 }

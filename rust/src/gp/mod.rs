@@ -4,7 +4,7 @@
 //! log-determinant, and maximum-likelihood bandwidth estimation.
 
 use crate::error::Result;
-use crate::hkernel::{HConfig, HFactors, HPredictor, HSolver};
+use crate::hkernel::{HConfig, HFactors, HPredictor, HSolver, HVariance};
 use crate::linalg::Mat;
 
 /// Gaussian log-marginal likelihood (eq. 25):
@@ -55,18 +55,21 @@ impl GpRegressor {
 
     /// Posterior variance at query points (eq. 4):
     /// k(x,x) − k(X,x)ᵀ (K+λI)^{-1} k(X,x). O(n·r) per query (one column
-    /// materialization + one solve application).
+    /// materialization + one solve application) after an O(nr²) factor.
+    ///
+    /// One-shot convenience over [`GpRegressor::variance_state`]: it
+    /// refactors the solver every call. Serving paths should build the
+    /// [`HVariance`] state once and call
+    /// [`HVariance::variance_batch`] per request (the
+    /// [`crate::model::FittedGp`] wrapper caches it).
     pub fn variance(&self, q: &Mat) -> Result<Vec<f64>> {
-        let solver = HSolver::factor(&self.factors, self.lambda)?;
-        let mut out = Vec::with_capacity(q.rows());
-        for i in 0..q.rows() {
-            let v = HPredictor::column(&self.factors, q.row(i));
-            let sol = solver.solve(&v);
-            let quad: f64 = v.iter().zip(sol.iter()).map(|(a, b)| a * b).sum();
-            let prior = self.factors.config.kind.diag_value();
-            out.push((prior - quad).max(0.0));
-        }
-        Ok(out)
+        Ok(self.variance_state()?.variance_batch(q))
+    }
+
+    /// Build the long-lived batched variance state (factored solver +
+    /// aggregate column bases) for this posterior.
+    pub fn variance_state(&self) -> Result<HVariance> {
+        HVariance::new(self.factors.clone(), self.lambda)
     }
 
     /// The underlying factors.

@@ -28,5 +28,5 @@ pub use persist::{
     load_model, load_router, load_shard, save_model, save_router, save_shard,
 };
 pub use matvec::{hmatvec, hmatvec_mat, hmatvec_original, hmatvec_with_threads};
-pub use oos::HPredictor;
+pub use oos::{HPredictor, HVariance, LazyVariance};
 pub use solve::HSolver;

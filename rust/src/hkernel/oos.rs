@@ -301,6 +301,117 @@ impl HPredictor {
     }
 }
 
+/// Long-lived, batched GP posterior-variance state:
+/// `σ²(x) = k(x,x) − k(X,x)ᵀ (K + λI)^{-1} k(X,x)` over the hierarchical
+/// kernel (paper eq. 4), built once and reused across requests.
+///
+/// Holds the three O(nr)-sized precomputations the per-query math needs —
+/// the owned solver factorization ([`crate::hkernel::HSolver`] state
+/// without the borrow), the aggregate bases used to materialize kernel
+/// columns, and the factors themselves — so serving a variance request
+/// costs one column materialization (O(nr)) plus one solver application
+/// (O(nr)) per query, with the whole batch going through **one**
+/// level-synchronous `solve_mat` instead of per-query solves.
+///
+/// Every query's variance is computed column-independently, so the result
+/// for a given query is identical no matter how a batch is grouped — the
+/// property that makes sharded variance match in-process variance exactly
+/// (see [`crate::shard::ShardedPredictor`]).
+pub struct HVariance {
+    f: std::sync::Arc<HFactors>,
+    parts: super::solve::SolverParts,
+    /// Aggregate bases for column materialization, precomputed once.
+    agg: Vec<Option<Mat>>,
+    lambda: f64,
+}
+
+impl HVariance {
+    /// Factor `(K + λI)` and precompute the column bases. O(nr²), once.
+    pub fn new(f: std::sync::Arc<HFactors>, lambda: f64) -> crate::error::Result<HVariance> {
+        let parts = super::solve::SolverParts::factor(&f, lambda)?;
+        let agg = super::densify::aggregate_bases(&f);
+        Ok(HVariance { f, parts, agg, lambda })
+    }
+
+    /// The noise variance λ this state was factored with.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Borrow the underlying factors.
+    pub fn factors(&self) -> &std::sync::Arc<HFactors> {
+        &self.f
+    }
+
+    /// Posterior variance for a batch of query rows, one σ² per row.
+    ///
+    /// Column materialization parallelizes across queries; the quadratic
+    /// terms go through a single blocked solve. Non-negative by
+    /// construction (clamped at 0, matching [`crate::gp::GpRegressor`]).
+    pub fn variance_batch(&self, q: &Mat) -> Vec<f64> {
+        let f = self.f.as_ref();
+        let g = q.rows();
+        if g == 0 {
+            return Vec::new();
+        }
+        let n = f.n();
+        let idx: Vec<usize> = (0..g).collect();
+        let threads = crate::util::parallel::auto_threads(n.max(g));
+        let cols = crate::util::parallel::parallel_map(threads, &idx, |&i| {
+            HPredictor::column_with_agg(f, &self.agg, q.row(i))
+        });
+        let mut v = Mat::zeros(n, g);
+        for (i, col) in cols.iter().enumerate() {
+            v.set_col(i, col);
+        }
+        let sol = self.parts.solve_mat(f, &v);
+        let prior = f.config.kind.diag_value();
+        (0..g)
+            .map(|i| {
+                let mut quad = 0.0;
+                for row in 0..n {
+                    quad += v[(row, i)] * sol[(row, i)];
+                }
+                (prior - quad).max(0.0)
+            })
+            .collect()
+    }
+}
+
+/// Lazily-built, shareable [`HVariance`]: the O(nr²) factorization runs
+/// on the **first variance request** — never for mean-only traffic — and
+/// every holder of the `Arc` (the in-process model and all shard
+/// workers) sees the same state afterwards. A failed factorization is
+/// cached too, so a broken state errors per request instead of
+/// refactoring per request.
+pub struct LazyVariance {
+    f: std::sync::Arc<HFactors>,
+    lambda: f64,
+    cell: std::sync::OnceLock<std::result::Result<HVariance, String>>,
+}
+
+impl LazyVariance {
+    /// Record what to build; costs nothing until [`LazyVariance::get`].
+    pub fn new(f: std::sync::Arc<HFactors>, lambda: f64) -> LazyVariance {
+        LazyVariance { f, lambda, cell: std::sync::OnceLock::new() }
+    }
+
+    /// The built state, factoring on first call.
+    pub fn get(&self) -> std::result::Result<&HVariance, String> {
+        self.cell
+            .get_or_init(|| {
+                HVariance::new(self.f.clone(), self.lambda).map_err(|e| e.to_string())
+            })
+            .as_ref()
+            .map_err(|e| e.clone())
+    }
+
+    /// The noise variance λ the state will be factored with.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+}
+
 /// Group the rows of `q` by a routing key, evaluate each group as one
 /// block, and scatter the results back in request order. Shared by
 /// [`HPredictor::predict_batch`] and [`crate::shard::Shard::predict_batch`]

@@ -52,16 +52,25 @@ struct NodeState {
     lu: Lu,
 }
 
-/// Factorized `(K_hierarchical + λI)`; solves and log-determinant.
-pub struct HSolver<'a> {
-    f: &'a HFactors,
+/// Owned factorization state of `(K_hierarchical + λI)` — the solver
+/// without the borrow of its factors. Long-lived serving state (the
+/// batched GP variance pass, [`crate::hkernel::oos::HVariance`]) holds a
+/// `SolverParts` next to an `Arc<HFactors>`; [`HSolver`] is the
+/// borrowed-view wrapper every transient caller uses.
+pub(crate) struct SolverParts {
     lambda: f64,
     leaf: Vec<Option<LeafState>>,
     node: Vec<Option<NodeState>>,
     logdet: f64,
 }
 
-impl<'a> HSolver<'a> {
+/// Factorized `(K_hierarchical + λI)`; solves and log-determinant.
+pub struct HSolver<'a> {
+    f: &'a HFactors,
+    parts: SolverParts,
+}
+
+impl SolverParts {
     /// Factor `A + λI` where A is the hierarchical kernel matrix described
     /// by `f`. `lambda` is the ridge regularization (the paper's λ − λ′,
     /// since λ′ is already inside the factors).
@@ -74,7 +83,7 @@ impl<'a> HSolver<'a> {
     /// deepest level first. Results are applied in node-id order and the
     /// per-node log-det contributions are summed in post-order, so the
     /// result is bitwise identical for every thread count.
-    pub fn factor(f: &'a HFactors, lambda: f64) -> Result<HSolver<'a>> {
+    pub(crate) fn factor(f: &HFactors, lambda: f64) -> Result<SolverParts> {
         let nn = f.tree.nodes.len();
         let mut leaf: Vec<Option<LeafState>> = (0..nn).map(|_| None).collect();
         let mut node: Vec<Option<NodeState>> = (0..nn).map(|_| None).collect();
@@ -117,17 +126,7 @@ impl<'a> HSolver<'a> {
         for &i in &post {
             logdet += ld[i];
         }
-        Ok(HSolver { f, lambda, leaf, node, logdet })
-    }
-
-    /// The regularization this solver was factored with.
-    pub fn lambda(&self) -> f64 {
-        self.lambda
-    }
-
-    /// log det(A + λI).
-    pub fn logdet(&self) -> f64 {
-        self.logdet
+        Ok(SolverParts { lambda, leaf, node, logdet })
     }
 
     /// Solve (A + λI) W = Y for a block of right-hand sides, **tree
@@ -144,11 +143,11 @@ impl<'a> HSolver<'a> {
     /// in node-id order and each node accumulates its children in the
     /// tree's fixed child order — the output is bitwise identical for
     /// every thread count.
-    pub fn solve_mat(&self, y: &Mat) -> Mat {
-        let n = self.f.n();
+    pub(crate) fn solve_mat(&self, f: &HFactors, y: &Mat) -> Mat {
+        let n = f.n();
         assert_eq!(y.rows(), n, "solve rhs rows");
         let m = y.cols();
-        let nn = self.f.tree.nodes.len();
+        let nn = f.tree.nodes.len();
 
         // Single-leaf tree.
         if nn == 1 {
@@ -162,14 +161,14 @@ impl<'a> HSolver<'a> {
         let mut t: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
         let mut that: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
         let threads = auto_threads(n);
-        let leaves = self.f.tree.leaves();
+        let leaves = f.tree.leaves();
         let leaf_zt = parallel_map(threads, &leaves, |&i| {
-            let nd = &self.f.tree.nodes[i];
+            let nd = &f.tree.nodes[i];
             let st = self.leaf[i].as_ref().unwrap();
             let yi = y.row_range(nd.lo, nd.hi);
             let zi = st.chol.solve_mat(&yi);
             // t_j = U_jᵀ z_j
-            let u = self.f.u[i].as_ref().unwrap();
+            let u = f.u[i].as_ref().unwrap();
             let ti = matmul(u, Trans::Yes, &zi, Trans::No);
             (zi, ti)
         });
@@ -181,13 +180,13 @@ impl<'a> HSolver<'a> {
         // children were finalized by the leaf pass above, inner children
         // by the previous — deeper — iteration), so every node of a
         // level is independent given the levels below.
-        let levels = inner_levels(self.f);
+        let levels = inner_levels(f);
         for ids in levels.iter().rev() {
             if ids.is_empty() {
                 continue;
             }
             let outs = parallel_map(threads, ids, |&i| {
-                let nd = &self.f.tree.nodes[i];
+                let nd = &f.tree.nodes[i];
                 let st = self.node[i].as_ref().unwrap();
                 let r_i = st.shat.rows();
                 let mut th = Mat::zeros(r_i, m);
@@ -199,7 +198,7 @@ impl<'a> HSolver<'a> {
                     let phi_t = phi(&st.g, &st.lu, &th);
                     let mut corr = th.clone();
                     gemm(-1.0, &st.shat, Trans::No, &phi_t, Trans::No, 1.0, &mut corr);
-                    let w = self.f.w[i].as_ref().unwrap();
+                    let w = f.w[i].as_ref().unwrap();
                     Some(matmul(w, Trans::Yes, &corr, Trans::No))
                 } else {
                     None
@@ -226,11 +225,11 @@ impl<'a> HSolver<'a> {
             let outs = parallel_map(threads, ids, |&i| {
                 let st = self.node[i].as_ref().unwrap();
                 let th = that[i].as_ref().unwrap();
-                match self.f.tree.nodes[i].parent {
+                match f.tree.nodes[i].parent {
                     None => phi(&st.g, &st.lu, th),
                     Some(p) => {
                         // q_i = W_i u_p
-                        let w = self.f.w[i].as_ref().unwrap();
+                        let w = f.w[i].as_ref().unwrap();
                         let qi = matmul(w, Trans::No, u[p].as_ref().unwrap(), Trans::No);
                         let mut rhs = th.clone();
                         gemm(-1.0, &st.shat, Trans::No, &qi, Trans::No, 1.0, &mut rhs);
@@ -251,7 +250,7 @@ impl<'a> HSolver<'a> {
         let ranges: Vec<(usize, usize)> = leaves
             .iter()
             .map(|&l| {
-                let nd = &self.f.tree.nodes[l];
+                let nd = &f.tree.nodes[l];
                 (nd.lo * m, nd.hi * m)
             })
             .collect();
@@ -265,7 +264,7 @@ impl<'a> HSolver<'a> {
                 .map(|(&l, window)| (l, z[l].take().unwrap(), window))
                 .collect();
             crate::util::parallel::run_parallel(threads, items, |(l, mut wch, window)| {
-                let p = self.f.tree.nodes[l].parent.unwrap();
+                let p = f.tree.nodes[l].parent.unwrap();
                 let st_l = self.leaf[l].as_ref().unwrap();
                 gemm(
                     -1.0,
@@ -280,6 +279,36 @@ impl<'a> HSolver<'a> {
             });
         }
         out
+    }
+}
+
+impl<'a> HSolver<'a> {
+    /// Factor `A + λI` where A is the hierarchical kernel matrix
+    /// described by `f`. `lambda` is the ridge regularization (the
+    /// paper's λ − λ′, since λ′ is already inside the factors). Leaves
+    /// factor in parallel and the r×r inner chain runs
+    /// level-synchronously; the result is bitwise identical for every
+    /// thread count.
+    pub fn factor(f: &'a HFactors, lambda: f64) -> Result<HSolver<'a>> {
+        Ok(HSolver { f, parts: SolverParts::factor(f, lambda)? })
+    }
+
+    /// The regularization this solver was factored with.
+    pub fn lambda(&self) -> f64 {
+        self.parts.lambda
+    }
+
+    /// log det(A + λI).
+    pub fn logdet(&self) -> f64 {
+        self.parts.logdet
+    }
+
+    /// Solve (A + λI) W = Y for a block of right-hand sides, **tree
+    /// order**. O(n·n0 + n·r + (n/n0)·r²) per column after factoring;
+    /// every sweep is level-synchronous across the persistent worker
+    /// pool and bitwise deterministic for every thread count.
+    pub fn solve_mat(&self, y: &Mat) -> Mat {
+        self.parts.solve_mat(self.f, y)
     }
 
     /// Solve for a single right-hand side (tree order).

@@ -1,0 +1,449 @@
+//! Typed inference protocol v2: capability-based prediction requests.
+//!
+//! Every inference surface in the crate — [`crate::model::Model`], the
+//! coordinator's [`crate::coordinator::Predictor`], the shard workers and
+//! the TCP wire protocol — speaks one request/response pair instead of a
+//! bare matrix-in/matrix-out call:
+//!
+//! - [`PredictRequest`]: a batch of query rows plus a [`Want`] flag set
+//!   (mean / posterior variance / leaf route) and [`PredictOpts`].
+//! - [`PredictResponse`]: the mean block, plus the optional variance and
+//!   route columns that were requested, and a per-query timing diagnostic.
+//! - [`PredictError`]: a typed, clonable error (bad request, unsupported
+//!   capability, shard failure, internal) that crosses thread and wire
+//!   boundaries instead of panicking inside serving threads.
+//! - [`Capabilities`]: what a model can serve, so callers (CLI, service,
+//!   router) negotiate instead of guessing — see
+//!   [`crate::model::ModelSchema::capabilities`].
+//!
+//! The mean-only path is unchanged math: a request with
+//! [`Want::mean_only`] reproduces the pre-protocol outputs bitwise.
+
+use crate::linalg::Mat;
+use crate::util::json::Json;
+
+/// Which response columns a request asks for. The mean is always
+/// computed and returned (it is the model's output and every consumer
+/// needs it); `variance` and `leaf_route` are optional capabilities that
+/// must be present in the model's [`Capabilities`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Want {
+    /// Posterior mean (always served; the flag exists for wire symmetry
+    /// with [`Capabilities`]).
+    pub mean: bool,
+    /// Posterior variance σ²(x) per query (GP models).
+    pub variance: bool,
+    /// The partition-tree leaf each query routed to (hierarchical-factor
+    /// models), as a [`LeafRoute`] per query.
+    pub leaf_route: bool,
+}
+
+impl Default for Want {
+    fn default() -> Self {
+        Want::mean_only()
+    }
+}
+
+impl Want {
+    /// Mean only — the v1 behavior.
+    pub fn mean_only() -> Want {
+        Want { mean: true, variance: false, leaf_route: false }
+    }
+
+    /// Request the posterior variance column as well.
+    pub fn with_variance(mut self) -> Want {
+        self.variance = true;
+        self
+    }
+
+    /// Request the per-query leaf routes as well.
+    pub fn with_leaf_route(mut self) -> Want {
+        self.leaf_route = true;
+        self
+    }
+
+    /// Field-wise OR of two flag sets.
+    pub fn union(self, other: Want) -> Want {
+        Want {
+            mean: self.mean || other.mean,
+            variance: self.variance || other.variance,
+            leaf_route: self.leaf_route || other.leaf_route,
+        }
+    }
+}
+
+/// Per-request evaluation options.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PredictOpts {
+    /// The queries are already preprocessed into the model's feature
+    /// space: skip the artifact's recorded normalization. Serving paths
+    /// leave this `false` (raw features on the wire); in-process callers
+    /// that normalized explicitly set it to keep the math identical.
+    pub pre_normalized: bool,
+}
+
+/// A typed prediction request: query rows + wanted columns + options.
+#[derive(Clone)]
+pub struct PredictRequest {
+    /// Query points, one per row (rows x d).
+    pub queries: Mat,
+    /// Which response columns to serve.
+    pub want: Want,
+    /// Evaluation options.
+    pub opts: PredictOpts,
+}
+
+impl PredictRequest {
+    /// A request for the given columns with default options.
+    pub fn new(queries: Mat, want: Want) -> PredictRequest {
+        PredictRequest { queries, want, opts: PredictOpts::default() }
+    }
+
+    /// Mean-only request on raw (serving-side) features.
+    pub fn mean_of(queries: &Mat) -> PredictRequest {
+        PredictRequest::new(queries.clone(), Want::mean_only())
+    }
+
+    /// Mean-only request on already-normalized features — the exact
+    /// pre-protocol `predict_batch` semantics.
+    pub fn raw_mean(queries: &Mat) -> PredictRequest {
+        PredictRequest {
+            queries: queries.clone(),
+            want: Want::mean_only(),
+            opts: PredictOpts { pre_normalized: true },
+        }
+    }
+}
+
+/// Where a query landed in the partition tree: the routed leaf's
+/// training-row range in **global tree order** (identical for sharded
+/// and in-process serving), plus the shard that served it, when one did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeafRoute {
+    /// Shard id that served the query (`None` on unsharded paths).
+    pub shard: Option<usize>,
+    /// First global tree-order training row of the routed leaf.
+    pub rows_lo: usize,
+    /// One past the last global tree-order training row of the leaf.
+    pub rows_hi: usize,
+}
+
+impl LeafRoute {
+    /// Wire encoding: `{"shard": n|null, "rows_lo": l, "rows_hi": h}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "shard",
+                match self.shard {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("rows_lo", Json::Num(self.rows_lo as f64)),
+            ("rows_hi", Json::Num(self.rows_hi as f64)),
+        ])
+    }
+}
+
+/// A typed prediction response. `variance` and `routes` are present iff
+/// they were requested (and the model has the capability); both are
+/// indexed per query row of the request.
+#[derive(Clone)]
+pub struct PredictResponse {
+    /// Predicted mean block (rows x outputs).
+    pub mean: Mat,
+    /// Posterior variance σ²(x) per query, when requested.
+    pub variance: Option<Vec<f64>>,
+    /// Routed leaf per query, when requested.
+    pub routes: Option<Vec<LeafRoute>>,
+    /// Wall-clock spent evaluating this request, divided by its query
+    /// count (ns) — the per-query latency diagnostic.
+    pub per_query_ns: f64,
+}
+
+impl PredictResponse {
+    /// A mean-only response (no optional columns, no timing).
+    pub fn of_mean(mean: Mat) -> PredictResponse {
+        PredictResponse { mean, variance: None, routes: None, per_query_ns: 0.0 }
+    }
+}
+
+/// Typed inference failure. Clonable so the batcher can fan one model
+/// error out to every request of a dynamic batch, and so it crosses the
+/// shard worker reply channels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PredictError {
+    /// The request itself is malformed (wrong dimension, zero rows,
+    /// non-finite features). Never kills a serving thread.
+    BadRequest(String),
+    /// The request asks for a column the model cannot serve — negotiate
+    /// with [`Capabilities`] first.
+    Unsupported(String),
+    /// A shard worker failed; the request-order scatter/gather aborts
+    /// with the failing shard attached.
+    Shard {
+        /// Which shard failed.
+        shard: usize,
+        /// What happened.
+        message: String,
+    },
+    /// Anything else (factorization failure, dead service).
+    Internal(String),
+}
+
+impl PredictError {
+    /// Stable machine-readable tag (the wire protocol's `error.kind`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PredictError::BadRequest(_) => "bad_request",
+            PredictError::Unsupported(_) => "unsupported",
+            PredictError::Shard { .. } => "shard_failure",
+            PredictError::Internal(_) => "internal",
+        }
+    }
+
+    /// Wire encoding: `{"kind": "...", "message": "..."}`.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::Str(self.kind().into())),
+            ("message", Json::Str(self.message())),
+        ];
+        if let PredictError::Shard { shard, .. } = self {
+            pairs.push(("shard", Json::Num(*shard as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// The human-readable message without the kind tag.
+    pub fn message(&self) -> String {
+        match self {
+            PredictError::BadRequest(m)
+            | PredictError::Unsupported(m)
+            | PredictError::Internal(m) => m.clone(),
+            PredictError::Shard { shard, message } => {
+                format!("shard {shard}: {message}")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for PredictError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind(), self.message())
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+impl From<PredictError> for crate::error::Error {
+    fn from(e: PredictError) -> Self {
+        crate::error::Error::Serve(e.to_string())
+    }
+}
+
+/// Result alias for the typed inference surface.
+pub type InferResult<T> = std::result::Result<T, PredictError>;
+
+/// What a model (or serving front) can put in a [`PredictResponse`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Serves the predicted mean (every model).
+    pub mean: bool,
+    /// Serves the posterior variance.
+    pub variance: bool,
+    /// Serves per-query leaf routes.
+    pub leaf_route: bool,
+}
+
+impl Capabilities {
+    /// Mean only — the floor every model provides.
+    pub fn mean_only() -> Capabilities {
+        Capabilities { mean: true, variance: false, leaf_route: false }
+    }
+
+    /// Whether every column in `want` is available.
+    pub fn supports(&self, want: Want) -> bool {
+        (!want.variance || self.variance) && (!want.leaf_route || self.leaf_route)
+    }
+
+    /// Reject a request asking for unavailable columns with a typed
+    /// [`PredictError::Unsupported`] naming what is missing.
+    pub fn check(&self, want: Want) -> InferResult<()> {
+        let mut missing = Vec::new();
+        if want.variance && !self.variance {
+            missing.push("variance");
+        }
+        if want.leaf_route && !self.leaf_route {
+            missing.push("leaf_route");
+        }
+        if missing.is_empty() {
+            Ok(())
+        } else {
+            Err(PredictError::Unsupported(format!(
+                "model does not serve: {} (capabilities: {})",
+                missing.join(", "),
+                self
+            )))
+        }
+    }
+
+    /// Wire encoding: `{"mean": true, "variance": ..., "leaf_route": ...}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mean", Json::Bool(self.mean)),
+            ("variance", Json::Bool(self.variance)),
+            ("leaf_route", Json::Bool(self.leaf_route)),
+        ])
+    }
+}
+
+impl std::fmt::Display for Capabilities {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut parts = Vec::new();
+        if self.mean {
+            parts.push("mean");
+        }
+        if self.variance {
+            parts.push("variance");
+        }
+        if self.leaf_route {
+            parts.push("leaf_route");
+        }
+        write!(f, "{}", parts.join(","))
+    }
+}
+
+/// Validate a query batch against a model dimension (`dim == 0` skips
+/// the dimension check for predictors that do not know theirs). Zero
+/// rows, a wrong feature count, or any non-finite feature is a
+/// [`PredictError::BadRequest`] — malformed input must never reach (or
+/// panic inside) an evaluation thread.
+pub fn validate_queries(q: &Mat, dim: usize) -> InferResult<()> {
+    if q.rows() == 0 {
+        return Err(PredictError::BadRequest("empty query batch".into()));
+    }
+    if dim > 0 && q.cols() != dim {
+        return Err(PredictError::BadRequest(format!(
+            "expected {dim} features, got {}",
+            q.cols()
+        )));
+    }
+    for i in 0..q.rows() {
+        if q.row(i).iter().any(|v| !v.is_finite()) {
+            return Err(PredictError::BadRequest(format!(
+                "query row {i} contains a non-finite feature"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Apply recorded per-column (min, max) feature normalization to a
+/// request's queries, honoring [`PredictOpts::pre_normalized`]. Returns
+/// `Some(normalized copy)` when normalization applies, `None` when the
+/// request's own queries can be used as-is — the one normalization
+/// decision shared by the in-process model pipeline and the sharded
+/// serving front, so the two paths cannot drift.
+pub fn normalized_queries(
+    req: &PredictRequest,
+    ranges: Option<&[(f64, f64)]>,
+) -> Option<Mat> {
+    if req.opts.pre_normalized {
+        return None;
+    }
+    let ranges = ranges?;
+    let mut m = req.queries.clone();
+    crate::data::preprocess::apply_normalization(&mut m, ranges);
+    Some(m)
+}
+
+/// [`validate_queries`] for a single feature vector (the service's
+/// per-request enqueue path).
+pub fn validate_features(features: &[f64], dim: usize) -> InferResult<()> {
+    if features.is_empty() {
+        return Err(PredictError::BadRequest("empty feature vector".into()));
+    }
+    if dim > 0 && features.len() != dim {
+        return Err(PredictError::BadRequest(format!(
+            "expected {dim} features, got {}",
+            features.len()
+        )));
+    }
+    if features.iter().any(|v| !v.is_finite()) {
+        return Err(PredictError::BadRequest(
+            "features contain a non-finite value".into(),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn want_union_and_defaults() {
+        let w = Want::default();
+        assert!(w.mean && !w.variance && !w.leaf_route);
+        let u = w.union(Want::mean_only().with_variance());
+        assert!(u.variance && !u.leaf_route);
+        let u2 = u.union(Want::mean_only().with_leaf_route());
+        assert!(u2.variance && u2.leaf_route);
+    }
+
+    #[test]
+    fn capabilities_check_names_missing_columns() {
+        let caps = Capabilities::mean_only();
+        assert!(caps.check(Want::mean_only()).is_ok());
+        let err = caps.check(Want::mean_only().with_variance().with_leaf_route()).unwrap_err();
+        assert_eq!(err.kind(), "unsupported");
+        let msg = err.to_string();
+        assert!(msg.contains("variance") && msg.contains("leaf_route"), "{msg}");
+        let full = Capabilities { mean: true, variance: true, leaf_route: true };
+        assert!(full.check(Want::mean_only().with_variance().with_leaf_route()).is_ok());
+        assert!(full.supports(Want::mean_only()));
+    }
+
+    #[test]
+    fn validation_rejects_malformed_batches() {
+        assert_eq!(
+            validate_queries(&Mat::zeros(0, 3), 3).unwrap_err().kind(),
+            "bad_request"
+        );
+        assert!(validate_queries(&Mat::zeros(2, 3), 3).is_ok());
+        assert!(validate_queries(&Mat::zeros(2, 2), 3).is_err());
+        let mut q = Mat::zeros(2, 3);
+        q.row_mut(1)[0] = f64::NAN;
+        assert!(validate_queries(&q, 3).is_err());
+        q.row_mut(1)[0] = f64::INFINITY;
+        assert!(validate_queries(&q, 3).is_err());
+        // dim 0 skips only the dimension check.
+        assert!(validate_queries(&Mat::zeros(2, 7), 0).is_ok());
+        assert!(validate_features(&[1.0, 2.0], 2).is_ok());
+        assert!(validate_features(&[1.0], 2).is_err());
+        assert!(validate_features(&[], 0).is_err());
+        assert!(validate_features(&[f64::NAN], 1).is_err());
+    }
+
+    #[test]
+    fn error_wire_encoding_carries_kind_and_shard() {
+        let e = PredictError::Shard { shard: 3, message: "boom".into() };
+        let j = e.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("shard_failure"));
+        assert_eq!(j.get("shard").unwrap().as_usize(), Some(3));
+        assert!(j.get("message").unwrap().as_str().unwrap().contains("boom"));
+        let b = PredictError::BadRequest("nope".into());
+        assert!(b.to_json().get("shard").is_none());
+        assert_eq!(b.to_string(), "bad_request: nope");
+    }
+
+    #[test]
+    fn route_json_encodes_optional_shard() {
+        let r = LeafRoute { shard: None, rows_lo: 4, rows_hi: 9 };
+        let j = r.to_json();
+        assert_eq!(j.get("shard"), Some(&Json::Null));
+        assert_eq!(j.get("rows_hi").unwrap().as_usize(), Some(9));
+        let r2 = LeafRoute { shard: Some(1), rows_lo: 0, rows_hi: 2 };
+        assert_eq!(r2.to_json().get("shard").unwrap().as_usize(), Some(1));
+    }
+}

@@ -35,6 +35,7 @@ pub mod data;
 pub mod error;
 pub mod gp;
 pub mod hkernel;
+pub mod infer;
 pub mod learn;
 pub mod model;
 pub mod runtime;

@@ -22,11 +22,13 @@
 use hck::error::{Error, Result};
 use hck::coordinator::{serve_tcp, BatchPolicy, PredictionService};
 use hck::data::{self, Dataset};
+use hck::infer::{PredictRequest, Want};
 use hck::kernels::KernelKind;
 use hck::learn::{EngineSpec, TrainConfig};
 use hck::model::{self, Model, ModelKind, ModelSpec};
 use hck::partition::SplitRule;
 use hck::util::args::{usage, Args, OptSpec};
+use hck::util::json::Json;
 use hck::util::timer::Timer;
 use std::sync::Arc;
 
@@ -342,6 +344,9 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
     let spec = vec![
         opt("model", "HCKM artifact from `hck train --save`", None),
         opt("data", "LIBSVM file of query points", None),
+        flag("variance", "request the posterior variance column (GP artifacts)"),
+        flag("routes", "request the routed partition-tree leaf per query"),
+        flag("json", "machine-readable output (schema, capabilities, per-row results)"),
         flag("quiet", "only print the summary metric"),
         flag("help", "show help"),
     ];
@@ -363,8 +368,8 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
         ));
     }
     // Pad query features to the model dimension if the sparse file
-    // happened to omit trailing attributes, then apply the artifact's
-    // recorded normalization (identity when it carries none).
+    // happened to omit trailing attributes. The typed predict call
+    // applies the artifact's recorded normalization internally.
     let q = hck::linalg::Mat::from_fn(queries.n(), d, |i, j| {
         if j < queries.d() {
             queries.x[(i, j)]
@@ -372,25 +377,64 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
             0.0
         }
     });
-    let q = model.normalize(&q);
-    let out = model.predict_batch(&q);
-    if !a.flag("quiet") {
+    let mut want = Want::mean_only();
+    if a.flag("variance") {
+        want = want.with_variance();
+    }
+    if a.flag("routes") {
+        want = want.with_leaf_route();
+    }
+    let resp = model.predict(&PredictRequest::new(q, want))?;
+    let out = &resp.mean;
+    if a.flag("json") {
+        println!("{}", predict_json(model.as_ref(), &resp).encode());
+    } else if !a.flag("quiet") {
         for i in 0..out.rows() {
-            let row: Vec<String> = out.row(i).iter().map(|v| format!("{v:.6}")).collect();
+            let mut row: Vec<String> = out.row(i).iter().map(|v| format!("{v:.6}")).collect();
+            if let Some(var) = &resp.variance {
+                row.push(format!("var={:.6}", var[i]));
+            }
+            if let Some(routes) = &resp.routes {
+                row.push(format!("leaf=[{},{})", routes[i].rows_lo, routes[i].rows_hi));
+            }
             println!("{}", row.join(" "));
         }
     }
     if model.schema().kind == ModelKind::Kpca {
         eprintln!("embedded {} queries into {} dimensions", queries.n(), out.cols());
     } else {
-        let (metric, hib) = hck::learn::metrics::score(&queries, &out);
+        let (metric, hib) = hck::learn::metrics::score(&queries, out);
         eprintln!(
-            "{}: {metric:.4} over {} queries",
+            "{}: {metric:.4} over {} queries ({:.0} ns/query)",
             if hib { "accuracy" } else { "relative error" },
-            queries.n()
+            queries.n(),
+            resp.per_query_ns
         );
     }
     Ok(())
+}
+
+/// The `hck predict --json` document: the artifact's schema (with its
+/// capability set), the served columns per row, and the timing
+/// diagnostic. Reuses the shared [`hck::util::json::Json`] encoder.
+fn predict_json(model: &dyn Model, resp: &hck::infer::PredictResponse) -> Json {
+    let rows: Vec<Json> = (0..resp.mean.rows())
+        .map(|i| {
+            let mut pairs = vec![("mean", Json::from_f64s(resp.mean.row(i)))];
+            if let Some(var) = &resp.variance {
+                pairs.push(("variance", Json::Num(var[i])));
+            }
+            if let Some(routes) = &resp.routes {
+                pairs.push(("route", routes[i].to_json()));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", model.schema().to_json()),
+        ("predictions", Json::Arr(rows)),
+        ("per_query_ns", Json::Num(resp.per_query_ns)),
+    ])
 }
 
 fn cmd_shard(argv: Vec<String>) -> Result<()> {
@@ -445,6 +489,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         opt("max-wait-ms", "batching window (ms)", Some("2")),
         opt("shards", "cut an in-process shard layer from --model (0 = off)", Some("0")),
         opt("shard-depth", "tree depth of the in-process cut (default: fits --shards)", None),
+        flag("variance", "require the posterior-variance capability at startup"),
+        flag("routes", "require the leaf-route capability at startup"),
         flag("help", "show help"),
     ];
     let a = Args::parse(argv, &spec).map_err(Error::Config)?;
@@ -516,11 +562,24 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         }
     };
 
+    // Capability preflight: fail fast at startup instead of serving
+    // typed `unsupported` errors to every client.
+    let caps = svc.capabilities();
+    let mut required = Want::mean_only();
+    if a.flag("variance") {
+        required = required.with_variance();
+    }
+    if a.flag("routes") {
+        required = required.with_leaf_route();
+    }
+    caps.check(required)?;
+
     let port = a.usize("port").map_err(Error::Config)?;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
     eprintln!(
-        "serving on 127.0.0.1:{port} — send {{\"features\": [...]}} lines; \
-         {{\"cmd\":\"shutdown\"}} to stop"
+        "serving on 127.0.0.1:{port} (capabilities: {caps}) — send \
+         {{\"features\": [...]}} (v1) or {{\"v\":2, \"queries\": [[...]], \
+         \"want\": {{...}}}} lines; {{\"cmd\":\"shutdown\"}} to stop"
     );
     let conns = serve_tcp(listener, svc.clone())?;
     let snap = svc.snapshot();

@@ -60,10 +60,15 @@ pub use persist::{load_any, FORMAT_VERSION};
 use crate::data::{Dataset, Task};
 use crate::error::Result;
 use crate::gp::GpRegressor;
-use crate::hkernel::{HConfig, HFactors, HPredictor};
+use crate::hkernel::{HConfig, HFactors, HPredictor, HVariance, LazyVariance};
+use crate::infer::{
+    Capabilities, InferResult, LeafRoute, PredictError, PredictRequest, PredictResponse,
+};
 use crate::learn::krr::EngineSpec;
 use crate::learn::{KpcaTransformer, KrrModel, TrainConfig};
 use crate::linalg::Mat;
+use crate::partition::PartitionTree;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -144,16 +149,57 @@ impl ModelSchema {
             if self.normalization.is_some() { ", normalized features" } else { "" }
         )
     }
+
+    /// What this kind of model can put in a
+    /// [`crate::infer::PredictResponse`] — the negotiation set callers
+    /// (CLI, service, router) consult instead of guessing:
+    ///
+    /// - every kind serves the mean;
+    /// - `gp` additionally serves the posterior variance;
+    /// - the hierarchical-factor kinds (`krr-hierarchical`, `gp`, `kpca`)
+    ///   serve per-query leaf routes.
+    pub fn capabilities(&self) -> Capabilities {
+        match self.kind {
+            ModelKind::Gp => Capabilities { mean: true, variance: true, leaf_route: true },
+            ModelKind::KrrHierarchical | ModelKind::Kpca => {
+                Capabilities { mean: true, variance: false, leaf_route: true }
+            }
+            _ => Capabilities::mean_only(),
+        }
+    }
+
+    /// Machine-readable description (the `schema` TCP command and
+    /// `hck predict --json` header): kind, dims, task, preprocessing
+    /// presence, and the capability set.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.name().into())),
+            ("dim", Json::Num(self.dim as f64)),
+            ("outputs", Json::Num(self.outputs as f64)),
+            ("task", Json::Str(format!("{:?}", self.task))),
+            ("normalized_features", Json::Bool(self.normalization.is_some())),
+            ("capabilities", self.capabilities().to_json()),
+        ])
+    }
 }
 
-/// A fitted model behind one uniform surface: batch prediction, schema
-/// introspection, artifact persistence, and (when hierarchical factors
-/// back it) access to the Algorithm-3 predictor for sharding. All
-/// implementations are `Send + Sync`, so an `Arc<dyn Model>` drops
-/// straight behind [`crate::coordinator::PredictionService`].
+/// A fitted model behind one uniform surface: typed batch prediction
+/// ([`crate::infer::PredictRequest`] → [`crate::infer::PredictResponse`]),
+/// schema/capability introspection, artifact persistence, and (when
+/// hierarchical factors back it) access to the Algorithm-3 predictor for
+/// sharding. All implementations are `Send + Sync`, so an
+/// `Arc<dyn Model>` drops straight behind
+/// [`crate::coordinator::PredictionService`].
 pub trait Model: Send + Sync {
-    /// Predict raw outputs for a batch of query rows (q.rows() x outputs).
-    fn predict_batch(&self, q: &Mat) -> Mat;
+    /// Serve one typed request — the single inference entry point.
+    ///
+    /// Validates the batch (dimension, finiteness), rejects wants outside
+    /// the model's [`ModelSchema::capabilities`], applies the artifact's
+    /// recorded feature normalization (unless
+    /// [`crate::infer::PredictOpts::pre_normalized`]), and returns the
+    /// requested columns. A mean-only request reproduces the
+    /// pre-protocol `predict_batch` outputs bitwise.
+    fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse>;
 
     /// The model's self-description (also the artifact header).
     fn schema(&self) -> &ModelSchema;
@@ -166,6 +212,22 @@ pub trait Model: Send + Sync {
     /// ([`crate::shard::split_predictor`] / [`crate::shard::save_shard_dir`]).
     fn hierarchical_predictor(&self) -> Option<&HPredictor> {
         None
+    }
+
+    /// The shared lazy posterior-variance state, for models with the
+    /// `variance` capability (`None` otherwise). The sharded serving
+    /// front attaches the `Arc` to every worker, so sharded variance
+    /// shares one factorization with the in-process pass and matches it
+    /// exactly ([`crate::shard::ShardedPredictor::from_model`]); the
+    /// O(nr²) factorization itself runs on the first variance request,
+    /// never for mean-only traffic.
+    fn variance_state(&self) -> Option<Arc<LazyVariance>> {
+        None
+    }
+
+    /// What this model can serve (from the schema).
+    fn capabilities(&self) -> Capabilities {
+        self.schema().capabilities()
     }
 
     /// Feature dimension d (from the schema).
@@ -188,27 +250,82 @@ pub trait Model: Send + Sync {
         }
         out
     }
+
+    /// Mean-only convenience on **already-normalized** queries — the
+    /// pre-protocol `predict_batch` semantics, kept for in-process
+    /// callers and tests. Panics on a rejected request (use
+    /// [`Model::predict`] for typed errors).
+    fn predict_batch(&self, q: &Mat) -> Mat {
+        match self.predict(&PredictRequest::raw_mean(q)) {
+            Ok(resp) => resp.mean,
+            Err(e) => panic!("predict_batch: {e}"),
+        }
+    }
+}
+
+/// Shared request pipeline for the concrete models: validate the batch,
+/// check the want against the capability set, apply the recorded
+/// normalization, time the evaluation, and assemble the response. The
+/// `variance`/`routes` closures are only invoked when requested (and the
+/// capability check already admitted them).
+fn serve_request<Fm, Fv, Fr>(
+    schema: &ModelSchema,
+    req: &PredictRequest,
+    mean: Fm,
+    variance: Fv,
+    routes: Fr,
+) -> InferResult<PredictResponse>
+where
+    Fm: FnOnce(&Mat) -> Mat,
+    Fv: FnOnce(&Mat) -> InferResult<Vec<f64>>,
+    Fr: FnOnce(&Mat) -> Vec<LeafRoute>,
+{
+    crate::infer::validate_queries(&req.queries, schema.dim)?;
+    schema.capabilities().check(req.want)?;
+    let normalized = crate::infer::normalized_queries(req, schema.normalization.as_deref());
+    let q: &Mat = normalized.as_ref().unwrap_or(&req.queries);
+    let t = std::time::Instant::now();
+    let mean = mean(q);
+    let variance = if req.want.variance { Some(variance(q)?) } else { None };
+    let routes = if req.want.leaf_route { Some(routes(q)) } else { None };
+    let per_query_ns = t.elapsed().as_nanos() as f64 / req.queries.rows() as f64;
+    Ok(PredictResponse { mean, variance, routes, per_query_ns })
+}
+
+/// Route every query row through a partition tree, reporting each routed
+/// leaf's global training-row range (the unsharded side of the
+/// [`LeafRoute`] contract; shards report the same ranges plus their id).
+/// Shared with the coordinator's `KrrModel` predictor impl.
+pub(crate) fn routes_of_tree(tree: &PartitionTree, q: &Mat) -> Vec<LeafRoute> {
+    (0..q.rows())
+        .map(|i| {
+            let leaf = tree.route_leaf(q.row(i));
+            let nd = &tree.nodes[leaf];
+            LeafRoute { shard: None, rows_lo: nd.lo, rows_hi: nd.hi }
+        })
+        .collect()
 }
 
 /// Every `Arc<dyn Model>` is a coordinator predictor: artifact-loaded
 /// models drop behind the dynamic batcher (and the TCP front) without
-/// engine-specific plumbing. The serving path applies the artifact's
-/// recorded feature normalization here, so TCP clients send **raw**
-/// features and get the same answers as `hck predict --model` (which
-/// normalizes explicitly).
+/// engine-specific plumbing. Requests arrive with **raw** features on the
+/// wire; [`Model::predict`] applies the artifact's recorded normalization,
+/// so TCP clients get the same answers as `hck predict --model`.
 impl crate::coordinator::Predictor for Arc<dyn Model> {
-    fn predict_batch(&self, q: &Mat) -> Mat {
-        if self.schema().normalization.is_some() {
-            Model::predict_batch(self.as_ref(), &self.normalize(q))
-        } else {
-            Model::predict_batch(self.as_ref(), q)
-        }
+    fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+        Model::predict(self.as_ref(), req)
     }
     fn dim(&self) -> usize {
         self.schema().dim
     }
     fn outputs(&self) -> usize {
         self.schema().outputs
+    }
+    fn capabilities(&self) -> Capabilities {
+        self.schema().capabilities()
+    }
+    fn schema_json(&self) -> Option<Json> {
+        Some(self.schema().to_json())
     }
 }
 
@@ -338,8 +455,19 @@ impl FittedKrr {
 }
 
 impl Model for FittedKrr {
-    fn predict_batch(&self, q: &Mat) -> Mat {
-        self.model.predict(q)
+    fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+        serve_request(
+            &self.schema,
+            req,
+            |q| self.model.predict(q),
+            |_| Err(PredictError::Unsupported("krr serves no variance".into())),
+            |q| {
+                // Admitted by the capability check only for the
+                // hierarchical engine, which always has a predictor.
+                let pred = self.model.hierarchical_predictor().expect("hierarchical engine");
+                routes_of_tree(&pred.factors().tree, q)
+            },
+        )
     }
     fn schema(&self) -> &ModelSchema {
         &self.schema
@@ -353,10 +481,18 @@ impl Model for FittedKrr {
 }
 
 /// [`Model`] face of a fitted [`GpRegressor`]: the posterior mean served
-/// through a long-lived Algorithm-3 predictor (built once at fit/load).
+/// through a long-lived Algorithm-3 predictor (built once at fit/load),
+/// and the posterior **variance** served through a lazily-built, cached
+/// [`HVariance`] state — the `variance` capability of the unified API.
 pub struct FittedGp {
     pub(crate) gp: GpRegressor,
     predictor: HPredictor,
+    /// Shared lazy variance state: the O(nr²) factorization runs on the
+    /// first variance request (mean-only deployments never pay it) and
+    /// the same `Arc` rides into shard workers, so in-process and
+    /// sharded serving share one factorization. A failed factorization
+    /// is cached as an error string rather than refactored per request.
+    variance: Arc<LazyVariance>,
     schema: ModelSchema,
 }
 
@@ -378,18 +514,30 @@ impl FittedGp {
             task,
             normalization,
         };
-        FittedGp { gp, predictor, schema }
+        let variance = Arc::new(LazyVariance::new(factors, gp.lambda()));
+        FittedGp { gp, predictor, variance, schema }
     }
 
     /// The underlying GP (posterior variance, log-likelihood).
     pub fn gp(&self) -> &GpRegressor {
         &self.gp
     }
+
+    /// The cached batched variance state (factored on first use).
+    fn variance_cached(&self) -> InferResult<&HVariance> {
+        self.variance.get().map_err(PredictError::Internal)
+    }
 }
 
 impl Model for FittedGp {
-    fn predict_batch(&self, q: &Mat) -> Mat {
-        self.predictor.predict_batch(q)
+    fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+        serve_request(
+            &self.schema,
+            req,
+            |q| self.predictor.predict_batch(q),
+            |q| self.variance_cached().map(|hv| hv.variance_batch(q)),
+            |q| routes_of_tree(&self.predictor.factors().tree, q),
+        )
     }
     fn schema(&self) -> &ModelSchema {
         &self.schema
@@ -399,6 +547,9 @@ impl Model for FittedGp {
     }
     fn hierarchical_predictor(&self) -> Option<&HPredictor> {
         Some(&self.predictor)
+    }
+    fn variance_state(&self) -> Option<Arc<LazyVariance>> {
+        Some(self.variance.clone())
     }
 }
 
@@ -432,8 +583,14 @@ impl FittedKpca {
 }
 
 impl Model for FittedKpca {
-    fn predict_batch(&self, q: &Mat) -> Mat {
-        self.transformer.transform(q)
+    fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+        serve_request(
+            &self.schema,
+            req,
+            |q| self.transformer.transform(q),
+            |_| Err(PredictError::Unsupported("kpca serves no variance".into())),
+            |q| routes_of_tree(&self.transformer.factors().tree, q),
+        )
     }
     fn schema(&self) -> &ModelSchema {
         &self.schema
@@ -546,5 +703,64 @@ mod tests {
         assert_eq!(arc.dim(), d);
         let out = arc.predict_batch(&q);
         assert_eq!(out.rows(), 2);
+    }
+
+    #[test]
+    fn typed_requests_negotiate_capabilities() {
+        use crate::infer::Want;
+        let (train, test) = small();
+        let gp = fit(
+            &ModelSpec::gp(HConfig::new(Gaussian::new(0.5), 16).with_seed(7), 0.05),
+            &train,
+        )
+        .unwrap();
+        assert!(gp.capabilities().variance && gp.capabilities().leaf_route);
+        let q = test.x.row_range(0, 5);
+        let resp = gp
+            .predict(&PredictRequest::new(
+                q.clone(),
+                Want::mean_only().with_variance().with_leaf_route(),
+            ))
+            .unwrap();
+        assert_eq!(resp.mean.shape(), (5, 1));
+        let var = resp.variance.unwrap();
+        assert_eq!(var.len(), 5);
+        assert!(var.iter().all(|v| v.is_finite() && *v >= 0.0));
+        let routes = resp.routes.unwrap();
+        assert_eq!(routes.len(), 5);
+        assert!(routes.iter().all(|r| r.shard.is_none() && r.rows_lo < r.rows_hi));
+        assert!(resp.per_query_ns > 0.0);
+
+        // Mean-only requests reproduce the convenience path bitwise.
+        let mean_only = gp.predict(&PredictRequest::raw_mean(&q)).unwrap();
+        assert_eq!(mean_only.mean.as_slice(), gp.predict_batch(&q).as_slice());
+        assert!(mean_only.variance.is_none() && mean_only.routes.is_none());
+
+        // A mean-only engine rejects variance requests with a typed error.
+        let nys = fit(
+            &ModelSpec::krr(TrainConfig::new(
+                Gaussian::new(0.5),
+                EngineSpec::Nystrom { rank: 16 },
+            )),
+            &train,
+        )
+        .unwrap();
+        let err = nys
+            .predict(&PredictRequest::new(q.clone(), Want::mean_only().with_variance()))
+            .unwrap_err();
+        assert_eq!(err.kind(), "unsupported");
+
+        // Malformed batches are BadRequest, not panics.
+        let bad = Mat::zeros(2, train.d() + 1);
+        assert_eq!(
+            gp.predict(&PredictRequest::mean_of(&bad)).unwrap_err().kind(),
+            "bad_request"
+        );
+        let mut nan = q.clone();
+        nan.row_mut(0)[0] = f64::NAN;
+        assert_eq!(
+            gp.predict(&PredictRequest::mean_of(&nan)).unwrap_err().kind(),
+            "bad_request"
+        );
     }
 }

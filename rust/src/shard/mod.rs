@@ -39,7 +39,8 @@ pub use split::{boundary_nodes, depth_for_shards, split_predictor};
 pub use worker::{ShardWorker, ShardedPredictor};
 
 use crate::error::{Error, Result};
-use crate::hkernel::HPredictor;
+use crate::hkernel::{HPredictor, LazyVariance};
+use crate::infer::{InferResult, LeafRoute, PredictError, Want};
 use crate::kernels::{kernel_cross, KernelKind};
 use crate::linalg::{gemm, matmul, Cholesky, Mat, Trans};
 use crate::partition::{follow_split, Node};
@@ -232,6 +233,19 @@ pub struct TopStep {
     pub c: Mat,
 }
 
+/// One shard's slice of a typed response: the columns of a
+/// [`crate::infer::PredictResponse`] for a co-routed sub-batch, in the
+/// sub-batch's request order. Produced by [`Shard::predict_typed`] and
+/// gathered back by [`ShardedPredictor`].
+pub struct ShardBlock {
+    /// Mean block (sub-batch rows x outputs).
+    pub mean: Mat,
+    /// Posterior variance per sub-batch row, when requested.
+    pub variance: Option<Vec<f64>>,
+    /// Routed leaf per sub-batch row, when requested.
+    pub routes: Option<Vec<LeafRoute>>,
+}
+
 /// A self-contained subtree shard of a fitted hierarchical model.
 ///
 /// Node ids are **local** (the shard root is node 0); `Node::lo`/`hi`
@@ -375,8 +389,58 @@ impl Shard {
         )
     }
 
+    /// Serve one typed sub-batch: the mean via the leaf-grouped gemm
+    /// path, plus the variance and route columns when requested — the
+    /// worker-side unit of the scatter/gather in
+    /// [`crate::shard::ShardedPredictor`].
+    ///
+    /// `variance` is the *global* lazily-built state (shared by every
+    /// worker through an `Arc`, factored on the first variance request):
+    /// the posterior variance needs the full kernel column over all n
+    /// training points, so it cannot be computed from one shard's slice.
+    /// Shards loaded from a bare shard directory have none and reject
+    /// variance requests with a typed error.
+    pub fn predict_typed(
+        &self,
+        q: &Mat,
+        want: Want,
+        variance: Option<&LazyVariance>,
+    ) -> InferResult<ShardBlock> {
+        let mean = self.predict_batch(q);
+        let variance = if want.variance {
+            let hv = variance
+                .ok_or_else(|| {
+                    PredictError::Unsupported(
+                        "variance unavailable: shards were loaded without the model's \
+                         factors (serve from the HCKM artifact instead)"
+                            .into(),
+                    )
+                })?
+                .get()
+                .map_err(PredictError::Internal)?;
+            Some(hv.variance_batch(q))
+        } else {
+            None
+        };
+        let routes = if want.leaf_route {
+            Some(
+                (0..q.rows())
+                    .map(|i| {
+                        let leaf = self.route_leaf(q.row(i));
+                        let nd = &self.nodes[leaf];
+                        LeafRoute { shard: Some(self.id), rows_lo: nd.lo, rows_hi: nd.hi }
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        Ok(ShardBlock { mean, variance, routes })
+    }
+
     /// Memory footprint of the shard's owned factors, in f64 words
-    /// (replicated entry/top state included).
+    /// (replicated entry/top state included). Does not count the shared
+    /// [`LazyVariance`] state, which is one `Arc` across all workers.
     pub fn memory_words(&self) -> usize {
         let mat = |m: &Option<Mat>| m.as_ref().map_or(0, |m| m.rows() * m.cols());
         let mut words = 0;

@@ -1,12 +1,22 @@
 //! Shard worker threads and the multi-replica scatter/gather predictor.
+//!
+//! Workers speak the typed protocol: each job carries a sub-batch plus
+//! the request's [`Want`] flags, and replies with a typed
+//! `Result<ShardBlock, PredictError>`. A panic inside a worker is caught
+//! and surfaced as [`PredictError::Shard`] — the worker thread survives
+//! and keeps draining its queue ("bad sub-batch ≠ dead worker").
 
 use super::router::ShardRouter;
 use super::split::{boundary_nodes, split_predictor};
-use super::Shard;
+use super::{Shard, ShardBlock};
 use crate::coordinator::metrics::ShardSnapshot;
 use crate::coordinator::Predictor;
-use crate::hkernel::HPredictor;
+use crate::hkernel::{HPredictor, LazyVariance};
+use crate::infer::{
+    Capabilities, InferResult, PredictError, PredictRequest, PredictResponse, Want,
+};
 use crate::linalg::Mat;
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Arc;
@@ -22,16 +32,18 @@ struct WorkerMetrics {
     batches: AtomicU64,
     /// Queries served.
     requests: AtomicU64,
-    /// Wall time spent inside `Shard::predict_batch`, in ns.
+    /// Wall time spent inside `Shard::predict_typed`, in ns.
     busy_ns: AtomicU64,
-    /// Queries the worker never answered (dead/panicked worker thread).
+    /// Queries that came back as errors instead of predictions
+    /// (worker panics, unsupported columns, dead reply channels).
     dropped: AtomicU64,
 }
 
 /// One sub-batch of co-routed queries plus its reply channel.
 struct Job {
     q: Mat,
-    resp: SyncSender<Mat>,
+    want: Want,
+    resp: SyncSender<InferResult<ShardBlock>>,
 }
 
 /// A long-lived thread owning one [`Shard`] and draining its queue.
@@ -44,8 +56,10 @@ pub struct ShardWorker {
 }
 
 impl ShardWorker {
-    /// Spawn the worker thread around a shard.
-    pub fn spawn(shard: Shard) -> ShardWorker {
+    /// Spawn the worker thread around a shard, optionally sharing the
+    /// global lazy variance state (one `Arc` across all workers; the
+    /// factorization runs on the first variance request).
+    pub fn spawn(shard: Shard, variance: Option<Arc<LazyVariance>>) -> ShardWorker {
         let id = shard.id;
         let row_range = shard.row_range();
         let (tx, rx) = sync_channel::<Job>(1024);
@@ -60,25 +74,29 @@ impl ShardWorker {
                     // A panic must not kill the worker for the rest of the
                     // service lifetime: contain it to this sub-batch. The
                     // shard is immutable (&self evaluation), so reuse after
-                    // an unwind is sound; the caller sees the dropped reply
-                    // and NaN-fills just these rows.
+                    // an unwind is sound; the caller sees a typed
+                    // shard_failure for just this sub-batch.
                     let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || shard.predict_batch(&job.q),
-                    ));
+                        || shard.predict_typed(&job.q, job.want, variance.as_deref()),
+                    ))
+                    .unwrap_or_else(|_| {
+                        Err(PredictError::Shard {
+                            shard: id,
+                            message: "worker panicked evaluating a sub-batch".into(),
+                        })
+                    });
+                    m2.queued.fetch_sub(1, Ordering::Relaxed);
                     match out {
-                        Ok(out) => {
+                        Ok(block) => {
                             m2.busy_ns
                                 .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
                             m2.batches.fetch_add(1, Ordering::Relaxed);
                             m2.requests.fetch_add(job.q.rows() as u64, Ordering::Relaxed);
-                            m2.queued.fetch_sub(1, Ordering::Relaxed);
-                            let _ = job.resp.send(out);
+                            let _ = job.resp.send(Ok(block));
                         }
-                        Err(_) => {
-                            m2.queued.fetch_sub(1, Ordering::Relaxed);
-                            // Dropping job.resp without a send surfaces the
-                            // failure to the gather side (recv error →
-                            // NaN rows + dropped count).
+                        Err(e) => {
+                            m2.dropped.fetch_add(job.q.rows() as u64, Ordering::Relaxed);
+                            let _ = job.resp.send(Err(e));
                         }
                     }
                 }
@@ -87,11 +105,12 @@ impl ShardWorker {
         ShardWorker { id, row_range, tx, metrics, join: Some(join) }
     }
 
-    /// Enqueue a sub-batch; the reply arrives on the returned receiver.
-    fn submit(&self, q: Mat) -> std::sync::mpsc::Receiver<Mat> {
+    /// Enqueue a sub-batch; the typed reply arrives on the returned
+    /// receiver.
+    fn submit(&self, q: Mat, want: Want) -> std::sync::mpsc::Receiver<InferResult<ShardBlock>> {
         let (rtx, rrx) = sync_channel(1);
         self.metrics.queued.fetch_add(1, Ordering::Relaxed);
-        if self.tx.send(Job { q, resp: rtx }).is_err() {
+        if self.tx.send(Job { q, want, resp: rtx }).is_err() {
             self.metrics.queued.fetch_sub(1, Ordering::Relaxed);
         }
         rrx
@@ -128,11 +147,14 @@ impl Drop for ShardWorker {
 }
 
 /// Multi-replica serving front: a [`ShardRouter`] over the top tree
-/// levels plus one [`ShardWorker`] per shard. `predict_batch` scatters a
-/// batch across the per-shard queues, the workers evaluate their
-/// sub-batches concurrently (leaf-grouped gemms inside each shard), and
-/// the results are gathered back **in request order**. Implements
-/// [`Predictor`], so it slots behind the coordinator's dynamic batcher.
+/// levels plus one [`ShardWorker`] per shard. `predict` scatters a batch
+/// across the per-shard queues, the workers evaluate their sub-batches
+/// concurrently (leaf-grouped gemms inside each shard, plus the shared
+/// variance/route columns when requested), and the results are gathered
+/// back **in request order**. A failing shard aborts the request with a
+/// typed [`PredictError::Shard`] naming the shard — not with NaNs and
+/// not by killing the worker. Implements [`Predictor`], so it slots
+/// behind the coordinator's dynamic batcher.
 pub struct ShardedPredictor {
     router: ShardRouter,
     workers: Vec<ShardWorker>,
@@ -143,17 +165,38 @@ pub struct ShardedPredictor {
     /// shards was trained on normalized features (see
     /// [`crate::model::ModelSchema::normalization`]). `None` = identity.
     normalization: Option<Vec<(f64, f64)>>,
+    /// Global lazy variance state shared by every worker; present iff
+    /// the predictor was built from a model with the `variance`
+    /// capability ([`ShardedPredictor::from_model`]). The O(nr²)
+    /// factorization runs on the first variance request, never for
+    /// mean-only traffic.
+    variance: Option<Arc<LazyVariance>>,
+    /// The source model's schema JSON, when built from an artifact (the
+    /// TCP `schema` command reports it through the sharded front too).
+    schema: Option<Json>,
 }
 
 impl ShardedPredictor {
     /// Split a fitted predictor at `depth` and spawn one worker per
     /// shard.
     pub fn new(pred: &HPredictor, depth: usize) -> ShardedPredictor {
+        Self::build(pred, depth, None)
+    }
+
+    /// The one split-and-assemble recipe: cut the tree, build the
+    /// router, spawn the workers (shared by [`ShardedPredictor::new`]
+    /// and [`ShardedPredictor::from_model`], which differ only in the
+    /// attached state).
+    fn build(
+        pred: &HPredictor,
+        depth: usize,
+        variance: Option<Arc<LazyVariance>>,
+    ) -> ShardedPredictor {
         let f = pred.factors();
         let boundary = boundary_nodes(&f.tree, depth);
         let router = ShardRouter::new(&f.tree, &boundary);
         let shards = split_predictor(pred, depth);
-        Self::from_parts(router, shards, f.x.cols(), pred.outputs())
+        Self::assemble(router, shards, f.x.cols(), pred.outputs(), variance)
     }
 
     /// Assemble from pre-built parts (e.g. shards loaded from disk).
@@ -169,18 +212,7 @@ impl ShardedPredictor {
         dim: usize,
         outputs: usize,
     ) -> ShardedPredictor {
-        assert_eq!(router.shards(), shards.len(), "router/shard count mismatch");
-        let mut covered = None;
-        for (i, s) in shards.iter().enumerate() {
-            assert_eq!(s.id, i, "shard {} passed at position {i}: not in boundary order", s.id);
-            let (lo, hi) = s.row_range();
-            if let Some(prev) = covered {
-                assert_eq!(lo, prev, "shard {i} row range [{lo}, {hi}) leaves a gap");
-            }
-            covered = Some(hi);
-        }
-        let workers = shards.into_iter().map(ShardWorker::spawn).collect();
-        ShardedPredictor { router, workers, dim, outputs, normalization: None }
+        Self::assemble(router, shards, dim, outputs, None)
     }
 
     /// Number of shards (== workers).
@@ -199,8 +231,9 @@ impl ShardedPredictor {
 
     /// Split any hierarchical-backed [`crate::model::Model`] (e.g. one
     /// loaded from an `HCKM` artifact) at `depth`, carrying the model's
-    /// recorded feature normalization onto the sharded path. Errors for
-    /// engines without a partition tree instead of panicking.
+    /// recorded feature normalization, its variance capability (GP
+    /// models) and its schema onto the sharded path. Errors for engines
+    /// without a partition tree instead of panicking.
     pub fn from_model(
         model: &dyn crate::model::Model,
         depth: usize,
@@ -211,25 +244,59 @@ impl ShardedPredictor {
                 model.schema().kind.name()
             ))
         })?;
-        Ok(ShardedPredictor::new(pred, depth)
-            .with_normalization(model.schema().normalization.clone()))
+        let mut sp = Self::build(pred, depth, model.variance_state());
+        sp.normalization = model.schema().normalization.clone();
+        sp.schema = Some(model.schema().to_json());
+        Ok(sp)
+    }
+
+    /// Shared assembly: validate boundary order and spawn one worker per
+    /// shard with the (optional) shared variance state attached.
+    fn assemble(
+        router: ShardRouter,
+        shards: Vec<Shard>,
+        dim: usize,
+        outputs: usize,
+        variance: Option<Arc<LazyVariance>>,
+    ) -> ShardedPredictor {
+        assert_eq!(router.shards(), shards.len(), "router/shard count mismatch");
+        let mut covered = None;
+        for (i, s) in shards.iter().enumerate() {
+            assert_eq!(s.id, i, "shard {} passed at position {i}: not in boundary order", s.id);
+            let (lo, hi) = s.row_range();
+            if let Some(prev) = covered {
+                assert_eq!(lo, prev, "shard {i} row range [{lo}, {hi}) leaves a gap");
+            }
+            covered = Some(hi);
+        }
+        let workers = shards
+            .into_iter()
+            .map(|s| ShardWorker::spawn(s, variance.clone()))
+            .collect();
+        ShardedPredictor {
+            router,
+            workers,
+            dim,
+            outputs,
+            normalization: None,
+            variance,
+            schema: None,
+        }
     }
 }
 
 impl Predictor for ShardedPredictor {
-    fn predict_batch(&self, q: &Mat) -> Mat {
+    fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+        crate::infer::validate_queries(&req.queries, self.dim)?;
+        Predictor::capabilities(self).check(req.want)?;
         // Apply the recorded training normalization (raw features on the
-        // wire, exactly like the unsharded Arc<dyn Model> path).
-        let normalized;
-        let q = match &self.normalization {
-            Some(ranges) => {
-                let mut m = q.clone();
-                crate::data::preprocess::apply_normalization(&mut m, ranges);
-                normalized = m;
-                &normalized
-            }
-            None => q,
-        };
+        // wire, exactly like the unsharded Arc<dyn Model> path — the
+        // decision itself is the shared helper, so the paths can't
+        // drift).
+        let normalized =
+            crate::infer::normalized_queries(req, self.normalization.as_deref());
+        let q: &Mat = normalized.as_ref().unwrap_or(&req.queries);
+        let t = Instant::now();
         // Scatter: request indices per destination shard.
         let mut per: Vec<Vec<usize>> = (0..self.workers.len()).map(|_| Vec::new()).collect();
         for i in 0..q.rows() {
@@ -243,38 +310,52 @@ impl Predictor for ShardedPredictor {
                 continue;
             }
             let sub = q.select_rows(&idx);
-            let rrx = self.workers[sid].submit(sub);
+            let rrx = self.workers[sid].submit(sub, req.want);
             pending.push((sid, idx, rrx));
         }
-        // Gather in request order.
-        let mut out = Mat::zeros(q.rows(), self.outputs);
+        // Gather in request order: mean always, variance/route columns
+        // when requested. Any shard failure aborts the whole request
+        // with a typed error naming the shard.
+        let mut mean = Mat::zeros(q.rows(), self.outputs);
+        let mut variance = if req.want.variance { Some(vec![0.0; q.rows()]) } else { None };
+        let mut routes = if req.want.leaf_route {
+            Some(vec![crate::infer::LeafRoute { shard: None, rows_lo: 0, rows_hi: 0 }; q.rows()])
+        } else {
+            None
+        };
         for (sid, idx, rrx) in pending {
             match rrx.recv() {
-                Ok(block) => {
+                Ok(Ok(block)) => {
                     for (k, &i) in idx.iter().enumerate() {
-                        out.row_mut(i).copy_from_slice(block.row(k));
+                        mean.row_mut(i).copy_from_slice(block.mean.row(k));
+                    }
+                    if let (Some(out), Some(v)) = (variance.as_mut(), block.variance.as_ref()) {
+                        for (k, &i) in idx.iter().enumerate() {
+                            out[i] = v[k];
+                        }
+                    }
+                    if let (Some(out), Some(r)) = (routes.as_mut(), block.routes.as_ref()) {
+                        for (k, &i) in idx.iter().enumerate() {
+                            out[i] = r[k];
+                        }
                     }
                 }
+                Ok(Err(e)) => return Err(e),
                 Err(_) => {
-                    // The worker died (panicked or its queue closed).
-                    // Return NaN — encoded as null on the JSON wire — so
-                    // clients cannot mistake the rows for predictions,
-                    // and count the drop in the shard's metrics.
-                    for &i in &idx {
-                        out.row_mut(i).fill(f64::NAN);
-                    }
+                    // The worker's queue or thread is gone entirely.
                     self.workers[sid]
                         .metrics
                         .dropped
                         .fetch_add(idx.len() as u64, Ordering::Relaxed);
-                    eprintln!(
-                        "shard {sid} worker dropped a sub-batch of {} queries",
-                        idx.len()
-                    );
+                    return Err(PredictError::Shard {
+                        shard: sid,
+                        message: "worker thread is gone (dropped the sub-batch)".into(),
+                    });
                 }
             }
         }
-        out
+        let per_query_ns = t.elapsed().as_nanos() as f64 / q.rows() as f64;
+        Ok(PredictResponse { mean, variance, routes, per_query_ns })
     }
 
     fn dim(&self) -> usize {
@@ -283,6 +364,14 @@ impl Predictor for ShardedPredictor {
 
     fn outputs(&self) -> usize {
         self.outputs
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { mean: true, variance: self.variance.is_some(), leaf_route: true }
+    }
+
+    fn schema_json(&self) -> Option<Json> {
+        self.schema.clone()
     }
 
     fn shard_metrics(&self) -> Vec<ShardSnapshot> {
@@ -333,6 +422,30 @@ mod tests {
         assert_eq!(served, 33);
         assert!(snaps.iter().all(|s| s.queue_depth == 0 && s.dropped == 0));
         assert!(snaps.iter().any(|s| s.ns_per_query > 0.0));
+    }
+
+    #[test]
+    fn typed_routes_report_shard_and_leaf_ranges() {
+        let pred = fitted(80, 17);
+        let sharded = ShardedPredictor::new(&pred, 1);
+        let mut rng = Rng::new(3);
+        let q = Mat::from_fn(12, 3, |_, _| rng.uniform(0.0, 1.0));
+        let resp = sharded
+            .predict(&PredictRequest::new(q.clone(), Want::mean_only().with_leaf_route()))
+            .unwrap();
+        let routes = resp.routes.unwrap();
+        assert_eq!(routes.len(), 12);
+        let tree = &pred.factors().tree;
+        for (i, r) in routes.iter().enumerate() {
+            assert!(r.shard.is_some());
+            let leaf = tree.route_leaf(q.row(i));
+            assert_eq!((r.rows_lo, r.rows_hi), (tree.nodes[leaf].lo, tree.nodes[leaf].hi));
+        }
+        // Variance is not available without the model's factors.
+        let err = sharded
+            .predict(&PredictRequest::new(q, Want::mean_only().with_variance()))
+            .unwrap_err();
+        assert_eq!(err.kind(), "unsupported");
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Typed inference protocol v2, end to end: capability negotiation, GP
+//! posterior variance against a dense oracle, sharded == in-process
+//! agreement at every cut depth, artifact round-trips, and the
+//! bad-frame-does-not-kill-the-worker regression.
+
+use hck::coordinator::{BatchPolicy, PredictionService, Predictor};
+use hck::gp::GpRegressor;
+use hck::hkernel::{HConfig, HPredictor};
+use hck::infer::{PredictRequest, Want};
+use hck::kernels::Gaussian;
+use hck::learn::{EngineSpec, TrainConfig};
+use hck::linalg::{Cholesky, Mat};
+use hck::model::{fit, load_any, Model, ModelSpec};
+use hck::shard::ShardedPredictor;
+use hck::util::rng::Rng;
+use std::sync::Arc;
+
+fn toy(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, d, |_, _| rng.uniform(0.0, 1.0));
+    let y: Vec<f64> = (0..n)
+        .map(|i| (4.0 * x[(i, 0)]).sin() + 0.05 * rng.normal())
+        .collect();
+    (x, y)
+}
+
+fn hcfg(r: usize, seed: u64) -> HConfig {
+    let mut cfg = HConfig::new(Gaussian::new(0.4), r).with_seed(seed);
+    cfg.n0 = r;
+    cfg.lambda_prime = 0.0;
+    cfg
+}
+
+/// Satellite: exact small-n dense GP variance vs the hierarchical
+/// batched pass, ≤ 1e-8. The oracle solves (K + λI) with a dense
+/// Cholesky over the densified hierarchical kernel; the column is the
+/// same k_hierarchical(X, x), so the comparison isolates the solver +
+/// quadratic-form path.
+#[test]
+fn gp_variance_matches_dense_oracle() {
+    let (x, y) = toy(80, 2, 1);
+    let lambda = 0.05;
+    let gp = GpRegressor::fit(&x, &y, hcfg(8, 2), lambda).unwrap();
+    let mut rng = Rng::new(9);
+    let q = Mat::from_fn(12, 2, |_, _| rng.uniform(-0.2, 1.2));
+    let got = gp.variance(&q).unwrap();
+
+    let f = gp.factors();
+    let mut k = hck::hkernel::densify::densify(f);
+    k.add_diag(lambda);
+    let chol = Cholesky::new_jittered(&k, 10).unwrap();
+    let prior = f.config.kind.diag_value();
+    for i in 0..q.rows() {
+        let v = HPredictor::column(f, q.row(i));
+        let sol = chol.solve(&v);
+        let quad: f64 = v.iter().zip(sol.iter()).map(|(a, b)| a * b).sum();
+        let want = (prior - quad).max(0.0);
+        assert!(
+            (got[i] - want).abs() <= 1e-8 * (1.0 + want.abs()),
+            "query {i}: {} vs dense {}",
+            got[i],
+            want
+        );
+        assert!(got[i] >= 0.0);
+    }
+}
+
+/// The tentpole acceptance: GP variance round-trips through an HCKM
+/// artifact and sharded serving, matching the in-process pass to ≤1e-10
+/// at **every** cut depth; mean and routes agree too, and the mean-only
+/// path is bitwise identical to the convenience surface.
+#[test]
+fn sharded_variance_and_routes_match_in_process_at_every_depth() {
+    let (x, y) = toy(240, 3, 7);
+    let train = hck::data::Dataset::new("toy", x, y, hck::data::Task::Regression).unwrap();
+    let ranges: Vec<(f64, f64)> = (0..3).map(|_| (0.0, 1.0)).collect();
+    let spec = ModelSpec::gp(hcfg(8, 3), 0.05).with_normalization(ranges);
+    let model = fit(&spec, &train).unwrap();
+
+    // Round-trip through the artifact first: the served variance must
+    // come from persisted state, not the fitting session.
+    let path = std::env::temp_dir().join(format!("hck_infer_{}.hckm", std::process::id()));
+    let path = path.to_string_lossy().into_owned();
+    model.save(&path).unwrap();
+    let loaded = load_any(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let mut rng = Rng::new(5);
+    let q = Mat::from_fn(40, 3, |_, _| rng.uniform(0.0, 1.0));
+    let want_all = Want::mean_only().with_variance().with_leaf_route();
+    let req = PredictRequest::new(q.clone(), want_all);
+    let reference = loaded.predict(&req).unwrap();
+    let ref_var = reference.variance.as_ref().unwrap();
+    let ref_routes = reference.routes.as_ref().unwrap();
+
+    // Bitwise mean-only contract (artifact side).
+    let mean_only = loaded.predict(&PredictRequest::mean_of(&q)).unwrap();
+    assert_eq!(mean_only.mean.as_slice(), reference.mean.as_slice());
+
+    let depth = loaded.hierarchical_predictor().unwrap().factors().tree.depth();
+    for cut in 0..=depth {
+        let sharded = ShardedPredictor::from_model(loaded.as_ref(), cut).unwrap();
+        let got = sharded.predict(&req).unwrap();
+        let got_var = got.variance.as_ref().unwrap();
+        let got_routes = got.routes.as_ref().unwrap();
+        for i in 0..q.rows() {
+            assert!(
+                (got.mean[(i, 0)] - reference.mean[(i, 0)]).abs()
+                    <= 1e-10 * (1.0 + reference.mean[(i, 0)].abs()),
+                "depth {cut} query {i} mean"
+            );
+            assert!(
+                (got_var[i] - ref_var[i]).abs() <= 1e-10 * (1.0 + ref_var[i].abs()),
+                "depth {cut} query {i} variance: {} vs {}",
+                got_var[i],
+                ref_var[i]
+            );
+            assert_eq!(
+                (got_routes[i].rows_lo, got_routes[i].rows_hi),
+                (ref_routes[i].rows_lo, ref_routes[i].rows_hi),
+                "depth {cut} query {i} route"
+            );
+            assert!(got_routes[i].shard.is_some() && ref_routes[i].shard.is_none());
+        }
+    }
+}
+
+/// Mean-only requests through the typed surface reproduce the
+/// convenience `predict_batch` path bitwise for every model kind.
+#[test]
+fn mean_only_requests_are_bitwise_identical_across_kinds() {
+    let spec = hck::data::spec_by_name("cadata").unwrap();
+    let (train, test) = hck::data::synthetic::generate(spec, 260, 40, 21);
+    let specs = vec![
+        ModelSpec::krr(TrainConfig::new(
+            Gaussian::new(0.5),
+            EngineSpec::Hierarchical { rank: 24 },
+        )),
+        ModelSpec::krr(TrainConfig::new(Gaussian::new(0.5), EngineSpec::Nystrom { rank: 24 })),
+        ModelSpec::krr(TrainConfig::new(Gaussian::new(0.5), EngineSpec::Fourier { rank: 24 })),
+        ModelSpec::gp(hcfg(16, 4), 0.05),
+        ModelSpec::kpca(hcfg(16, 5), 4),
+    ];
+    for spec in specs {
+        let model = fit(&spec, &train).unwrap();
+        let via_batch = model.predict_batch(&test.x);
+        let via_typed = model.predict(&PredictRequest::raw_mean(&test.x)).unwrap();
+        assert_eq!(
+            via_typed.mean.as_slice(),
+            via_batch.as_slice(),
+            "{}",
+            model.schema().kind.name()
+        );
+    }
+}
+
+/// Satellite regression: malformed queries (wrong dim, zero rows, NaN)
+/// produce typed BadRequest errors through the service and the workers
+/// stay alive — including the sharded path behind the dynamic batcher.
+#[test]
+fn bad_requests_do_not_kill_serving_threads() {
+    let (x, y) = toy(150, 3, 11);
+    let train = hck::data::Dataset::new("toy", x, y, hck::data::Task::Regression).unwrap();
+    let model = fit(&ModelSpec::gp(hcfg(8, 6), 0.05), &train).unwrap();
+    let sharded = ShardedPredictor::from_model(model.as_ref(), 1).unwrap();
+    assert!(sharded.shards() >= 2);
+    assert!(sharded.capabilities().variance);
+    let svc = PredictionService::start(Arc::new(sharded), BatchPolicy::default());
+
+    // Wrong dimension.
+    assert_eq!(
+        svc.predict_typed(vec![0.5; 7], Want::mean_only()).unwrap_err().kind(),
+        "bad_request"
+    );
+    // Non-finite feature.
+    assert_eq!(
+        svc.predict_typed(vec![0.5, f64::NAN, 0.5], Want::mean_only())
+            .unwrap_err()
+            .kind(),
+        "bad_request"
+    );
+    // Empty.
+    assert_eq!(
+        svc.predict_typed(vec![], Want::mean_only()).unwrap_err().kind(),
+        "bad_request"
+    );
+    // The loop is alive and still serves every capability.
+    let reply = svc
+        .predict_typed(
+            vec![0.5, 0.5, 0.5],
+            Want::mean_only().with_variance().with_leaf_route(),
+        )
+        .unwrap();
+    assert!(reply.mean[0].is_finite());
+    let var = reply.variance.unwrap();
+    assert!(var.is_finite() && var >= 0.0);
+    assert!(reply.route.unwrap().shard.is_some());
+    svc.shutdown();
+}
+
+/// Capability negotiation through a live service: a mean-only engine
+/// rejects variance requests with a typed error; the GP grants them.
+#[test]
+fn service_negotiates_capabilities_per_model() {
+    let spec = hck::data::spec_by_name("cadata").unwrap();
+    let (train, _) = hck::data::synthetic::generate(spec, 200, 10, 31);
+    let nys = fit(
+        &ModelSpec::krr(TrainConfig::new(Gaussian::new(0.5), EngineSpec::Nystrom { rank: 16 })),
+        &train,
+    )
+    .unwrap();
+    let svc = PredictionService::start_model(Arc::from(nys), BatchPolicy::default());
+    assert!(!svc.capabilities().variance && !svc.capabilities().leaf_route);
+    let err = svc
+        .predict_typed(vec![0.1; train.d()], Want::mean_only().with_variance())
+        .unwrap_err();
+    assert_eq!(err.kind(), "unsupported");
+    let ok = svc.predict_typed(vec![0.1; train.d()], Want::mean_only()).unwrap();
+    assert_eq!(ok.mean.len(), 1);
+    svc.shutdown();
+
+    let gp = fit(&ModelSpec::gp(hcfg(12, 8), 0.05), &train).unwrap();
+    let svc = PredictionService::start_model(Arc::from(gp), BatchPolicy::default());
+    let caps = svc.capabilities();
+    assert!(caps.variance && caps.leaf_route);
+    let reply = svc
+        .predict_typed(vec![0.1; train.d()], Want::mean_only().with_variance())
+        .unwrap();
+    assert!(reply.variance.unwrap() >= 0.0);
+    svc.shutdown();
+}

@@ -1,13 +1,15 @@
 //! Hot-path microbenchmarks — the profiling substrate for the
 //! EXPERIMENTS.md §Perf iteration log.
 //!
-//! Covers: the gemm microkernel (GFLOP/s at factor-relevant sizes),
-//! native kernel-block evaluation (gemm expansion vs naive), the PJRT
-//! AOT path per tile, Cholesky, the O(nr) matvec and the per-query
-//! Algorithm-3 latency, coordinator batching overhead, and the
-//! **parallel matvec thread-scaling sweep**, whose measurements are also
-//! written to `BENCH_hotpath.json` (one row per (op, n, r, threads) with
-//! ns/op) so every PR leaves a machine-readable perf trajectory.
+//! Covers: the packed BLAS-3 core (gemm GFLOP/s at square and
+//! Nyström-rectangle factor sizes, syrk, and the **par_gemm
+//! thread-scaling sweep**), native kernel-block evaluation (fused gemm
+//! expansion vs naive), the PJRT AOT path per tile, Cholesky, the O(nr)
+//! matvec and the per-query Algorithm-3 latency, coordinator batching
+//! overhead, and the **parallel matvec thread-scaling sweep** — all
+//! written to `BENCH_hotpath.json` (one row per (op, n, r, threads,
+//! batch) with ns/op and GFLOP/s where meaningful) so every PR leaves a
+//! machine-readable perf trajectory.
 //!
 //! `HCK_BENCH_QUICK=1` shrinks every size for the CI smoke job; the
 //! default sizes include the n=50k thread-scaling sweep the perf gate
@@ -18,8 +20,8 @@ mod common;
 
 use common::*;
 use hck::kernels::{kernel_cross, Gaussian, Laplace};
-use hck::linalg::{gemm, Cholesky, Mat, Trans};
-use hck::util::bench::{fmt_secs, Bench, BenchJson, Table};
+use hck::linalg::{gemm, par_gemm_with, syrk, Cholesky, Mat, Trans};
+use hck::util::bench::{fmt_secs, gflops, Bench, BenchJson, Table};
 use hck::util::json::Json;
 use hck::util::parallel::{auto_threads, default_threads};
 use hck::util::rng::Rng;
@@ -41,8 +43,8 @@ fn main() {
         println!("(HCK_BENCH_QUICK: reduced sizes)\n");
     }
 
-    // ---- gemm ----
-    println!("— gemm (C = A·B, square) —");
+    // ---- gemm (packed core): squares at factor sizes ----
+    println!("— gemm (C = A·B, square; packed core) —");
     let gemm_sizes: &[usize] = if quick { &[64, 128] } else { &[64, 128, 256, 512] };
     let mut table = Table::new(&["size", "median", "GFLOP/s"]);
     for &n in gemm_sizes {
@@ -57,15 +59,121 @@ fn main() {
         table.row(&[
             format!("{n}"),
             fmt_secs(m.median()),
-            format!("{:.2}", flops / m.median() / 1e9),
+            format!("{:.2}", gflops(flops, m.median())),
         ]);
         report.row(vec![
             ("op", Json::Str("gemm".into())),
             ("n", Json::Num(n as f64)),
             ("ns_per_op", Json::Num(m.median() * 1e9)),
+            ("gflops", Json::Num(gflops(flops, m.median()))),
         ]);
     }
     table.print();
+
+    // ---- gemm: Nyström / leaf-block rectangles (n×r)·(r×n) — the
+    // shapes the O(nr²) chain actually multiplies ----
+    println!("\n— gemm (C = A·B, n×r by r×n rectangles) —");
+    let rect_shapes: &[(usize, usize)] =
+        if quick { &[(512, 64)] } else { &[(1024, 512), (2048, 128), (4096, 64)] };
+    let mut table = Table::new(&["n", "r", "median", "GFLOP/s"]);
+    for &(n, r) in rect_shapes {
+        let a = Mat::from_fn(n, r, |_, _| rng.normal());
+        let b = Mat::from_fn(r, n, |_, _| rng.normal());
+        let mut c = Mat::zeros(n, n);
+        let m = bench.run("gemm_rect", || {
+            gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+            c.as_slice()[0]
+        });
+        let flops = 2.0 * (n * n * r) as f64;
+        table.row(&[
+            n.to_string(),
+            r.to_string(),
+            fmt_secs(m.median()),
+            format!("{:.2}", gflops(flops, m.median())),
+        ]);
+        report.row(vec![
+            ("op", Json::Str("gemm_rect".into())),
+            ("n", Json::Num(n as f64)),
+            ("r", Json::Num(r as f64)),
+            ("ns_per_op", Json::Num(m.median() * 1e9)),
+            ("gflops", Json::Num(gflops(flops, m.median()))),
+        ]);
+    }
+    table.print();
+
+    // ---- syrk: the Gram/Schur updates (upper triangle + mirror) ----
+    println!("\n— syrk (C = A·Aᵀ, A n×r) —");
+    let syrk_shapes: &[(usize, usize)] =
+        if quick { &[(256, 64)] } else { &[(512, 512), (1024, 256)] };
+    let mut table = Table::new(&["n", "r", "median", "GFLOP/s"]);
+    for &(n, r) in syrk_shapes {
+        let a = Mat::from_fn(n, r, |_, _| rng.normal());
+        let mut c = Mat::zeros(n, n);
+        let m = bench.run("syrk", || {
+            syrk(1.0, &a, Trans::No, 0.0, &mut c);
+            c.as_slice()[0]
+        });
+        // Triangle-only accumulation: ~n²·r madds instead of 2·n²·r.
+        let flops = (n * n * r) as f64;
+        table.row(&[
+            n.to_string(),
+            r.to_string(),
+            fmt_secs(m.median()),
+            format!("{:.2}", gflops(flops, m.median())),
+        ]);
+        report.row(vec![
+            ("op", Json::Str("syrk".into())),
+            ("n", Json::Num(n as f64)),
+            ("r", Json::Num(r as f64)),
+            ("ns_per_op", Json::Num(m.median() * 1e9)),
+            ("gflops", Json::Num(gflops(flops, m.median()))),
+        ]);
+    }
+    table.print();
+
+    // ---- par_gemm thread scaling on the largest square (the perf-gate
+    // rows for the parallel BLAS layer; bitwise identical to gemm) ----
+    let pg_n: usize = if quick { 256 } else { 1024 };
+    let mut sweep_threads = vec![1usize, 2, 4];
+    let dt = default_threads();
+    if dt > 4 {
+        sweep_threads.push(dt);
+    }
+    println!("\n— par_gemm thread scaling (n={pg_n}, threads: {sweep_threads:?}) —");
+    {
+        let a = Mat::from_fn(pg_n, pg_n, |_, _| rng.normal());
+        let b = Mat::from_fn(pg_n, pg_n, |_, _| rng.normal());
+        let mut c = Mat::zeros(pg_n, pg_n);
+        let flops = 2.0 * (pg_n as f64).powi(3);
+        let mut table = Table::new(&["threads", "median", "GFLOP/s", "speedup"]);
+        let mut base_ns = f64::NAN;
+        for &t in &sweep_threads {
+            let m = bench.run("par_gemm", || {
+                par_gemm_with(t, 1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+                c.as_slice()[0]
+            });
+            let ns = m.median() * 1e9;
+            if t == 1 {
+                base_ns = ns;
+            }
+            let speedup = base_ns / ns;
+            table.row(&[
+                t.to_string(),
+                fmt_secs(m.median()),
+                format!("{:.2}", gflops(flops, m.median())),
+                format!("{speedup:.2}x"),
+            ]);
+            report.row(vec![
+                ("op", Json::Str("par_gemm".into())),
+                ("n", Json::Num(pg_n as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("ns_per_op", Json::Num(ns)),
+                ("speedup_vs_1t", Json::Num(speedup)),
+                ("gflops", Json::Num(gflops(flops, m.median()))),
+            ]);
+        }
+        table.print();
+    }
 
     // ---- kernel blocks: native ----
     let kb = if quick { 128 } else { 512 };

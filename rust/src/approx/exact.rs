@@ -4,8 +4,8 @@
 //! against (there computed on an EC2 cluster; here at reduced n).
 
 use crate::error::Result;
-use crate::kernels::{kernel_block, kernel_cross, KernelKind};
-use crate::linalg::{matmul, Cholesky, Mat, Trans};
+use crate::kernels::{par_kernel_block, par_kernel_cross, KernelKind};
+use crate::linalg::{par_matmul, Cholesky, Mat, Trans};
 
 /// Fitted dense KRR.
 pub struct ExactKrr {
@@ -16,17 +16,18 @@ pub struct ExactKrr {
 }
 
 impl ExactKrr {
-    /// Fit: α = (K + λI)^{-1} y.
+    /// Fit: α = (K + λI)^{-1} y. The n×n kernel block is evaluated
+    /// across the worker pool (top of the fit chain).
     pub fn fit(kind: KernelKind, x: &Mat, y: &Mat, lambda: f64) -> Result<ExactKrr> {
-        let mut k = kernel_block(kind, x);
+        let mut k = par_kernel_block(kind, x);
         k.add_diag(lambda);
         let chol = Cholesky::new_jittered(&k, 30)?;
         Ok(ExactKrr { kind, x: x.clone(), alpha: chol.solve_mat(y) })
     }
 
-    /// Predict: K(Q, X) α.
+    /// Predict: K(Q, X) α (pool-parallel kernel block + product).
     pub fn predict(&self, q: &Mat) -> Mat {
-        matmul(&kernel_cross(self.kind, q, &self.x), Trans::No, &self.alpha, Trans::No)
+        par_matmul(&par_kernel_cross(self.kind, q, &self.x), Trans::No, &self.alpha, Trans::No)
     }
 
     /// Dual coefficients.

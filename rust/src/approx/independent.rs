@@ -50,9 +50,9 @@ impl IndependentKrr {
     ) -> Result<IndependentKrr> {
         let mut alpha: Vec<Option<Mat>> = (0..tree.nodes.len()).map(|_| None).collect();
         for &leaf in &tree.leaves() {
-            let rows: Vec<usize> = tree.node_points(leaf).to_vec();
-            let xl = x.select_rows(&rows);
-            let yl = y.select_rows(&rows);
+            let rows = tree.node_points(leaf);
+            let xl = x.select_rows(rows);
+            let yl = y.select_rows(rows);
             let mut k = kernel_block(kind, &xl);
             k.add_diag(lambda);
             let chol = Cholesky::new_jittered(&k, 30)?;

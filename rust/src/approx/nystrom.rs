@@ -6,8 +6,8 @@
 //! primal: w = (ΦᵀΦ + λ I_r)^{-1} Φᵀ y, at O(nr²).
 
 use crate::error::Result;
-use crate::kernels::{kernel_cross, KernelKind};
-use crate::linalg::{gemm, matmul, Cholesky, Mat, Trans};
+use crate::kernels::{kernel_cross, par_kernel_cross, KernelKind};
+use crate::linalg::{matmul, par_syrk, Cholesky, Mat, Trans};
 use crate::util::rng::Rng;
 
 /// The Nyström feature map.
@@ -47,9 +47,11 @@ impl NystromFeatures {
     }
 
     /// φ(Q) for a block of points: rows are L^{-1} k(X̲, q), i.e. we solve
-    /// Lᵀ-systems against rows of K(Q, X̲).
+    /// Lᵀ-systems against rows of K(Q, X̲). The n×r kernel block — the
+    /// dominant cost of the Nyström fit — is evaluated across the worker
+    /// pool.
     pub fn transform(&self, q: &Mat) -> Mat {
-        let kql = kernel_cross(self.kind, q, &self.landmarks);
+        let kql = par_kernel_cross(self.kind, q, &self.landmarks);
         // Row y of output solves L y = k(X̲, q) → y = L^{-1} k.
         self.chol.forward_solve_rows(&kql)
     }
@@ -111,8 +113,10 @@ impl NystromKrr {
 pub fn primal_ridge(phi: &Mat, y: &Mat, lambda: f64) -> Result<Mat> {
     let r = phi.cols();
     let mut gram = Mat::zeros(r, r);
-    gemm(1.0, phi, Trans::Yes, phi, Trans::No, 0.0, &mut gram);
-    gram.symmetrize();
+    // ΦᵀΦ as a blocked rank-k update: syrk computes the upper triangle
+    // through the packed core and mirrors it, so the Gram matrix comes
+    // back exactly symmetric — no symmetrize pass needed.
+    par_syrk(1.0, phi, Trans::Yes, 0.0, &mut gram);
     gram.add_diag(lambda.max(1e-12));
     let rhs = matmul(phi, Trans::Yes, y, Trans::No);
     let chol = Cholesky::new_jittered(&gram, 30)?;

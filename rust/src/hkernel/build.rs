@@ -179,6 +179,11 @@ impl HFactors {
         let use_parallel = threads > 1 && eval.parallel_safe();
 
         let mut f = HFactors {
+            // The one deliberate full-data copy of the build: HFactors
+            // outlives the caller's borrow (predictors hold it in an
+            // Arc), so it must own the coordinates for OOS leaf kernels.
+            // Removing it entirely is the ROADMAP "streaming/out-of-core
+            // build" item, not a borrow fix.
             x: x.clone(),
             landmark_idx: vec![Vec::new(); nn],
             landmarks: vec![None; nn],
@@ -202,24 +207,29 @@ impl HFactors {
                 continue;
             }
             let parent = f.tree.nodes[i].parent;
-            let mut pts: Vec<usize> = f.tree.node_points(i).to_vec();
-            if f.config.avoid_parent_landmarks {
-                if let Some(p) = parent {
-                    let excluded: std::collections::HashSet<usize> =
-                        f.landmark_idx[p].iter().copied().collect();
-                    let filtered: Vec<usize> =
-                        pts.iter().copied().filter(|q| !excluded.contains(q)).collect();
-                    // Keep at least one candidate; fall back to overlap if
-                    // the exclusion would empty the pool.
-                    if !filtered.is_empty() {
-                        pts = filtered;
+            // Sample against the tree's own index slice; a copy is made
+            // only when parent-landmark exclusion actually filters it.
+            let idx: Vec<usize> = {
+                let pts: &[usize] = f.tree.node_points(i);
+                let filtered: Option<Vec<usize>> = match parent {
+                    Some(p) if f.config.avoid_parent_landmarks => {
+                        let excluded: std::collections::HashSet<usize> =
+                            f.landmark_idx[p].iter().copied().collect();
+                        let kept: Vec<usize> =
+                            pts.iter().copied().filter(|q| !excluded.contains(q)).collect();
+                        // Keep at least one candidate; fall back to overlap
+                        // if the exclusion would empty the pool.
+                        if kept.is_empty() { None } else { Some(kept) }
                     }
-                }
-            }
-            let r_i = f.config.rank.min(pts.len()).max(1);
-            let mut idx: Vec<usize> =
-                rng.sample_indices(pts.len(), r_i).iter().map(|&k| pts[k]).collect();
-            idx.sort_unstable(); // determinism niceties; order is irrelevant
+                    _ => None,
+                };
+                let pool: &[usize] = filtered.as_deref().unwrap_or(pts);
+                let r_i = f.config.rank.min(pool.len()).max(1);
+                let mut idx: Vec<usize> =
+                    rng.sample_indices(pool.len(), r_i).iter().map(|&k| pool[k]).collect();
+                idx.sort_unstable(); // determinism niceties; order is irrelevant
+                idx
+            };
             f.landmarks[i] = Some(x.select_rows(&idx));
             f.landmark_idx[i] = idx;
         }
@@ -357,8 +367,11 @@ fn node_factor<E: BlockEvaluator + ?Sized>(
 ) -> NodeFactor {
     let parent = f.tree.nodes[i].parent;
     if f.tree.nodes[i].is_leaf() {
-        let pts: Vec<usize> = f.tree.node_points(i).to_vec();
-        let xi = f.x.select_rows(&pts);
+        // Borrow the tree's index slice directly — this runs once per
+        // leaf inside the build loop, so the per-node Vec copy was pure
+        // allocator traffic.
+        let pts: &[usize] = f.tree.node_points(i);
+        let xi = f.x.select_rows(pts);
         let mut aii = eval.block(kind, &xi, &xi);
         aii.symmetrize();
         for a in 0..pts.len() {
@@ -369,7 +382,7 @@ fn node_factor<E: BlockEvaluator + ?Sized>(
                 eval,
                 kind,
                 &xi,
-                &pts,
+                pts,
                 f.landmarks[p].as_ref().unwrap(),
                 &f.landmark_idx[p],
                 lp,
@@ -516,8 +529,8 @@ mod tests {
                 crate::linalg::Trans::No,
             );
             // Rebuild K′(X_i, X̲_p) directly.
-            let pts: Vec<usize> = f.tree.node_points(leaf).to_vec();
-            let xi = x.select_rows(&pts);
+            let pts = f.tree.node_points(leaf);
+            let xi = x.select_rows(pts);
             let mut want = crate::kernels::kernel_cross(
                 f.config.kind,
                 &xi,

@@ -13,7 +13,7 @@
 //! one-vs-all multiclass classifier evaluates all classes in one walk.
 
 use super::build::HFactors;
-use crate::linalg::{gemm, gemv, matmul, Mat, Trans};
+use crate::linalg::{gemm, gemv, matmul, par_matmul, Mat, Trans};
 
 /// Precomputed out-of-sample predictor for a fixed weight block `W`
 /// (n x m, original order) — typically `W = (A + λI)^{-1} Y`.
@@ -59,9 +59,11 @@ impl HPredictor {
                 continue;
             }
             let ei = if nd.is_leaf() {
+                // Fit-time precomputation at the top of the chain: the
+                // parallel BLAS entries engage the pool on large blocks.
                 let u = f.u[i].as_ref().unwrap();
                 let wi = w_tree.row_range(nd.lo, nd.hi);
-                matmul(u, Trans::Yes, &wi, Trans::No)
+                par_matmul(u, Trans::Yes, &wi, Trans::No)
             } else {
                 let r_own = f.landmark_idx[i].len();
                 let mut esum = Mat::zeros(r_own, m);
@@ -69,7 +71,7 @@ impl HPredictor {
                     esum.axpy(1.0, e[ch].as_ref().unwrap());
                 }
                 let w = f.w[i].as_ref().unwrap();
-                matmul(w, Trans::Yes, &esum, Trans::No)
+                par_matmul(w, Trans::Yes, &esum, Trans::No)
             };
             e[i] = Some(ei);
         }
@@ -246,11 +248,14 @@ impl HPredictor {
         let kind = f.config.kind;
 
         // Leaf term: Z = W_leafᵀ K(X_leaf, Q)  (m x g), on the leaf
-        // blocks materialized at construction.
+        // blocks materialized at construction. Top of the serving chain:
+        // the parallel kernel/gemm entries split large groups across the
+        // pool and degrade to the packed sequential core for small ones
+        // (or when an enclosing pass already holds the pool).
         let x_leaf = self.leaf_x[leaf].as_ref().unwrap();
-        let kq = crate::kernels::kernel_cross(kind, x_leaf, q);
+        let kq = crate::kernels::par_kernel_cross(kind, x_leaf, q);
         let w_leaf = self.leaf_w[leaf].as_ref().unwrap();
-        let mut z = matmul(w_leaf, Trans::Yes, &kq, Trans::No);
+        let mut z = par_matmul(w_leaf, Trans::Yes, &kq, Trans::No);
 
         let path = {
             // Path root → leaf via parent pointers (routing already done).
@@ -267,7 +272,7 @@ impl HPredictor {
             // Shared d state: D = Σ_{p(leaf)}^{-1} K(X̲_{p(leaf)}, Q)  (r x g).
             let parent = f.tree.nodes[leaf].parent.unwrap();
             let lm = f.landmarks[parent].as_ref().unwrap();
-            let kp = crate::kernels::kernel_cross(kind, lm, q);
+            let kp = crate::kernels::par_kernel_cross(kind, lm, q);
             let mut d = f.sigma_chol[parent].as_ref().unwrap().solve_mat(&kp);
 
             for idx in (1..path.len()).rev() {

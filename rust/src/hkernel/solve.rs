@@ -31,7 +31,7 @@
 
 use super::build::HFactors;
 use crate::error::Result;
-use crate::linalg::{gemm, matmul, Cholesky, Lu, Mat, Trans};
+use crate::linalg::{gemm, matmul, par_gemm, par_matmul, Cholesky, Lu, Mat, Trans};
 use crate::util::parallel::{auto_threads, parallel_map};
 
 /// Per-leaf factorization state.
@@ -370,18 +370,22 @@ fn inner_factor(
         shat.axpy(1.0, s[ch].as_ref().unwrap());
     }
     shat.symmetrize();
-    // G_i
+    // G_i. The r×r chain goes through the parallel BLAS entries: on wide
+    // levels this runs inside the level's own parallel pass and degrades
+    // to the packed sequential core, but at the narrow top of the tree
+    // (ultimately a single root node per level) the row-panel split is
+    // the only parallelism available — bitwise identical either way.
     let sig = f.sigma[i].as_ref().unwrap();
     let mut g = sig.clone();
     if let Some(p) = nd.parent {
         let w = f.w[i].as_ref().unwrap();
         let sp = f.sigma[p].as_ref().unwrap();
-        let wsp = matmul(w, Trans::No, sp, Trans::No);
-        gemm(-1.0, &wsp, Trans::No, w, Trans::Yes, 1.0, &mut g);
+        let wsp = par_matmul(w, Trans::No, sp, Trans::No);
+        par_gemm(-1.0, &wsp, Trans::No, w, Trans::Yes, 1.0, &mut g);
         g.symmetrize();
     }
     // (I + G Ŝ)
-    let mut igs = matmul(&g, Trans::No, &shat, Trans::No);
+    let mut igs = par_matmul(&g, Trans::No, &shat, Trans::No);
     igs.add_diag(1.0);
     let lu = Lu::new(&igs)?;
     let ldi = lu.logabsdet();
@@ -389,10 +393,10 @@ fn inner_factor(
         // T_i = Ŝ − Ŝ Φ(Ŝ), S_i = W_iᵀ T_i W_i
         let phi_s = phi(&g, &lu, &shat);
         let mut t = shat.clone();
-        gemm(-1.0, &shat, Trans::No, &phi_s, Trans::No, 1.0, &mut t);
+        par_gemm(-1.0, &shat, Trans::No, &phi_s, Trans::No, 1.0, &mut t);
         let w = f.w[i].as_ref().unwrap();
-        let tw = matmul(&t, Trans::No, w, Trans::No);
-        Some(matmul(w, Trans::Yes, &tw, Trans::No))
+        let tw = par_matmul(&t, Trans::No, w, Trans::No);
+        Some(par_matmul(w, Trans::Yes, &tw, Trans::No))
     } else {
         None
     };
@@ -413,17 +417,20 @@ fn leaf_factor(
     let mut h = a.clone();
     h.add_diag(lambda);
     if let Some(p) = nd.parent {
-        // H_j = A + λI − U Σ_p Uᵀ
+        // H_j = A + λI − U Σ_p Uᵀ. Parallel BLAS entries: with many
+        // leaves these run inside the per-leaf parallel pass (degrading
+        // to the packed sequential core); on trees with few large leaf
+        // blocks the row-panel split keeps the cores busy instead.
         let u = f.u[i].as_ref().unwrap();
         let sig = f.sigma[p].as_ref().unwrap();
-        let us = matmul(u, Trans::No, sig, Trans::No);
-        gemm(-1.0, &us, Trans::No, u, Trans::Yes, 1.0, &mut h);
+        let us = par_matmul(u, Trans::No, sig, Trans::No);
+        par_gemm(-1.0, &us, Trans::No, u, Trans::Yes, 1.0, &mut h);
         h.symmetrize();
         let chol = Cholesky::new_jittered(&h, 30)?;
         let zu = chol.solve_mat(u);
         let ldj = chol.logdet();
         // S_j = U_jᵀ Z_j
-        let sj = matmul(u, Trans::Yes, &zu, Trans::No);
+        let sj = par_matmul(u, Trans::Yes, &zu, Trans::No);
         Ok((LeafState { chol, zu }, Some(sj), ldj))
     } else {
         // Single-leaf tree: A + λI is the whole matrix.

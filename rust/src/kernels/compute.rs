@@ -3,18 +3,27 @@
 //! `K(X, Y)` for point blocks X (m x d) and Y (n x d) dominates the cost
 //! of instantiating the hierarchical factors, the Nyström features and the
 //! exact baseline. For squared-L2 kernels it is computed through the
-//! expansion |x−y|² = |x|² + |y|² − 2⟨x,y⟩, turning the O(mnd) distance
-//! work into one gemm plus O(mn) post-processing — exactly the tiling the
-//! L1 Pallas kernel performs on TPU (python/compile/kernels/pairwise.py).
-//! The L1-metric Laplace kernel uses a blocked direct loop.
+//! expansion |x−y|² = |x|² + |y|² − 2⟨x,y⟩ with the squared-norm terms
+//! and the kernel profile **fused into the packed gemm as a per-strip
+//! epilogue** ([`crate::linalg::gemm_epilogue`]): each output strip is
+//! finished while still cache-hot, with no second full sweep over an
+//! intermediate Gram buffer — exactly the tiling the L1 Pallas kernel
+//! performs on TPU (python/compile/kernels/pairwise.py). The L1-metric
+//! Laplace kernel uses a blocked direct loop.
+//!
+//! [`par_kernel_cross`] / [`par_kernel_block`] are the pool-parallel
+//! variants for top-of-chain call sites (exact/Nyström/KPCA fits, the
+//! leaf-grouped serving path): disjoint output row panels, bitwise
+//! identical to the sequential evaluation for every thread count.
 //!
 //! [`BlockEvaluator`] abstracts the implementation so the PJRT runtime
 //! (`crate::runtime`) can substitute the AOT-compiled XLA executable for
 //! the same computation at runtime.
 
 use super::base::{KernelKind, Metric};
-use crate::linalg::blas::{gemm, Trans};
+use crate::linalg::blas::{par_gemm_epilogue, Trans};
 use crate::linalg::matrix::{l1dist, Mat};
+use crate::util::parallel::{default_threads, disjoint_slices, run_parallel};
 
 /// Strategy interface for evaluating kernel blocks.
 ///
@@ -50,12 +59,7 @@ pub struct NativeEvaluator;
 
 impl BlockEvaluator for NativeEvaluator {
     fn eval_block(&self, kind: KernelKind, x: &Mat, y: &Mat, out: &mut Mat) {
-        assert_eq!(x.cols(), y.cols(), "kernel block: dim mismatch");
-        assert_eq!(out.shape(), (x.rows(), y.rows()));
-        match kind.metric() {
-            Metric::SqL2 => sql2_block(kind, x, y, out),
-            Metric::L1 => l1_block(kind, x, y, out),
-        }
+        eval_block_threads(1, kind, x, y, out);
     }
 
     fn parallel_safe(&self) -> bool {
@@ -63,36 +67,71 @@ impl BlockEvaluator for NativeEvaluator {
     }
 }
 
-/// Squared-L2 kernels via the gemm expansion.
-fn sql2_block(kind: KernelKind, x: &Mat, y: &Mat, out: &mut Mat) {
-    let m = x.rows();
-    let n = y.rows();
-    // out = -2 X Yᵀ
-    gemm(-2.0, x, Trans::No, y, Trans::Yes, 0.0, out);
-    // Row norms.
-    let xn: Vec<f64> = (0..m).map(|i| sq_norm(x.row(i))).collect();
-    let yn: Vec<f64> = (0..n).map(|j| sq_norm(y.row(j))).collect();
-    for i in 0..m {
-        let xi = xn[i];
-        let row = out.row_mut(i);
-        for j in 0..n {
-            // Guard tiny negative values from cancellation.
-            let d2 = (row[j] + xi + yn[j]).max(0.0);
-            row[j] = kind.profile(d2);
-        }
+/// Shared implementation behind the sequential evaluator and the
+/// `par_kernel_*` entries; `threads = 1` is the sequential path.
+fn eval_block_threads(threads: usize, kind: KernelKind, x: &Mat, y: &Mat, out: &mut Mat) {
+    assert_eq!(x.cols(), y.cols(), "kernel block: dim mismatch");
+    assert_eq!(out.shape(), (x.rows(), y.rows()));
+    match kind.metric() {
+        Metric::SqL2 => sql2_block(threads, kind, x, y, out),
+        Metric::L1 => l1_block(threads, kind, x, y, out),
     }
 }
 
-/// L1-metric kernels: blocked direct evaluation.
-fn l1_block(kind: KernelKind, x: &Mat, y: &Mat, out: &mut Mat) {
-    const B: usize = 32;
+/// Squared-L2 kernels via the gemm expansion, with the norm terms and
+/// the kernel profile fused into the packed core's per-strip epilogue —
+/// every K tile leaves the gemm already finished, with no second O(mn)
+/// sweep over a Gram intermediate.
+fn sql2_block(threads: usize, kind: KernelKind, x: &Mat, y: &Mat, out: &mut Mat) {
     let m = x.rows();
     let n = y.rows();
-    for i0 in (0..m).step_by(B) {
+    let xn: Vec<f64> = (0..m).map(|i| sq_norm(x.row(i))).collect();
+    let yn: Vec<f64> = (0..n).map(|j| sq_norm(y.row(j))).collect();
+    let epi = |i: usize, j0: usize, seg: &mut [f64]| {
+        let xi = xn[i];
+        for (off, v) in seg.iter_mut().enumerate() {
+            // Guard tiny negative values from cancellation.
+            let d2 = (*v + xi + yn[j0 + off]).max(0.0);
+            *v = kind.profile(d2);
+        }
+    };
+    // out = profile(-2 X Yᵀ + |x|² + |y|²), strip by strip.
+    par_gemm_epilogue(threads, -2.0, x, Trans::No, y, Trans::Yes, 0.0, out, &epi);
+}
+
+/// L1-metric kernels: blocked direct evaluation, row-panel parallel when
+/// `threads > 1` (each output entry is an independent pure function of
+/// its point pair, so the split cannot change a bit).
+fn l1_block(threads: usize, kind: KernelKind, x: &Mat, y: &Mat, out: &mut Mat) {
+    let m = x.rows();
+    let n = y.rows();
+    if m == 0 || n == 0 {
+        return;
+    }
+    let par_ok = m * n * x.cols().max(1) >= crate::linalg::blas::PAR_MIN_VOLUME;
+    let threads = if par_ok { threads.max(1) } else { 1 };
+    let chunk = m.div_ceil(threads);
+    let ranges: Vec<(usize, usize)> = (0..threads)
+        .map(|t| (t * chunk, ((t + 1) * chunk).min(m)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect();
+    let elems: Vec<(usize, usize)> = ranges.iter().map(|&(lo, hi)| (lo * n, hi * n)).collect();
+    let slices = disjoint_slices(out.as_mut_slice(), &elems);
+    let items: Vec<((usize, usize), &mut [f64])> = ranges.into_iter().zip(slices).collect();
+    run_parallel(threads, items, |((lo, hi), c)| l1_rows(kind, x, y, lo, hi, c));
+}
+
+/// The blocked direct loop over rows [lo, hi) of K(X, Y), writing into a
+/// slice that covers exactly those rows.
+fn l1_rows(kind: KernelKind, x: &Mat, y: &Mat, lo: usize, hi: usize, c: &mut [f64]) {
+    const B: usize = 32;
+    let n = y.rows();
+    for i0 in (lo..hi).step_by(B) {
         for j0 in (0..n).step_by(B) {
-            for i in i0..(i0 + B).min(m) {
+            for i in i0..(i0 + B).min(hi) {
                 let xi = x.row(i);
-                let row = out.row_mut(i);
+                let off = (i - lo) * n;
+                let row = &mut c[off..off + n];
                 for j in j0..(j0 + B).min(n) {
                     row[j] = kind.profile(l1dist(xi, y.row(j)));
                 }
@@ -109,17 +148,39 @@ fn sq_norm(v: &[f64]) -> f64 {
 /// Evaluate the symmetric kernel matrix K(X, X) with exact symmetry and
 /// exact unit diagonal.
 pub fn kernel_block(kind: KernelKind, x: &Mat) -> Mat {
-    let mut out = NativeEvaluator.block(kind, x, x);
-    out.symmetrize();
-    for i in 0..x.rows() {
-        out[(i, i)] = kind.diag_value();
-    }
-    out
+    kernel_block_threads(1, kind, x)
 }
 
 /// Evaluate the cross matrix K(X, Y) with the native evaluator.
 pub fn kernel_cross(kind: KernelKind, x: &Mat, y: &Mat) -> Mat {
     NativeEvaluator.block(kind, x, y)
+}
+
+/// [`kernel_block`] evaluated across the persistent worker pool — for
+/// top-of-chain call sites (exact-KRR / KPCA fits build an n×n block
+/// here). Bitwise identical to the sequential evaluation.
+pub fn par_kernel_block(kind: KernelKind, x: &Mat) -> Mat {
+    kernel_block_threads(default_threads(), kind, x)
+}
+
+/// [`kernel_cross`] evaluated across the persistent worker pool — for
+/// top-of-chain call sites (Nyström feature maps, batched leaf-group
+/// evaluation). Inside an enclosing parallel region it degrades to the
+/// sequential path; either way the result is bitwise identical.
+pub fn par_kernel_cross(kind: KernelKind, x: &Mat, y: &Mat) -> Mat {
+    let mut out = Mat::zeros(x.rows(), y.rows());
+    eval_block_threads(default_threads(), kind, x, y, &mut out);
+    out
+}
+
+fn kernel_block_threads(threads: usize, kind: KernelKind, x: &Mat) -> Mat {
+    let mut out = Mat::zeros(x.rows(), x.rows());
+    eval_block_threads(threads, kind, x, x, &mut out);
+    out.symmetrize();
+    for i in 0..x.rows() {
+        out[(i, i)] = kind.diag_value();
+    }
+    out
 }
 
 #[cfg(test)]
@@ -190,6 +251,26 @@ mod tests {
         let y = Mat::zeros(5, 3);
         let k = kernel_cross(Gaussian::new(1.0), &x, &y);
         assert_eq!(k.shape(), (0, 5));
+    }
+
+    /// The pool-parallel entries must match the sequential evaluator
+    /// bitwise (row panels are independent), for both metrics and for
+    /// blocks large enough to actually engage the pool.
+    #[test]
+    fn par_kernel_matches_sequential_bitwise() {
+        // Blocks large enough to clear the parallel-volume gate, so the
+        // pool path is genuinely exercised against the sequential one.
+        let mut rng = Rng::new(9);
+        let x = Mat::from_fn(601, 8, |_, _| rng.uniform(0.0, 1.0));
+        let y = Mat::from_fn(299, 8, |_, _| rng.uniform(0.0, 1.0));
+        for kind in [Gaussian::new(0.6), Laplace::new(0.8)] {
+            let seq = kernel_cross(kind, &x, &y);
+            let par = par_kernel_cross(kind, &x, &y);
+            assert_eq!(seq.as_slice(), par.as_slice(), "{kind:?}");
+        }
+        let seq = kernel_block(Gaussian::new(0.7), &x);
+        let par = par_kernel_block(Gaussian::new(0.7), &x);
+        assert_eq!(seq.as_slice(), par.as_slice());
     }
 
     #[test]

@@ -13,4 +13,7 @@ pub mod base;
 pub mod compute;
 
 pub use base::{tapered_gaussian, Gaussian, Imq, Kernel, KernelKind, Laplace, Matern32};
-pub use compute::{kernel_block, kernel_cross, BlockEvaluator, NativeEvaluator};
+pub use compute::{
+    kernel_block, kernel_cross, par_kernel_block, par_kernel_cross, BlockEvaluator,
+    NativeEvaluator,
+};

@@ -12,7 +12,7 @@
 
 use crate::error::{Error, Result};
 use crate::hkernel::{hmatvec, HFactors, HPredictor};
-use crate::kernels::{kernel_block, KernelKind};
+use crate::kernels::KernelKind;
 use crate::linalg::{lanczos_topk, lstsq, matmul, sym_eig, Mat, Trans};
 use crate::util::rng::Rng;
 
@@ -54,9 +54,10 @@ pub fn embed_from_kernel_matrix(k: &Mat, dim: usize) -> Result<Mat> {
     Ok(scale_embedding(&w, &v, dim))
 }
 
-/// Exact-kernel embedding of the rows of `x` (dense path).
+/// Exact-kernel embedding of the rows of `x` (dense path). The n×n
+/// block is evaluated across the worker pool.
 pub fn kpca_embed_dense(kind: KernelKind, x: &Mat, dim: usize) -> Result<Mat> {
-    let k = kernel_block(kind, x);
+    let k = crate::kernels::par_kernel_block(kind, x);
     embed_from_kernel_matrix(&k, dim)
 }
 
@@ -301,7 +302,7 @@ mod tests {
     #[test]
     fn centering_zeroes_row_sums() {
         let x = cloud(15, 3, 1);
-        let mut k = kernel_block(Gaussian::new(0.5), &x);
+        let mut k = crate::kernels::kernel_block(Gaussian::new(0.5), &x);
         center_kernel_matrix(&mut k);
         for i in 0..15 {
             let s: f64 = k.row(i).iter().sum();

@@ -1,15 +1,55 @@
-//! BLAS-like kernels: blocked GEMM, GEMV, SYRK.
+//! BLAS-3 core: packed, cache-blocked GEMM / SYRK plus GEMV.
 //!
-//! `gemm` is the hottest native routine in the library (kernel-block
-//! evaluation uses the |x-y|^2 = |x|^2 + |y|^2 - 2<x,y> expansion, the
-//! hierarchical factor construction multiplies U/W/Σ factors constantly).
-//! The implementation packs nothing but uses an i-k-j loop order with 4-way
-//! j-unrolling, which keeps the B row in cache and lets LLVM autovectorize;
-//! on the benchmark machine it reaches a few GFLOP/s single-core, which is
-//! within ~2-3x of an optimized microkernel and far from the O(n^3) naive
-//! j-inner order. See rust/benches/hotpath.rs for measurements.
+//! `gemm` is the hottest native routine in the library — kernel-block
+//! evaluation uses the |x−y|² = |x|² + |y|² − 2⟨x,y⟩ expansion, the
+//! hierarchical factor construction multiplies U/W/Σ factors constantly,
+//! and the leaf Schur updates are rank-r GEMMs — so it is implemented as
+//! a BLIS-style blocked kernel rather than a plain loop nest.
+//!
+//! # Blocking scheme
+//!
+//! The driver tiles `C = α·op(A)·op(B) + β·C` with three cache blocks and
+//! a register-blocked microkernel:
+//!
+//! - **KC = 256** (depth) × **NC = 1024** (columns): a panel of op(B) is
+//!   packed once per (kc, nc) block into contiguous NR-wide column
+//!   panels (~2 MB worst case, L3-resident; the common r-sized blocks
+//!   stay far smaller).
+//! - **MC = 64** (rows): a panel of op(A) is packed into MR-wide row
+//!   panels (≤ 128 KB, L2-resident); each packed pair feeds the
+//!   macro-kernel while hot.
+//! - **MR×NR = 4×8** microkernel: a 32-accumulator register tile updated
+//!   `acc[i][j] += a[p·MR+i] · b[p·NR+j]` over the packed panels — pure
+//!   contiguous streams, which LLVM autovectorizes. Edge tiles are
+//!   zero-padded inside the packed buffers so the microkernel never
+//!   branches on shape; only the valid `mr×nr` region is written back.
+//!
+//! Packing reads each transpose case directly from the source matrix
+//! (`Trans::Yes/Yes` included — no materialized `b.t()` anywhere), and
+//! problems too small to amortize packing (`m·k·n` below
+//! `PACK_MIN_VOLUME`, or fewer rows/cols than one micro-tile) fall back
+//! to unpacked per-row loops.
+//!
+//! # Parallel layer and determinism
+//!
+//! [`par_gemm`] / [`par_syrk`] split C into **disjoint row panels** and
+//! dispatch them through the persistent worker pool in
+//! [`crate::util::parallel`]. Each worker owns its output rows and runs
+//! exactly the same per-row computation as the sequential code: the
+//! accumulation order over `k` is fixed by the (plan, KC) blocking alone
+//! and never by the row/column tiling, so the result is **bitwise
+//! identical** to single-threaded `gemm` for every thread count — the
+//! repo-wide determinism invariant (`HCK_THREADS=1` is a fallback, not a
+//! different numerical mode). Inside an enclosing parallel region (a
+//! pool worker, or the caller's own bin of a `run_parallel`) the `par_*`
+//! entry points degrade to the sequential path, so routing them through
+//! mid-chain code cannot oversubscribe the pool.
+//!
+//! See `rust/benches/hotpath.rs` for GFLOP/s measurements and the
+//! thread-scaling sweep recorded in `BENCH_hotpath.json`.
 
 use super::matrix::Mat;
+use crate::util::parallel::{default_threads, disjoint_slices, run_parallel};
 
 /// Transpose marker for [`gemm`].
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -20,10 +60,145 @@ pub enum Trans {
     Yes,
 }
 
+/// Microkernel rows (register tile height).
+const MR: usize = 4;
+/// Microkernel columns (register tile width).
+const NR: usize = 8;
+/// Row cache block: one packed op(A) panel is MC×KC (≤ 128 KB).
+const MC: usize = 64;
+/// Depth cache block.
+const KC: usize = 256;
+/// Column cache block: one packed op(B) panel is KC×NC (≤ 2 MB).
+const NC: usize = 1024;
+
+/// Below this `m·k·n` volume the unpacked per-row loops win — packing
+/// traffic (`m·k + k·n` writes) stops being negligible against `2·m·k·n`
+/// flops, and the r×m solves with a handful of right-hand sides live
+/// here.
+const PACK_MIN_VOLUME: usize = 32 * 32 * 32;
+
+/// Minimum `m·k·n` volume before the `par_*` entry points engage the
+/// worker pool; below it dispatch latency eats the speedup. Shared with
+/// the kernel-block evaluator's direct (L1) path, which has the same
+/// row-panel dispatch economics.
+pub(crate) const PAR_MIN_VOLUME: usize = 64 * 64 * 64;
+
+/// Per-row epilogue for [`gemm_epilogue`] / [`par_gemm_epilogue`]:
+/// called as `epi(i, j0, seg)` where `seg` is the freshly accumulated
+/// segment `C[i][j0 .. j0 + seg.len()]`, invoked exactly once per (row,
+/// column-strip) while the strip is still cache-hot. Kernel-block
+/// evaluation fuses the squared-norm expansion and the kernel profile
+/// here instead of re-sweeping the full output matrix.
+pub type Epilogue<'a> = &'a (dyn Fn(usize, usize, &mut [f64]) + Sync);
+
+/// Which inner implementation a problem shape routes to. Chosen once per
+/// call from the **full** problem shape, so a row-panel split inside
+/// [`par_gemm`] executes the same code path as the sequential call —
+/// part of the bitwise-determinism argument.
+#[derive(Copy, Clone, PartialEq, Eq)]
+enum Plan {
+    /// Unpacked per-row loops (small problems).
+    Small,
+    /// Packed panels + microkernel.
+    Packed,
+}
+
+fn plan_for(m: usize, k: usize, n: usize) -> Plan {
+    if m >= MR && n >= NR && m * k * n >= PACK_MIN_VOLUME {
+        Plan::Packed
+    } else {
+        Plan::Small
+    }
+}
+
+/// One gemm problem: operands, scaling, inner dimension and the chosen
+/// plan — shared by every row/column sub-range the drivers carve out of
+/// C.
+struct GemmOp<'a> {
+    alpha: f64,
+    a: &'a Mat,
+    ta: Trans,
+    b: &'a Mat,
+    tb: Trans,
+    k: usize,
+    plan: Plan,
+}
+
 /// General matrix multiply: `C = alpha * op_a(A) * op_b(B) + beta * C`.
 ///
 /// Panics on dimension mismatch (programming error, not data error).
 pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &mut Mat) {
+    gemm_driver(1, alpha, a, ta, b, tb, beta, c, None);
+}
+
+/// [`gemm`] with a fused per-strip epilogue (see [`Epilogue`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_epilogue(
+    alpha: f64,
+    a: &Mat,
+    ta: Trans,
+    b: &Mat,
+    tb: Trans,
+    beta: f64,
+    c: &mut Mat,
+    epi: Epilogue,
+) {
+    gemm_driver(1, alpha, a, ta, b, tb, beta, c, Some(epi));
+}
+
+/// Parallel [`gemm`] over the persistent worker pool with the
+/// process-default thread count. Bitwise identical to [`gemm`] for every
+/// thread count; degrades to the sequential path for small problems or
+/// inside an enclosing parallel region.
+pub fn par_gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &mut Mat) {
+    gemm_driver(default_threads(), alpha, a, ta, b, tb, beta, c, None);
+}
+
+/// [`par_gemm`] with an explicit thread count (testing / benchmarks).
+#[allow(clippy::too_many_arguments)]
+pub fn par_gemm_with(
+    threads: usize,
+    alpha: f64,
+    a: &Mat,
+    ta: Trans,
+    b: &Mat,
+    tb: Trans,
+    beta: f64,
+    c: &mut Mat,
+) {
+    gemm_driver(threads, alpha, a, ta, b, tb, beta, c, None);
+}
+
+/// Parallel [`gemm_epilogue`] with an explicit thread count (`1` =
+/// sequential). The epilogue runs on the worker that owns the row, once
+/// per completed column strip.
+#[allow(clippy::too_many_arguments)]
+pub fn par_gemm_epilogue(
+    threads: usize,
+    alpha: f64,
+    a: &Mat,
+    ta: Trans,
+    b: &Mat,
+    tb: Trans,
+    beta: f64,
+    c: &mut Mat,
+    epi: Epilogue,
+) {
+    gemm_driver(threads, alpha, a, ta, b, tb, beta, c, Some(epi));
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_driver(
+    threads: usize,
+    alpha: f64,
+    a: &Mat,
+    ta: Trans,
+    b: &Mat,
+    tb: Trans,
+    beta: f64,
+    c: &mut Mat,
+    epi: Option<Epilogue>,
+) {
     let (am, ak) = match ta {
         Trans::No => a.shape(),
         Trans::Yes => (a.cols(), a.rows()),
@@ -35,91 +210,362 @@ pub fn gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &m
     assert_eq!(ak, bk, "gemm inner dims: {ak} vs {bk}");
     assert_eq!(c.shape(), (am, bn), "gemm output shape");
 
-    if beta == 0.0 {
-        c.as_mut_slice().fill(0.0);
-    } else if beta != 1.0 {
-        c.scale(beta);
-    }
     if alpha == 0.0 || am == 0 || bn == 0 || ak == 0 {
+        // The epilogue contract is "runs over the final accumulated C",
+        // which on these degenerate shapes is just beta * C.
+        apply_beta(c.as_mut_slice(), beta);
+        if let Some(epi) = epi {
+            for i in 0..am {
+                epi(i, 0, c.row_mut(i));
+            }
+        }
         return;
     }
 
-    match (ta, tb) {
-        (Trans::No, Trans::No) => gemm_nn(alpha, a, b, c),
-        (Trans::Yes, Trans::No) => gemm_tn(alpha, a, b, c),
-        (Trans::No, Trans::Yes) => gemm_nt(alpha, a, b, c),
+    let op = GemmOp { alpha, a, ta, b, tb, k: ak, plan: plan_for(am, ak, bn) };
+    let par_ok = am * ak * bn >= PAR_MIN_VOLUME;
+    let threads = if par_ok { threads.max(1) } else { 1 };
+    if threads <= 1 {
+        apply_beta(c.as_mut_slice(), beta);
+        gemm_rows(&op, (0, am), (0, bn), c.as_mut_slice(), bn, epi);
+        return;
+    }
+
+    // Row-panel split: contiguous chunks, one per worker. Every row's
+    // value depends only on the (plan, KC) schedule — never on which
+    // panel it landed in — so the result is bitwise identical to the
+    // sequential sweep.
+    let chunk = am.div_ceil(threads);
+    let ranges: Vec<(usize, usize)> = (0..threads)
+        .map(|t| (t * chunk, ((t + 1) * chunk).min(am)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect();
+    let elems: Vec<(usize, usize)> =
+        ranges.iter().map(|&(lo, hi)| (lo * bn, hi * bn)).collect();
+    let slices = disjoint_slices(c.as_mut_slice(), &elems);
+    let items: Vec<((usize, usize), &mut [f64])> =
+        ranges.into_iter().zip(slices).collect();
+    let opref = &op;
+    run_parallel(threads, items, move |(rows, slice)| {
+        // Each worker scales its own rows by beta before accumulating —
+        // no serial full-matrix sweep ahead of the dispatch, and the
+        // elementwise scale is bitwise identical however it is split.
+        apply_beta(slice, beta);
+        gemm_rows(opref, rows, (0, bn), slice, bn, epi);
+    });
+}
+
+/// C ← beta · C over a raw slice (0 clears, 1 is a no-op).
+fn apply_beta(c: &mut [f64], beta: f64) {
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        for v in c.iter_mut() {
+            *v *= beta;
+        }
+    }
+}
+
+/// Accumulate `C[rows, cols] += alpha · op(A)[rows, :] · op(B)[:, cols]`
+/// into `c`, a row-major slice covering exactly rows `rows.0..rows.1` of
+/// the full C (leading dimension `ldc`, beta already applied). The
+/// k-accumulation order is fixed by `op.plan` and the KC blocking alone.
+fn gemm_rows(
+    op: &GemmOp,
+    rows: (usize, usize),
+    cols: (usize, usize),
+    c: &mut [f64],
+    ldc: usize,
+    epi: Option<Epilogue>,
+) {
+    match op.plan {
+        Plan::Small => {
+            debug_assert!(cols == (0, ldc), "small plan computes full rows");
+            small_rows(op, rows, c, ldc);
+            if let Some(epi) = epi {
+                for i in rows.0..rows.1 {
+                    let off = (i - rows.0) * ldc;
+                    epi(i, 0, &mut c[off..off + ldc]);
+                }
+            }
+        }
+        Plan::Packed => packed_rows(op, rows, cols, c, ldc, epi),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Small plan: unpacked per-row loops. Each output row accumulates in the
+// same order whatever row range it is computed under.
+// ---------------------------------------------------------------------
+
+fn small_rows(op: &GemmOp, rows: (usize, usize), c: &mut [f64], ldc: usize) {
+    let (row_lo, row_hi) = rows;
+    let alpha = op.alpha;
+    let (a, b, k) = (op.a, op.b, op.k);
+    let n = ldc;
+    match (op.ta, op.tb) {
+        (Trans::No, Trans::No) => {
+            // i-k-j with 4-way register blocking over k: each pass over
+            // the C row consumes four B rows, quartering C-row traffic.
+            let bd = b.as_slice();
+            let k4 = k / 4 * 4;
+            for i in row_lo..row_hi {
+                let arow = a.row(i);
+                let off = (i - row_lo) * ldc;
+                let crow = &mut c[off..off + n];
+                let mut p = 0;
+                while p < k4 {
+                    let a0 = alpha * arow[p];
+                    let a1 = alpha * arow[p + 1];
+                    let a2 = alpha * arow[p + 2];
+                    let a3 = alpha * arow[p + 3];
+                    let b0 = &bd[p * n..(p + 1) * n];
+                    let b1 = &bd[(p + 1) * n..(p + 2) * n];
+                    let b2 = &bd[(p + 2) * n..(p + 3) * n];
+                    let b3 = &bd[(p + 3) * n..(p + 4) * n];
+                    for j in 0..n {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    p += 4;
+                }
+                while p < k {
+                    let aip = alpha * arow[p];
+                    if aip != 0.0 {
+                        axpy_row(aip, &bd[p * n..(p + 1) * n], crow);
+                    }
+                    p += 1;
+                }
+            }
+        }
+        (Trans::Yes, Trans::No) => {
+            // Outer products over k; all operands row-contiguous. The
+            // per-row accumulation order over p is unchanged by the row
+            // range.
+            for p in 0..k {
+                let arow = a.row(p);
+                let brow = b.row(p);
+                for i in row_lo..row_hi {
+                    let aip = alpha * arow[i];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let off = (i - row_lo) * ldc;
+                    axpy_row(aip, brow, &mut c[off..off + n]);
+                }
+            }
+        }
+        (Trans::No, Trans::Yes) => {
+            // Every C entry is a dot of two stored rows.
+            for i in row_lo..row_hi {
+                let arow = a.row(i);
+                let off = (i - row_lo) * ldc;
+                let crow = &mut c[off..off + n];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    *cj += alpha * super::matrix::dot(arow, b.row(j));
+                }
+            }
+        }
         (Trans::Yes, Trans::Yes) => {
-            // Rare; fall back to materializing Bᵀ (small matrices here).
-            let bt = b.t();
-            gemm_tn(alpha, a, &bt, c);
+            // C[i][j] = Σ_p A[p][i] · B[j][p]: gather the strided A
+            // column once per output row, then dot against stored B
+            // rows — no materialized transpose.
+            let mut acol = vec![0.0; k];
+            for i in row_lo..row_hi {
+                for (p, v) in acol.iter_mut().enumerate() {
+                    *v = a[(p, i)];
+                }
+                let off = (i - row_lo) * ldc;
+                let crow = &mut c[off..off + n];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    *cj += alpha * super::matrix::dot(&acol, b.row(j));
+                }
+            }
         }
     }
 }
 
-/// C += alpha * A * B, row-major, i-k-j order with 4-way register
-/// blocking over k: each pass over the C row consumes four B rows, which
-/// quarters the C-row load/store traffic (the bottleneck the flat profile
-/// shows — see EXPERIMENTS.md §Perf iteration 4).
-fn gemm_nn(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
-    let (m, k) = a.shape();
-    let n = b.cols();
-    let bd = b.as_slice();
-    let k4 = k / 4 * 4;
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        let mut p = 0;
-        while p < k4 {
-            let a0 = alpha * arow[p];
-            let a1 = alpha * arow[p + 1];
-            let a2 = alpha * arow[p + 2];
-            let a3 = alpha * arow[p + 3];
-            let b0 = &bd[p * n..(p + 1) * n];
-            let b1 = &bd[(p + 1) * n..(p + 2) * n];
-            let b2 = &bd[(p + 2) * n..(p + 3) * n];
-            let b3 = &bd[(p + 3) * n..(p + 4) * n];
-            for j in 0..n {
-                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+// ---------------------------------------------------------------------
+// Packed plan: BLIS-style loop nest jc (NC) → pc (KC) → ic (MC) with
+// zero-padded MR/NR panels and the register microkernel.
+// ---------------------------------------------------------------------
+
+fn packed_rows(
+    op: &GemmOp,
+    rows: (usize, usize),
+    cols: (usize, usize),
+    c: &mut [f64],
+    ldc: usize,
+    epi: Option<Epilogue>,
+) {
+    let (row_lo, row_hi) = rows;
+    let (col_lo, col_hi) = cols;
+    let k = op.k;
+    let kc_max = k.min(KC);
+    let mc_max = (row_hi - row_lo).min(MC);
+    let nc_max = (col_hi - col_lo).min(NC);
+    let mut apack = vec![0.0; mc_max.div_ceil(MR) * MR * kc_max];
+    let mut bpack = vec![0.0; nc_max.div_ceil(NR) * NR * kc_max];
+
+    let mut jc = col_lo;
+    while jc < col_hi {
+        let nc = nc_max.min(col_hi - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(op.b, op.tb, pc, kc, jc, nc, &mut bpack);
+            let mut ic = row_lo;
+            while ic < row_hi {
+                let mc = MC.min(row_hi - ic);
+                pack_a(op.a, op.ta, ic, mc, pc, kc, &mut apack);
+                let coff = (ic - row_lo) * ldc + jc;
+                macro_kernel(op.alpha, &apack, &bpack, kc, mc, nc, &mut c[coff..], ldc);
+                ic += mc;
             }
-            p += 4;
+            pc += kc;
         }
-        while p < k {
-            let aip = alpha * arow[p];
-            if aip != 0.0 {
-                axpy_row(aip, &bd[p * n..(p + 1) * n], crow);
+        if let Some(epi) = epi {
+            for i in row_lo..row_hi {
+                let off = (i - row_lo) * ldc + jc;
+                epi(i, jc, &mut c[off..off + nc]);
             }
-            p += 1;
+        }
+        jc += nc;
+    }
+}
+
+/// Pack op(A)[row_lo .. row_lo+mc, p0 .. p0+kc] into MR-row panels:
+/// `buf[panel][p * MR + i]`, zero-padding partial panels so the
+/// microkernel always sees a full MR lane set.
+fn pack_a(a: &Mat, ta: Trans, row_lo: usize, mc: usize, p0: usize, kc: usize, buf: &mut [f64]) {
+    let panels = mc.div_ceil(MR);
+    match ta {
+        Trans::No => {
+            for ip in 0..panels {
+                let i0 = ip * MR;
+                let live = MR.min(mc - i0);
+                let dst = &mut buf[ip * kc * MR..(ip + 1) * kc * MR];
+                if live < MR {
+                    dst.fill(0.0);
+                }
+                for i in 0..live {
+                    let arow = &a.row(row_lo + i0 + i)[p0..p0 + kc];
+                    for (p, &v) in arow.iter().enumerate() {
+                        dst[p * MR + i] = v;
+                    }
+                }
+            }
+        }
+        Trans::Yes => {
+            // op(A)[i][p] = a[p][i]; row p of the stored (k x m) matrix
+            // is contiguous over i.
+            for ip in 0..panels {
+                let i0 = ip * MR;
+                let live = MR.min(mc - i0);
+                let dst = &mut buf[ip * kc * MR..(ip + 1) * kc * MR];
+                if live < MR {
+                    dst.fill(0.0);
+                }
+                for p in 0..kc {
+                    let arow = a.row(p0 + p);
+                    let src = &arow[row_lo + i0..row_lo + i0 + live];
+                    dst[p * MR..p * MR + live].copy_from_slice(src);
+                }
+            }
         }
     }
 }
 
-/// C += alpha * Aᵀ * B where A is (k x m): loop over k accumulating outer
-/// products; accesses all operands row-contiguously.
-fn gemm_tn(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
-    let (k, m) = a.shape();
-    let n = b.cols();
-    for p in 0..k {
-        let arow = a.row(p);
-        let brow = b.row(p);
-        for i in 0..m {
-            let aip = alpha * arow[i];
-            if aip == 0.0 {
-                continue;
+/// Pack op(B)[p0 .. p0+kc, j0 .. j0+nc] into NR-column panels:
+/// `buf[panel][p * NR + j]`, zero-padded like [`pack_a`].
+fn pack_b(b: &Mat, tb: Trans, p0: usize, kc: usize, j0: usize, nc: usize, buf: &mut [f64]) {
+    let panels = nc.div_ceil(NR);
+    match tb {
+        Trans::No => {
+            for jp in 0..panels {
+                let jj = j0 + jp * NR;
+                let live = NR.min(nc - jp * NR);
+                let dst = &mut buf[jp * kc * NR..(jp + 1) * kc * NR];
+                if live < NR {
+                    dst.fill(0.0);
+                }
+                for p in 0..kc {
+                    let brow = b.row(p0 + p);
+                    let src = &brow[jj..jj + live];
+                    dst[p * NR..p * NR + live].copy_from_slice(src);
+                }
             }
-            axpy_row(aip, brow, &mut c.row_mut(i)[..n]);
+        }
+        Trans::Yes => {
+            // op(B)[p][j] = b[j][p]; row j of the stored (n x k) matrix
+            // is contiguous over p.
+            for jp in 0..panels {
+                let jj = j0 + jp * NR;
+                let live = NR.min(nc - jp * NR);
+                let dst = &mut buf[jp * kc * NR..(jp + 1) * kc * NR];
+                if live < NR {
+                    dst.fill(0.0);
+                }
+                for j in 0..live {
+                    let brow = &b.row(jj + j)[p0..p0 + kc];
+                    for (p, &v) in brow.iter().enumerate() {
+                        dst[p * NR + j] = v;
+                    }
+                }
+            }
         }
     }
 }
 
-/// C += alpha * A * Bᵀ: every C entry is a dot of two rows.
-fn gemm_nt(alpha: f64, a: &Mat, b: &Mat, c: &mut Mat) {
-    let m = a.rows();
-    let n = b.rows();
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for j in 0..n {
-            crow[j] += alpha * super::matrix::dot(arow, b.row(j));
+/// Sweep the packed panels with the register microkernel. `c` starts at
+/// the (row, column) origin of this macro block inside the caller's
+/// panel; only the valid `mr×nr` region of each tile is written back.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    alpha: f64,
+    apack: &[f64],
+    bpack: &[f64],
+    kc: usize,
+    mc: usize,
+    nc: usize,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    let mpanels = mc.div_ceil(MR);
+    let npanels = nc.div_ceil(NR);
+    for jp in 0..npanels {
+        let j0 = jp * NR;
+        let nr = NR.min(nc - j0);
+        let bpanel = &bpack[jp * kc * NR..(jp + 1) * kc * NR];
+        for ip in 0..mpanels {
+            let i0 = ip * MR;
+            let mr = MR.min(mc - i0);
+            let apanel = &apack[ip * kc * MR..(ip + 1) * kc * MR];
+            let mut acc = [[0.0f64; NR]; MR];
+            microkernel(kc, apanel, bpanel, &mut acc);
+            for i in 0..mr {
+                let base = (i0 + i) * ldc + j0;
+                let crow = &mut c[base..base + nr];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    *cj += alpha * acc[i][j];
+                }
+            }
+        }
+    }
+}
+
+/// The MR×NR register tile: 32 independent accumulators over two
+/// contiguous packed streams — the innermost loop of every packed gemm.
+#[inline(always)]
+fn microkernel(kc: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for p in 0..kc {
+        let ap: &[f64; MR] = apanel[p * MR..p * MR + MR].try_into().unwrap();
+        let bp: &[f64; NR] = bpanel[p * NR..p * NR + NR].try_into().unwrap();
+        for i in 0..MR {
+            let ai = ap[i];
+            let row = &mut acc[i];
+            for j in 0..NR {
+                row[j] += ai * bp[j];
+            }
         }
     }
 }
@@ -180,6 +626,22 @@ pub fn gemv(alpha: f64, a: &Mat, ta: Trans, x: &[f64], beta: f64, y: &mut [f64])
 
 /// Convenience: allocate and return op_a(A) * op_b(B).
 pub fn matmul(a: &Mat, ta: Trans, b: &Mat, tb: Trans) -> Mat {
+    let (m, n) = matmul_shape(a, ta, b, tb);
+    let mut c = Mat::zeros(m, n);
+    gemm(1.0, a, ta, b, tb, 0.0, &mut c);
+    c
+}
+
+/// [`matmul`] through [`par_gemm`]: same result bitwise, pool-parallel
+/// when called at the top of the chain on a big enough product.
+pub fn par_matmul(a: &Mat, ta: Trans, b: &Mat, tb: Trans) -> Mat {
+    let (m, n) = matmul_shape(a, ta, b, tb);
+    let mut c = Mat::zeros(m, n);
+    par_gemm(1.0, a, ta, b, tb, 0.0, &mut c);
+    c
+}
+
+fn matmul_shape(a: &Mat, ta: Trans, b: &Mat, tb: Trans) -> (usize, usize) {
     let m = match ta {
         Trans::No => a.rows(),
         Trans::Yes => a.cols(),
@@ -188,25 +650,117 @@ pub fn matmul(a: &Mat, ta: Trans, b: &Mat, tb: Trans) -> Mat {
         Trans::No => b.cols(),
         Trans::Yes => b.rows(),
     };
-    let mut c = Mat::zeros(m, n);
-    gemm(1.0, a, ta, b, tb, 0.0, &mut c);
-    c
+    (m, n)
 }
 
-/// Symmetric rank-k update: C = alpha * A Aᵀ + beta * C (full storage,
-/// exploits symmetry by computing the upper triangle and mirroring).
-pub fn syrk(alpha: f64, a: &Mat, beta: f64, c: &mut Mat) {
-    let m = a.rows();
-    assert_eq!(c.shape(), (m, m));
-    for i in 0..m {
-        let arow_i = a.row(i);
-        for j in i..m {
-            let v = alpha * super::matrix::dot(arow_i, a.row(j));
-            let prev = if beta == 0.0 { 0.0 } else { beta * c[(i, j)] };
-            c[(i, j)] = prev + v;
-        }
+/// Symmetric rank-k update over full storage:
+/// `C = alpha * op(A) op(A)ᵀ + beta * C` — `ta = No` gives A·Aᵀ
+/// (`m = a.rows()`), `ta = Yes` gives Aᵀ·A (`m = a.cols()`, the Gram
+/// matrix of a feature block). Only the upper triangle is computed
+/// (through the same packed core as [`gemm`]); the lower triangle is
+/// mirrored from it, so the result is exactly symmetric.
+pub fn syrk(alpha: f64, a: &Mat, ta: Trans, beta: f64, c: &mut Mat) {
+    syrk_driver(1, alpha, a, ta, beta, c);
+}
+
+/// Parallel [`syrk`] over the persistent worker pool (process-default
+/// thread count); bitwise identical to [`syrk`] for every thread count.
+pub fn par_syrk(alpha: f64, a: &Mat, ta: Trans, beta: f64, c: &mut Mat) {
+    syrk_driver(default_threads(), alpha, a, ta, beta, c);
+}
+
+/// [`par_syrk`] with an explicit thread count (testing / benchmarks).
+pub fn par_syrk_with(threads: usize, alpha: f64, a: &Mat, ta: Trans, beta: f64, c: &mut Mat) {
+    syrk_driver(threads, alpha, a, ta, beta, c);
+}
+
+fn syrk_driver(threads: usize, alpha: f64, a: &Mat, ta: Trans, beta: f64, c: &mut Mat) {
+    let (m, k) = match ta {
+        Trans::No => a.shape(),
+        Trans::Yes => (a.cols(), a.rows()),
+    };
+    assert_eq!(c.shape(), (m, m), "syrk output shape");
+    if m == 0 {
+        return;
     }
-    for i in 0..m {
+    if alpha == 0.0 || k == 0 {
+        for i in 0..m {
+            for j in i..m {
+                let prev = if beta == 0.0 { 0.0 } else { beta * c[(i, j)] };
+                c[(i, j)] = prev;
+            }
+        }
+        mirror_lower(c);
+        return;
+    }
+    // op(A) · op(A)ᵀ is a gemm against the flipped transpose of the same
+    // operand, restricted to the upper triangle.
+    let tb = match ta {
+        Trans::No => Trans::Yes,
+        Trans::Yes => Trans::No,
+    };
+    let plan = plan_for(m, k, m);
+    if plan == Plan::Small {
+        // Dot loop over the upper triangle; materialize opᵀ(A) only in
+        // the strided case (small by definition of the plan).
+        let att;
+        let opa: &Mat = match ta {
+            Trans::No => a,
+            Trans::Yes => {
+                att = a.t();
+                &att
+            }
+        };
+        for i in 0..m {
+            let ri = opa.row(i);
+            for j in i..m {
+                let v = alpha * super::matrix::dot(ri, opa.row(j));
+                let prev = if beta == 0.0 { 0.0 } else { beta * c[(i, j)] };
+                c[(i, j)] = prev + v;
+            }
+        }
+        mirror_lower(c);
+        return;
+    }
+
+    // Packed path: MC-row panels, panel starting at row `lo` computes
+    // columns [lo, m) — the upper wedge plus the sub-diagonal corner of
+    // its own diagonal block (whose entries are the same values by
+    // symmetry of the accumulation; the final mirror overwrites them
+    // with bitwise-equal numbers). Panels are dealt round-robin so the
+    // shrinking wedges balance across workers; every panel owns disjoint
+    // C rows, so thread count cannot change a bit of the result.
+    let op = GemmOp { alpha, a, ta, b: a, tb, k, plan };
+    let par_ok = m * k * m >= PAR_MIN_VOLUME;
+    let threads = if par_ok { threads.max(1) } else { 1 };
+    let ranges: Vec<(usize, usize)> =
+        (0..m.div_ceil(MC)).map(|p| (p * MC, ((p + 1) * MC).min(m))).collect();
+    let elems: Vec<(usize, usize)> = ranges.iter().map(|&(lo, hi)| (lo * m, hi * m)).collect();
+    let slices = disjoint_slices(c.as_mut_slice(), &elems);
+    let items: Vec<((usize, usize), &mut [f64])> = ranges.into_iter().zip(slices).collect();
+    let opref = &op;
+    run_parallel(threads, items, move |((lo, hi), slice)| {
+        // beta on this panel's [lo, m) wedge, then accumulate.
+        for i in lo..hi {
+            let off = (i - lo) * m;
+            let seg = &mut slice[off + lo..off + m];
+            if beta == 0.0 {
+                seg.fill(0.0);
+            } else if beta != 1.0 {
+                for v in seg.iter_mut() {
+                    *v *= beta;
+                }
+            }
+        }
+        gemm_rows(opref, (lo, hi), (lo, m), slice, m, None);
+    });
+    mirror_lower(c);
+}
+
+/// Overwrite the strict lower triangle with the upper one.
+fn mirror_lower(c: &mut Mat) {
+    let m = c.rows();
+    for i in 1..m {
         for j in 0..i {
             c[(i, j)] = c[(j, i)];
         }
@@ -249,16 +803,19 @@ mod tests {
     #[test]
     fn gemm_matches_naive_all_transposes() {
         let mut r = Rng::new(1);
-        let (m, k, n) = (13, 9, 17);
-        let a = randmat(&mut r, m, k);
-        let b = randmat(&mut r, k, n);
-        let at = a.t();
-        let bt = b.t();
-        let want = naive_mm(&a, &b);
-        assert_close(&matmul(&a, Trans::No, &b, Trans::No), &want, 1e-12);
-        assert_close(&matmul(&at, Trans::Yes, &b, Trans::No), &want, 1e-12);
-        assert_close(&matmul(&a, Trans::No, &bt, Trans::Yes), &want, 1e-12);
-        assert_close(&matmul(&at, Trans::Yes, &bt, Trans::Yes), &want, 1e-12);
+        // Both plans: a small-path shape and a packed-path shape with
+        // edges off every block multiple.
+        for (m, k, n) in [(13usize, 9usize, 17usize), (67, 35, 70)] {
+            let a = randmat(&mut r, m, k);
+            let b = randmat(&mut r, k, n);
+            let at = a.t();
+            let bt = b.t();
+            let want = naive_mm(&a, &b);
+            assert_close(&matmul(&a, Trans::No, &b, Trans::No), &want, 1e-12);
+            assert_close(&matmul(&at, Trans::Yes, &b, Trans::No), &want, 1e-12);
+            assert_close(&matmul(&a, Trans::No, &bt, Trans::Yes), &want, 1e-12);
+            assert_close(&matmul(&at, Trans::Yes, &bt, Trans::Yes), &want, 1e-12);
+        }
     }
 
     #[test]
@@ -296,18 +853,62 @@ mod tests {
     }
 
     #[test]
-    fn syrk_matches_gemm() {
+    fn syrk_matches_gemm_both_transposes() {
         let mut r = Rng::new(4);
-        let a = randmat(&mut r, 7, 3);
-        let mut c = Mat::zeros(7, 7);
-        syrk(1.5, &a, 0.0, &mut c);
-        let want = {
-            let mut w = matmul(&a, Trans::No, &a, Trans::Yes);
-            w.scale(1.5);
-            w
+        for (m, k) in [(7usize, 3usize), (70, 40)] {
+            let a = randmat(&mut r, m, k);
+            // ta = No: A Aᵀ
+            let mut c = Mat::zeros(m, m);
+            syrk(1.5, &a, Trans::No, 0.0, &mut c);
+            let mut want = matmul(&a, Trans::No, &a, Trans::Yes);
+            want.scale(1.5);
+            assert_close(&c, &want, 1e-12);
+            assert!(c.is_symmetric(0.0));
+            // ta = Yes: Aᵀ A (the Gram matrix of a feature block)
+            let mut g = Mat::zeros(k, k);
+            syrk(0.5, &a, Trans::Yes, 0.0, &mut g);
+            let mut wantg = matmul(&a, Trans::Yes, &a, Trans::No);
+            wantg.scale(0.5);
+            assert_close(&g, &wantg, 1e-12);
+            assert!(g.is_symmetric(0.0));
+        }
+    }
+
+    #[test]
+    fn gemm_epilogue_runs_per_strip() {
+        let mut r = Rng::new(5);
+        let (m, k, n) = (37, 33, 41);
+        let a = randmat(&mut r, m, k);
+        let b = randmat(&mut r, k, n);
+        let mut c = Mat::zeros(m, n);
+        let epi = |i: usize, j0: usize, seg: &mut [f64]| {
+            for (off, v) in seg.iter_mut().enumerate() {
+                *v += (i * 1000 + j0 + off) as f64;
+            }
         };
-        assert_close(&c, &want, 1e-12);
-        assert!(c.is_symmetric(1e-14));
+        gemm_epilogue(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c, &epi);
+        let plain = naive_mm(&a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let want = plain[(i, j)] + (i * 1000 + j) as f64;
+                assert!((c[(i, j)] - want).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn par_gemm_bitwise_equals_gemm() {
+        let mut r = Rng::new(6);
+        let (m, k, n) = (130, 70, 90);
+        let a = randmat(&mut r, m, k);
+        let b = randmat(&mut r, k, n);
+        let mut want = Mat::zeros(m, n);
+        gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut want);
+        for threads in [1usize, 2, 3, 8] {
+            let mut c = Mat::zeros(m, n);
+            par_gemm_with(threads, 1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+            assert_eq!(c.as_slice(), want.as_slice(), "threads={threads}");
+        }
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //! paper's Algorithm 1), and power iteration for dominant singular vectors
 //! (used by the PCA partitioning baseline of Section 4.1).
 //!
-//! All factor sizes in the hierarchical kernel are `r x r` or `n0 x n0`
-//! (a few hundred at most), so these routines are written for correctness
-//! and reasonable single-core throughput rather than peak LINPACK numbers;
-//! the `gemm` microkernel is the one genuinely hot routine and is blocked
-//! and unrolled accordingly (see `rust/benches/hotpath.rs`).
+//! The factorizations are `r x r` or `n0 x n0` (a few hundred at most)
+//! and are written for correctness and reasonable single-core throughput;
+//! the genuinely hot routines are the BLAS-3 kernels in [`blas`], which
+//! run packed and cache-blocked with optional row-panel parallelism
+//! (`par_gemm`/`par_syrk`) over the persistent worker pool — bitwise
+//! identical to the sequential path for every thread count (see
+//! `rust/benches/hotpath.rs` for the GFLOP/s trajectory).
 
 pub mod blas;
 pub mod chol;
@@ -22,7 +24,10 @@ pub mod lu;
 pub mod matrix;
 pub mod qr;
 
-pub use blas::{gemm, gemv, matmul, syrk, Trans};
+pub use blas::{
+    gemm, gemm_epilogue, gemv, matmul, par_gemm, par_gemm_epilogue, par_gemm_with,
+    par_matmul, par_syrk, par_syrk_with, syrk, Epilogue, Trans,
+};
 pub use chol::Cholesky;
 pub use eig::sym_eig;
 pub use lanczos::{lanczos_topk, power_iteration};

@@ -41,8 +41,8 @@ pub use worker::{ShardWorker, ShardedPredictor};
 use crate::error::{Error, Result};
 use crate::hkernel::{HPredictor, LazyVariance};
 use crate::infer::{InferResult, LeafRoute, PredictError, Want};
-use crate::kernels::{kernel_cross, KernelKind};
-use crate::linalg::{gemm, matmul, Cholesky, Mat, Trans};
+use crate::kernels::{kernel_cross, par_kernel_cross, KernelKind};
+use crate::linalg::{gemm, matmul, par_matmul, Cholesky, Mat, Trans};
 use crate::partition::{follow_split, Node};
 
 /// Cut a fitted predictor at `depth` and write a **self-contained shard
@@ -325,11 +325,16 @@ impl Shard {
         let g = q.rows();
         let nd = &self.nodes[leaf];
 
-        // Leaf term: Z = W_leafᵀ K(X_leaf, Q)  (m x g).
+        // Leaf term: Z = W_leafᵀ K(X_leaf, Q)  (m x g). The parallel
+        // kernel/gemm entries split a large co-routed group across the
+        // worker pool (shard workers are plain threads, so the pool is
+        // available to them) and fall back to the packed sequential core
+        // for small groups — bitwise identical either way, so sharded
+        // means stay exactly equal to the in-process path.
         let x_leaf = self.leaf_x[leaf].as_ref().unwrap();
-        let kq = kernel_cross(self.kind, x_leaf, q);
+        let kq = par_kernel_cross(self.kind, x_leaf, q);
         let w_leaf = self.leaf_w[leaf].as_ref().unwrap();
-        let mut z = matmul(w_leaf, Trans::Yes, &kq, Trans::No);
+        let mut z = par_matmul(w_leaf, Trans::Yes, &kq, Trans::No);
 
         // Local path root → leaf via parent pointers.
         let mut path = vec![leaf];

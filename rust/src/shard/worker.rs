@@ -5,6 +5,14 @@
 //! `Result<ShardBlock, PredictError>`. A panic inside a worker is caught
 //! and surfaced as [`PredictError::Shard`] — the worker thread survives
 //! and keeps draining its queue ("bad sub-batch ≠ dead worker").
+//!
+//! Worker threads evaluate their leaf-grouped gemms through the packed
+//! BLAS-3 core ([`crate::linalg::blas`]); a large co-routed group may
+//! additionally fan its kernel block and weight product out over the
+//! shared worker pool (`par_kernel_cross`/`par_matmul` in
+//! [`crate::shard::Shard::predict_leaf_group`]), which is safe because
+//! shard workers are ordinary threads, not pool workers — and bitwise
+//! neutral, so sharded means still match the in-process path exactly.
 
 use super::router::ShardRouter;
 use super::split::{boundary_nodes, split_predictor};

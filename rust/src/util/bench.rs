@@ -100,6 +100,17 @@ impl Bench {
     }
 }
 
+/// GFLOP/s achieved by `flops` floating-point operations in `secs`
+/// seconds — the BLAS-3 benchmark currency (`2·m·n·k` for gemm, `m²·k`
+/// for the triangle-only syrk).
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    if secs > 0.0 && secs.is_finite() {
+        flops / secs / 1e9
+    } else {
+        f64::NAN
+    }
+}
+
 /// Format seconds with an adaptive unit.
 pub fn fmt_secs(s: f64) -> String {
     if !s.is_finite() {
@@ -263,6 +274,13 @@ mod tests {
         assert_eq!(m.samples.len(), 5);
         assert_eq!(count, 6); // 1 warmup + 5 measured
         assert!(m.min() >= 0.0);
+    }
+
+    #[test]
+    fn gflops_basic() {
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+        assert!((gflops(1e9, 0.5) - 2.0).abs() < 1e-12);
+        assert!(gflops(1e9, 0.0).is_nan());
     }
 
     #[test]

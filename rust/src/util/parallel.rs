@@ -15,8 +15,13 @@
 //! the serving path at small batch sizes. `run_parallel` still blocks
 //! until every dispatched item has completed (even when an item panics),
 //! so borrowed captures behave exactly as they did under scoped threads.
-//! Calls made *from inside* a pool worker run sequentially instead of
-//! re-entering the pool, which makes nested use safe by construction.
+//! Calls made *from inside* a pool worker — or from the calling thread
+//! while it executes its own bin of an enclosing `run_parallel` — run
+//! sequentially instead of re-entering the pool ([`in_parallel_region`]),
+//! which makes nested use safe by construction and lets the parallel
+//! BLAS entry points (`crate::linalg::blas::par_gemm` and friends) be
+//! routed through mid-chain code without oversubscribing: they engage
+//! threads only when they are the top of the chain.
 //!
 //! **Determinism policy.** Callers in `hkernel` are written so that every
 //! work item computes its outputs independently (no shared accumulator)
@@ -105,6 +110,24 @@ thread_local! {
     /// `run_parallel` calls onto the sequential path (re-entering the
     /// pool from a worker could deadlock on the worker's own queue).
     static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+
+    /// Set on the *calling* thread for the duration of a parallel
+    /// `run_parallel` (it executes bin 0 inline). Nested parallel entry
+    /// points — `par_gemm` inside a work item, say — would otherwise
+    /// queue their jobs behind the very bins the outer call is waiting
+    /// on, serializing the caller's bin against the whole level. With
+    /// the flag set they take the sequential path instead, which is the
+    /// "parallel variants engage only at the top of the chain" rule
+    /// enforced at runtime.
+    static IN_PARALLEL_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is already inside a parallel region (a
+/// pool worker, or a caller mid-`run_parallel`). Parallel entry points
+/// use this to degrade to their sequential paths instead of feeding the
+/// pool recursively.
+pub fn in_parallel_region() -> bool {
+    IS_POOL_WORKER.with(|w| w.get()) || IN_PARALLEL_REGION.with(|r| r.get())
 }
 
 fn pool() -> &'static Pool {
@@ -150,12 +173,22 @@ impl Pool {
 /// re-raised here after the remaining items finish.
 pub fn run_parallel<T: Send>(threads: usize, items: Vec<T>, f: impl Fn(T) + Sync) {
     let threads = threads.max(1).min(items.len());
-    if threads <= 1 || IS_POOL_WORKER.with(|w| w.get()) {
+    if threads <= 1 || in_parallel_region() {
         for item in items {
             f(item);
         }
         return;
     }
+    // Mark this thread as inside a parallel region while it dispatches,
+    // runs its own bin, and waits — nested parallel entry points degrade
+    // to sequential for the duration (see [`in_parallel_region`]).
+    struct RegionGuard(bool);
+    impl Drop for RegionGuard {
+        fn drop(&mut self) {
+            IN_PARALLEL_REGION.with(|r| r.set(self.0));
+        }
+    }
+    let _region = RegionGuard(IN_PARALLEL_REGION.with(|r| r.replace(true)));
     let mut bins: Vec<Vec<T>> = (0..threads).map(|_| Vec::new()).collect();
     for (k, item) in items.into_iter().enumerate() {
         bins[k % threads].push(item);
@@ -358,6 +391,24 @@ mod tests {
             first.iter().any(|n| n.starts_with("hck-pool-")),
             "expected pool workers to participate: {first:?}"
         );
+    }
+
+    /// Every work item — pool-worker bins and the caller's inline bin
+    /// alike — observes [`in_parallel_region`], and the flag is restored
+    /// once the call returns. This is what keeps nested `par_gemm`
+    /// sequential inside level-parallel passes.
+    #[test]
+    fn region_flag_covers_inline_bin_and_workers() {
+        let in_region = AtomicUsize::new(0);
+        assert!(!in_parallel_region());
+        let items: Vec<usize> = (0..8).collect();
+        run_parallel(4, items, |_| {
+            if in_parallel_region() {
+                in_region.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(in_region.load(Ordering::SeqCst), 8);
+        assert!(!in_parallel_region());
     }
 
     /// Nested calls from inside a pool worker degrade to sequential

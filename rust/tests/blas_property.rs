@@ -1,0 +1,184 @@
+//! Property tests pinning the packed BLAS-3 core against a naive
+//! triple-loop oracle: every transpose pair, adversarial shapes (empty
+//! dims, single rows/columns, sizes off every block multiple — MR=4,
+//! NR=8, MC=64, KC=256, NC=1024), alpha/beta combinations, and the
+//! bitwise-determinism contract `par_gemm == gemm` / `par_syrk == syrk`
+//! for every thread count (the invariant the hierarchical solver's
+//! parallel passes rely on).
+
+use hck::linalg::{gemm, par_gemm_with, par_syrk_with, syrk, Mat, Trans};
+use hck::util::rng::Rng;
+
+fn randmat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+    Mat::from_fn(m, n, |_, _| rng.normal())
+}
+
+/// Entry (i, j) of op(A).
+fn opv(a: &Mat, t: Trans, i: usize, j: usize) -> f64 {
+    match t {
+        Trans::No => a[(i, j)],
+        Trans::Yes => a[(j, i)],
+    }
+}
+
+/// Storage matrix whose op() has shape (rows, cols).
+fn op_operand(rng: &mut Rng, t: Trans, rows: usize, cols: usize) -> Mat {
+    match t {
+        Trans::No => randmat(rng, rows, cols),
+        Trans::Yes => randmat(rng, cols, rows),
+    }
+}
+
+/// Naive triple-loop product op(A)·op(B) — the oracle.
+fn oracle_mm(a: &Mat, ta: Trans, b: &Mat, tb: Trans, m: usize, k: usize, n: usize) -> Mat {
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for p in 0..k {
+                s += opv(a, ta, i, p) * opv(b, tb, p, j);
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+fn max_abs_diff(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let mut diff = a.clone();
+    diff.axpy(-1.0, b);
+    diff.max_abs()
+}
+
+/// Shapes chosen to cross every routing boundary: the small/packed plan
+/// cut, partial MR/NR edge tiles, multiple MC row panels, a KC split
+/// (k > 256) and an NC split (n > 1024).
+const SHAPES: &[(usize, usize, usize)] = &[
+    (0, 3, 2),
+    (2, 0, 3),
+    (3, 4, 0),
+    (1, 1, 1),
+    (1, 17, 9),
+    (5, 1, 9),
+    (13, 9, 17),
+    (33, 8, 9),
+    (65, 33, 70),
+    (67, 257, 30),
+    (12, 40, 1030),
+    (130, 70, 65),
+];
+
+#[test]
+fn gemm_matches_oracle_every_transpose_shape_and_scalar() {
+    let scalars: &[(f64, f64)] = &[(1.0, 0.0), (0.0, 0.7), (-0.5, 1.0), (2.0, 0.3)];
+    let mut rng = Rng::new(42);
+    for &(m, k, n) in SHAPES {
+        for &ta in &[Trans::No, Trans::Yes] {
+            for &tb in &[Trans::No, Trans::Yes] {
+                let a = op_operand(&mut rng, ta, m, k);
+                let b = op_operand(&mut rng, tb, k, n);
+                let prod = oracle_mm(&a, ta, &b, tb, m, k, n);
+                for &(alpha, beta) in scalars {
+                    let c0 = randmat(&mut rng, m, n);
+                    let mut c = c0.clone();
+                    gemm(alpha, &a, ta, &b, tb, beta, &mut c);
+                    let mut want = prod.clone();
+                    want.scale(alpha);
+                    want.axpy(beta, &c0);
+                    let diff = max_abs_diff(&c, &want);
+                    let tol = 1e-11 * (k as f64 + 1.0);
+                    assert!(
+                        diff < tol,
+                        "({m},{k},{n}) ta={ta:?} tb={tb:?} α={alpha} β={beta}: {diff}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn par_gemm_is_bitwise_gemm_for_every_thread_count() {
+    // Shapes straddling the parallel-volume gate and both plans; every
+    // transpose pair on the largest one.
+    let mut rng = Rng::new(7);
+    let shapes: &[(usize, usize, usize)] =
+        &[(5, 9, 40), (67, 257, 30), (130, 70, 65), (256, 32, 256)];
+    for &(m, k, n) in shapes {
+        for &ta in &[Trans::No, Trans::Yes] {
+            for &tb in &[Trans::No, Trans::Yes] {
+                let a = op_operand(&mut rng, ta, m, k);
+                let b = op_operand(&mut rng, tb, k, n);
+                let c0 = randmat(&mut rng, m, n);
+                let mut want = c0.clone();
+                gemm(1.3, &a, ta, &b, tb, 0.4, &mut want);
+                for threads in [1usize, 2, 3, 8] {
+                    let mut c = c0.clone();
+                    par_gemm_with(threads, 1.3, &a, ta, &b, tb, 0.4, &mut c);
+                    assert_eq!(
+                        c.as_slice(),
+                        want.as_slice(),
+                        "threads={threads} shape=({m},{k},{n}) ta={ta:?} tb={tb:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn syrk_matches_oracle_both_transposes() {
+    let scalars: &[(f64, f64)] = &[(1.0, 0.0), (0.5, 1.0), (0.0, 0.3), (2.0, 0.0)];
+    let mut rng = Rng::new(11);
+    let shapes: &[(usize, usize)] =
+        &[(0, 4), (1, 1), (3, 0), (7, 3), (40, 70), (70, 40), (130, 33)];
+    for &(m, k) in shapes {
+        for &ta in &[Trans::No, Trans::Yes] {
+            let a = op_operand(&mut rng, ta, m, k);
+            let prod = {
+                // op(A) · op(A)ᵀ via the gemm oracle.
+                let tb = match ta {
+                    Trans::No => Trans::Yes,
+                    Trans::Yes => Trans::No,
+                };
+                oracle_mm(&a, ta, &a, tb, m, k, m)
+            };
+            for &(alpha, beta) in scalars {
+                let c0 = randmat(&mut rng, m, m);
+                let mut c = c0.clone();
+                syrk(alpha, &a, ta, beta, &mut c);
+                assert!(c.is_symmetric(0.0), "syrk output must be exactly symmetric");
+                // syrk semantics: upper triangle = α·prod + β·C0's upper,
+                // lower mirrored from it.
+                for i in 0..m {
+                    for j in i..m {
+                        let want = alpha * prod[(i, j)] + beta * c0[(i, j)];
+                        let diff = (c[(i, j)] - want).abs();
+                        let tol = 1e-11 * (k as f64 + 1.0);
+                        assert!(
+                            diff < tol,
+                            "({m},{k}) ta={ta:?} α={alpha} β={beta} at ({i},{j}): {diff}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn par_syrk_is_bitwise_syrk_for_every_thread_count() {
+    let mut rng = Rng::new(13);
+    for &(m, k, ta) in &[(130usize, 50usize, Trans::No), (70, 200, Trans::Yes)] {
+        let a = op_operand(&mut rng, ta, m, k);
+        let c0 = randmat(&mut rng, m, m);
+        let mut want = c0.clone();
+        syrk(0.8, &a, ta, 0.25, &mut want);
+        for threads in [1usize, 2, 3, 8] {
+            let mut c = c0.clone();
+            par_syrk_with(threads, 0.8, &a, ta, 0.25, &mut c);
+            assert_eq!(c.as_slice(), want.as_slice(), "threads={threads} (m={m}, k={k})");
+        }
+    }
+}

@@ -5,13 +5,26 @@ Compares the current benchmark report against a baseline from the
 previous CI run and fails (exit 1) when any matching op regresses by
 more than the threshold. Rows are matched on their identity keys
 (op, n, r, threads, batch, shards); the measured value is ns_per_op or
-ns_per_query. Skips gracefully (exit 0) when the baseline is missing or
-unreadable — the first run on a fresh repository has no history.
+ns_per_query. Skips the comparison gracefully (exit 0) when the
+baseline is missing or unreadable — the first run on a fresh repository
+has no history.
+
+`--require op1,op2` additionally fails when the *current* report is
+missing every row for a listed op — this gates on the presence of the
+tracked rows (e.g. the gemm/syrk/par_gemm BLAS-3 rows) even before any
+baseline exists, so a refactor cannot silently drop them from the
+telemetry.
+
+Per-row deltas are printed to stdout and, when running under GitHub
+Actions (GITHUB_STEP_SUMMARY set), also written to the job summary as a
+markdown table.
 
 Usage: perf_gate.py BASELINE.json CURRENT.json [--threshold 0.25]
+                    [--require op1,op2,...]
 """
 
 import json
+import os
 import sys
 
 KEY_FIELDS = ("op", "n", "r", "threads", "batch", "shards")
@@ -33,15 +46,32 @@ def load_rows(path):
     return rows
 
 
+def write_step_summary(lines):
+    """Append markdown lines to the GitHub Actions job summary, if any."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    try:
+        with open(path, "a", encoding="utf-8") as fh:
+            fh.write("\n".join(lines) + "\n")
+    except OSError as exc:  # summary is best-effort, never a gate failure
+        print(f"perf gate: could not write step summary ({exc})")
+
+
 def main(argv):
     args = []
     threshold = 0.25
+    required = []
     it = iter(argv)
     for a in it:
         if a == "--threshold":
             threshold = float(next(it, "0.25"))
         elif a.startswith("--threshold="):
             threshold = float(a.split("=", 1)[1])
+        elif a == "--require":
+            required = [op for op in next(it, "").split(",") if op]
+        elif a.startswith("--require="):
+            required = [op for op in a.split("=", 1)[1].split(",") if op]
         else:
             args.append(a)
     if len(args) != 2:
@@ -50,21 +80,41 @@ def main(argv):
     baseline_path, current_path = args
 
     try:
-        baseline = load_rows(baseline_path)
-    except (OSError, ValueError) as exc:
-        print(f"perf gate: no usable baseline ({exc}); skipping")
-        return 0
-    try:
         current = load_rows(current_path)
     except (OSError, ValueError) as exc:
         print(f"perf gate: current report unreadable ({exc})")
         return 1
+
+    # Presence gate: runs against the current report alone, so it holds
+    # even on a fresh repository with no baseline artifact yet.
+    present_ops = {key[0] for key in current}
+    missing = [op for op in required if op not in present_ops]
+    if missing:
+        print(
+            f"perf gate: current report is missing required op rows: "
+            f"{', '.join(missing)} (have: {', '.join(sorted(present_ops))})"
+        )
+        return 1
+    if required:
+        print(f"perf gate: required ops present: {', '.join(required)}")
+
+    try:
+        baseline = load_rows(baseline_path)
+    except (OSError, ValueError) as exc:
+        print(f"perf gate: no usable baseline ({exc}); skipping comparison")
+        return 0
     if not baseline:
-        print("perf gate: baseline has no comparable rows; skipping")
+        print("perf gate: baseline has no comparable rows; skipping comparison")
         return 0
 
     failures = []
     compared = 0
+    summary = [
+        "### Perf gate: per-row deltas",
+        "",
+        "| row | baseline (ns) | current (ns) | delta | status |",
+        "| --- | ---: | ---: | ---: | :---: |",
+    ]
     for key, base in sorted(baseline.items(), key=str):
         cur = current.get(key)
         if cur is None:
@@ -74,6 +124,9 @@ def main(argv):
         label = " ".join(f"{k}={v}" for k, v in zip(KEY_FIELDS, key) if v is not None)
         status = "FAIL" if ratio > 1.0 + threshold else "ok"
         print(f"  [{status}] {label}: {base:.0f} -> {cur:.0f} ns ({ratio - 1.0:+.1%})")
+        summary.append(
+            f"| `{label}` | {base:.0f} | {cur:.0f} | {ratio - 1.0:+.1%} | {status} |"
+        )
         if ratio > 1.0 + threshold:
             failures.append(label)
 
@@ -81,13 +134,16 @@ def main(argv):
         print("perf gate: no overlapping rows between baseline and current; skipping")
         return 0
     if failures:
-        print(
+        verdict = (
             f"perf gate: {len(failures)}/{compared} ops regressed "
             f">{threshold:.0%}: {', '.join(failures)}"
         )
-        return 1
-    print(f"perf gate: {compared} ops within {threshold:.0%} of baseline")
-    return 0
+    else:
+        verdict = f"perf gate: {compared} ops within {threshold:.0%} of baseline"
+    summary += ["", verdict]
+    write_step_summary(summary)
+    print(verdict)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ mod common;
 
 use common::*;
 use hck::kernels::{kernel_cross, Gaussian, Laplace};
+use hck::linalg::simd;
 use hck::linalg::{gemm, par_gemm_with, syrk, Cholesky, Mat, Trans};
 use hck::util::bench::{fmt_secs, gflops, Bench, BenchJson, Table};
 use hck::util::json::Json;
@@ -42,31 +43,76 @@ fn main() {
     if quick {
         println!("(HCK_BENCH_QUICK: reduced sizes)\n");
     }
+    // The microkernel backend the packed core dispatched to. The forced
+    // `*_scalar` rows below re-measure the same problems through the
+    // scalar fallback so every report carries the SIMD-vs-scalar ratio
+    // (and the perf gate can require the simd rows outright).
+    let backend = simd::backend();
+    println!(
+        "SIMD backend: {} ({})\n",
+        backend.name(),
+        if std::env::var("HCK_SIMD").is_ok() {
+            "forced via HCK_SIMD"
+        } else {
+            "runtime-detected"
+        }
+    );
 
-    // ---- gemm (packed core): squares at factor sizes ----
-    println!("— gemm (C = A·B, square; packed core) —");
+    // ---- gemm (packed core): squares at factor sizes, dispatched
+    // backend vs forced-scalar baseline ----
+    println!("— gemm (C = A·B, square; packed core; backend {}) —", backend.name());
     let gemm_sizes: &[usize] = if quick { &[64, 128] } else { &[64, 128, 256, 512] };
-    let mut table = Table::new(&["size", "median", "GFLOP/s"]);
+    let mut table = Table::new(&["size", "scalar", backend.name(), "GFLOP/s", "vs scalar"]);
     for &n in gemm_sizes {
         let a = Mat::from_fn(n, n, |_, _| rng.normal());
         let b = Mat::from_fn(n, n, |_, _| rng.normal());
         let mut c = Mat::zeros(n, n);
+        let flops = 2.0 * (n as f64).powi(3);
+        let prev = simd::force_backend(simd::Backend::Scalar).expect("scalar is always available");
+        let m_scalar = bench.run("gemm_scalar", || {
+            gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
+            c.as_slice()[0]
+        });
+        simd::force_backend(prev).expect("restore dispatched backend");
         let m = bench.run("gemm", || {
             gemm(1.0, &a, Trans::No, &b, Trans::No, 0.0, &mut c);
             c.as_slice()[0]
         });
-        let flops = 2.0 * (n as f64).powi(3);
         table.row(&[
             format!("{n}"),
+            fmt_secs(m_scalar.median()),
             fmt_secs(m.median()),
             format!("{:.2}", gflops(flops, m.median())),
+            format!("{:.2}x", m_scalar.median() / m.median()),
+        ]);
+        report.row(vec![
+            ("op", Json::Str("gemm_scalar".into())),
+            ("n", Json::Num(n as f64)),
+            ("backend", Json::Str("scalar".into())),
+            ("ns_per_op", Json::Num(m_scalar.median() * 1e9)),
+            ("gflops", Json::Num(gflops(flops, m_scalar.median()))),
         ]);
         report.row(vec![
             ("op", Json::Str("gemm".into())),
             ("n", Json::Num(n as f64)),
+            ("backend", Json::Str(backend.name().into())),
             ("ns_per_op", Json::Num(m.median() * 1e9)),
             ("gflops", Json::Num(gflops(flops, m.median()))),
+            ("speedup_vs_scalar", Json::Num(m_scalar.median() / m.median())),
         ]);
+        // Presence marker for the CI perf gate: these rows exist only
+        // when dispatch actually landed on a SIMD backend, so
+        // `--require gemm_simd` fails if it silently regresses to
+        // scalar on a machine that should have AVX2/NEON.
+        if backend != simd::Backend::Scalar {
+            report.row(vec![
+                ("op", Json::Str("gemm_simd".into())),
+                ("n", Json::Num(n as f64)),
+                ("backend", Json::Str(backend.name().into())),
+                ("ns_per_op", Json::Num(m.median() * 1e9)),
+                ("gflops", Json::Num(gflops(flops, m.median()))),
+            ]);
+        }
     }
     table.print();
 
@@ -95,38 +141,58 @@ fn main() {
             ("op", Json::Str("gemm_rect".into())),
             ("n", Json::Num(n as f64)),
             ("r", Json::Num(r as f64)),
+            ("backend", Json::Str(backend.name().into())),
             ("ns_per_op", Json::Num(m.median() * 1e9)),
             ("gflops", Json::Num(gflops(flops, m.median()))),
         ]);
     }
     table.print();
 
-    // ---- syrk: the Gram/Schur updates (upper triangle + mirror) ----
-    println!("\n— syrk (C = A·Aᵀ, A n×r) —");
+    // ---- syrk: the Gram/Schur updates (upper triangle + mirror),
+    // dispatched backend vs forced-scalar baseline ----
+    println!("\n— syrk (C = A·Aᵀ, A n×r; backend {}) —", backend.name());
     let syrk_shapes: &[(usize, usize)] =
         if quick { &[(256, 64)] } else { &[(512, 512), (1024, 256)] };
-    let mut table = Table::new(&["n", "r", "median", "GFLOP/s"]);
+    let mut table = Table::new(&["n", "r", "scalar", backend.name(), "GFLOP/s", "vs scalar"]);
     for &(n, r) in syrk_shapes {
         let a = Mat::from_fn(n, r, |_, _| rng.normal());
         let mut c = Mat::zeros(n, n);
+        // Triangle-only accumulation: ~n²·r madds instead of 2·n²·r.
+        let flops = (n * n * r) as f64;
+        let prev = simd::force_backend(simd::Backend::Scalar).expect("scalar is always available");
+        let m_scalar = bench.run("syrk_scalar", || {
+            syrk(1.0, &a, Trans::No, 0.0, &mut c);
+            c.as_slice()[0]
+        });
+        simd::force_backend(prev).expect("restore dispatched backend");
         let m = bench.run("syrk", || {
             syrk(1.0, &a, Trans::No, 0.0, &mut c);
             c.as_slice()[0]
         });
-        // Triangle-only accumulation: ~n²·r madds instead of 2·n²·r.
-        let flops = (n * n * r) as f64;
         table.row(&[
             n.to_string(),
             r.to_string(),
+            fmt_secs(m_scalar.median()),
             fmt_secs(m.median()),
             format!("{:.2}", gflops(flops, m.median())),
+            format!("{:.2}x", m_scalar.median() / m.median()),
+        ]);
+        report.row(vec![
+            ("op", Json::Str("syrk_scalar".into())),
+            ("n", Json::Num(n as f64)),
+            ("r", Json::Num(r as f64)),
+            ("backend", Json::Str("scalar".into())),
+            ("ns_per_op", Json::Num(m_scalar.median() * 1e9)),
+            ("gflops", Json::Num(gflops(flops, m_scalar.median()))),
         ]);
         report.row(vec![
             ("op", Json::Str("syrk".into())),
             ("n", Json::Num(n as f64)),
             ("r", Json::Num(r as f64)),
+            ("backend", Json::Str(backend.name().into())),
             ("ns_per_op", Json::Num(m.median() * 1e9)),
             ("gflops", Json::Num(gflops(flops, m.median()))),
+            ("speedup_vs_scalar", Json::Num(m_scalar.median() / m.median())),
         ]);
     }
     table.print();
@@ -167,6 +233,7 @@ fn main() {
                 ("op", Json::Str("par_gemm".into())),
                 ("n", Json::Num(pg_n as f64)),
                 ("threads", Json::Num(t as f64)),
+                ("backend", Json::Str(backend.name().into())),
                 ("ns_per_op", Json::Num(ns)),
                 ("speedup_vs_1t", Json::Num(speedup)),
                 ("gflops", Json::Num(gflops(flops, m.median()))),

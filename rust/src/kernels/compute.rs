@@ -8,8 +8,11 @@
 //! epilogue** ([`crate::linalg::gemm_epilogue`]): each output strip is
 //! finished while still cache-hot, with no second full sweep over an
 //! intermediate Gram buffer — exactly the tiling the L1 Pallas kernel
-//! performs on TPU (python/compile/kernels/pairwise.py). The L1-metric
-//! Laplace kernel uses a blocked direct loop.
+//! performs on TPU (python/compile/kernels/pairwise.py). The packed
+//! core underneath runs the runtime-dispatched SIMD microkernel
+//! ([`crate::linalg::simd`]), so the fused epilogue path inherits the
+//! AVX2/FMA or NEON tiles with no changes here. The L1-metric Laplace
+//! kernel uses a blocked direct loop.
 //!
 //! [`par_kernel_cross`] / [`par_kernel_block`] are the pool-parallel
 //! variants for top-of-chain call sites (exact/Nyström/KPCA fits, the

@@ -18,11 +18,15 @@
 //! - **MC = 64** (rows): a panel of op(A) is packed into MR-wide row
 //!   panels (≤ 128 KB, L2-resident); each packed pair feeds the
 //!   macro-kernel while hot.
-//! - **MR×NR = 4×8** microkernel: a 32-accumulator register tile updated
+//! - **MR×NR = 4×8** microkernel: a register tile updated
 //!   `acc[i][j] += a[p·MR+i] · b[p·NR+j]` over the packed panels — pure
-//!   contiguous streams, which LLVM autovectorizes. Edge tiles are
-//!   zero-padded inside the packed buffers so the microkernel never
-//!   branches on shape; only the valid `mr×nr` region is written back.
+//!   contiguous streams. The tile itself is **runtime-SIMD-dispatched**
+//!   through [`super::simd`]: an explicit AVX2+FMA 4×8 kernel on x86_64,
+//!   NEON 4×4 half-tiles on aarch64, or the scalar 32-accumulator
+//!   fallback, selected once per process (`HCK_SIMD` overrides). Edge
+//!   tiles are zero-padded inside the packed buffers so the microkernel
+//!   never branches on shape; only the valid `mr×nr` region is written
+//!   back.
 //!
 //! Packing reads each transpose case directly from the source matrix
 //! (`Trans::Yes/Yes` included — no materialized `b.t()` anywhere), and
@@ -40,15 +44,20 @@
 //! and never by the row/column tiling, so the result is **bitwise
 //! identical** to single-threaded `gemm` for every thread count — the
 //! repo-wide determinism invariant (`HCK_THREADS=1` is a fallback, not a
-//! different numerical mode). Inside an enclosing parallel region (a
-//! pool worker, or the caller's own bin of a `run_parallel`) the `par_*`
-//! entry points degrade to the sequential path, so routing them through
-//! mid-chain code cannot oversubscribe the pool.
+//! different numerical mode). The invariant holds under each SIMD
+//! backend separately: the microkernel is selected once per process and
+//! every backend accumulates over `k` in the same order (only FMA
+//! contraction differs across backends — see [`super::simd`]). Inside
+//! an enclosing parallel region (a pool worker, or the caller's own bin
+//! of a `run_parallel`) the `par_*` entry points degrade to the
+//! sequential path, so routing them through mid-chain code cannot
+//! oversubscribe the pool.
 //!
 //! See `rust/benches/hotpath.rs` for GFLOP/s measurements and the
 //! thread-scaling sweep recorded in `BENCH_hotpath.json`.
 
 use super::matrix::Mat;
+use super::simd::{self, MR, NR};
 use crate::util::parallel::{default_threads, disjoint_slices, run_parallel};
 
 /// Transpose marker for [`gemm`].
@@ -60,10 +69,6 @@ pub enum Trans {
     Yes,
 }
 
-/// Microkernel rows (register tile height).
-const MR: usize = 4;
-/// Microkernel columns (register tile width).
-const NR: usize = 8;
 /// Row cache block: one packed op(A) panel is MC×KC (≤ 128 KB).
 const MC: usize = 64;
 /// Depth cache block.
@@ -109,6 +114,16 @@ fn plan_for(m: usize, k: usize, n: usize) -> Plan {
     } else {
         Plan::Small
     }
+}
+
+/// Whether a `gemm` of shape (m, k, n) routes through the packed panels
+/// and the SIMD microkernel (`true`) or the unpacked per-row loops
+/// (`false`). Exposed for the cross-backend property tests: the small
+/// plan never touches the microkernel, so every SIMD backend is bitwise
+/// identical to scalar on it, while packed results may differ by FMA
+/// contraction (see [`super::simd`]).
+pub fn uses_packed_plan(m: usize, k: usize, n: usize) -> bool {
+    plan_for(m, k, n) == Plan::Packed
 }
 
 /// One gemm problem: operands, scaling, inner dimension and the chosen
@@ -541,30 +556,13 @@ fn macro_kernel(
             let mr = MR.min(mc - i0);
             let apanel = &apack[ip * kc * MR..(ip + 1) * kc * MR];
             let mut acc = [[0.0f64; NR]; MR];
-            microkernel(kc, apanel, bpanel, &mut acc);
+            simd::microkernel(kc, apanel, bpanel, &mut acc);
             for i in 0..mr {
                 let base = (i0 + i) * ldc + j0;
                 let crow = &mut c[base..base + nr];
                 for (j, cj) in crow.iter_mut().enumerate() {
                     *cj += alpha * acc[i][j];
                 }
-            }
-        }
-    }
-}
-
-/// The MR×NR register tile: 32 independent accumulators over two
-/// contiguous packed streams — the innermost loop of every packed gemm.
-#[inline(always)]
-fn microkernel(kc: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
-    for p in 0..kc {
-        let ap: &[f64; MR] = apanel[p * MR..p * MR + MR].try_into().unwrap();
-        let bp: &[f64; NR] = bpanel[p * NR..p * NR + NR].try_into().unwrap();
-        for i in 0..MR {
-            let ai = ap[i];
-            let row = &mut acc[i];
-            for j in 0..NR {
-                row[j] += ai * bp[j];
             }
         }
     }

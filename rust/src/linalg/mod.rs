@@ -14,7 +14,10 @@
 //! run packed and cache-blocked with optional row-panel parallelism
 //! (`par_gemm`/`par_syrk`) over the persistent worker pool — bitwise
 //! identical to the sequential path for every thread count (see
-//! `rust/benches/hotpath.rs` for the GFLOP/s trajectory).
+//! `rust/benches/hotpath.rs` for the GFLOP/s trajectory). Under the
+//! packing layer, the register microkernel is runtime-SIMD-dispatched
+//! ([`simd`]): AVX2+FMA on x86_64, NEON on aarch64, scalar fallback
+//! anywhere, overridable via `HCK_SIMD=scalar|avx2|neon`.
 
 pub mod blas;
 pub mod chol;
@@ -23,6 +26,7 @@ pub mod lanczos;
 pub mod lu;
 pub mod matrix;
 pub mod qr;
+pub mod simd;
 
 pub use blas::{
     gemm, gemm_epilogue, gemv, matmul, par_gemm, par_gemm_epilogue, par_gemm_with,
@@ -34,3 +38,4 @@ pub use lanczos::{lanczos_topk, power_iteration};
 pub use lu::Lu;
 pub use matrix::Mat;
 pub use qr::{lstsq, Qr};
+pub use simd::{backend_name as simd_backend_name, Backend as SimdBackend};

@@ -1,0 +1,75 @@
+//! AVX2 + FMA microkernel: a 4×8 f64 register tile.
+//!
+//! Eight 256-bit accumulators hold the full MR×NR = 4×8 tile (two ymm
+//! per row). Each depth step loads the two packed-B vectors once and
+//! issues four broadcast + two-FMA pairs — 8 FMAs against 6 loads, with
+//! 11 of the 16 ymm registers live, so nothing spills. The panel
+//! streams are the zero-padded packed buffers from the blas packing
+//! layer: perfectly contiguous, no shape branches, and the tile's
+//! per-element accumulation order over `p` matches the scalar fallback
+//! exactly (only FMA contraction differs).
+//!
+//! An 8×8 tile was considered and rejected: sixteen f64×4 accumulators
+//! consume every ymm register before the B loads and A broadcast get
+//! one, so it spills on AVX2; 4×8 is the widest tile that stays fully
+//! register-resident (the AVX-512 generation is where 8×8 pays off).
+
+use super::{MR, NR};
+use core::arch::x86_64::{
+    _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd,
+};
+
+/// Fill `acc` (zeroed on entry) with the 4×8 panel product.
+///
+/// # Safety
+///
+/// The CPU must support AVX2 and FMA (guaranteed by the dispatch layer,
+/// which only selects this backend after `is_x86_feature_detected!`
+/// passes for both), and the panels must hold at least `kc·MR` /
+/// `kc·NR` elements (guaranteed by the packing layer and asserted by
+/// the dispatcher).
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn microkernel(
+    kc: usize,
+    apanel: &[f64],
+    bpanel: &[f64],
+    acc: &mut [[f64; NR]; MR],
+) {
+    debug_assert!(apanel.len() >= kc * MR);
+    debug_assert!(bpanel.len() >= kc * NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    // Row i of the tile lives in (ci0, ci1): columns 0..4 and 4..8.
+    let mut c00 = _mm256_setzero_pd();
+    let mut c01 = _mm256_setzero_pd();
+    let mut c10 = _mm256_setzero_pd();
+    let mut c11 = _mm256_setzero_pd();
+    let mut c20 = _mm256_setzero_pd();
+    let mut c21 = _mm256_setzero_pd();
+    let mut c30 = _mm256_setzero_pd();
+    let mut c31 = _mm256_setzero_pd();
+    for p in 0..kc {
+        let b0 = _mm256_loadu_pd(b.add(p * NR));
+        let b1 = _mm256_loadu_pd(b.add(p * NR + 4));
+        let a0 = _mm256_set1_pd(*a.add(p * MR));
+        c00 = _mm256_fmadd_pd(a0, b0, c00);
+        c01 = _mm256_fmadd_pd(a0, b1, c01);
+        let a1 = _mm256_set1_pd(*a.add(p * MR + 1));
+        c10 = _mm256_fmadd_pd(a1, b0, c10);
+        c11 = _mm256_fmadd_pd(a1, b1, c11);
+        let a2 = _mm256_set1_pd(*a.add(p * MR + 2));
+        c20 = _mm256_fmadd_pd(a2, b0, c20);
+        c21 = _mm256_fmadd_pd(a2, b1, c21);
+        let a3 = _mm256_set1_pd(*a.add(p * MR + 3));
+        c30 = _mm256_fmadd_pd(a3, b0, c30);
+        c31 = _mm256_fmadd_pd(a3, b1, c31);
+    }
+    _mm256_storeu_pd(acc[0].as_mut_ptr(), c00);
+    _mm256_storeu_pd(acc[0].as_mut_ptr().add(4), c01);
+    _mm256_storeu_pd(acc[1].as_mut_ptr(), c10);
+    _mm256_storeu_pd(acc[1].as_mut_ptr().add(4), c11);
+    _mm256_storeu_pd(acc[2].as_mut_ptr(), c20);
+    _mm256_storeu_pd(acc[2].as_mut_ptr().add(4), c21);
+    _mm256_storeu_pd(acc[3].as_mut_ptr(), c30);
+    _mm256_storeu_pd(acc[3].as_mut_ptr().add(4), c31);
+}

@@ -1,0 +1,29 @@
+//! Scalar fallback microkernel — the portable reference tile.
+//!
+//! This is the pre-SIMD packed kernel verbatim: 32 independent
+//! accumulators over two contiguous packed streams, written so LLVM can
+//! autovectorize it for whatever the build target offers (baseline
+//! x86-64 gets SSE2 here — the explicit AVX2/NEON tiles exist because
+//! the default target cannot assume more). It is also the semantic
+//! oracle for the intrinsic backends: same per-element accumulation
+//! order over `p`, differing only in that the intrinsics fuse each
+//! multiply-add while this tile rounds twice.
+
+use super::{MR, NR};
+
+/// Fill `acc` (zeroed on entry) with the MR×NR panel product
+/// `acc[i][j] = Σ_p apanel[p·MR+i] · bpanel[p·NR+j]`.
+#[inline]
+pub(crate) fn microkernel(kc: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for p in 0..kc {
+        let ap: &[f64; MR] = apanel[p * MR..p * MR + MR].try_into().unwrap();
+        let bp: &[f64; NR] = bpanel[p * NR..p * NR + NR].try_into().unwrap();
+        for i in 0..MR {
+            let ai = ap[i];
+            let row = &mut acc[i];
+            for j in 0..NR {
+                row[j] += ai * bp[j];
+            }
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! SIMD microkernels with one-time runtime dispatch.
+//!
+//! The packed BLAS-3 core in [`crate::linalg::blas`] funnels every large
+//! product through a single MR×NR register microkernel over zero-padded
+//! packed panels. This module supplies that microkernel in three
+//! flavors and picks one **once per process**:
+//!
+//! - `avx2.rs` (x86_64): a 4×8 f64 tile on AVX2 + FMA — eight 256-bit
+//!   accumulators, two packed-B loads and four broadcast-FMA pairs per
+//!   depth step; selected when `is_x86_feature_detected!("avx2")` and
+//!   `"fma"` both hold.
+//! - `neon.rs` (aarch64): a 4×4 f64 tile on 128-bit NEON, applied to
+//!   the two halves of the NR=8 packed panel in one fused sweep
+//!   (sixteen `float64x2_t` accumulators); NEON is baseline on aarch64.
+//! - `emulate.rs`: the scalar 32-accumulator tile (the pre-SIMD packed
+//!   kernel, LLVM-autovectorized) — always available, and the reference
+//!   the property tests pin the intrinsics against.
+//!
+//! # Dispatch
+//!
+//! [`backend`] resolves lazily on first use from the `HCK_SIMD`
+//! environment variable (`scalar` | `avx2` | `neon` | `auto`, default
+//! `auto` = best detected) and caches the choice in an atomic. Forcing
+//! a backend the CPU cannot run **panics** — CI forces `HCK_SIMD=avx2`
+//! on the x86 matrix leg precisely so a runner without AVX2 fails
+//! loudly instead of silently testing the scalar path. [`force_backend`]
+//! swaps the cached choice at runtime for tests and benchmarks (the
+//! scalar-baseline rows in `BENCH_hotpath.json` come from it).
+//!
+//! # Numerics and determinism
+//!
+//! Every backend accumulates each C element over the depth index `p` in
+//! the **same order**; the SIMD tiles vectorize across columns only. The
+//! repo-wide invariant "`par_* == serial` bitwise for every thread
+//! count" therefore holds under each backend separately. Across
+//! backends, results differ only by FMA contraction (the intrinsics fuse
+//! multiply-add; the scalar tile rounds twice): identical bitwise
+//! wherever the packed plan is not used, and within a few ULPs per
+//! accumulation step otherwise — `rust/tests/blas_property.rs` pins
+//! both statements.
+//!
+//! All `unsafe` in this subtree is confined to the per-arch intrinsic
+//! tiles, which read exactly `kc·MR` / `kc·NR` packed elements and
+//! write exactly the MR×NR accumulator — CI runs the linalg tests under
+//! AddressSanitizer to keep that claim honest (zero-padded tails could
+//! otherwise mask an out-of-bounds packed read).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+pub mod emulate;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+/// Microkernel rows (register tile height) — the geometry every backend
+/// and the packing layer in [`crate::linalg::blas`] agree on.
+pub const MR: usize = 4;
+/// Microkernel columns (register tile width).
+pub const NR: usize = 8;
+
+/// Which microkernel implementation the packed core dispatches to.
+#[repr(u8)]
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Scalar 32-accumulator tile (`emulate.rs`); always available.
+    Scalar = 1,
+    /// AVX2 + FMA 4×8 tile (`avx2.rs`); x86_64 with both features.
+    Avx2 = 2,
+    /// NEON 4×4 half-tiles over the 4×8 panel (`neon.rs`); aarch64.
+    Neon = 3,
+}
+
+impl Backend {
+    /// Stable lowercase name, matching the `HCK_SIMD` spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Whether this process can actually execute the backend.
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            Backend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            // NEON is baseline on every aarch64 target the crate builds
+            // for; no finer runtime probe is needed.
+            Backend::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// Cached selection: 0 = not yet resolved, else a `Backend` discriminant.
+static SELECTED: AtomicU8 = AtomicU8::new(0);
+
+/// The process-wide microkernel backend: `HCK_SIMD` if set (panics if
+/// the forced backend is unavailable — never a silent fallback),
+/// otherwise the best detected. Resolved once; subsequent calls are an
+/// atomic load.
+#[inline]
+pub fn backend() -> Backend {
+    match SELECTED.load(Ordering::Relaxed) {
+        1 => Backend::Scalar,
+        2 => Backend::Avx2,
+        3 => Backend::Neon,
+        _ => init_backend(),
+    }
+}
+
+/// The selected backend's name — for banners and telemetry rows.
+pub fn backend_name() -> &'static str {
+    backend().name()
+}
+
+#[cold]
+fn init_backend() -> Backend {
+    let chosen = match std::env::var("HCK_SIMD") {
+        Ok(v) => {
+            let v = v.trim().to_ascii_lowercase();
+            let req = match v.as_str() {
+                "" | "auto" => detect(),
+                "scalar" => Backend::Scalar,
+                "avx2" => Backend::Avx2,
+                "neon" => Backend::Neon,
+                other => panic!("HCK_SIMD={other}: expected scalar|avx2|neon|auto"),
+            };
+            assert!(
+                req.available(),
+                "HCK_SIMD={} requested but the {} backend is not available on this CPU/arch \
+                 (detected: {})",
+                req.name(),
+                req.name(),
+                detect().name()
+            );
+            req
+        }
+        Err(_) => detect(),
+    };
+    SELECTED.store(chosen as u8, Ordering::Relaxed);
+    chosen
+}
+
+/// Best backend the current CPU can run, ignoring `HCK_SIMD`.
+pub fn detect() -> Backend {
+    if Backend::Avx2.available() {
+        Backend::Avx2
+    } else if Backend::Neon.available() {
+        Backend::Neon
+    } else {
+        Backend::Scalar
+    }
+}
+
+/// Swap the cached backend at runtime; returns the previous selection so
+/// callers can restore it. Errs (changing nothing) if `b` cannot run on
+/// this CPU.
+///
+/// For tests and benchmarks only — the scalar-baseline rows in
+/// `BENCH_hotpath.json` and the cross-backend property tests use it.
+/// The swap is process-global: tests that combine it with bitwise
+/// comparisons must serialize against each other (see the backend lock
+/// in `rust/tests/blas_property.rs`).
+pub fn force_backend(b: Backend) -> Result<Backend, String> {
+    if !b.available() {
+        return Err(format!(
+            "backend {} is not available on this CPU/arch (detected: {})",
+            b.name(),
+            detect().name()
+        ));
+    }
+    let prev = backend();
+    SELECTED.store(b as u8, Ordering::Relaxed);
+    Ok(prev)
+}
+
+/// The dispatched MR×NR register tile: on entry `acc` is zeroed; on exit
+/// `acc[i][j] = Σ_p apanel[p·MR+i] · bpanel[p·NR+j]` over `p < kc`.
+/// Panels are the zero-padded packed buffers from the blas packing
+/// layer, so the tile never branches on shape.
+#[inline]
+pub(crate) fn microkernel(kc: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert!(apanel.len() >= kc * MR, "apanel holds kc MR-lanes");
+    debug_assert!(bpanel.len() >= kc * NR, "bpanel holds kc NR-lanes");
+    match backend() {
+        Backend::Scalar => emulate::microkernel(kc, apanel, bpanel, acc),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 is only ever selected after `available()` checked
+        // `is_x86_feature_detected!` for avx2 + fma, and the length
+        // guards above cover every packed read.
+        Backend::Avx2 => unsafe { avx2::microkernel(kc, apanel, bpanel, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: NEON is baseline on aarch64; length guards as above.
+        Backend::Neon => unsafe { neon::microkernel(kc, apanel, bpanel, acc) },
+        // A backend compiled out on this arch is unselectable (its
+        // `available()` is false and selection validates availability).
+        #[allow(unreachable_patterns)]
+        _ => emulate::microkernel(kc, apanel, bpanel, acc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_available_and_selected_backend_is_runnable() {
+        assert!(Backend::Scalar.available());
+        assert!(backend().available());
+        assert!(detect().available());
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for b in [Backend::Scalar, Backend::Avx2, Backend::Neon] {
+            assert!(!b.name().is_empty());
+        }
+        assert_eq!(Backend::Scalar.name(), "scalar");
+        assert_eq!(Backend::Avx2.name(), "avx2");
+        assert_eq!(Backend::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn forcing_an_unavailable_backend_errs_without_changing_selection() {
+        let before = backend();
+        let unavailable = if cfg!(target_arch = "x86_64") {
+            Backend::Neon
+        } else {
+            Backend::Avx2
+        };
+        assert!(force_backend(unavailable).is_err());
+        assert_eq!(backend(), before);
+    }
+}

@@ -1,0 +1,95 @@
+//! NEON microkernel: 4×4 f64 tiles over 128-bit vectors.
+//!
+//! NEON's 128-bit lanes hold two f64, so the natural register tile is
+//! 4×4 (eight `float64x2_t` accumulators). The packed-B panels are
+//! NR = 8 wide, so one call sweeps the panel as **two interleaved 4×4
+//! tiles** sharing each depth step's A broadcasts — sixteen
+//! accumulators, four B loads and four duplicated A lanes per step,
+//! 21 of the 32 NEON registers live. Per-element accumulation order
+//! over `p` matches the scalar fallback exactly; `vfmaq_f64` fuses each
+//! multiply-add (the only numerical difference).
+
+use super::{MR, NR};
+use core::arch::aarch64::{float64x2_t, vdupq_n_f64, vfmaq_f64, vld1q_f64, vst1q_f64};
+
+/// Fill `acc` (zeroed on entry) with the 4×8 panel product, computed as
+/// two fused 4×4 NEON tiles.
+///
+/// # Safety
+///
+/// aarch64-only (NEON is baseline there); the panels must hold at least
+/// `kc·MR` / `kc·NR` elements — guaranteed by the packing layer and
+/// asserted by the dispatcher.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn microkernel(
+    kc: usize,
+    apanel: &[f64],
+    bpanel: &[f64],
+    acc: &mut [[f64; NR]; MR],
+) {
+    debug_assert!(apanel.len() >= kc * MR);
+    debug_assert!(bpanel.len() >= kc * NR);
+    let a = apanel.as_ptr();
+    let b = bpanel.as_ptr();
+    let zero: float64x2_t = vdupq_n_f64(0.0);
+    // Row i of the tile lives in (ci0..ci3): column pairs 0-1, 2-3
+    // (left 4×4 tile) and 4-5, 6-7 (right 4×4 tile).
+    let mut c00 = zero;
+    let mut c01 = zero;
+    let mut c02 = zero;
+    let mut c03 = zero;
+    let mut c10 = zero;
+    let mut c11 = zero;
+    let mut c12 = zero;
+    let mut c13 = zero;
+    let mut c20 = zero;
+    let mut c21 = zero;
+    let mut c22 = zero;
+    let mut c23 = zero;
+    let mut c30 = zero;
+    let mut c31 = zero;
+    let mut c32 = zero;
+    let mut c33 = zero;
+    for p in 0..kc {
+        let b0 = vld1q_f64(b.add(p * NR));
+        let b1 = vld1q_f64(b.add(p * NR + 2));
+        let b2 = vld1q_f64(b.add(p * NR + 4));
+        let b3 = vld1q_f64(b.add(p * NR + 6));
+        let a0 = vdupq_n_f64(*a.add(p * MR));
+        c00 = vfmaq_f64(c00, a0, b0);
+        c01 = vfmaq_f64(c01, a0, b1);
+        c02 = vfmaq_f64(c02, a0, b2);
+        c03 = vfmaq_f64(c03, a0, b3);
+        let a1 = vdupq_n_f64(*a.add(p * MR + 1));
+        c10 = vfmaq_f64(c10, a1, b0);
+        c11 = vfmaq_f64(c11, a1, b1);
+        c12 = vfmaq_f64(c12, a1, b2);
+        c13 = vfmaq_f64(c13, a1, b3);
+        let a2 = vdupq_n_f64(*a.add(p * MR + 2));
+        c20 = vfmaq_f64(c20, a2, b0);
+        c21 = vfmaq_f64(c21, a2, b1);
+        c22 = vfmaq_f64(c22, a2, b2);
+        c23 = vfmaq_f64(c23, a2, b3);
+        let a3 = vdupq_n_f64(*a.add(p * MR + 3));
+        c30 = vfmaq_f64(c30, a3, b0);
+        c31 = vfmaq_f64(c31, a3, b1);
+        c32 = vfmaq_f64(c32, a3, b2);
+        c33 = vfmaq_f64(c33, a3, b3);
+    }
+    vst1q_f64(acc[0].as_mut_ptr(), c00);
+    vst1q_f64(acc[0].as_mut_ptr().add(2), c01);
+    vst1q_f64(acc[0].as_mut_ptr().add(4), c02);
+    vst1q_f64(acc[0].as_mut_ptr().add(6), c03);
+    vst1q_f64(acc[1].as_mut_ptr(), c10);
+    vst1q_f64(acc[1].as_mut_ptr().add(2), c11);
+    vst1q_f64(acc[1].as_mut_ptr().add(4), c12);
+    vst1q_f64(acc[1].as_mut_ptr().add(6), c13);
+    vst1q_f64(acc[2].as_mut_ptr(), c20);
+    vst1q_f64(acc[2].as_mut_ptr().add(2), c21);
+    vst1q_f64(acc[2].as_mut_ptr().add(4), c22);
+    vst1q_f64(acc[2].as_mut_ptr().add(6), c23);
+    vst1q_f64(acc[3].as_mut_ptr(), c30);
+    vst1q_f64(acc[3].as_mut_ptr().add(2), c31);
+    vst1q_f64(acc[3].as_mut_ptr().add(4), c32);
+    vst1q_f64(acc[3].as_mut_ptr().add(6), c33);
+}

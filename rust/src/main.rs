@@ -224,6 +224,23 @@ fn build_model_spec(a: &Args, norm: Option<Vec<(f64, f64)>>) -> Result<ModelSpec
     })
 }
 
+/// Detected-backend startup banner: which SIMD microkernel the packed
+/// BLAS-3 core dispatched to, and the worker-pool width it multiplies
+/// with. Resolving the backend here also makes a forced-but-unavailable
+/// `HCK_SIMD` fail loudly at startup instead of mid-request.
+fn print_simd_banner() {
+    let mode = if std::env::var("HCK_SIMD").is_ok() {
+        "forced via HCK_SIMD"
+    } else {
+        "runtime-detected"
+    };
+    println!(
+        "simd backend: {} ({mode}) | threads: {} (HCK_THREADS)",
+        hck::linalg::simd::backend_name(),
+        hck::util::parallel::default_threads(),
+    );
+}
+
 fn cmd_info() -> Result<()> {
     println!("Table 1 data set analogues (synthetic generators):");
     println!(
@@ -241,6 +258,8 @@ fn cmd_info() -> Result<()> {
             s.default_n_test
         );
     }
+    println!();
+    print_simd_banner();
     println!();
     match hck::runtime::PjrtEngine::load_default() {
         Ok(engine) => {
@@ -302,6 +321,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     }
     let (train, test, norm) = load_data(&a)?;
     let mspec = build_model_spec(&a, norm)?;
+    print_simd_banner();
     println!(
         "training on {} (n={} d={} task={:?})",
         train.name,
@@ -501,6 +521,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         );
         return Ok(());
     }
+    print_simd_banner();
     let policy = BatchPolicy {
         max_batch: a.usize("max-batch").map_err(Error::Config)?,
         max_wait: std::time::Duration::from_millis(

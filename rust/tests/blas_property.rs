@@ -5,12 +5,63 @@
 //! bitwise-determinism contract `par_gemm == gemm` / `par_syrk == syrk`
 //! for every thread count (the invariant the hierarchical solver's
 //! parallel passes rely on).
+//!
+//! Since the microkernel grew runtime-dispatched SIMD backends
+//! (`hck::linalg::simd`), the suite also pins the cross-backend
+//! contract: every available SIMD backend agrees with the scalar
+//! fallback ≤ 1e-13 elementwise (relative) on packed-plan shapes and
+//! **bitwise** on small-plan shapes (where the microkernel never runs
+//! and thus no FMA contraction happens), across all transpose pairs,
+//! adversarial MR/NR remainder shapes, and alpha/beta cases — and
+//! `par == serial` stays bitwise under each forced backend.
 
+use hck::linalg::blas::uses_packed_plan;
+use hck::linalg::simd::{self, Backend};
 use hck::linalg::{gemm, par_gemm_with, par_syrk_with, syrk, Mat, Trans};
 use hck::util::rng::Rng;
+use std::sync::{Mutex, MutexGuard};
+
+/// Serializes the tests that force the process-global SIMD backend
+/// against the bitwise-comparison tests that assume the backend stays
+/// put for their whole duration (test threads share the process).
+static BACKEND_LOCK: Mutex<()> = Mutex::new(());
+
+fn backend_guard() -> MutexGuard<'static, ()> {
+    BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The SIMD (non-scalar) backends this machine can actually run.
+fn simd_backends() -> Vec<Backend> {
+    [Backend::Avx2, Backend::Neon].into_iter().filter(|b| b.available()).collect()
+}
 
 fn randmat(rng: &mut Rng, m: usize, n: usize) -> Mat {
     Mat::from_fn(m, n, |_, _| rng.normal())
+}
+
+/// Uniform(-1, 1) operands keep partial sums O(√k), so the cross-backend
+/// FMA-contraction bound stays far inside the 1e-13 elementwise budget.
+fn unimat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+    Mat::from_fn(m, n, |_, _| rng.uniform(-1.0, 1.0))
+}
+
+/// Cross-backend agreement check: bitwise where the packed plan (and
+/// hence the SIMD microkernel) is not used, ≤ 1e-13 relative elementwise
+/// where FMA contraction may differ from the scalar two-rounding tile.
+fn assert_agree(be: Backend, got: &Mat, want: &Mat, packed: bool, ctx: &str) {
+    if packed {
+        for (g, w) in got.as_slice().iter().zip(want.as_slice()) {
+            let tol = 1e-13 * (1.0 + w.abs());
+            assert!((g - w).abs() <= tol, "{} vs scalar {ctx}: {g} vs {w}", be.name());
+        }
+    } else {
+        assert_eq!(
+            got.as_slice(),
+            want.as_slice(),
+            "{} vs scalar must be bitwise on small plan {ctx}",
+            be.name()
+        );
+    }
 }
 
 /// Entry (i, j) of op(A).
@@ -102,6 +153,7 @@ fn gemm_matches_oracle_every_transpose_shape_and_scalar() {
 fn par_gemm_is_bitwise_gemm_for_every_thread_count() {
     // Shapes straddling the parallel-volume gate and both plans; every
     // transpose pair on the largest one.
+    let _g = backend_guard();
     let mut rng = Rng::new(7);
     let shapes: &[(usize, usize, usize)] =
         &[(5, 9, 40), (67, 257, 30), (130, 70, 65), (256, 32, 256)];
@@ -169,6 +221,7 @@ fn syrk_matches_oracle_both_transposes() {
 
 #[test]
 fn par_syrk_is_bitwise_syrk_for_every_thread_count() {
+    let _g = backend_guard();
     let mut rng = Rng::new(13);
     for &(m, k, ta) in &[(130usize, 50usize, Trans::No), (70, 200, Trans::Yes)] {
         let a = op_operand(&mut rng, ta, m, k);
@@ -181,4 +234,127 @@ fn par_syrk_is_bitwise_syrk_for_every_thread_count() {
             assert_eq!(c.as_slice(), want.as_slice(), "threads={threads} (m={m}, k={k})");
         }
     }
+}
+
+#[test]
+fn gemm_simd_agrees_with_scalar_across_remainder_shapes() {
+    // m, n, k ∈ {1, 3, 5, 7, 9, 63, 65} hits every MR=4 / NR=8 remainder
+    // class, both sides of the small/packed plan cut, and an MC=64 row
+    // panel split — under every transpose pair and two alpha/beta cases.
+    let _g = backend_guard();
+    let initial = simd::backend();
+    let simd_set = simd_backends();
+    let dims: &[usize] = &[1, 3, 5, 7, 9, 63, 65];
+    let scalars: &[(f64, f64)] = &[(1.0, 0.0), (-0.5, 0.7)];
+    let mut rng = Rng::new(2024);
+    for &m in dims {
+        for &k in dims {
+            for &n in dims {
+                for &ta in &[Trans::No, Trans::Yes] {
+                    for &tb in &[Trans::No, Trans::Yes] {
+                        let a = match ta {
+                            Trans::No => unimat(&mut rng, m, k),
+                            Trans::Yes => unimat(&mut rng, k, m),
+                        };
+                        let b = match tb {
+                            Trans::No => unimat(&mut rng, k, n),
+                            Trans::Yes => unimat(&mut rng, n, k),
+                        };
+                        let c0 = unimat(&mut rng, m, n);
+                        for &(alpha, beta) in scalars {
+                            simd::force_backend(Backend::Scalar).unwrap();
+                            let mut want = c0.clone();
+                            gemm(alpha, &a, ta, &b, tb, beta, &mut want);
+                            let ctx = format!("({m},{k},{n}) {ta:?}/{tb:?} α={alpha} β={beta}");
+                            for &be in &simd_set {
+                                simd::force_backend(be).unwrap();
+                                let mut c = c0.clone();
+                                gemm(alpha, &a, ta, &b, tb, beta, &mut c);
+                                assert_agree(be, &c, &want, uses_packed_plan(m, k, n), &ctx);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    simd::force_backend(initial).unwrap();
+}
+
+#[test]
+fn syrk_simd_agrees_with_scalar() {
+    let _g = backend_guard();
+    let initial = simd::backend();
+    let mut rng = Rng::new(57);
+    for &(m, k) in &[(7usize, 3usize), (63, 65), (65, 63), (130, 33)] {
+        for &ta in &[Trans::No, Trans::Yes] {
+            let a = match ta {
+                Trans::No => unimat(&mut rng, m, k),
+                Trans::Yes => unimat(&mut rng, k, m),
+            };
+            let c0 = unimat(&mut rng, m, m);
+            simd::force_backend(Backend::Scalar).unwrap();
+            let mut want = c0.clone();
+            syrk(0.75, &a, ta, 0.5, &mut want);
+            let ctx = format!("syrk ({m},{k}) ta={ta:?}");
+            for &be in &simd_backends() {
+                simd::force_backend(be).unwrap();
+                let mut c = c0.clone();
+                syrk(0.75, &a, ta, 0.5, &mut c);
+                assert!(c.is_symmetric(0.0), "syrk stays exactly symmetric under {}", be.name());
+                // syrk's plan gate is (m, k, m) — same cut as gemm's.
+                assert_agree(be, &c, &want, uses_packed_plan(m, k, m), &ctx);
+            }
+        }
+    }
+    simd::force_backend(initial).unwrap();
+}
+
+#[test]
+fn par_matches_serial_bitwise_under_each_forced_backend() {
+    // The determinism contract must hold per backend: whatever tile the
+    // dispatcher picked, the row-panel parallel path reuses it and stays
+    // bitwise identical to the serial path.
+    let _g = backend_guard();
+    let initial = simd::backend();
+    let mut backends = vec![Backend::Scalar];
+    backends.extend(simd_backends());
+    let mut rng = Rng::new(31);
+    for &be in &backends {
+        simd::force_backend(be).unwrap();
+        for &(m, k, n) in &[(5usize, 9usize, 40usize), (130, 70, 65), (256, 32, 256)] {
+            let a = op_operand(&mut rng, Trans::No, m, k);
+            let b = op_operand(&mut rng, Trans::Yes, k, n);
+            let c0 = randmat(&mut rng, m, n);
+            let mut want = c0.clone();
+            gemm(1.3, &a, Trans::No, &b, Trans::Yes, 0.4, &mut want);
+            for threads in [2usize, 3, 8] {
+                let mut c = c0.clone();
+                par_gemm_with(threads, 1.3, &a, Trans::No, &b, Trans::Yes, 0.4, &mut c);
+                assert_eq!(
+                    c.as_slice(),
+                    want.as_slice(),
+                    "backend={} threads={threads} gemm ({m},{k},{n})",
+                    be.name()
+                );
+            }
+        }
+        for &(m, k, ta) in &[(130usize, 50usize, Trans::No), (70, 200, Trans::Yes)] {
+            let a = op_operand(&mut rng, ta, m, k);
+            let c0 = randmat(&mut rng, m, m);
+            let mut want = c0.clone();
+            syrk(0.8, &a, ta, 0.25, &mut want);
+            for threads in [2usize, 3, 8] {
+                let mut c = c0.clone();
+                par_syrk_with(threads, 0.8, &a, ta, 0.25, &mut c);
+                assert_eq!(
+                    c.as_slice(),
+                    want.as_slice(),
+                    "backend={} threads={threads} syrk (m={m}, k={k})",
+                    be.name()
+                );
+            }
+        }
+    }
+    simd::force_backend(initial).unwrap();
 }

@@ -4,8 +4,11 @@
 Compares the current benchmark report against a baseline from the
 previous CI run and fails (exit 1) when any matching op regresses by
 more than the threshold. Rows are matched on their identity keys
-(op, n, r, threads, batch, shards); the measured value is ns_per_op or
-ns_per_query. Skips the comparison gracefully (exit 0) when the
+(op, n, r, threads, batch, shards, backend); the measured value is
+ns_per_op or ns_per_query. The backend key separates SIMD-dispatched
+rows from their forced-scalar baselines (gemm_scalar/syrk_scalar), so a
+runner whose detected backend changes compares against the right
+history instead of tripping a false regression. Skips the comparison gracefully (exit 0) when the
 baseline is missing or unreadable — the first run on a fresh repository
 has no history.
 
@@ -27,7 +30,7 @@ import json
 import os
 import sys
 
-KEY_FIELDS = ("op", "n", "r", "threads", "batch", "shards")
+KEY_FIELDS = ("op", "n", "r", "threads", "batch", "shards", "backend")
 VALUE_FIELDS = ("ns_per_op", "ns_per_query")
 
 

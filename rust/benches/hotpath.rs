@@ -488,6 +488,60 @@ fn main() {
         fmt_secs(m.median())
     );
 
+    // ---- span-sourced telemetry: per-level factor cost and coordinator
+    // queue wait, read back through the obs tracer rather than wall-clock
+    // wrappers, so the bench exercises the same instrumentation `--trace`
+    // and `metrics_text` export in production. ----
+    println!("\n— span-sourced telemetry (obs capture) —");
+    hck::obs::enable_capture();
+    let _ = hck::obs::drain_events(); // discard pre-capture buffered events
+    let _ = hck::hkernel::HSolver::factor(&f, 0.01).unwrap();
+    let mut levels: Vec<(f64, f64, f64)> = Vec::new(); // (level, nodes, dur_ns)
+    for ev in hck::obs::drain_events() {
+        if ev.name != "factor.level" {
+            continue;
+        }
+        let args = Json::parse(ev.args.as_deref().unwrap_or("{}")).expect("span args are JSON");
+        let level = args.get("level").and_then(Json::as_f64).unwrap_or(-1.0);
+        let nodes = args.get("nodes").and_then(Json::as_f64).unwrap_or(0.0);
+        levels.push((level, nodes, ev.dur_ns as f64));
+    }
+    levels.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut table = Table::new(&["level", "nodes", "time"]);
+    for &(level, nodes, dur_ns) in &levels {
+        table.row(&[format!("{level:.0}"), format!("{nodes:.0}"), fmt_secs(dur_ns / 1e9)]);
+        report.row(vec![
+            ("op", Json::Str("train_factor_per_level".into())),
+            ("n", Json::Num(eh_n as f64)),
+            ("r", Json::Num(eh_r as f64)),
+            ("level", Json::Num(level)),
+            ("nodes", Json::Num(nodes)),
+            ("ns_per_op", Json::Num(dur_ns)),
+        ]);
+    }
+    table.print();
+    // Queue wait on the live coordinator — the time a request sits
+    // between submit and batch execution, from the same `coord.queue_wait`
+    // spans the serving trace carries.
+    let wait_iters = if quick { 64usize } else { 256 };
+    for _ in 0..wait_iters {
+        svc.predict(vec![0.0; 4]).unwrap();
+    }
+    let waits: Vec<f64> = hck::obs::drain_events()
+        .iter()
+        .filter(|e| e.name == "coord.queue_wait")
+        .map(|e| e.dur_ns as f64)
+        .collect();
+    hck::obs::disable();
+    let mean_wait =
+        if waits.is_empty() { 0.0 } else { waits.iter().sum::<f64>() / waits.len() as f64 };
+    println!("coordinator queue wait: {mean_wait:.0} ns mean over {} requests", waits.len());
+    report.row(vec![
+        ("op", Json::Str("oos_queue_wait".into())),
+        ("batch", Json::Num(1.0)),
+        ("ns_per_query", Json::Num(mean_wait)),
+    ]);
+
     // ---- HCKM artifact load (the serve-side cold start: read factors,
     // recompute Choleskys, rebuild the Algorithm-3 predictor) ----
     let (art_n, art_r) = if quick { (1000usize, 24usize) } else { (4000, 64) };

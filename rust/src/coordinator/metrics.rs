@@ -19,6 +19,10 @@ struct Inner {
     latencies_sorted_cache: Vec<f64>,
     /// Raw latencies (µs), bounded ring for percentile reporting.
     raw: Vec<f64>,
+    /// Ring write cursor once `raw` reaches `RAW_CAP`: the next slot to
+    /// overwrite, so percentiles always reflect the most recent
+    /// `RAW_CAP` requests instead of freezing on the first ones.
+    raw_next: usize,
 }
 
 const RAW_CAP: usize = 65536;
@@ -39,6 +43,7 @@ impl Metrics {
                 latency_us: [0; 40],
                 latencies_sorted_cache: Vec::new(),
                 raw: Vec::new(),
+                raw_next: 0,
             }),
             started: Instant::now(),
         }
@@ -56,6 +61,10 @@ impl Metrics {
             g.latency_us[bucket] += 1;
             if g.raw.len() < RAW_CAP {
                 g.raw.push(us);
+            } else {
+                let i = g.raw_next;
+                g.raw[i] = us;
+                g.raw_next = (i + 1) % RAW_CAP;
             }
         }
         g.latencies_sorted_cache.clear();
@@ -112,6 +121,13 @@ pub struct ShardSnapshot {
     pub mean_batch_size: f64,
     /// Mean evaluation time per query, in ns (queueing excluded).
     pub ns_per_query: f64,
+    /// Mean time a sub-batch waited in the worker's queue before
+    /// evaluation started, in ns.
+    pub queue_wait_ns: f64,
+    /// Fraction of the worker's lifetime spent evaluating (0..=1) —
+    /// the utilization signal the ROADMAP's shard-replication story
+    /// keys on.
+    pub busy_frac: f64,
     /// Queries whose worker-side evaluation failed — a panic contained
     /// to one sub-batch, a failed variance factorization, or a dead
     /// worker thread. The affected requests receive typed
@@ -134,6 +150,8 @@ impl ShardSnapshot {
             ("requests", Json::Num(self.requests as f64)),
             ("mean_batch_size", Json::Num(self.mean_batch_size)),
             ("ns_per_query", Json::Num(self.ns_per_query)),
+            ("queue_wait_ns", Json::Num(self.queue_wait_ns)),
+            ("busy_frac", Json::Num(self.busy_frac)),
             ("dropped", Json::Num(self.dropped as f64)),
         ])
     }
@@ -176,6 +194,86 @@ impl MetricsSnapshot {
         }
         Json::obj(pairs)
     }
+}
+
+/// Render a snapshot (plus worker-pool utilization) in the Prometheus
+/// text exposition format — `# TYPE` headers followed by
+/// `name{label="v"} value` samples — so any scraper can consume the
+/// `metrics_text` TCP command or the `hck serve --metrics` dump.
+/// Percentiles with no data render as `NaN`, which the format allows.
+pub fn render_prometheus(
+    snap: &MetricsSnapshot,
+    pool: &crate::util::parallel::PoolStats,
+) -> String {
+    use std::fmt::Write as _;
+    fn num(x: f64) -> String {
+        if x.is_nan() {
+            "NaN".to_string()
+        } else {
+            format!("{x}")
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "# TYPE hck_requests_total counter");
+    let _ = writeln!(out, "hck_requests_total {}", snap.requests);
+    let _ = writeln!(out, "# TYPE hck_batches_total counter");
+    let _ = writeln!(out, "hck_batches_total {}", snap.batches);
+    let _ = writeln!(out, "# TYPE hck_batch_size_mean gauge");
+    let _ = writeln!(out, "hck_batch_size_mean {}", num(snap.mean_batch_size));
+    let _ = writeln!(out, "# TYPE hck_throughput_rps gauge");
+    let _ = writeln!(out, "hck_throughput_rps {}", num(snap.throughput_rps));
+    let _ = writeln!(out, "# TYPE hck_uptime_seconds gauge");
+    let _ = writeln!(out, "hck_uptime_seconds {}", num(snap.elapsed_secs));
+    let _ = writeln!(out, "# TYPE hck_latency_us summary");
+    for (q, v) in [("0.5", snap.p50_us), ("0.95", snap.p95_us), ("0.99", snap.p99_us)] {
+        let _ = writeln!(out, "hck_latency_us{{quantile=\"{q}\"}} {}", num(v));
+    }
+    let _ = writeln!(out, "# TYPE hck_pool_workers gauge");
+    let _ = writeln!(out, "hck_pool_workers {}", pool.workers);
+    let _ = writeln!(out, "# TYPE hck_pool_tasks_total counter");
+    let _ = writeln!(out, "hck_pool_tasks_total {}", pool.tasks);
+    let _ = writeln!(out, "# TYPE hck_pool_busy_frac gauge");
+    let _ = writeln!(out, "hck_pool_busy_frac {}", num(pool.busy_frac()));
+    if !snap.shards.is_empty() {
+        let _ = writeln!(out, "# TYPE hck_shard_requests_total counter");
+        for s in &snap.shards {
+            let _ =
+                writeln!(out, "hck_shard_requests_total{{shard=\"{}\"}} {}", s.shard, s.requests);
+        }
+        let _ = writeln!(out, "# TYPE hck_shard_queue_depth gauge");
+        for s in &snap.shards {
+            let _ =
+                writeln!(out, "hck_shard_queue_depth{{shard=\"{}\"}} {}", s.shard, s.queue_depth);
+        }
+        let _ = writeln!(out, "# TYPE hck_shard_queue_wait_ns gauge");
+        for s in &snap.shards {
+            let _ = writeln!(
+                out,
+                "hck_shard_queue_wait_ns{{shard=\"{}\"}} {}",
+                s.shard,
+                num(s.queue_wait_ns)
+            );
+        }
+        let _ = writeln!(out, "# TYPE hck_shard_busy_frac gauge");
+        for s in &snap.shards {
+            let _ =
+                writeln!(out, "hck_shard_busy_frac{{shard=\"{}\"}} {}", s.shard, num(s.busy_frac));
+        }
+        let _ = writeln!(out, "# TYPE hck_shard_ns_per_query gauge");
+        for s in &snap.shards {
+            let _ = writeln!(
+                out,
+                "hck_shard_ns_per_query{{shard=\"{}\"}} {}",
+                s.shard,
+                num(s.ns_per_query)
+            );
+        }
+        let _ = writeln!(out, "# TYPE hck_shard_dropped_total counter");
+        for s in &snap.shards {
+            let _ = writeln!(out, "hck_shard_dropped_total{{shard=\"{}\"}} {}", s.shard, s.dropped);
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -228,6 +326,8 @@ mod tests {
             requests: 12,
             mean_batch_size: 4.0,
             ns_per_query: 1500.0,
+            queue_wait_ns: 250.0,
+            busy_frac: 0.5,
             dropped: 0,
         });
         let parsed = Json::parse(&snap.to_json().encode()).unwrap();
@@ -235,5 +335,69 @@ mod tests {
         assert_eq!(shards.len(), 1);
         assert_eq!(shards[0].get("requests").unwrap().as_usize(), Some(12));
         assert_eq!(shards[0].get("rows_hi").unwrap().as_usize(), Some(128));
+        assert_eq!(shards[0].get("queue_wait_ns").unwrap().as_f64(), Some(250.0));
+        assert_eq!(shards[0].get("busy_frac").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn raw_ring_wraps_instead_of_freezing() {
+        let m = Metrics::new();
+        // Fill the ring with 1ms latencies, then overwrite it entirely
+        // with 9ms ones: percentiles must track the *recent* window.
+        m.record_batch(&vec![1e-3; RAW_CAP]);
+        let before = m.snapshot();
+        assert!((before.p50_us - 1000.0).abs() < 1.0, "{}", before.p50_us);
+        m.record_batch(&vec![9e-3; RAW_CAP]);
+        let after = m.snapshot();
+        assert_eq!(after.requests, 2 * RAW_CAP as u64);
+        assert!((after.p50_us - 9000.0).abs() < 1.0, "p50 froze: {}", after.p50_us);
+        assert!((after.p99_us - 9000.0).abs() < 1.0, "p99 froze: {}", after.p99_us);
+        // Partial overwrite keeps the ring at capacity and mixes the
+        // window rather than growing or resetting it.
+        m.record_batch(&vec![1e-3; RAW_CAP / 2]);
+        let mixed = m.snapshot();
+        assert!((mixed.p99_us - 9000.0).abs() < 1.0, "{}", mixed.p99_us);
+        assert!((mixed.p50_us - 1000.0).abs() < 1.0, "{}", mixed.p50_us);
+    }
+
+    #[test]
+    fn prometheus_exposition_renders() {
+        let m = Metrics::new();
+        m.record_batch(&[1e-3, 2e-3]);
+        let mut snap = m.snapshot();
+        snap.shards.push(ShardSnapshot {
+            shard: 0,
+            rows_lo: 0,
+            rows_hi: 64,
+            queue_depth: 1,
+            batches: 2,
+            requests: 8,
+            mean_batch_size: 4.0,
+            ns_per_query: 1200.0,
+            queue_wait_ns: 300.0,
+            busy_frac: 0.25,
+            dropped: 0,
+        });
+        let pool = crate::util::parallel::pool_stats();
+        let text = render_prometheus(&snap, &pool);
+        for needle in [
+            "# TYPE hck_requests_total counter",
+            "hck_requests_total 2",
+            "hck_latency_us{quantile=\"0.5\"}",
+            "hck_latency_us{quantile=\"0.99\"}",
+            "# TYPE hck_pool_busy_frac gauge",
+            "hck_shard_queue_wait_ns{shard=\"0\"} 300",
+            "hck_shard_busy_frac{shard=\"0\"} 0.25",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Every sample line is `name[{labels}] value` with a parseable value.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(value.parse::<f64>().is_ok() || value == "NaN", "bad value in {line:?}");
+        }
+        // An empty snapshot renders NaN percentiles, not invalid JSON-isms.
+        let empty = render_prometheus(&Metrics::new().snapshot(), &pool);
+        assert!(empty.contains("hck_latency_us{quantile=\"0.5\"} NaN"), "{empty}");
     }
 }

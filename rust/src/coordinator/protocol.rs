@@ -15,6 +15,8 @@
 //!        "routes": [{"shard": s|null, "rows_lo": l, "rows_hi": h}, ...],
 //!        "per_query_ns": x, "latency_ms": y}
 //!   {"cmd": "schema"}                 → model schema + capability set
+//!   {"cmd": "metrics_text"}           → {"content_type": "text/plain; version=0.0.4",
+//!                                        "text": "<Prometheus exposition>"}
 //!   errors → {"v": 2, "error": {"kind": "bad_request" | "unsupported" |
 //!             "shard_failure" | "internal", "message": "..."}}
 //!
@@ -23,6 +25,14 @@
 //! one frame are submitted before any reply is awaited, so a frame forms
 //! one dynamic batch. Malformed frames produce typed error replies and
 //! never kill the connection or the batcher ("bad frame ≠ dead worker").
+//!
+//! **Request ids.** Every v2 reply carries `"request_ids"`: the
+//! service-minted id of each query row, in row order — the same ids that
+//! tag the `coord.queue_wait` / `coord.execute` spans in a trace
+//! ([`crate::obs`]), so a slow wire reply can be joined to its exact
+//! spans. A client may also put its own `"request_id"` (any JSON value)
+//! on a v2 frame; it is echoed verbatim on the reply — success or error
+//! — for client-side correlation over pipelined frames.
 
 use super::service::PredictionService;
 use crate::infer::{InferResult, PredictError, Want};
@@ -93,6 +103,7 @@ pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Js
     if let Some(cmd) = parsed.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
             "metrics" => svc.snapshot().to_json(),
+            "metrics_text" => metrics_text_reply(svc),
             "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
             "schema" => schema_reply(svc),
             "shutdown" => {
@@ -109,7 +120,13 @@ pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Js
     if is_v2 {
         return match v2_reply(&parsed, svc) {
             Ok(reply) => reply,
-            Err(e) => Json::obj(vec![("v", Json::Num(2.0)), ("error", e.to_json())]),
+            Err(e) => {
+                let mut pairs = vec![("v", Json::Num(2.0)), ("error", e.to_json())];
+                if let Some(rid) = parsed.get("request_id") {
+                    pairs.push(("request_id", rid.clone()));
+                }
+                Json::obj(pairs)
+            }
         };
     }
     // ---- v1 path, byte-compatible with existing clients. ----
@@ -130,6 +147,20 @@ pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Js
         ]),
         Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
     }
+}
+
+/// The `metrics_text` command: the service + pool + shard counters
+/// rendered as Prometheus text exposition, wrapped in a JSON envelope so
+/// the newline-delimited framing stays intact (newlines are escaped
+/// inside the JSON string). Scrapers unwrap `.text` and serve it as
+/// `content_type` verbatim.
+fn metrics_text_reply(svc: &PredictionService) -> Json {
+    let snap = svc.snapshot();
+    let pool = crate::util::parallel::pool_stats();
+    Json::obj(vec![
+        ("content_type", Json::Str("text/plain; version=0.0.4".into())),
+        ("text", Json::Str(super::metrics::render_prometheus(&snap, &pool))),
+    ])
 }
 
 /// The `schema` command: dimension, outputs, capability set, supported
@@ -168,8 +199,11 @@ fn v2_reply(parsed: &Json, svc: &PredictionService) -> InferResult<Json> {
     }
     let t = std::time::Instant::now();
     let mut receivers = Vec::with_capacity(rows.len());
+    let mut ids = Vec::with_capacity(receivers.capacity());
     for row in rows {
-        receivers.push(svc.submit(row, want)?);
+        let (id, rrx) = svc.submit(row, want)?;
+        ids.push(id);
+        receivers.push(rrx);
     }
     let mut replies = Vec::with_capacity(receivers.len());
     for rrx in receivers {
@@ -183,6 +217,10 @@ fn v2_reply(parsed: &Json, svc: &PredictionService) -> InferResult<Json> {
         (
             "mean",
             Json::Arr(replies.iter().map(|r| Json::from_f64s(&r.mean)).collect()),
+        ),
+        (
+            "request_ids",
+            Json::Arr(ids.iter().map(|&id| Json::Num(id as f64)).collect()),
         ),
     ];
     if want.variance {
@@ -217,6 +255,11 @@ fn v2_reply(parsed: &Json, svc: &PredictionService) -> InferResult<Json> {
         replies.iter().map(|r| r.per_query_ns).sum::<f64>() / replies.len().max(1) as f64;
     pairs.push(("per_query_ns", Json::Num(mean_ns)));
     pairs.push(("latency_ms", Json::Num(t.elapsed().as_secs_f64() * 1e3)));
+    // Echo a client-supplied frame-level request_id verbatim (any JSON
+    // value — clients correlate pipelined frames with it).
+    if let Some(rid) = parsed.get("request_id") {
+        pairs.push(("request_id", rid.clone()));
+    }
     Ok(Json::obj(pairs))
 }
 
@@ -347,6 +390,11 @@ mod tests {
         );
         let m = handle_line(r#"{"cmd": "metrics"}"#, &s, &stop);
         assert!(m.get("requests").is_some());
+        let mt = handle_line(r#"{"cmd": "metrics_text"}"#, &s, &stop);
+        let text = mt.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("# TYPE hck_requests_total counter"), "{text}");
+        assert!(text.contains("hck_pool_workers"), "{text}");
+        assert!(mt.get("content_type").unwrap().as_str().unwrap().starts_with("text/plain"));
         let sch = handle_line(r#"{"cmd": "schema"}"#, &s, &stop);
         assert_eq!(sch.get("dim").unwrap().as_usize(), Some(2));
         let caps = sch.get("capabilities").unwrap();
@@ -387,6 +435,10 @@ mod tests {
         let routes = out.get("routes").unwrap().as_arr().unwrap();
         assert_eq!(routes[0].get("rows_hi").unwrap().as_usize(), Some(4));
         assert!(out.get("per_query_ns").unwrap().as_f64().unwrap() >= 0.0);
+        // Every v2 reply names the service-minted id of each row.
+        let ids = out.get("request_ids").unwrap().as_arr().unwrap();
+        assert_eq!(ids.len(), 2);
+        assert!(ids.iter().all(|id| id.as_f64().unwrap() >= 1.0));
 
         // Mean-only v2 frame: no optional columns in the reply.
         let out = handle_line(r#"{"v": 2, "features": [2.0, 0.0]}"#, &s, &stop);
@@ -451,9 +503,13 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         let resp = Json::parse(line.trim()).unwrap();
         assert_eq!(resp.get("prediction").unwrap().to_f64s().unwrap(), vec![4.0]);
-        // v2 on the same connection.
-        conn.write_all(b"{\"v\": 2, \"queries\": [[2.0, 3.0]], \"want\": {\"variance\": true}}\n")
-            .unwrap();
+        // v2 on the same connection, with a client frame-level request_id:
+        // echoed verbatim, alongside the server-minted per-row ids.
+        conn.write_all(
+            b"{\"v\": 2, \"queries\": [[2.0, 3.0]], \"want\": {\"variance\": true}, \
+               \"request_id\": \"client-7\"}\n",
+        )
+        .unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();
         let resp = Json::parse(line.trim()).unwrap();
@@ -461,6 +517,17 @@ mod tests {
             resp.get("variance").unwrap().as_arr().unwrap()[0].as_f64(),
             Some(3.0)
         );
+        assert_eq!(resp.get("request_id").unwrap().as_str(), Some("client-7"));
+        let ids = resp.get("request_ids").unwrap().as_arr().unwrap();
+        assert_eq!(ids.len(), 1);
+        assert!(ids[0].as_f64().unwrap() >= 1.0);
+        // A typed v2 error still echoes the client id.
+        conn.write_all(b"{\"v\": 2, \"queries\": [[1.0]], \"request_id\": 42}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert!(resp.get("error").is_some());
+        assert_eq!(resp.get("request_id").unwrap().as_f64(), Some(42.0));
         conn.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
         line.clear();
         reader.read_line(&mut line).unwrap();

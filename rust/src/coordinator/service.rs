@@ -17,8 +17,9 @@ use crate::infer::{
     Capabilities, InferResult, LeafRoute, PredictError, PredictRequest, PredictResponse, Want,
 };
 use crate::linalg::Mat;
+use crate::obs;
 use crate::util::json::Json;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -120,11 +121,21 @@ pub struct QueryReply {
     pub route: Option<LeafRoute>,
     /// Per-query evaluation time of the batch this query rode in (ns).
     pub per_query_ns: f64,
+    /// Service-minted request id (also returned by
+    /// [`PredictionService::submit`] and echoed on v2 protocol replies);
+    /// tags this query's `coord.*` trace spans.
+    pub request_id: u64,
 }
+
+/// Process-wide request-id mint: ids are unique across every service in
+/// the process so traces with several services never collide; 0 is
+/// reserved for "no request".
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
 
 struct Request {
     features: Vec<f64>,
     want: Want,
+    request_id: u64,
     enqueued: Instant,
     resp: SyncSender<InferResult<QueryReply>>,
 }
@@ -199,23 +210,27 @@ impl PredictionService {
     /// receiver resolves when the batch flushes. The TCP layer uses this
     /// to dispatch every row of a multi-query frame before gathering, so
     /// one frame becomes one dynamic batch instead of N round trips.
+    /// Returns the minted request id alongside the receiver; the same id
+    /// comes back on the [`QueryReply`] and tags the query's `coord.*`
+    /// trace spans.
     pub fn submit(
         &self,
         features: Vec<f64>,
         want: Want,
-    ) -> InferResult<Receiver<InferResult<QueryReply>>> {
+    ) -> InferResult<(u64, Receiver<InferResult<QueryReply>>)> {
         crate::infer::validate_features(&features, self.dim)?;
         self.caps.check(want)?;
+        let request_id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = sync_channel(1);
         self.tx
-            .send(Request { features, want, enqueued: Instant::now(), resp: rtx })
+            .send(Request { features, want, request_id, enqueued: Instant::now(), resp: rtx })
             .map_err(|_| PredictError::Internal("service stopped".into()))?;
-        Ok(rrx)
+        Ok((request_id, rrx))
     }
 
     /// Synchronous typed predict: enqueue and wait for the batch to flush.
     pub fn predict_typed(&self, features: Vec<f64>, want: Want) -> InferResult<QueryReply> {
-        let rrx = self.submit(features, want)?;
+        let (_id, rrx) = self.submit(features, want)?;
         rrx.recv()
             .map_err(|_| PredictError::Internal("service dropped request".into()))?
     }
@@ -337,6 +352,25 @@ fn batcher_loop(
         } else {
             Some(q.select_rows(&var_idx))
         };
+        // Trace the batch window: one coord.queue_wait span per member
+        // (enqueue → execution start, tagged with its request id), one
+        // coord.batch span over the model call(s), and one coord.execute
+        // span per member covering the shared execution window.
+        let exec_start = Instant::now();
+        if obs::is_enabled() {
+            for req in &batch {
+                obs::record_span_between(
+                    "coord.queue_wait",
+                    "coord",
+                    req.enqueued,
+                    exec_start,
+                    req.request_id,
+                );
+            }
+        }
+        let sp_batch = obs::span_with("coord.batch", "coord", || {
+            format!("{{\"batch\":{},\"variance_rows\":{}}}", batch.len(), var_idx.len())
+        });
         let resp = model.predict(&PredictRequest::new(q, want_all));
         let var_resp = match (&resp, q_var) {
             (Ok(_), Some(qv)) => {
@@ -344,7 +378,19 @@ fn batcher_loop(
             }
             _ => None,
         };
+        drop(sp_batch);
         let done = Instant::now();
+        if obs::is_enabled() {
+            for req in &batch {
+                obs::record_span_between(
+                    "coord.execute",
+                    "coord",
+                    exec_start,
+                    done,
+                    req.request_id,
+                );
+            }
+        }
         // Record metrics BEFORE releasing responders, so a client that
         // returns from predict() always observes its own request counted.
         let lats: Vec<f64> =
@@ -371,6 +417,7 @@ fn batcher_loop(
                                 variance: v.variance.as_ref().map(|vv| vv[k]),
                                 route,
                                 per_query_ns: v.per_query_ns,
+                                request_id: req.request_id,
                             }),
                             Some(Err(e)) => Err(e.clone()),
                             // No sub-batch ran: the whole batch wanted
@@ -380,6 +427,7 @@ fn batcher_loop(
                                 variance: resp.variance.as_ref().map(|v| v[i]),
                                 route,
                                 per_query_ns: resp.per_query_ns,
+                                request_id: req.request_id,
                             }),
                         }
                     } else {
@@ -388,6 +436,7 @@ fn batcher_loop(
                             variance: None,
                             route,
                             per_query_ns: resp.per_query_ns,
+                            request_id: req.request_id,
                         })
                     };
                     let _ = req.resp.send(reply);
@@ -404,6 +453,7 @@ fn batcher_loop(
                 // batch. Error batches are rare (validation happens at
                 // enqueue), so the per-member retry cost is acceptable.
                 for req in batch {
+                    let _sp = obs::span_req("coord.member_eval", "coord", req.request_id);
                     let mut q1 = Mat::zeros(1, req.features.len());
                     q1.row_mut(0).copy_from_slice(&req.features);
                     let reply = model.predict(&PredictRequest::new(q1, req.want)).map(
@@ -412,6 +462,7 @@ fn batcher_loop(
                             variance: resp.variance.as_ref().map(|v| v[0]),
                             route: resp.routes.as_ref().map(|r| r[0]),
                             per_query_ns: resp.per_query_ns,
+                            request_id: req.request_id,
                         },
                     );
                     let _ = req.resp.send(reply);
@@ -476,6 +527,24 @@ mod tests {
             "expected batching, got mean size {}",
             snap.mean_batch_size
         );
+    }
+
+    /// `submit` mints a fresh id per request and the batcher echoes it on
+    /// the reply — the pairing the TCP v2 layer relies on.
+    #[test]
+    fn request_ids_are_minted_and_echoed() {
+        let svc = PredictionService::start(Arc::new(SumModel), BatchPolicy::default());
+        let (id1, rx1) = svc.submit(vec![1.0, 0.0, 0.0], Want::mean_only()).unwrap();
+        let (id2, rx2) = svc.submit(vec![2.0, 0.0, 0.0], Want::mean_only()).unwrap();
+        assert_ne!(id1, 0, "0 is reserved for 'no request'");
+        assert!(id2 > id1, "ids are strictly increasing: {id1} then {id2}");
+        let r1 = rx1.recv().unwrap().unwrap();
+        let r2 = rx2.recv().unwrap().unwrap();
+        assert_eq!(r1.request_id, id1);
+        assert_eq!(r2.request_id, id2);
+        assert_eq!(r1.mean, vec![1.0]);
+        assert_eq!(r2.mean, vec![2.0]);
+        svc.shutdown();
     }
 
     #[test]

@@ -21,9 +21,11 @@
 use crate::error::{Error, Result};
 use crate::kernels::{BlockEvaluator, KernelKind, NativeEvaluator};
 use crate::linalg::{Cholesky, Mat};
+use crate::obs;
 use crate::partition::{PartitionTree, SplitRule};
 use crate::util::parallel::{auto_threads, parallel_map};
 use crate::util::rng::Rng;
+use crate::util::timer::{Phases, Timer};
 
 /// Configuration of the hierarchical kernel.
 #[derive(Debug, Clone)]
@@ -135,6 +137,10 @@ pub struct HFactors {
     pub u: Vec<Option<Mat>>,
     /// Leaf i: A_ii = K′(X_i, X_i)  (n_i x n_i).
     pub a_leaf: Vec<Option<Mat>>,
+    /// Wall-clock breakdown of the build (partition / sample_landmarks /
+    /// sigma_factor / node_factors). Not persisted with the factors;
+    /// reloaded artifacts carry an empty breakdown.
+    pub build_phases: Phases,
 }
 
 /// Phase-3 output for one node (computed off-thread, applied in order).
@@ -159,8 +165,21 @@ impl HFactors {
             return Err(Error::config("cannot build on an empty training set"));
         }
         let mut rng = Rng::new(config.seed);
-        let tree = PartitionTree::build(x, config.n0.max(1), config.rule, &mut rng);
-        Self::build_on_tree(x, config, tree, &mut rng, eval)
+        let t = Timer::start();
+        let tree = {
+            let _sp = obs::span("train.partition", "train");
+            PartitionTree::build(x, config.n0.max(1), config.rule, &mut rng)
+        };
+        let partition_secs = t.secs();
+        let mut f = Self::build_on_tree(x, config, tree, &mut rng, eval)?;
+        // Keep "partition" first in the breakdown (it happened first).
+        let mut phases = Phases::new();
+        phases.add("partition", partition_secs);
+        for (name, secs) in f.build_phases.entries() {
+            phases.add(name, *secs);
+        }
+        f.build_phases = phases;
+        Ok(f)
     }
 
     /// Build factors over an externally constructed tree (used by the
@@ -192,9 +211,11 @@ impl HFactors {
             w: vec![None; nn],
             u: vec![None; nn],
             a_leaf: vec![None; nn],
+            build_phases: Phases::new(),
             tree,
             config,
         };
+        let mut t = Timer::start();
 
         // --- Phase 1 (sequential): landmark sets for every nonleaf node
         // (Section 4.2: uniformly random samples of the node's own
@@ -202,6 +223,7 @@ impl HFactors {
         // builder, so a node's parent landmarks are always available when
         // we get to it. One RNG stream in node-id order keeps sampling
         // independent of the thread count. ---
+        let sp = obs::span("train.sample_landmarks", "train");
         for i in 0..nn {
             if f.tree.nodes[i].is_leaf() {
                 continue;
@@ -233,8 +255,11 @@ impl HFactors {
             f.landmarks[i] = Some(x.select_rows(&idx));
             f.landmark_idx[i] = idx;
         }
+        drop(sp);
+        f.build_phases.add("sample_landmarks", t.lap());
 
         // --- Phase 2 (parallel): Σ_i and its Cholesky per nonleaf. ---
+        let sp = obs::span("train.sigma_factor", "train");
         let nonleaves: Vec<usize> =
             (0..nn).filter(|&i| !f.tree.nodes[i].is_leaf()).collect();
         let sig_results: Vec<Result<(Mat, Cholesky)>> = if use_parallel {
@@ -247,9 +272,12 @@ impl HFactors {
             f.sigma[i] = Some(sig);
             f.sigma_chol[i] = Some(chol);
         }
+        drop(sp);
+        f.build_phases.add("sigma_factor", t.lap());
 
         // --- Phase 3 (parallel): leaf blocks and bases; W for inner
         // nodes. Every parent Σ_p is factored by now. ---
+        let sp = obs::span("train.node_factors", "train");
         let all_ids: Vec<usize> = (0..nn).collect();
         let node_results: Vec<NodeFactor> = if use_parallel {
             parallel_map(threads, &all_ids, |&i| node_factor(&f, i, kind, lp, &NativeEvaluator))
@@ -267,6 +295,8 @@ impl HFactors {
                 }
             }
         }
+        drop(sp);
+        f.build_phases.add("node_factors", t.lap());
         Ok(f)
     }
 

@@ -256,6 +256,7 @@ pub(crate) fn read_factors(inp: &mut impl Read) -> Result<HFactors> {
         w: Vec::with_capacity(nn),
         u: Vec::with_capacity(nn),
         a_leaf: Vec::with_capacity(nn),
+        build_phases: crate::util::timer::Phases::new(),
         tree,
         config,
     };

@@ -32,6 +32,7 @@
 use super::build::HFactors;
 use crate::error::Result;
 use crate::linalg::{gemm, matmul, par_gemm, par_matmul, Cholesky, Lu, Mat, Trans};
+use crate::obs;
 use crate::util::parallel::{auto_threads, parallel_map};
 
 /// Per-leaf factorization state.
@@ -96,21 +97,29 @@ impl SolverParts {
 
         // --- Leaves (parallel): H_j, Cholesky, Z_j, S_j. ---
         let leaves = f.tree.leaves();
-        let louts = parallel_map(threads, &leaves, |&i| leaf_factor(f, i, lambda));
-        for (&i, res) in leaves.iter().zip(louts) {
-            let (state, sj, ldj) = res?;
-            leaf[i] = Some(state);
-            s[i] = sj;
-            ld[i] = ldj;
+        {
+            let _sp = obs::span_with("factor.leaves", "train", || {
+                format!("{{\"leaves\":{}}}", leaves.len())
+            });
+            let louts = parallel_map(threads, &leaves, |&i| leaf_factor(f, i, lambda));
+            for (&i, res) in leaves.iter().zip(louts) {
+                let (state, sj, ldj) = res?;
+                leaf[i] = Some(state);
+                s[i] = sj;
+                ld[i] = ldj;
+            }
         }
 
         // --- Inner nodes (level-synchronous, deepest first): children S
         // blocks are finalized one level down, so every node of a level
         // is independent given the levels below. ---
-        for ids in inner_levels(f).iter().rev() {
+        for (depth, ids) in inner_levels(f).iter().enumerate().rev() {
             if ids.is_empty() {
                 continue;
             }
+            let _sp = obs::span_with("factor.level", "train", || {
+                format!("{{\"level\":{depth},\"nodes\":{}}}", ids.len())
+            });
             let outs = parallel_map(threads, ids, |&i| inner_factor(f, i, &s));
             for (&i, res) in ids.iter().zip(outs) {
                 let (state, si, ldi) = res?;
@@ -162,6 +171,7 @@ impl SolverParts {
         let mut that: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
         let threads = auto_threads(n);
         let leaves = f.tree.leaves();
+        let sp_up = obs::span("solve.upward", "train");
         let leaf_zt = parallel_map(threads, &leaves, |&i| {
             let nd = &f.tree.nodes[i];
             let st = self.leaf[i].as_ref().unwrap();
@@ -213,10 +223,13 @@ impl SolverParts {
             }
         }
 
+        drop(sp_up);
+
         // ---- Downward (level-synchronous, shallowest first): per inner
         // node, u_i = q_i + Φ(t̂_i − Ŝ_i q_i) with q_i = W_i u_{p(i)}
         // computed on the fly from the parent's (finalized) u; the root
         // has q = 0. Nodes of one level only read one level up. ----
+        let sp_down = obs::span("solve.downward", "train");
         let mut u: Vec<Option<Mat>> = (0..nn).map(|_| None).collect();
         for ids in levels.iter() {
             if ids.is_empty() {
@@ -244,8 +257,11 @@ impl SolverParts {
             }
         }
 
+        drop(sp_down);
+
         // ---- Leaf finish (parallel over disjoint row windows):
         // w_ch = z_ch − Z_ch u_{p(ch)}. ----
+        let _sp_fin = obs::span("solve.leaf_finish", "train");
         let mut out = Mat::zeros(n, m);
         let ranges: Vec<(usize, usize)> = leaves
             .iter()

@@ -38,6 +38,7 @@ pub mod hkernel;
 pub mod infer;
 pub mod learn;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod kernels;
 pub mod linalg;

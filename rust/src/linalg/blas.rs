@@ -166,7 +166,19 @@ pub fn gemm_epilogue(
 /// thread count; degrades to the sequential path for small problems or
 /// inside an enclosing parallel region.
 pub fn par_gemm(alpha: f64, a: &Mat, ta: Trans, b: &Mat, tb: Trans, beta: f64, c: &mut Mat) {
-    gemm_driver(default_threads(), alpha, a, ta, b, tb, beta, c, None);
+    let threads = default_threads();
+    let _sp = crate::obs::span_with("blas.par_gemm", "blas", || {
+        let (m, n) = c.shape();
+        let k = match ta {
+            Trans::No => a.cols(),
+            Trans::Yes => a.rows(),
+        };
+        format!(
+            "{{\"m\":{m},\"n\":{n},\"k\":{k},\"threads\":{threads},\"backend\":\"{}\"}}",
+            simd::backend_name()
+        )
+    });
+    gemm_driver(threads, alpha, a, ta, b, tb, beta, c, None);
 }
 
 /// [`par_gemm`] with an explicit thread count (testing / benchmarks).
@@ -664,7 +676,18 @@ pub fn syrk(alpha: f64, a: &Mat, ta: Trans, beta: f64, c: &mut Mat) {
 /// Parallel [`syrk`] over the persistent worker pool (process-default
 /// thread count); bitwise identical to [`syrk`] for every thread count.
 pub fn par_syrk(alpha: f64, a: &Mat, ta: Trans, beta: f64, c: &mut Mat) {
-    syrk_driver(default_threads(), alpha, a, ta, beta, c);
+    let threads = default_threads();
+    let _sp = crate::obs::span_with("blas.par_syrk", "blas", || {
+        let (m, k) = match ta {
+            Trans::No => a.shape(),
+            Trans::Yes => (a.cols(), a.rows()),
+        };
+        format!(
+            "{{\"m\":{m},\"k\":{k},\"threads\":{threads},\"backend\":\"{}\"}}",
+            simd::backend_name()
+        )
+    });
+    syrk_driver(threads, alpha, a, ta, beta, c);
 }
 
 /// [`par_syrk`] with an explicit thread count (testing / benchmarks).

@@ -6,13 +6,18 @@
 //! nothing retrains in-process.
 //!
 //! Subcommands:
-//!   info       artifact + data set inventory
+//!   info       artifact + data set inventory (--model shows an HCKM header)
 //!   data-gen   emit a synthetic Table-1 analogue as LIBSVM text
 //!   train      fit any model (krr/gp/kpca), report metric, --save artifact
 //!   predict    load an HCKM artifact and predict a LIBSVM file
 //!   shard      cut an HCKM artifact into a self-contained shard directory
 //!   serve      serve an HCKM artifact or a shard directory over TCP
 //!   likelihood GP log-marginal likelihood / MLE bandwidth search
+//!
+//! Observability: every subcommand honors `HCK_TRACE=out.json` (and
+//! `train`/`serve` take `--trace out.json`) to record a Chrome-trace of
+//! the run — open it in Perfetto or chrome://tracing. See
+//! [`hck::obs`].
 //!
 //! Typical pipeline:
 //!   hck train --dataset cadata --r 128 --save m.hckm
@@ -29,7 +34,7 @@ use hck::model::{self, Model, ModelKind, ModelSpec};
 use hck::partition::SplitRule;
 use hck::util::args::{usage, Args, OptSpec};
 use hck::util::json::Json;
-use hck::util::timer::Timer;
+use hck::util::timer::{Phases, Timer};
 use std::sync::Arc;
 
 /// `anyhow!`-style constructor for CLI errors (the offline crate set has
@@ -53,13 +58,14 @@ fn main() {
 }
 
 fn run(argv: Vec<String>) -> Result<()> {
+    hck::obs::init_from_env();
     let Some(cmd) = argv.first().cloned() else {
         print_help();
         return Ok(());
     };
     let rest = argv[1..].to_vec();
-    match cmd.as_str() {
-        "info" => cmd_info(),
+    let result = match cmd.as_str() {
+        "info" => cmd_info(rest),
         "data-gen" => cmd_data_gen(rest),
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
@@ -71,6 +77,21 @@ fn run(argv: Vec<String>) -> Result<()> {
             Ok(())
         }
         other => Err(anyhow!("unknown subcommand '{other}' (try 'hck help')")),
+    };
+    flush_trace();
+    result
+}
+
+/// Write the Chrome-trace file when tracing was enabled (`HCK_TRACE` or
+/// `--trace`); a failed write warns instead of masking the command's
+/// own result.
+fn flush_trace() {
+    match hck::obs::flush() {
+        Ok(Some(path)) => {
+            eprintln!("trace written to {path} (open in Perfetto or chrome://tracing)")
+        }
+        Ok(None) => {}
+        Err(e) => eprintln!("warning: failed to write trace: {e}"),
     }
 }
 
@@ -241,7 +262,31 @@ fn print_simd_banner() {
     );
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(argv: Vec<String>) -> Result<()> {
+    let spec = vec![
+        opt("model", "show the header of an HCKM artifact (schema + metadata)", None),
+        flag("help", "show help"),
+    ];
+    let a = Args::parse(argv, &spec).map_err(Error::Config)?;
+    if a.flag("help") {
+        println!("{}", usage("hck info", "data set inventory / artifact header", &spec));
+        return Ok(());
+    }
+    // --model: header-only artifact inspection (no payload deserialize).
+    if let Some(path) = a.get("model") {
+        let header = model::read_header(path)?;
+        println!("{path}: HCKM v{}", header.version);
+        println!("  schema: {}", header.schema.summary());
+        if header.metadata.is_empty() {
+            println!("  metadata: (none)");
+        } else {
+            println!("  metadata:");
+            for (k, v) in &header.metadata {
+                println!("    {k} = {v}");
+            }
+        }
+        return Ok(());
+    }
     println!("Table 1 data set analogues (synthetic generators):");
     println!(
         "{:<20} {:>5} {:<22} {:>10} {:>9} {:>9}",
@@ -312,50 +357,113 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         opt("algo", "krr | gp | kpca (one fit surface for all of them)", Some("krr")),
         opt("embed-dim", "KPCA embedding dimension", Some("8")),
         opt("save", "save the fitted model as a self-describing HCKM artifact", None),
+        opt("trace", "write a Chrome-trace JSON of the run to this path", None),
     ]);
+    spec.push(flag("json", "machine-readable output (schema, metric, phase breakdown)"));
     spec.push(flag("help", "show help"));
     let a = Args::parse(argv, &spec).map_err(Error::Config)?;
     if a.flag("help") {
         println!("{}", usage("hck train", "fit a model, optionally save an artifact", &spec));
         return Ok(());
     }
+    if let Some(path) = a.get("trace") {
+        hck::obs::enable(path);
+    }
+    let json_out = a.flag("json");
+    let mut phases = Phases::new();
+    let mut t = Timer::start();
     let (train, test, norm) = load_data(&a)?;
+    phases.add("load_data", t.lap());
     let mspec = build_model_spec(&a, norm)?;
-    print_simd_banner();
-    println!(
-        "training on {} (n={} d={} task={:?})",
-        train.name,
-        train.n(),
-        train.d(),
-        train.task
-    );
-    let t = Timer::start();
-    let model: Box<dyn Model> = model::fit(&mspec, &train)?;
-    let train_secs = t.secs();
-    println!("fitted {} in {train_secs:.3}s", model.schema().summary());
-    if model.schema().kind == ModelKind::Kpca {
-        println!("embedding dimension {}", model.outputs());
-        if test.n() > 0 {
-            let emb = model.predict_batch(&test.x.row_range(0, 1));
-            println!("first test point embeds to {:?}", emb.row(0));
-        }
-    } else {
-        let t2 = Timer::start();
-        let preds = model.predict_batch(&test.x);
-        let test_secs = t2.secs();
-        let (metric, higher_better) = hck::learn::metrics::score(&test, &preds);
+    if !json_out {
+        print_simd_banner();
         println!(
-            "{}: {metric:.4}",
-            if higher_better { "accuracy" } else { "relative error" }
-        );
-        println!(
-            "test:  {test_secs:.3}s ({:.1} µs/query)",
-            test_secs * 1e6 / test.n().max(1) as f64
+            "training on {} (n={} d={} task={:?})",
+            train.name,
+            train.n(),
+            train.d(),
+            train.task
         );
     }
+    let model: Box<dyn Model> = model::fit(&mspec, &train)?;
+    let fit_secs = t.lap();
+    phases.add("fit", fit_secs);
+    // Hierarchical-factor models time their build internally — surface
+    // the sub-stages alongside the CLI-level phases.
+    if let Some(pred) = model.hierarchical_predictor() {
+        for (name, secs) in pred.factors().build_phases.entries() {
+            phases.add(&format!("fit.{name}"), *secs);
+        }
+    }
+    if !json_out {
+        println!("fitted {} in {fit_secs:.3}s", model.schema().summary());
+    }
+    let mut metric_out: Option<(f64, bool)> = None;
+    if model.schema().kind == ModelKind::Kpca {
+        if !json_out {
+            println!("embedding dimension {}", model.outputs());
+            if test.n() > 0 {
+                let emb = model.predict_batch(&test.x.row_range(0, 1));
+                println!("first test point embeds to {:?}", emb.row(0));
+            }
+        }
+        phases.add("evaluate", t.lap());
+    } else {
+        let preds = model.predict_batch(&test.x);
+        let test_secs = t.lap();
+        phases.add("evaluate", test_secs);
+        let (metric, higher_better) = hck::learn::metrics::score(&test, &preds);
+        metric_out = Some((metric, higher_better));
+        if !json_out {
+            println!(
+                "{}: {metric:.4}",
+                if higher_better { "accuracy" } else { "relative error" }
+            );
+            println!(
+                "test:  {test_secs:.3}s ({:.1} µs/query)",
+                test_secs * 1e6 / test.n().max(1) as f64
+            );
+        }
+    }
     if let Some(path) = a.get("save") {
-        model.save(path)?;
-        println!("saved HCKM artifact to {path}");
+        // Persist the phase breakdown into the artifact header so
+        // `hck info --model` can show how the model was built.
+        let meta: Vec<(String, String)> = phases
+            .entries()
+            .iter()
+            .map(|(name, secs)| (format!("phase.{name}_secs"), format!("{secs:.6}")))
+            .collect();
+        model.save_meta(path, &meta)?;
+        phases.add("save", t.lap());
+        if !json_out {
+            println!("saved HCKM artifact to {path}");
+        }
+    }
+    if json_out {
+        let mut pairs = vec![
+            ("schema", model.schema().to_json()),
+            (
+                "phases",
+                Json::obj(
+                    phases
+                        .entries()
+                        .iter()
+                        .map(|(name, secs)| (name.as_str(), Json::Num(*secs)))
+                        .collect(),
+                ),
+            ),
+            ("total_secs", Json::Num(phases.total())),
+        ];
+        if let Some((metric, higher_better)) = metric_out {
+            pairs.push((
+                if higher_better { "accuracy" } else { "relative_error" },
+                Json::Num(metric),
+            ));
+        }
+        if let Some(path) = a.get("save") {
+            pairs.push(("saved", Json::Str(path.to_string())));
+        }
+        println!("{}", Json::obj(pairs).encode());
     }
     Ok(())
 }
@@ -509,8 +617,10 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         opt("max-wait-ms", "batching window (ms)", Some("2")),
         opt("shards", "cut an in-process shard layer from --model (0 = off)", Some("0")),
         opt("shard-depth", "tree depth of the in-process cut (default: fits --shards)", None),
+        opt("trace", "write a Chrome-trace JSON of the serving run to this path", None),
         flag("variance", "require the posterior-variance capability at startup"),
         flag("routes", "require the leaf-route capability at startup"),
+        flag("metrics", "print the Prometheus exposition at shutdown"),
         flag("help", "show help"),
     ];
     let a = Args::parse(argv, &spec).map_err(Error::Config)?;
@@ -520,6 +630,9 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             usage("hck serve", "serve a saved artifact or shard directory over TCP", &spec)
         );
         return Ok(());
+    }
+    if let Some(path) = a.get("trace") {
+        hck::obs::enable(path);
     }
     print_simd_banner();
     let policy = BatchPolicy {
@@ -600,7 +713,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     eprintln!(
         "serving on 127.0.0.1:{port} (capabilities: {caps}) — send \
          {{\"features\": [...]}} (v1) or {{\"v\":2, \"queries\": [[...]], \
-         \"want\": {{...}}}} lines; {{\"cmd\":\"shutdown\"}} to stop"
+         \"want\": {{...}}}} lines; {{\"cmd\":\"metrics_text\"}} for a \
+         Prometheus scrape; {{\"cmd\":\"shutdown\"}} to stop"
     );
     let conns = serve_tcp(listener, svc.clone())?;
     let snap = svc.snapshot();
@@ -611,7 +725,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     for s in &snap.shards {
         eprintln!(
             "  shard {} rows [{}, {}): {} queries in {} batches \
-             (mean {:.1}/batch), {:.0} ns/query, queue {}",
+             (mean {:.1}/batch), {:.0} ns/query, queue {}, \
+             wait {:.0} ns/batch, busy {:.0}%",
             s.shard,
             s.rows_lo,
             s.rows_hi,
@@ -619,8 +734,14 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             s.batches,
             s.mean_batch_size,
             s.ns_per_query,
-            s.queue_depth
+            s.queue_depth,
+            s.queue_wait_ns,
+            s.busy_frac * 100.0
         );
+    }
+    if a.flag("metrics") {
+        let pool = hck::util::parallel::pool_stats();
+        print!("{}", hck::coordinator::metrics::render_prometheus(&snap, &pool));
     }
     Ok(())
 }

@@ -55,7 +55,7 @@
 
 pub mod persist;
 
-pub use persist::{load_any, FORMAT_VERSION};
+pub use persist::{load_any, read_header, ArtifactHeader, FORMAT_VERSION};
 
 use crate::data::{Dataset, Task};
 use crate::error::Result;
@@ -204,8 +204,17 @@ pub trait Model: Send + Sync {
     /// The model's self-description (also the artifact header).
     fn schema(&self) -> &ModelSchema;
 
+    /// Write a self-describing `HCKM` artifact with header metadata
+    /// attached (ordered key/value string pairs — e.g. the training
+    /// phase breakdown); [`load_any`] restores the model and
+    /// [`read_header`] reads the metadata back without touching the
+    /// payload.
+    fn save_meta(&self, path: &str, meta: &[(String, String)]) -> Result<()>;
+
     /// Write a self-describing `HCKM` artifact; [`load_any`] restores it.
-    fn save(&self, path: &str) -> Result<()>;
+    fn save(&self, path: &str) -> Result<()> {
+        self.save_meta(path, &[])
+    }
 
     /// The long-lived Algorithm-3 predictor, when the model is backed by
     /// hierarchical factors — the input to partition-tree sharding
@@ -472,8 +481,8 @@ impl Model for FittedKrr {
     fn schema(&self) -> &ModelSchema {
         &self.schema
     }
-    fn save(&self, path: &str) -> Result<()> {
-        persist::save_krr(self, path)
+    fn save_meta(&self, path: &str, meta: &[(String, String)]) -> Result<()> {
+        persist::save_krr(self, path, meta)
     }
     fn hierarchical_predictor(&self) -> Option<&HPredictor> {
         self.model.hierarchical_predictor()
@@ -542,8 +551,8 @@ impl Model for FittedGp {
     fn schema(&self) -> &ModelSchema {
         &self.schema
     }
-    fn save(&self, path: &str) -> Result<()> {
-        persist::save_gp(self, path)
+    fn save_meta(&self, path: &str, meta: &[(String, String)]) -> Result<()> {
+        persist::save_gp(self, path, meta)
     }
     fn hierarchical_predictor(&self) -> Option<&HPredictor> {
         Some(&self.predictor)
@@ -595,8 +604,8 @@ impl Model for FittedKpca {
     fn schema(&self) -> &ModelSchema {
         &self.schema
     }
-    fn save(&self, path: &str) -> Result<()> {
-        persist::save_kpca(self, path)
+    fn save_meta(&self, path: &str, meta: &[(String, String)]) -> Result<()> {
+        persist::save_kpca(self, path, meta)
     }
 }
 

@@ -6,6 +6,7 @@
 //!
 //! ```text
 //! "HCKM" | version u64 | schema (kind, dim, outputs, task, norm stats)
+//!        | metadata (v2+: count, then key/value string pairs)
 //!        | kind-specific payload
 //! ```
 //!
@@ -13,7 +14,12 @@
 //! feature dimension, output columns, task type, and the feature
 //! normalization applied at training time — so [`load_any`] can dispatch
 //! and a server can validate/preprocess requests without side-channel
-//! configuration. Payloads reuse the factor/tree/matrix primitives of
+//! configuration. Version 2 adds a free-form **metadata** section of
+//! ordered key/value string pairs between schema and payload — the CLI
+//! records the training phase breakdown there (`hck train --save` →
+//! `hck info`); version-1 files (no metadata) still load. Use
+//! [`read_header`] to inspect an artifact without deserializing its
+//! payload. Payloads reuse the factor/tree/matrix primitives of
 //! [`crate::hkernel::persist`]; everything derived (Cholesky factors,
 //! Algorithm-3 predictor state, KPCA aggregate bases) is recomputed
 //! deterministically on load, so a reloaded model predicts
@@ -42,26 +48,16 @@ use std::sync::Arc;
 const MAGIC: &[u8; 4] = b"HCKM";
 
 /// Current `HCKM` format version. Bumped on breaking layout changes;
-/// [`load_any`] rejects any other version.
-pub const FORMAT_VERSION: u64 = 1;
+/// [`load_any`] reads this version and version 1 (v2 = v1 plus the
+/// metadata section) and rejects everything else.
+pub const FORMAT_VERSION: u64 = 2;
 
 /// Load any `HCKM` artifact as a type-erased [`Model`] — the caller does
 /// not need to know what kind of model the file holds.
 pub fn load_any(path: &str) -> Result<Box<dyn Model>> {
     let file = std::fs::File::open(path)?;
     let mut inp = BufReader::new(file);
-    let mut magic = [0u8; 4];
-    inp.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::data("not an HCKM model artifact (bad magic)"));
-    }
-    let version = ru64(&mut inp)?;
-    if version != FORMAT_VERSION {
-        return Err(Error::data(format!(
-            "unsupported HCKM version {version} (this build reads version {FORMAT_VERSION})"
-        )));
-    }
-    let schema = read_schema(&mut inp)?;
+    let (_, schema, _meta) = read_header_from(&mut inp)?;
     match schema.kind {
         ModelKind::KrrHierarchical
         | ModelKind::KrrNystrom
@@ -71,6 +67,93 @@ pub fn load_any(path: &str) -> Result<Box<dyn Model>> {
         ModelKind::Gp => read_gp(&mut inp, schema),
         ModelKind::Kpca => read_kpca(&mut inp, schema),
     }
+}
+
+/// Everything before the kind-specific payload of an `HCKM` artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactHeader {
+    /// The on-disk format version (1 or 2).
+    pub version: u64,
+    /// The model's self-description.
+    pub schema: ModelSchema,
+    /// Ordered key/value metadata pairs (always empty for version 1) —
+    /// e.g. the training phase breakdown recorded by `hck train --save`.
+    pub metadata: Vec<(String, String)>,
+}
+
+/// Read just the header of an `HCKM` artifact — version, schema, and
+/// metadata — without deserializing the payload. Backs `hck info`.
+pub fn read_header(path: &str) -> Result<ArtifactHeader> {
+    let file = std::fs::File::open(path)?;
+    let mut inp = BufReader::new(file);
+    let (version, schema, metadata) = read_header_from(&mut inp)?;
+    Ok(ArtifactHeader { version, schema, metadata })
+}
+
+/// Shared header parse: magic, version gate (1 or [`FORMAT_VERSION`]),
+/// schema, and the v2 metadata section.
+fn read_header_from(
+    inp: &mut impl Read,
+) -> Result<(u64, ModelSchema, Vec<(String, String)>)> {
+    let mut magic = [0u8; 4];
+    inp.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::data("not an HCKM model artifact (bad magic)"));
+    }
+    let version = ru64(inp)?;
+    if version != 1 && version != FORMAT_VERSION {
+        return Err(Error::data(format!(
+            "unsupported HCKM version {version} (this build reads versions 1..={FORMAT_VERSION})"
+        )));
+    }
+    let schema = read_schema(inp)?;
+    let metadata = if version >= 2 { read_metadata(inp)? } else { Vec::new() };
+    Ok((version, schema, metadata))
+}
+
+// ---- metadata (v2) ----
+
+/// Per-string and per-section caps: metadata is a header, not a payload.
+const META_MAX_ENTRIES: u64 = 4096;
+const META_MAX_STR: u64 = 1 << 20;
+
+fn wstr(out: &mut impl Write, s: &str) -> Result<()> {
+    wu64(out, s.len() as u64)?;
+    out.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn rstr(inp: &mut impl Read) -> Result<String> {
+    let len = ru64(inp)?;
+    if len > META_MAX_STR {
+        return Err(Error::data("corrupt HCKM artifact (metadata string length)"));
+    }
+    let mut buf = vec![0u8; len as usize];
+    inp.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|_| Error::data("corrupt HCKM artifact (metadata utf-8)"))
+}
+
+fn write_metadata(out: &mut impl Write, meta: &[(String, String)]) -> Result<()> {
+    wu64(out, meta.len() as u64)?;
+    for (k, v) in meta {
+        wstr(out, k)?;
+        wstr(out, v)?;
+    }
+    Ok(())
+}
+
+fn read_metadata(inp: &mut impl Read) -> Result<Vec<(String, String)>> {
+    let count = ru64(inp)?;
+    if count > META_MAX_ENTRIES {
+        return Err(Error::data("corrupt HCKM artifact (metadata entry count)"));
+    }
+    let mut meta = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let k = rstr(inp)?;
+        let v = rstr(inp)?;
+        meta.push((k, v));
+    }
+    Ok(meta)
 }
 
 // ---- schema ----
@@ -159,12 +242,17 @@ fn read_schema(inp: &mut impl Read) -> Result<ModelSchema> {
     Ok(ModelSchema { kind, dim, outputs, task, normalization })
 }
 
-fn open_for_write(path: &str, schema: &ModelSchema) -> Result<BufWriter<std::fs::File>> {
+fn open_for_write(
+    path: &str,
+    schema: &ModelSchema,
+    meta: &[(String, String)],
+) -> Result<BufWriter<std::fs::File>> {
     let file = std::fs::File::create(path)?;
     let mut out = BufWriter::new(file);
     out.write_all(MAGIC)?;
     wu64(&mut out, FORMAT_VERSION)?;
     write_schema(&mut out, schema)?;
+    write_metadata(&mut out, meta)?;
     Ok(out)
 }
 
@@ -217,8 +305,8 @@ fn read_train_config(inp: &mut impl Read) -> Result<TrainConfig> {
 
 // ---- KRR ----
 
-pub(crate) fn save_krr(m: &FittedKrr, path: &str) -> Result<()> {
-    let mut out = open_for_write(path, m.schema())?;
+pub(crate) fn save_krr(m: &FittedKrr, path: &str, meta: &[(String, String)]) -> Result<()> {
+    let mut out = open_for_write(path, m.schema(), meta)?;
     let krr = &m.model;
     write_train_config(&mut out, krr.config())?;
     wu64(&mut out, krr.memory_words as u64)?;
@@ -325,8 +413,8 @@ fn read_krr(inp: &mut impl Read, schema: ModelSchema) -> Result<Box<dyn Model>> 
 
 // ---- GP ----
 
-pub(crate) fn save_gp(m: &FittedGp, path: &str) -> Result<()> {
-    let mut out = open_for_write(path, m.schema())?;
+pub(crate) fn save_gp(m: &FittedGp, path: &str, meta: &[(String, String)]) -> Result<()> {
+    let mut out = open_for_write(path, m.schema(), meta)?;
     let (factors, lambda, alpha_tree, log_likelihood) = m.gp.parts();
     wf64(&mut out, lambda)?;
     wf64(&mut out, log_likelihood)?;
@@ -350,8 +438,8 @@ fn read_gp(inp: &mut impl Read, schema: ModelSchema) -> Result<Box<dyn Model>> {
 
 // ---- KPCA ----
 
-pub(crate) fn save_kpca(m: &FittedKpca, path: &str) -> Result<()> {
-    let mut out = open_for_write(path, m.schema())?;
+pub(crate) fn save_kpca(m: &FittedKpca, path: &str, meta: &[(String, String)]) -> Result<()> {
+    let mut out = open_for_write(path, m.schema(), meta)?;
     let (factors, proj, row_means, grand_mean, train_embedding) = m.transformer.parts();
     wf64(&mut out, grand_mean)?;
     write_factors(&mut out, factors)?;

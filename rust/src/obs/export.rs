@@ -1,0 +1,138 @@
+//! Chrome-trace (Perfetto JSON array) exporter.
+//!
+//! Emits the classic `chrome://tracing` format: a JSON array of
+//! `ph:"M"` thread-name metadata events followed by `ph:"X"` complete
+//! events with microsecond `ts`/`dur`. The output loads directly in
+//! <https://ui.perfetto.dev> and parses with `util::json` (the
+//! validity test and `scripts/check_trace.py` both rely on that).
+
+use super::trace::Event;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Render events (already sorted by `drain_events`) as one Chrome-trace
+/// JSON array string.
+pub fn chrome_trace_json(events: &[Event], threads: &[(u64, String)]) -> String {
+    let mut out = String::with_capacity(64 + events.len() * 96);
+    out.push('[');
+    let mut first = true;
+    for (tid, name) in threads {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"args\":{{\"name\":{}}}}}",
+            Json::Str(name.clone()).encode()
+        );
+    }
+    for ev in events {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{}",
+            Json::Str(ev.name.to_string()).encode(),
+            Json::Str(ev.cat.to_string()).encode(),
+            ev.start_ns as f64 / 1e3,
+            ev.dur_ns as f64 / 1e3,
+            ev.tid,
+        );
+        match event_args(ev) {
+            Some(args) => {
+                out.push_str(",\"args\":");
+                out.push_str(&args);
+                out.push('}');
+            }
+            None => out.push('}'),
+        }
+    }
+    out.push(']');
+    out
+}
+
+/// Merge the span's pre-encoded args object with its request id (when
+/// request-scoped) into one JSON object string.
+fn event_args(ev: &Event) -> Option<String> {
+    match (&ev.args, ev.request_id) {
+        (None, 0) => None,
+        (None, rid) => Some(format!("{{\"request_id\":{rid}}}")),
+        (Some(a), 0) => Some(a.clone()),
+        (Some(a), rid) => {
+            let inner = a.trim();
+            let body = inner.strip_prefix('{').and_then(|s| s.strip_suffix('}')).unwrap_or("");
+            if body.trim().is_empty() {
+                Some(format!("{{\"request_id\":{rid}}}"))
+            } else {
+                Some(format!("{{{body},\"request_id\":{rid}}}"))
+            }
+        }
+    }
+}
+
+/// Write the Chrome-trace file.
+pub fn write_chrome_trace(
+    path: &str,
+    events: &[Event],
+    threads: &[(u64, String)],
+) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json(events, threads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, start: u64, rid: u64, args: Option<&str>) -> Event {
+        Event {
+            name,
+            cat: "test",
+            start_ns: start,
+            dur_ns: 500,
+            tid: 1,
+            request_id: rid,
+            args: args.map(|s| s.to_string()),
+        }
+    }
+
+    #[test]
+    fn export_parses_and_carries_fields() {
+        let events = vec![
+            ev("a", 1_000, 0, None),
+            ev("b", 2_000, 7, None),
+            ev("c", 3_000, 9, Some("{\"m\":4}")),
+        ];
+        let threads = vec![(1, "main \"q\"".to_string())];
+        let text = chrome_trace_json(&events, &threads);
+        let doc = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let arr = doc.as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].get("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(
+            arr[0].get("args").unwrap().get("name").unwrap().as_str(),
+            Some("main \"q\"")
+        );
+        assert_eq!(arr[1].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(arr[1].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(arr[1].get("ts").unwrap().as_f64(), Some(1.0));
+        assert!(arr[1].get("args").is_none());
+        assert_eq!(
+            arr[2].get("args").unwrap().get("request_id").unwrap().as_usize(),
+            Some(7)
+        );
+        let c = arr[3].get("args").unwrap();
+        assert_eq!(c.get("m").unwrap().as_usize(), Some(4));
+        assert_eq!(c.get("request_id").unwrap().as_usize(), Some(9));
+    }
+
+    #[test]
+    fn empty_args_object_merges_request_id() {
+        let text = chrome_trace_json(&[ev("z", 0, 3, Some("{}"))], &[]);
+        let doc = Json::parse(&text).unwrap();
+        let args = doc.as_arr().unwrap()[0].get("args").unwrap();
+        assert_eq!(args.get("request_id").unwrap().as_usize(), Some(3));
+    }
+}

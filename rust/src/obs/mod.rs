@@ -1,0 +1,42 @@
+//! Observability: a zero-dependency, process-global span tracer with
+//! Chrome-trace export.
+//!
+//! The tracer is off by default and costs one relaxed atomic load per
+//! probe when disabled — cheap enough to leave permanently wired into
+//! the BLAS-3 core, the hierarchical factor/solve phases, the
+//! coordinator, and the shard workers. Enable it with
+//! `HCK_TRACE=out.json` (any CLI entry point) or `--trace out.json`
+//! (`hck serve` / `hck train`), or in-process via
+//! [`trace::enable_capture`] + [`trace::drain_events`] for benches and
+//! tests that want the raw events instead of a file.
+//!
+//! Events land in per-thread bounded rings (oldest overwritten), so a
+//! long-lived server can trace indefinitely with fixed memory. At
+//! [`trace::flush`] the rings are drained, merged, sorted by start
+//! time, and written as a Chrome-trace JSON array (the
+//! `chrome://tracing` / [Perfetto](https://ui.perfetto.dev) format):
+//! one `ph:"X"` complete event per span, carrying the category, the
+//! owning thread, the serving `request_id` (when the span belongs to a
+//! request), and any span-specific args (matrix shapes, batch sizes,
+//! tree levels).
+//!
+//! Span names are stable identifiers — `scripts/check_trace.py` and
+//! the bench harness both key on them:
+//!
+//! | span | category | layer |
+//! | --- | --- | --- |
+//! | `train.partition` / `train.sample_landmarks` / `train.sigma_factor` / `train.node_factors` | `train` | `hkernel::build` |
+//! | `factor.leaves` / `factor.level` (args `{"level":d}`) | `train` | `hkernel::solve` |
+//! | `blas.par_gemm` / `blas.par_syrk` (args shape+backend) | `blas` | `linalg::blas` |
+//! | `coord.queue_wait` / `coord.execute` / `coord.batch` / `coord.member_eval` | `coord` | coordinator |
+//! | `shard.queue_wait` / `shard.eval` (args `{"shard":i}`) | `shard` | shard workers |
+
+pub mod export;
+pub mod span;
+pub mod trace;
+
+pub use span::{span, span_req, span_with, Span};
+pub use trace::{
+    current_request_id, disable, drain_events, enable, enable_capture, flush, init_from_env,
+    is_enabled, record_span_between, with_request_id, Event, RequestIdGuard,
+};

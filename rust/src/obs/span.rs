@@ -1,0 +1,94 @@
+//! RAII span guards over the tracer.
+//!
+//! `span("name", "cat")` opens a span that records itself on drop.
+//! When tracing is disabled the constructors return an inert guard
+//! without reading the clock or allocating — the span probes stay in
+//! release builds at effectively zero cost.
+
+use super::trace;
+
+/// An open span; records one [`trace::Event`](super::Event) on drop.
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    request_id: u64,
+    args: Option<String>,
+    armed: bool,
+}
+
+/// Open a span inheriting the thread-local request id.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    if !trace::is_enabled() {
+        return Span::inert(name, cat);
+    }
+    Span {
+        name,
+        cat,
+        start_ns: trace::now_ns(),
+        request_id: trace::current_request_id(),
+        args: None,
+        armed: true,
+    }
+}
+
+/// Open a span with an explicit request id.
+#[inline]
+pub fn span_req(name: &'static str, cat: &'static str, request_id: u64) -> Span {
+    if !trace::is_enabled() {
+        return Span::inert(name, cat);
+    }
+    Span { name, cat, start_ns: trace::now_ns(), request_id, args: None, armed: true }
+}
+
+/// Open a span with lazily-built args: `args` must return a pre-encoded
+/// JSON object (e.g. `{"m":512,"backend":"avx2"}`) and is only invoked
+/// when tracing is enabled, so shape formatting costs nothing on the
+/// disabled path.
+#[inline]
+pub fn span_with<F: FnOnce() -> String>(name: &'static str, cat: &'static str, args: F) -> Span {
+    if !trace::is_enabled() {
+        return Span::inert(name, cat);
+    }
+    Span {
+        name,
+        cat,
+        start_ns: trace::now_ns(),
+        request_id: trace::current_request_id(),
+        args: Some(args()),
+        armed: true,
+    }
+}
+
+impl Span {
+    #[inline]
+    fn inert(name: &'static str, cat: &'static str) -> Span {
+        Span { name, cat, start_ns: 0, request_id: 0, args: None, armed: false }
+    }
+
+    /// Override the request id this span will record with.
+    pub fn with_request_id(mut self, id: u64) -> Span {
+        if self.armed {
+            self.request_id = id;
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let end = trace::now_ns();
+        trace::record(
+            self.name,
+            self.cat,
+            self.start_ns,
+            end.saturating_sub(self.start_ns),
+            self.request_id,
+            self.args.take(),
+        );
+    }
+}

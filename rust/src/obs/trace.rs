@@ -1,0 +1,238 @@
+//! Tracer state: the global enable flag, the time epoch, per-thread
+//! event rings, and the thread-local request-id context.
+//!
+//! Layout: every thread that records a span lazily registers one
+//! `ThreadBuf` (an `Arc` shared with a global registry) holding a
+//! bounded ring of events. Recording locks only the calling thread's
+//! own ring mutex — uncontended except while a flush is draining — so
+//! tracing never serializes pool workers against each other. The
+//! disabled path is a single relaxed atomic load with no time read and
+//! no allocation.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity. 64Ki events ≈ a few MB per active thread,
+/// bounded regardless of server lifetime; oldest events are overwritten.
+const RING_CAP: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static OUT_PATH: Mutex<Option<String>> = Mutex::new(None);
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// One completed span, in nanoseconds since the process trace epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Tracer-local thread id (registration order, 1-based).
+    pub tid: u64,
+    /// Serving request id, 0 when the span is not request-scoped.
+    pub request_id: u64,
+    /// Pre-encoded JSON object of span-specific args, if any.
+    pub args: Option<String>,
+}
+
+struct Ring {
+    events: Vec<Event>,
+    /// Write cursor once the ring is full.
+    next: usize,
+    dropped: u64,
+}
+
+struct ThreadBuf {
+    tid: u64,
+    name: String,
+    ring: Mutex<Ring>,
+}
+
+impl ThreadBuf {
+    fn push(&self, ev: Event) {
+        let mut r = self.ring.lock().unwrap();
+        if r.events.len() < RING_CAP {
+            r.events.push(ev);
+        } else {
+            let i = r.next;
+            r.events[i] = ev;
+            r.next = (i + 1) % RING_CAP;
+            r.dropped += 1;
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: Arc<ThreadBuf> = register_thread();
+    static CURRENT_REQUEST: Cell<u64> = const { Cell::new(0) };
+}
+
+fn register_thread() -> Arc<ThreadBuf> {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let name = std::thread::current().name().unwrap_or("thread").to_string();
+    let buf = Arc::new(ThreadBuf {
+        tid,
+        name,
+        ring: Mutex::new(Ring { events: Vec::new(), next: 0, dropped: 0 }),
+    });
+    REGISTRY.lock().unwrap().push(Arc::clone(&buf));
+    buf
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Whether tracing is currently recording. One relaxed load.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds since the trace epoch.
+pub(crate) fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Convert an `Instant` captured elsewhere (e.g. a request's enqueue
+/// time) to nanoseconds since the trace epoch. Instants that predate
+/// the epoch clamp to 0.
+pub(crate) fn ns_of(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).map(|d| d.as_nanos() as u64).unwrap_or(0)
+}
+
+/// Enable tracing and remember `path` as the Chrome-trace destination
+/// for [`flush`].
+pub fn enable(path: &str) {
+    let _ = epoch();
+    *OUT_PATH.lock().unwrap() = Some(path.to_string());
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Enable tracing for in-process capture (no output file); pair with
+/// [`drain_events`]. Used by benches and tests.
+pub fn enable_capture() {
+    let _ = epoch();
+    *OUT_PATH.lock().unwrap() = None;
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording. Already-buffered events stay drainable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Enable tracing when `HCK_TRACE=path.json` is set in the environment.
+/// Called once at CLI startup; a later `--trace` flag overrides the path.
+pub fn init_from_env() {
+    if let Ok(path) = std::env::var("HCK_TRACE") {
+        if !path.is_empty() {
+            enable(&path);
+        }
+    }
+}
+
+/// Record one completed span into the calling thread's ring.
+#[inline]
+pub(crate) fn record(
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    dur_ns: u64,
+    request_id: u64,
+    args: Option<String>,
+) {
+    if !is_enabled() {
+        return;
+    }
+    LOCAL.with(|b| {
+        b.push(Event { name, cat, start_ns, dur_ns, tid: b.tid, request_id, args })
+    });
+}
+
+/// Record a span whose bounds were measured with `Instant`s (e.g. the
+/// coordinator's queue-wait window, which starts on the submitting
+/// thread and ends on the batcher thread).
+pub fn record_span_between(
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    end: Instant,
+    request_id: u64,
+) {
+    if !is_enabled() {
+        return;
+    }
+    let s = ns_of(start);
+    let e = ns_of(end);
+    record(name, cat, s, e.saturating_sub(s), request_id, None);
+}
+
+/// The request id attached to spans opened on this thread (0 = none).
+pub fn current_request_id() -> u64 {
+    CURRENT_REQUEST.with(|c| c.get())
+}
+
+/// Scope guard restoring the previous thread-local request id on drop.
+pub struct RequestIdGuard {
+    prev: u64,
+}
+
+/// Set the thread-local request id for the duration of the returned
+/// guard; spans opened while it lives inherit the id.
+pub fn with_request_id(id: u64) -> RequestIdGuard {
+    let prev = CURRENT_REQUEST.with(|c| c.replace(id));
+    RequestIdGuard { prev }
+}
+
+impl Drop for RequestIdGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT_REQUEST.with(|c| c.set(prev));
+    }
+}
+
+/// Drain every thread's ring, returning all buffered events sorted by
+/// start time. Rings are left empty (and their overwrite cursors reset).
+pub fn drain_events() -> Vec<Event> {
+    let reg = REGISTRY.lock().unwrap();
+    let mut out = Vec::new();
+    for buf in reg.iter() {
+        let mut r = buf.ring.lock().unwrap();
+        out.append(&mut r.events);
+        r.next = 0;
+        r.dropped = 0;
+    }
+    drop(reg);
+    out.sort_by(|a, b| (a.start_ns, a.tid).cmp(&(b.start_ns, b.tid)));
+    out
+}
+
+/// Total events overwritten by ring wraparound since the last drain.
+pub fn dropped_events() -> u64 {
+    REGISTRY.lock().unwrap().iter().map(|b| b.ring.lock().unwrap().dropped).sum()
+}
+
+/// `(tid, thread name)` for every registered thread, for the trace
+/// metadata header.
+pub(crate) fn thread_names() -> Vec<(u64, String)> {
+    REGISTRY.lock().unwrap().iter().map(|b| (b.tid, b.name.clone())).collect()
+}
+
+/// Drain all events and write the Chrome-trace file recorded by
+/// [`enable`]. Returns the path written, or `None` when tracing was
+/// enabled for in-process capture only.
+pub fn flush() -> std::io::Result<Option<String>> {
+    let path = OUT_PATH.lock().unwrap().clone();
+    let Some(path) = path else {
+        return Ok(None);
+    };
+    let threads = thread_names();
+    let events = drain_events();
+    super::export::write_chrome_trace(&path, &events, &threads)?;
+    Ok(Some(path))
+}

@@ -32,7 +32,6 @@ use std::time::Instant;
 
 /// Per-shard serving counters, updated by the worker thread and read by
 /// [`ShardedPredictor::shard_metrics`].
-#[derive(Default)]
 struct WorkerMetrics {
     /// Jobs submitted but not yet finished (instantaneous queue depth).
     queued: AtomicUsize,
@@ -42,15 +41,35 @@ struct WorkerMetrics {
     requests: AtomicU64,
     /// Wall time spent inside `Shard::predict_typed`, in ns.
     busy_ns: AtomicU64,
+    /// Total time sub-batches sat queued before the worker picked them
+    /// up, in ns (snapshot reports the per-sub-batch mean).
+    queue_wait_ns: AtomicU64,
     /// Queries that came back as errors instead of predictions
     /// (worker panics, unsupported columns, dead reply channels).
     dropped: AtomicU64,
+    /// When the worker was spawned — the denominator of `busy_frac`.
+    started: Instant,
+}
+
+impl WorkerMetrics {
+    fn new() -> WorkerMetrics {
+        WorkerMetrics {
+            queued: AtomicUsize::new(0),
+            batches: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            queue_wait_ns: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
 }
 
 /// One sub-batch of co-routed queries plus its reply channel.
 struct Job {
     q: Mat,
     want: Want,
+    enqueued: Instant,
     resp: SyncSender<InferResult<ShardBlock>>,
 }
 
@@ -71,7 +90,7 @@ impl ShardWorker {
         let id = shard.id;
         let row_range = shard.row_range();
         let (tx, rx) = sync_channel::<Job>(1024);
-        let metrics = Arc::new(WorkerMetrics::default());
+        let metrics = Arc::new(WorkerMetrics::new());
         let m2 = metrics.clone();
         let join = std::thread::Builder::new()
             .name(format!("hck-shard-{id}"))
@@ -79,6 +98,20 @@ impl ShardWorker {
                 // Channel disconnect (all senders dropped) ends the loop.
                 while let Ok(job) = rx.recv() {
                     let t = Instant::now();
+                    m2.queue_wait_ns.fetch_add(
+                        t.duration_since(job.enqueued).as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
+                    crate::obs::record_span_between(
+                        "shard.queue_wait",
+                        "shard",
+                        job.enqueued,
+                        t,
+                        0,
+                    );
+                    let _sp = crate::obs::span_with("shard.eval", "shard", || {
+                        format!("{{\"shard\":{id},\"rows\":{}}}", job.q.rows())
+                    });
                     // A panic must not kill the worker for the rest of the
                     // service lifetime: contain it to this sub-batch. The
                     // shard is immutable (&self evaluation), so reuse after
@@ -118,7 +151,7 @@ impl ShardWorker {
     fn submit(&self, q: Mat, want: Want) -> std::sync::mpsc::Receiver<InferResult<ShardBlock>> {
         let (rtx, rrx) = sync_channel(1);
         self.metrics.queued.fetch_add(1, Ordering::Relaxed);
-        if self.tx.send(Job { q, want, resp: rtx }).is_err() {
+        if self.tx.send(Job { q, want, enqueued: Instant::now(), resp: rtx }).is_err() {
             self.metrics.queued.fetch_sub(1, Ordering::Relaxed);
         }
         rrx
@@ -129,6 +162,8 @@ impl ShardWorker {
         let batches = self.metrics.batches.load(Ordering::Relaxed);
         let requests = self.metrics.requests.load(Ordering::Relaxed);
         let busy_ns = self.metrics.busy_ns.load(Ordering::Relaxed);
+        let wait_ns = self.metrics.queue_wait_ns.load(Ordering::Relaxed);
+        let lifetime_ns = self.metrics.started.elapsed().as_nanos() as f64;
         ShardSnapshot {
             shard: self.id,
             rows_lo: self.row_range.0,
@@ -138,6 +173,12 @@ impl ShardWorker {
             requests,
             mean_batch_size: if batches > 0 { requests as f64 / batches as f64 } else { 0.0 },
             ns_per_query: if requests > 0 { busy_ns as f64 / requests as f64 } else { 0.0 },
+            queue_wait_ns: if batches > 0 { wait_ns as f64 / batches as f64 } else { 0.0 },
+            busy_frac: if lifetime_ns > 0.0 {
+                (busy_ns as f64 / lifetime_ns).clamp(0.0, 1.0)
+            } else {
+                0.0
+            },
             dropped: self.metrics.dropped.load(Ordering::Relaxed),
         }
     }
@@ -430,6 +471,10 @@ mod tests {
         assert_eq!(served, 33);
         assert!(snaps.iter().all(|s| s.queue_depth == 0 && s.dropped == 0));
         assert!(snaps.iter().any(|s| s.ns_per_query > 0.0));
+        // Telemetry sanity: a served shard measured a queue wait, and
+        // busy_frac is a fraction of the worker's lifetime.
+        assert!(snaps.iter().any(|s| s.batches > 0 && s.queue_wait_ns > 0.0));
+        assert!(snaps.iter().all(|s| (0.0..=1.0).contains(&s.busy_frac)));
     }
 
     #[test]

@@ -37,8 +37,10 @@
 //! algebra is memory-bandwidth bound well before that.
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 /// Hard cap on the default worker count; beyond this the O(nr) kernels
 /// are bandwidth-bound and extra threads only add dispatch cost.
@@ -103,6 +105,81 @@ unsafe fn erase_job<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
 /// threads — scheduling never reorders the work assignment.
 struct Pool {
     senders: Mutex<Vec<Sender<Job>>>,
+    /// One counter block per spawned worker, index-aligned with
+    /// `senders`; shared with the worker thread, read by [`pool_stats`].
+    stats: Mutex<Vec<Arc<WorkerStat>>>,
+    /// When the first worker spawned — the denominator for busy-fraction.
+    started: OnceLock<Instant>,
+}
+
+/// Lifetime counters one pool worker maintains about itself.
+#[derive(Default)]
+struct WorkerStat {
+    tasks: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+/// Per-worker counters in a [`PoolStats`] snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerCounters {
+    /// Jobs this worker has executed.
+    pub tasks: u64,
+    /// Total nanoseconds spent executing jobs (the remainder of the
+    /// worker's lifetime is idle time blocked on its queue).
+    pub busy_ns: u64,
+}
+
+/// Point-in-time utilization snapshot of the persistent worker pool.
+/// Workers spawn lazily, so `workers` is the high-water mark of
+/// `run_parallel` fan-out so far (0 before any parallel call).
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    /// Workers spawned so far (excludes callers' inline bin-0 work).
+    pub workers: usize,
+    /// Total jobs executed across all workers.
+    pub tasks: u64,
+    /// Total busy nanoseconds across all workers.
+    pub busy_ns: u64,
+    /// Nanoseconds since the first worker spawned.
+    pub elapsed_ns: u64,
+    /// Per-worker breakdown, indexed by worker id (`hck-pool-{i}`).
+    pub per_worker: Vec<WorkerCounters>,
+}
+
+impl PoolStats {
+    /// Mean fraction of worker lifetime spent executing jobs, in
+    /// `0..=1`. A low value under load means work is not fanning out
+    /// (items too coarse, or `HCK_THREADS` higher than useful).
+    pub fn busy_frac(&self) -> f64 {
+        if self.workers == 0 || self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        (self.busy_ns as f64 / (self.workers as f64 * self.elapsed_ns as f64)).clamp(0.0, 1.0)
+    }
+}
+
+/// Snapshot the pool's utilization counters.
+pub fn pool_stats() -> PoolStats {
+    let p = pool();
+    let stats = p.stats.lock().unwrap();
+    let per_worker: Vec<WorkerCounters> = stats
+        .iter()
+        .map(|s| WorkerCounters {
+            tasks: s.tasks.load(Ordering::Relaxed),
+            busy_ns: s.busy_ns.load(Ordering::Relaxed),
+        })
+        .collect();
+    PoolStats {
+        workers: per_worker.len(),
+        tasks: per_worker.iter().map(|w| w.tasks).sum(),
+        busy_ns: per_worker.iter().map(|w| w.busy_ns).sum(),
+        elapsed_ns: p
+            .started
+            .get()
+            .map(|t| t.elapsed().as_nanos() as u64)
+            .unwrap_or(0),
+        per_worker,
+    }
 }
 
 thread_local! {
@@ -132,7 +209,11 @@ pub fn in_parallel_region() -> bool {
 
 fn pool() -> &'static Pool {
     static POOL: OnceLock<Pool> = OnceLock::new();
-    POOL.get_or_init(|| Pool { senders: Mutex::new(Vec::new()) })
+    POOL.get_or_init(|| Pool {
+        senders: Mutex::new(Vec::new()),
+        stats: Mutex::new(Vec::new()),
+        started: OnceLock::new(),
+    })
 }
 
 impl Pool {
@@ -144,12 +225,19 @@ impl Pool {
         while senders.len() <= idx {
             let id = senders.len();
             let (tx, rx) = channel::<Job>();
+            let stat = Arc::new(WorkerStat::default());
+            self.started.get_or_init(Instant::now);
+            self.stats.lock().unwrap().push(Arc::clone(&stat));
             std::thread::Builder::new()
                 .name(format!("hck-pool-{id}"))
                 .spawn(move || {
                     IS_POOL_WORKER.with(|w| w.set(true));
                     while let Ok(job) = rx.recv() {
+                        let t = Instant::now();
                         job();
+                        stat.busy_ns
+                            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        stat.tasks.fetch_add(1, Ordering::Relaxed);
                     }
                 })
                 .expect("spawn hck pool worker");
@@ -440,6 +528,25 @@ mod tests {
                 panic!("boom at item {i}");
             }
         });
+    }
+
+    /// Pool utilization counters advance when work runs through the
+    /// pool, and the busy fraction stays a valid ratio.
+    #[test]
+    fn pool_stats_counts_work() {
+        let before = pool_stats();
+        let items: Vec<usize> = (0..64).collect();
+        run_parallel(4, items, |_| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        let after = pool_stats();
+        assert!(after.workers >= 3, "expected pool workers, got {}", after.workers);
+        assert!(after.tasks > before.tasks, "{} !> {}", after.tasks, before.tasks);
+        assert!(after.busy_ns > before.busy_ns);
+        assert_eq!(after.per_worker.len(), after.workers);
+        assert_eq!(after.per_worker.iter().map(|w| w.tasks).sum::<u64>(), after.tasks);
+        let frac = after.busy_frac();
+        assert!((0.0..=1.0).contains(&frac), "busy_frac out of range: {frac}");
     }
 
     #[test]

@@ -183,6 +183,55 @@ fn serving_paths_apply_recorded_normalization() {
     assert_close(&got, &want, 1e-10, "sharded with norm");
 }
 
+/// Header metadata (v2) round-trips through `save_meta` → `read_header`
+/// without disturbing the payload, and a version-1 file (no metadata
+/// section) still loads.
+#[test]
+fn header_metadata_roundtrips_and_v1_files_still_load() {
+    let (train, test) = regression_data();
+    let mspec = ModelSpec::krr(
+        TrainConfig::new(Gaussian::new(0.5), EngineSpec::Hierarchical { rank: 16 })
+            .with_seed(3),
+    );
+    let model = fit(&mspec, &train).unwrap();
+    let want = model.predict_batch(&test.x);
+
+    // save_meta: metadata comes back via read_header, in order, and the
+    // payload is untouched (identical predictions after load_any).
+    let path = tmppath("meta");
+    let meta = vec![
+        ("phase.partition_secs".to_string(), "0.012".to_string()),
+        ("trained_with".to_string(), "hck train".to_string()),
+    ];
+    model.save_meta(&path, &meta).unwrap();
+    let header = hck::model::read_header(&path).unwrap();
+    assert_eq!(header.version, hck::model::FORMAT_VERSION);
+    assert_eq!(header.metadata, meta);
+    assert_eq!(header.schema.dim, train.d());
+    let loaded = load_any(&path).unwrap();
+    assert_close(&loaded.predict_batch(&test.x), &want, 1e-12, "meta artifact");
+
+    // Plain save records an empty metadata section.
+    model.save(&path).unwrap();
+    assert!(hck::model::read_header(&path).unwrap().metadata.is_empty());
+
+    // v1 back-compat: for this schema (regression, no normalization) the
+    // header is magic(4) + version(8) + five u64 schema words (40), so
+    // the empty metadata count sits at bytes 52..60. Strip it and mark
+    // the file version 1 — the loader must accept it.
+    let mut bytes = std::fs::read(&path).unwrap();
+    assert_eq!(&bytes[52..60], &[0u8; 8], "empty metadata count");
+    bytes.drain(52..60);
+    bytes[4] = 1;
+    std::fs::write(&path, &bytes).unwrap();
+    let header = hck::model::read_header(&path).unwrap();
+    assert_eq!(header.version, 1);
+    assert!(header.metadata.is_empty());
+    let loaded = load_any(&path).unwrap();
+    assert_close(&loaded.predict_batch(&test.x), &want, 1e-12, "v1 artifact");
+    std::fs::remove_file(&path).ok();
+}
+
 /// Garbage, wrong-magic, truncated, and future-version files are all
 /// rejected with an error — never a panic, never a silently wrong model.
 #[test]

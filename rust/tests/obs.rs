@@ -1,0 +1,171 @@
+//! Integration tests for the obs span tracer: the disabled fast path,
+//! span nesting across pool threads, Chrome-trace export validity, and
+//! request-id propagation.
+//!
+//! The tracer is process-global, so every test that toggles it holds
+//! `SERIAL` — the cargo test harness runs test fns in parallel threads
+//! within one process, and two tests flipping the enable flag would
+//! otherwise see each other's events.
+
+use hck::obs;
+use hck::util::json::Json;
+use std::sync::Mutex;
+use std::time::Instant;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Grab the serial guard even if a prior test panicked while holding it.
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn disabled_tracer_records_nothing() {
+    let _g = serial();
+    obs::disable();
+    let _ = obs::drain_events();
+    assert!(!obs::is_enabled());
+    {
+        let _outer = obs::span("outer", "test");
+        let _inner = obs::span_with("inner", "test", || {
+            panic!("args closure must not run when tracing is disabled")
+        });
+        let _req = obs::span_req("req", "test", 9);
+    }
+    let t = Instant::now();
+    obs::record_span_between("between", "test", t, t, 1);
+    assert!(obs::drain_events().is_empty());
+}
+
+#[test]
+fn spans_nest_and_capture_across_threads() {
+    let _g = serial();
+    obs::disable();
+    let _ = obs::drain_events();
+    obs::enable_capture();
+
+    {
+        let _outer = obs::span("outer", "test");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let _inner = obs::span("inner", "test");
+    } // inner drops first, then outer
+
+    // Worker threads record into their own rings; parallel_map drives
+    // the shared pool the instrumented hot paths use.
+    let outs = hck::util::parallel::parallel_map(4, &[1usize, 2, 3, 4, 5, 6, 7, 8], |&i| {
+        let _sp = obs::span_with("worker", "test", || format!("{{\"item\":{i}}}"));
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        i * 2
+    });
+    assert_eq!(outs, vec![2, 4, 6, 8, 10, 12, 14, 16]);
+
+    obs::disable();
+    let events = obs::drain_events();
+
+    let outer = events.iter().find(|e| e.name == "outer").expect("outer span recorded");
+    let inner = events.iter().find(|e| e.name == "inner").expect("inner span recorded");
+    assert_eq!(outer.tid, inner.tid, "nested spans share a thread");
+    assert!(outer.start_ns <= inner.start_ns, "outer opens before inner");
+    assert!(
+        outer.start_ns + outer.dur_ns >= inner.start_ns + inner.dur_ns,
+        "outer closes after inner ({} + {} vs {} + {})",
+        outer.start_ns,
+        outer.dur_ns,
+        inner.start_ns,
+        inner.dur_ns
+    );
+
+    let workers: Vec<_> = events.iter().filter(|e| e.name == "worker").collect();
+    assert_eq!(workers.len(), 8, "one span per pool item");
+    for w in &workers {
+        let args = Json::parse(w.args.as_deref().unwrap()).expect("worker args parse");
+        assert!(args.get("item").and_then(Json::as_usize).is_some());
+    }
+
+    // drain_events sorts globally and leaves the rings empty.
+    assert!(events.windows(2).all(|p| p[0].start_ns <= p[1].start_ns));
+    assert!(obs::drain_events().is_empty());
+}
+
+#[test]
+fn request_id_context_attaches_to_spans() {
+    let _g = serial();
+    obs::disable();
+    let _ = obs::drain_events();
+    obs::enable_capture();
+
+    assert_eq!(obs::current_request_id(), 0);
+    {
+        let _rid = obs::with_request_id(42);
+        assert_eq!(obs::current_request_id(), 42);
+        let _sp = obs::span("scoped", "test");
+        {
+            let _rid2 = obs::with_request_id(43);
+            assert_eq!(obs::current_request_id(), 43);
+            let _sp2 = obs::span("scoped_inner", "test");
+        }
+        assert_eq!(obs::current_request_id(), 42, "guard restores the outer id");
+    }
+    assert_eq!(obs::current_request_id(), 0);
+    let _explicit = obs::span_req("explicit", "test", 7);
+    drop(_explicit);
+
+    obs::disable();
+    let events = obs::drain_events();
+    let by_name = |n: &str| events.iter().find(|e| e.name == n).expect("span recorded");
+    assert_eq!(by_name("scoped").request_id, 42);
+    assert_eq!(by_name("scoped_inner").request_id, 43);
+    assert_eq!(by_name("explicit").request_id, 7);
+}
+
+#[test]
+fn chrome_trace_export_is_valid_json_with_required_fields() {
+    let _g = serial();
+    obs::disable();
+    let _ = obs::drain_events();
+    obs::enable_capture();
+
+    {
+        let _a = obs::span_with("alpha", "test", || "{\"k\":1}".to_string());
+        let _b = obs::span_req("beta", "test", 11);
+    }
+
+    obs::disable();
+    let events = obs::drain_events();
+    let text = obs::export::chrome_trace_json(&events, &[(1, "main".to_string())]);
+    let doc = Json::parse(&text).expect("export is valid JSON");
+    let arr = doc.as_arr().expect("top level is an array");
+    assert!(arr.len() >= 3, "thread record + two spans");
+
+    let meta = &arr[0];
+    assert_eq!(meta.get("ph").and_then(Json::as_str), Some("M"));
+    assert_eq!(meta.get("name").and_then(Json::as_str), Some("thread_name"));
+
+    let mut saw_alpha = false;
+    let mut saw_beta = false;
+    let mut last_ts = f64::NEG_INFINITY;
+    for ev in &arr[1..] {
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        for field in ["ts", "dur"] {
+            assert!(ev.get(field).and_then(Json::as_f64).is_some(), "numeric {field}");
+        }
+        assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        let ts = ev.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "events sorted by ts");
+        last_ts = ts;
+        match ev.get("name").and_then(Json::as_str) {
+            Some("alpha") => {
+                saw_alpha = true;
+                let args = ev.get("args").expect("alpha keeps its args");
+                assert_eq!(args.get("k").and_then(Json::as_usize), Some(1));
+            }
+            Some("beta") => {
+                saw_beta = true;
+                let args = ev.get("args").expect("beta carries a request id");
+                assert_eq!(args.get("request_id").and_then(Json::as_usize), Some(11));
+            }
+            _ => {}
+        }
+    }
+    assert!(saw_alpha && saw_beta);
+}

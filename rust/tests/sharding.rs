@@ -203,5 +203,11 @@ fn batcher_over_sharded_predictor_serves_identically() {
         let shard_served: u64 = snap.shards.iter().map(|s| s.requests).sum();
         assert_eq!(shard_served as usize, q.rows(), "clients={client_threads}");
         assert!(snap.shards.iter().all(|s| s.queue_depth == 0));
+        // Utilization telemetry: every shard reports a sane busy
+        // fraction, idle shards report zero queue wait, and at least one
+        // served shard measured the enqueue→dequeue hop.
+        assert!(snap.shards.iter().all(|s| (0.0..=1.0).contains(&s.busy_frac)));
+        assert!(snap.shards.iter().all(|s| s.batches > 0 || s.queue_wait_ns == 0.0));
+        assert!(snap.shards.iter().any(|s| s.queue_wait_ns > 0.0), "clients={client_threads}");
     }
 }

@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Validate a Chrome-trace JSON file produced by `--trace` / HCK_TRACE.
+
+Checks the export loads in Perfetto / chrome://tracing: the file is a
+JSON array (or an object with a `traceEvents` array), every event
+carries name/ph/pid/tid, metadata events (ph == "M") are thread_name
+records with a string args.name, complete events (ph == "X") carry
+numeric ts/dur with non-decreasing ts (the exporter emits them sorted by
+start time), and args — when present — are objects.
+
+`--require a,b,c` additionally fails unless every listed span name
+appears at least once among the X events, so CI can pin the
+instrumentation points (e.g. coord.queue_wait) that a refactor must not
+silently drop.
+
+`--require-request-ids` fails unless at least one X event carries a
+numeric args.request_id — the end-to-end check that request ids survive
+from the protocol layer into the trace.
+
+Usage: check_trace.py TRACE.json [--require a,b,...] [--require-request-ids]
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}")
+    return 1
+
+
+def main(argv):
+    args = []
+    required = []
+    want_request_ids = False
+    it = iter(argv)
+    for a in it:
+        if a == "--require":
+            required = [s for s in next(it, "").split(",") if s]
+        elif a.startswith("--require="):
+            required = [s for s in a.split("=", 1)[1].split(",") if s]
+        elif a == "--require-request-ids":
+            want_request_ids = True
+        else:
+            args.append(a)
+    if len(args) != 1:
+        print(__doc__)
+        return 2
+    path = args[0]
+
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as exc:
+        return fail(f"{path} is not readable JSON ({exc})")
+
+    if isinstance(doc, dict):
+        events = doc.get("traceEvents")
+        if not isinstance(events, list):
+            return fail("object form must carry a traceEvents array")
+    elif isinstance(doc, list):
+        events = doc
+    else:
+        return fail(f"top level must be an array or object, got {type(doc).__name__}")
+
+    spans = 0
+    meta = 0
+    last_ts = None
+    seen_names = set()
+    request_ids = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            return fail(f"event {i} is not an object")
+        for field in ("name", "ph", "pid", "tid"):
+            if field not in ev:
+                return fail(f"event {i} is missing required field '{field}'")
+        ph = ev["ph"]
+        arg_obj = ev.get("args")
+        if arg_obj is not None and not isinstance(arg_obj, dict):
+            return fail(f"event {i} has non-object args")
+        if ph == "M":
+            meta += 1
+            if ev["name"] != "thread_name":
+                return fail(f"metadata event {i} is not a thread_name record")
+            if not isinstance((arg_obj or {}).get("name"), str):
+                return fail(f"thread_name event {i} lacks a string args.name")
+            continue
+        if ph != "X":
+            return fail(f"event {i} has unexpected phase '{ph}' (exporter emits M and X)")
+        spans += 1
+        for field in ("ts", "dur"):
+            if not isinstance(ev.get(field), (int, float)):
+                return fail(f"span event {i} has non-numeric '{field}'")
+        if last_ts is not None and ev["ts"] < last_ts:
+            return fail(f"span event {i} breaks ts ordering ({ev['ts']} < {last_ts})")
+        last_ts = ev["ts"]
+        seen_names.add(ev["name"])
+        rid = (arg_obj or {}).get("request_id")
+        if isinstance(rid, (int, float)):
+            request_ids.add(rid)
+
+    missing = [name for name in required if name not in seen_names]
+    if missing:
+        return fail(
+            f"required span names absent: {', '.join(missing)} "
+            f"(have: {', '.join(sorted(seen_names)) or 'none'})"
+        )
+    if want_request_ids and not request_ids:
+        return fail("no span carries args.request_id")
+
+    rid_note = f", {len(request_ids)} distinct request ids" if request_ids else ""
+    print(
+        f"check_trace: ok — {spans} spans across {len(seen_names)} names, "
+        f"{meta} thread records{rid_note}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -18,20 +18,34 @@ tracked rows (e.g. the gemm/syrk/par_gemm BLAS-3 rows) even before any
 baseline exists, so a refactor cannot silently drop them from the
 telemetry.
 
+`--trend PATH` appends the current report's rows to a JSONL trend file
+(one object per run: {"run", "sha", "rows": {label: ns}}) carried as a
+CI artifact across runs, and renders a multi-run delta table over the
+trailing window so drift that stays under the single-run threshold is
+still visible in the job summary.
+
 Per-row deltas are printed to stdout and, when running under GitHub
 Actions (GITHUB_STEP_SUMMARY set), also written to the job summary as a
 markdown table.
 
 Usage: perf_gate.py BASELINE.json CURRENT.json [--threshold 0.25]
-                    [--require op1,op2,...]
+                    [--require op1,op2,...] [--trend BENCH_trend.jsonl]
 """
 
 import json
 import os
 import sys
 
-KEY_FIELDS = ("op", "n", "r", "threads", "batch", "shards", "backend")
+KEY_FIELDS = ("op", "n", "r", "threads", "batch", "shards", "backend", "level")
 VALUE_FIELDS = ("ns_per_op", "ns_per_query")
+
+# Trailing runs shown in the trend table (the JSONL file itself keeps
+# the full history).
+TREND_WINDOW = 5
+
+
+def label_of(key):
+    return " ".join(f"{k}={v}" for k, v in zip(KEY_FIELDS, key) if v is not None)
 
 
 def load_rows(path):
@@ -61,10 +75,65 @@ def write_step_summary(lines):
         print(f"perf gate: could not write step summary ({exc})")
 
 
+def update_trend(path, current):
+    """Append this run's rows to the JSONL trend file; render the
+    trailing-window table into the step summary."""
+    history = []
+    try:
+        with open(path, encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    history.append(json.loads(line))
+                except ValueError:
+                    pass  # tolerate a torn line from an interrupted run
+    except OSError:
+        pass  # first run: no trend file yet
+    entry = {
+        "run": len(history) + 1,
+        "sha": os.environ.get("GITHUB_SHA", "local")[:12],
+        "rows": {label_of(key): value for key, value in current.items()},
+    }
+    history.append(entry)
+    try:
+        with open(path, "a", encoding="utf-8") as fh:
+            fh.write(json.dumps(entry) + "\n")
+    except OSError as exc:  # trend is telemetry, never a gate failure
+        print(f"perf gate: could not append trend to {path} ({exc})")
+        return
+    window = history[-TREND_WINDOW:]
+    print(f"perf gate: trend now spans {len(history)} runs ({path})")
+    if len(window) < 2:
+        return
+    header = " | ".join(e["sha"] for e in window)
+    lines = [
+        f"### Perf trend: last {len(window)} runs (ns)",
+        "",
+        f"| row | {header} | drift |",
+        "| --- |" + " ---: |" * len(window) + " ---: |",
+    ]
+    for label in sorted(window[-1]["rows"]):
+        cells = []
+        for e in window:
+            v = e["rows"].get(label)
+            cells.append(f"{v:.0f}" if isinstance(v, (int, float)) else "—")
+        first = next(
+            (e["rows"][label] for e in window if isinstance(e["rows"].get(label), (int, float))),
+            None,
+        )
+        last = window[-1]["rows"][label]
+        drift = f"{last / first - 1.0:+.1%}" if first else "—"
+        lines.append(f"| `{label}` | {' | '.join(cells)} | {drift} |")
+    write_step_summary(lines)
+
+
 def main(argv):
     args = []
     threshold = 0.25
     required = []
+    trend_path = None
     it = iter(argv)
     for a in it:
         if a == "--threshold":
@@ -75,6 +144,10 @@ def main(argv):
             required = [op for op in next(it, "").split(",") if op]
         elif a.startswith("--require="):
             required = [op for op in a.split("=", 1)[1].split(",") if op]
+        elif a == "--trend":
+            trend_path = next(it, None)
+        elif a.startswith("--trend="):
+            trend_path = a.split("=", 1)[1]
         else:
             args.append(a)
     if len(args) != 2:
@@ -101,6 +174,9 @@ def main(argv):
     if required:
         print(f"perf gate: required ops present: {', '.join(required)}")
 
+    if trend_path:
+        update_trend(trend_path, current)
+
     try:
         baseline = load_rows(baseline_path)
     except (OSError, ValueError) as exc:
@@ -124,7 +200,7 @@ def main(argv):
             continue  # op removed or renamed: not a regression
         compared += 1
         ratio = cur / base
-        label = " ".join(f"{k}={v}" for k, v in zip(KEY_FIELDS, key) if v is not None)
+        label = label_of(key)
         status = "FAIL" if ratio > 1.0 + threshold else "ok"
         print(f"  [{status}] {label}: {base:.0f} -> {cur:.0f} ns ({ratio - 1.0:+.1%})")
         summary.append(

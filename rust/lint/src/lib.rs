@@ -1,0 +1,959 @@
+//! `hck-lint`: a zero-dependency static-analysis pass over the
+//! workspace's own `.rs` sources.
+//!
+//! The analyzer is deliberately line/token-level — no `syn`, no parser
+//! crate, consistent with the workspace's no-external-deps policy. A
+//! small lexer blanks comments and literals out of each line (handling
+//! strings, raw strings, char literals vs. lifetimes, and nested block
+//! comments) so the token scans below never fire on text inside a
+//! string or a comment, and a brace-depth tracker marks `#[cfg(test)]`
+//! regions so test-only code is exempt from the serving-path rules.
+//!
+//! Rules (ids are stable; see [`RULES`]):
+//!
+//! * `safety-comment` — every `unsafe` keyword (block, fn, impl) must
+//!   carry a `// SAFETY:` comment (or a `/// # Safety` doc section) on
+//!   the same or contiguous preceding lines.
+//! * `serving-no-panic` — serving-path modules (`coordinator/`,
+//!   `shard/`, `model/mod.rs`, `model/persist.rs`, `infer.rs`) must not
+//!   call `unwrap()` / `expect()` / the `panic!` family outside
+//!   `#[cfg(test)]`; errors propagate as typed `PredictError` /
+//!   `Error` values. `assert!`/`debug_assert!` are deliberately out of
+//!   scope: they state invariants, and the worker pool converts any
+//!   assertion failure into a typed shard error.
+//! * `ordering-comment` — every atomic `Ordering::*` use must be
+//!   justified by an `// ORDERING:` comment on the same line or the
+//!   contiguous lines above the statement.
+//! * `span-registry` — span names passed to `obs::span` / `span_req` /
+//!   `span_with` / `record_span_between` must appear in the
+//!   `pub const SPANS` table of `obs/registry.rs`, and every table
+//!   entry must have at least one call site. Files under `obs/` (the
+//!   tracer implementation) are exempt from the use scan.
+//! * `thread-spawn` — `std::thread::spawn` / `thread::Builder` are
+//!   confined to `util/parallel.rs`, `shard/worker.rs`, and
+//!   `coordinator/`; everything else goes through the pool.
+//! * `bad-allow` — the escape hatch itself is linted: an allow must
+//!   name a known rule and carry a non-empty reason.
+//!
+//! Escape hatch: `// hck-lint: allow(<rule>): <reason>` on the
+//! offending line, or on a comment-only line directly above it. The
+//! reason is mandatory; a reasonless or unknown-rule allow is itself a
+//! finding (`bad-allow`) and suppresses nothing.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// `(rule id, one-line description)` for every rule, in report order.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "safety-comment",
+        "every `unsafe` block/fn/impl carries a `// SAFETY:` (or `/// # Safety`) justification",
+    ),
+    (
+        "serving-no-panic",
+        "no unwrap()/expect()/panic!-family in serving-path modules outside #[cfg(test)]",
+    ),
+    (
+        "ordering-comment",
+        "every atomic Ordering::* use carries an `// ORDERING:` justification comment",
+    ),
+    (
+        "span-registry",
+        "span names used via obs::span*/record_span_between match the obs/registry.rs table",
+    ),
+    (
+        "thread-spawn",
+        "no thread::spawn/thread::Builder outside util/parallel.rs, shard/worker.rs, coordinator/",
+    ),
+    (
+        "bad-allow",
+        "every `hck-lint: allow(<rule>)` escape names a known rule and carries a `: reason`",
+    ),
+];
+
+/// One lint violation at a file:line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Path as given on the command line (root-joined), for clickable output.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule id from [`RULES`].
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Result of a lint run.
+pub struct Report {
+    /// Sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: per-line code/comment separation
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    Block(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// One source line, lexed: `code` has comments removed and all literal
+/// contents blanked to spaces (delimiters kept where cheap); `comment`
+/// is the concatenated comment text of the line.
+struct LexedLine {
+    code: String,
+    comment: String,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn lex_lines(src: &str) -> Vec<LexedLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            lines.push(LexedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+        match mode {
+            Mode::Code => {
+                if c == '/' && next == '/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == 'r' {
+                    // Raw string opener r"..." / r#"..."# (also br#"..."#).
+                    // The `r` must not continue an identifier; raw
+                    // identifiers (r#name) have no quote after the hashes
+                    // and fall through to plain code.
+                    let prev_ok = if i == 0 {
+                        true
+                    } else {
+                        let p = chars[i - 1];
+                        !is_ident_char(p) || (p == 'b' && (i < 2 || !is_ident_char(chars[i - 2])))
+                    };
+                    let mut j = i + 1;
+                    let mut hashes = 0u32;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if prev_ok && j < n && chars[j] == '"' {
+                        code.push(' ');
+                        mode = Mode::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push('r');
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if next == '\\' {
+                        // Escaped char literal: '\n', '\\', '\'', '\u{...}'.
+                        code.push('\'');
+                        i += 2; // opening quote + backslash
+                        if i < n {
+                            i += 1; // the escape selector (n, \, ', u, ...)
+                        }
+                        while i < n && chars[i] != '\'' && chars[i] != '\n' {
+                            i += 1; // e.g. the {8} of '\u{8}'
+                        }
+                        if i < n && chars[i] == '\'' {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        let after = if i + 2 < n { chars[i + 2] } else { '\0' };
+                        if next != '\0' && next != '\'' && next != '\n' && after == '\'' {
+                            // Simple char literal 'x' — blanked so '{' / '"'
+                            // payloads can't confuse depth/string tracking.
+                            code.push('\'');
+                            code.push(' ');
+                            code.push('\'');
+                            i += 3;
+                        } else {
+                            // Lifetime or loop label.
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::Block(depth) => {
+                if c == '*' && next == '/' {
+                    mode = if depth <= 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    // A backslash-newline continuation must not swallow the
+                    // newline — line accounting depends on it.
+                    if next == '\n' {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut k = 0u32;
+                    while j < n && k < hashes && chars[j] == '#' {
+                        k += 1;
+                        j += 1;
+                    }
+                    if k == hashes {
+                        code.push(' ');
+                        mode = Mode::Code;
+                        i = j;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(LexedLine { code, comment });
+    }
+    lines
+}
+
+// ---------------------------------------------------------------------------
+// Per-file context
+// ---------------------------------------------------------------------------
+
+struct Allow {
+    rule: String,
+    has_reason: bool,
+}
+
+struct SourceFile {
+    /// Root-joined path for display.
+    display: String,
+    /// Path relative to its scan root, '/'-separated (rule scoping).
+    rel: String,
+    raw: Vec<String>,
+    code: Vec<String>,
+    comment: Vec<String>,
+    in_test: Vec<bool>,
+    allows: Vec<Vec<Allow>>,
+}
+
+fn parse_allows(comment: &str) -> Vec<Allow> {
+    // A directive must start the comment (after doc markers and
+    // whitespace): prose that merely mentions the syntax is not an
+    // escape. One directive per comment line.
+    let t = comment
+        .trim_start_matches(|c: char| c == '/' || c == '!' || c == '*' || c.is_whitespace());
+    let Some(rest) = t.strip_prefix("hck-lint:") else {
+        return Vec::new();
+    };
+    let rest = rest.trim_start();
+    let parsed = rest.strip_prefix("allow(").and_then(|r| {
+        let close = r.find(')')?;
+        let rule = r[..close].trim().to_string();
+        let tail = r[close + 1..].trim_start();
+        let has_reason = match tail.strip_prefix(':') {
+            Some(reason) => !reason.trim().is_empty(),
+            None => false,
+        };
+        Some(Allow { rule, has_reason })
+    });
+    match parsed {
+        Some(a) => vec![a],
+        // `hck-lint:` followed by anything else is a malformed directive.
+        None => vec![Allow { rule: String::new(), has_reason: false }],
+    }
+}
+
+fn load_file(root: &Path, path: &Path) -> Result<SourceFile, String> {
+    let src = fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    let rel = path
+        .strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/");
+    let lexed = lex_lines(&src);
+    let mut raw: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+    // Keep raw/lexed lengths in lockstep (lex_lines drops a trailing
+    // fully-empty line the same way `str::lines` does, but be defensive).
+    while raw.len() < lexed.len() {
+        raw.push(String::new());
+    }
+
+    // #[cfg(test)] region tracking: after the attribute, the next `{`
+    // opens a test region that ends when depth returns below it. A `;`
+    // before any `{` cancels (attribute on a braceless item).
+    let mut in_test = Vec::with_capacity(lexed.len());
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut test_open_depth: Option<i64> = None;
+    for line in &lexed {
+        let mut line_test = test_open_depth.is_some();
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+            line_test = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending && test_open_depth.is_none() {
+                        test_open_depth = Some(depth);
+                        pending = false;
+                    }
+                    if test_open_depth.is_some() {
+                        line_test = true;
+                    }
+                }
+                '}' => {
+                    if test_open_depth == Some(depth) {
+                        test_open_depth = None;
+                    }
+                    depth -= 1;
+                }
+                ';' => {
+                    if pending && test_open_depth.is_none() {
+                        pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        in_test.push(line_test);
+    }
+
+    let allows: Vec<Vec<Allow>> = lexed.iter().map(|l| parse_allows(&l.comment)).collect();
+    let (code, comment): (Vec<String>, Vec<String>) =
+        lexed.into_iter().map(|l| (l.code, l.comment)).unzip();
+    Ok(SourceFile {
+        display: path.display().to_string(),
+        rel,
+        raw,
+        code,
+        comment,
+        in_test,
+        allows,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Token search helpers
+// ---------------------------------------------------------------------------
+
+/// First occurrence of `token` in `code` with identifier-boundary checks
+/// on whichever ends of the token are identifier characters.
+fn find_token(code: &str, token: &str) -> Option<usize> {
+    let head_ident = token.chars().next().map(is_ident_char).unwrap_or(false);
+    let tail_ident = token.chars().last().map(is_ident_char).unwrap_or(false);
+    for (pos, _) in code.match_indices(token) {
+        if head_ident {
+            if let Some(prev) = code[..pos].chars().last() {
+                if is_ident_char(prev) {
+                    continue;
+                }
+            }
+        }
+        if tail_ident {
+            if let Some(nextc) = code[pos + token.len()..].chars().next() {
+                if is_ident_char(nextc) {
+                    continue;
+                }
+            }
+        }
+        return Some(pos);
+    }
+    None
+}
+
+fn known_rule(rule: &str) -> bool {
+    RULES.iter().any(|(id, _)| *id == rule)
+}
+
+/// Whether a valid allow for `rule` covers line `idx` (0-based): on the
+/// line itself, or on contiguous comment-only lines directly above.
+fn is_allowed(f: &SourceFile, idx: usize, rule: &str) -> bool {
+    let hit = |allows: &[Allow]| {
+        allows.iter().any(|a| a.rule == rule && a.has_reason && known_rule(&a.rule))
+    };
+    if hit(&f.allows[idx]) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let code_blank = f.code[k].trim().is_empty();
+        let has_comment = !f.comment[k].trim().is_empty();
+        if code_blank && has_comment {
+            if hit(&f.allows[k]) {
+                return true;
+            }
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+/// Whether a justification comment containing `needle1` (or `needle2`,
+/// if non-empty) covers line `idx`: same line, or the contiguous
+/// comment/attribute lines above — crossing continuation lines of the
+/// same multi-line statement, stopping at the previous statement or
+/// block boundary, a blank line, or after 40 lines. When `group_tokens`
+/// is non-empty, earlier `;`-terminated statements that themselves
+/// contain one of those tokens are crossed too, so one comment can
+/// cover a contiguous run of atomic operations.
+fn comment_above(
+    f: &SourceFile,
+    idx: usize,
+    needle1: &str,
+    needle2: &str,
+    group_tokens: &[&str],
+) -> bool {
+    let matches = |s: &str| s.contains(needle1) || (!needle2.is_empty() && s.contains(needle2));
+    if matches(&f.comment[idx]) {
+        return true;
+    }
+    let mut k = idx;
+    let mut steps = 0;
+    let mut in_statement = true;
+    while k > 0 && steps < 40 {
+        k -= 1;
+        steps += 1;
+        if matches(&f.comment[k]) {
+            return true;
+        }
+        let code_trim = f.code[k].trim();
+        let has_comment = !f.comment[k].trim().is_empty();
+        if code_trim.is_empty() {
+            if has_comment {
+                continue; // pure comment line: keep walking up
+            }
+            break; // blank line detaches the comment chain
+        }
+        if code_trim.starts_with("#[") || code_trim.starts_with("#![") {
+            continue; // attributes sit between the comment and the item
+        }
+        if in_statement {
+            let last = code_trim.chars().last().unwrap_or(' ');
+            if last == ';' || last == '{' || last == '}' {
+                if last == ';'
+                    && group_tokens.iter().any(|t| find_token(code_trim, t).is_some())
+                {
+                    continue; // earlier statement of the same grouped run
+                }
+                in_statement = false;
+                break; // previous statement/block boundary
+            }
+            continue; // continuation line of the same statement
+        }
+        break;
+    }
+    false
+}
+
+/// First plain string literal in `s`, if any (escape-aware enough for
+/// span names, which contain none).
+fn first_string_literal(s: &str) -> Option<String> {
+    let bytes: Vec<char> = s.chars().collect();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == '"' {
+            let mut out = String::new();
+            i += 1;
+            while i < bytes.len() && bytes[i] != '"' {
+                if bytes[i] == '\\' && i + 1 < bytes.len() {
+                    out.push(bytes[i + 1]);
+                    i += 2;
+                } else {
+                    out.push(bytes[i]);
+                    i += 1;
+                }
+            }
+            return Some(out);
+        }
+        i += 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Rule passes
+// ---------------------------------------------------------------------------
+
+fn is_serving_path(rel: &str) -> bool {
+    rel.starts_with("coordinator/")
+        || rel.starts_with("shard/")
+        || rel == "model/mod.rs"
+        || rel == "model/persist.rs"
+        || rel == "infer.rs"
+}
+
+fn spawn_allowed_path(rel: &str) -> bool {
+    rel == "util/parallel.rs" || rel == "shard/worker.rs" || rel.starts_with("coordinator/")
+}
+
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    ".unwrap_unchecked(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+const ORDERING_TOKENS: &[&str] = &[
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+const SPAWN_TOKENS: &[&str] = &["thread::spawn", "thread::Builder"];
+
+const SPAN_TOKENS: &[&str] = &["span(", "span_req(", "span_with(", "record_span_between("];
+
+struct SpanUse {
+    name: Option<String>,
+    file_idx: usize,
+    line: usize, // 0-based
+}
+
+fn lint_file(f: &SourceFile, file_idx: usize, findings: &mut Vec<Finding>, uses: &mut Vec<SpanUse>) {
+    let push = |findings: &mut Vec<Finding>, line: usize, rule: &'static str, msg: String| {
+        findings.push(Finding { file: f.display.clone(), line: line + 1, rule, message: msg });
+    };
+
+    for idx in 0..f.code.len() {
+        let code = &f.code[idx];
+
+        // bad-allow: validate every escape on the line, test code included.
+        for a in &f.allows[idx] {
+            if a.rule.is_empty() {
+                push(
+                    findings,
+                    idx,
+                    "bad-allow",
+                    "malformed `hck-lint:` directive \
+                     (expected `hck-lint: allow(<rule>): <reason>`)"
+                        .to_string(),
+                );
+            } else if !known_rule(&a.rule) {
+                push(
+                    findings,
+                    idx,
+                    "bad-allow",
+                    format!(
+                        "allow escape names unknown rule '{}' (known: {})",
+                        a.rule,
+                        RULES.iter().map(|(id, _)| *id).collect::<Vec<_>>().join(", ")
+                    ),
+                );
+            } else if !a.has_reason {
+                push(
+                    findings,
+                    idx,
+                    "bad-allow",
+                    format!(
+                        "allow({}) requires a reason: `// hck-lint: allow({}): <why this is sound>`",
+                        a.rule, a.rule
+                    ),
+                );
+            }
+        }
+
+        if code.trim().is_empty() {
+            continue;
+        }
+
+        // safety-comment: applies everywhere, tests included.
+        if find_token(code, "unsafe").is_some()
+            && !comment_above(f, idx, "SAFETY:", "# Safety", &[])
+            && !is_allowed(f, idx, "safety-comment")
+        {
+            push(
+                findings,
+                idx,
+                "safety-comment",
+                "`unsafe` without a `// SAFETY:` comment stating the invariant relied on"
+                    .to_string(),
+            );
+        }
+
+        if f.in_test[idx] {
+            continue;
+        }
+
+        // serving-no-panic
+        if is_serving_path(&f.rel) {
+            for tok in PANIC_TOKENS {
+                if find_token(code, tok).is_some()
+                    && !is_allowed(f, idx, "serving-no-panic")
+                {
+                    push(
+                        findings,
+                        idx,
+                        "serving-no-panic",
+                        format!(
+                            "`{tok}` in a serving-path module; propagate a typed error instead"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // ordering-comment
+        if ORDERING_TOKENS.iter().any(|t| find_token(code, t).is_some())
+            && !comment_above(f, idx, "ORDERING:", "", ORDERING_TOKENS)
+            && !is_allowed(f, idx, "ordering-comment")
+        {
+            push(
+                findings,
+                idx,
+                "ordering-comment",
+                "atomic `Ordering::*` without an `// ORDERING:` justification comment"
+                    .to_string(),
+            );
+        }
+
+        // thread-spawn
+        if !spawn_allowed_path(&f.rel) {
+            for tok in SPAWN_TOKENS {
+                if find_token(code, tok).is_some() && !is_allowed(f, idx, "thread-spawn") {
+                    push(
+                        findings,
+                        idx,
+                        "thread-spawn",
+                        format!(
+                            "`{tok}` outside util/parallel.rs, shard/worker.rs, coordinator/; \
+                             use the worker pool"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // span-registry: collect uses (the tracer's own files are exempt).
+        if !f.rel.starts_with("obs/") {
+            for tok in SPAN_TOKENS {
+                if find_token(code, tok).is_none() {
+                    continue;
+                }
+                // The span name is the first string literal at or after the
+                // call token, on this or one of the next three lines.
+                let mut name = None;
+                for (off, line_idx) in (idx..f.raw.len().min(idx + 4)).enumerate() {
+                    let hay = if off == 0 {
+                        match f.raw[line_idx].find(tok) {
+                            Some(p) => &f.raw[line_idx][p..],
+                            None => f.raw[line_idx].as_str(),
+                        }
+                    } else {
+                        f.raw[line_idx].as_str()
+                    };
+                    if let Some(lit) = first_string_literal(hay) {
+                        name = Some(lit);
+                        break;
+                    }
+                }
+                uses.push(SpanUse { name, file_idx, line: idx });
+            }
+        }
+    }
+}
+
+fn parse_registry(f: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut inside = false;
+    for idx in 0..f.code.len() {
+        if !inside {
+            if f.code[idx].contains("pub const SPANS") {
+                inside = true;
+            }
+            continue;
+        }
+        if f.code[idx].contains("];") {
+            break;
+        }
+        if let Some(name) = first_string_literal(&f.raw[idx]) {
+            out.push((name, idx));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for ent in rd {
+        let ent = ent.map_err(|e| format!("cannot read {}: {e}", dir.display()))?;
+        entries.push(ent.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn load_roots(roots: &[PathBuf]) -> Result<Vec<SourceFile>, String> {
+    let mut files = Vec::new();
+    for root in roots {
+        if root.is_file() {
+            let parent = root.parent().unwrap_or(Path::new("")).to_path_buf();
+            files.push(load_file(&parent, root)?);
+            continue;
+        }
+        let mut paths = Vec::new();
+        collect_rs(root, root, &mut paths)?;
+        for p in &paths {
+            files.push(load_file(root, p)?);
+        }
+    }
+    Ok(files)
+}
+
+/// Lint every `.rs` file under `roots` (directories are walked
+/// recursively; a file root is linted alone, relative to its parent).
+pub fn lint_paths(roots: &[PathBuf]) -> Result<Report, String> {
+    let files = load_roots(roots)?;
+    let mut findings = Vec::new();
+    let mut uses = Vec::new();
+    for (file_idx, f) in files.iter().enumerate() {
+        lint_file(f, file_idx, &mut findings, &mut uses);
+    }
+
+    // span-registry cross-file pass.
+    let registry_file = files.iter().position(|f| f.rel.ends_with("obs/registry.rs"));
+    let registry = registry_file.map(|i| parse_registry(&files[i])).unwrap_or_default();
+    if registry_file.is_none() && !uses.is_empty() {
+        let u = &uses[0];
+        let f = &files[u.file_idx];
+        findings.push(Finding {
+            file: f.display.clone(),
+            line: u.line + 1,
+            rule: "span-registry",
+            message: "span call sites found but no obs/registry.rs among the scanned roots"
+                .to_string(),
+        });
+    } else {
+        let mut used = vec![false; registry.len()];
+        for u in &uses {
+            let f = &files[u.file_idx];
+            match &u.name {
+                Some(name) => {
+                    match registry.iter().position(|(n, _)| n == name) {
+                        Some(i) => used[i] = true,
+                        None => {
+                            if !is_allowed(f, u.line, "span-registry") {
+                                findings.push(Finding {
+                                    file: f.display.clone(),
+                                    line: u.line + 1,
+                                    rule: "span-registry",
+                                    message: format!(
+                                        "span name \"{name}\" is not in obs/registry.rs \
+                                         (add it to SPANS)"
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                }
+                None => {
+                    if !is_allowed(f, u.line, "span-registry") {
+                        findings.push(Finding {
+                            file: f.display.clone(),
+                            line: u.line + 1,
+                            rule: "span-registry",
+                            message: "span name must be a string literal on (or just after) \
+                                      the call line so the registry check can see it"
+                                .to_string(),
+                        });
+                    }
+                }
+            }
+        }
+        if let Some(reg_idx) = registry_file {
+            let rf = &files[reg_idx];
+            for (i, (name, line)) in registry.iter().enumerate() {
+                if !used[i] && !is_allowed(rf, *line, "span-registry") {
+                    findings.push(Finding {
+                        file: rf.display.clone(),
+                        line: line + 1,
+                        rule: "span-registry",
+                        message: format!(
+                            "registered span \"{name}\" has no call site (remove the entry \
+                             or instrument the code)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(Report { findings, files: files.len() })
+}
+
+/// Parse `obs/registry.rs` under `roots` and return the registered span
+/// names in table order (the `--emit-spans` payload).
+pub fn registry_names(roots: &[PathBuf]) -> Result<Vec<String>, String> {
+    let files = load_roots(roots)?;
+    let reg = files
+        .iter()
+        .find(|f| f.rel.ends_with("obs/registry.rs"))
+        .ok_or_else(|| "no obs/registry.rs among the scanned roots".to_string())?;
+    Ok(parse_registry(reg).into_iter().map(|(n, _)| n).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_blanks_strings_and_comments() {
+        let lines = lex_lines("let x = \"unsafe // not code\"; // trailing unsafe\n");
+        assert_eq!(lines.len(), 1);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].comment.contains("trailing unsafe"));
+        assert!(lines[0].code.contains("let x ="));
+    }
+
+    #[test]
+    fn lexer_handles_char_literals_and_lifetimes() {
+        let lines = lex_lines("fn f<'a>(c: char) -> bool { c == '{' || c == '\\u{8}' }\n");
+        let code = &lines[0].code;
+        // The '{' payload is blanked; braces must stay balanced.
+        let opens = code.matches('{').count();
+        let closes = code.matches('}').count();
+        assert_eq!(opens, closes, "unbalanced braces in {code:?}");
+        assert!(code.contains("<'a>"), "lifetime mangled: {code:?}");
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_and_escaped_braces() {
+        let src = "let j = r#\"{\"k\": 1}\"#;\nlet s = format!(\"{{\\\"shard\\\":{id}}}\", id = 1);\n";
+        let lines = lex_lines(src);
+        assert_eq!(lines.len(), 2);
+        assert!(!lines[0].code.contains('k'));
+        // Only the interpolation braces of the format string survive; the
+        // escaped JSON braces are string content and must be blanked.
+        assert_eq!(lines[1].code.matches('{').count(), lines[1].code.matches('}').count());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_tracked() {
+        let src = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn b() { y.unwrap(); }\n}\nfn c() {}\n";
+        let f = write_temp("cfg_test.rs", src);
+        let sf = load_file(f.parent().unwrap(), &f).unwrap();
+        assert!(!sf.in_test[0]);
+        assert!(sf.in_test[1] && sf.in_test[2] && sf.in_test[3] && sf.in_test[4]);
+        assert!(!sf.in_test[5]);
+    }
+
+    #[test]
+    fn allow_parsing_requires_reason() {
+        let allows = parse_allows(" hck-lint: allow(safety-comment): fixture reason");
+        assert_eq!(allows.len(), 1);
+        assert!(allows[0].has_reason);
+        let bad = parse_allows(" hck-lint: allow(safety-comment)");
+        assert!(!bad[0].has_reason);
+        let empty_reason = parse_allows(" hck-lint: allow(safety-comment):   ");
+        assert!(!empty_reason[0].has_reason);
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(find_token("unsafe { }", "unsafe").is_some());
+        assert!(find_token("#![forbid(unsafe_code)]", "unsafe").is_none());
+        assert!(find_token("x.unwrap_or(0)", ".unwrap()").is_none());
+        assert!(find_token("x.unwrap()", ".unwrap()").is_some());
+        assert!(find_token("res.expect_err(", ".expect(").is_none());
+    }
+
+    fn write_temp(name: &str, contents: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("hck-lint-unit");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        fs::write(&path, contents).unwrap();
+        path
+    }
+}

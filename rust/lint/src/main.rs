@@ -1,0 +1,125 @@
+//! CLI for `hck-lint`. Exit status: 0 clean, 1 findings, 2 usage/IO
+//! error. Output is one `file:line: [rule] message` per finding plus a
+//! one-line summary, so CI logs and editors can jump straight to the
+//! violation.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+usage: hck-lint [--root DIR]... [--emit-spans] [--list-rules]
+
+Lints every .rs file under the given roots (default: rust/src and
+rust/lint/src relative to the current directory, falling back to src/
+when run from inside rust/).
+
+  --root DIR     add a directory (or single .rs file) to scan; repeatable
+  --emit-spans   print the span names registered in obs/registry.rs, one
+                 per line, and exit (input for check_trace.py --known-spans)
+  --list-rules   print the rule table and exit
+";
+
+fn default_roots() -> Vec<PathBuf> {
+    let mut roots = Vec::new();
+    for cand in ["rust/src", "rust/lint/src"] {
+        let p = PathBuf::from(cand);
+        if p.is_dir() {
+            roots.push(p);
+        }
+    }
+    if roots.is_empty() {
+        // Run from inside rust/: lint the package sources.
+        for cand in ["src", "lint/src"] {
+            let p = PathBuf::from(cand);
+            if p.is_dir() {
+                roots.push(p);
+            }
+        }
+    }
+    roots
+}
+
+fn main() -> ExitCode {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut emit_spans = false;
+    let mut list_rules = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => roots.push(PathBuf::from(dir)),
+                None => {
+                    eprintln!("hck-lint: --root needs a directory argument\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--emit-spans" => emit_spans = true,
+            "--list-rules" => list_rules = true,
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("hck-lint: unknown argument '{other}'\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if list_rules {
+        for (id, desc) in hck_lint::RULES {
+            println!("{id:<18} {desc}");
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    if roots.is_empty() {
+        roots = default_roots();
+    }
+    if roots.is_empty() {
+        eprintln!("hck-lint: no rust/src (or src) here; pass --root DIR\n{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    if emit_spans {
+        return match hck_lint::registry_names(&roots) {
+            Ok(names) => {
+                for n in names {
+                    println!("{n}");
+                }
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("hck-lint: {e}");
+                ExitCode::from(2)
+            }
+        };
+    }
+
+    match hck_lint::lint_paths(&roots) {
+        Ok(report) => {
+            for f in &report.findings {
+                println!("{f}");
+            }
+            if report.findings.is_empty() {
+                println!(
+                    "hck-lint: clean — {} files scanned, {} rules",
+                    report.files,
+                    hck_lint::RULES.len()
+                );
+                ExitCode::SUCCESS
+            } else {
+                println!(
+                    "hck-lint: {} finding(s) across {} scanned files",
+                    report.findings.len(),
+                    report.files
+                );
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("hck-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

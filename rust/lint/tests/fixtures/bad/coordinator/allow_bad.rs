@@ -1,0 +1,6 @@
+//! Fixture: reasonless escape suppresses nothing and is itself flagged.
+
+pub fn q(v: Option<u32>) -> u32 {
+    // hck-lint: allow(serving-no-panic)
+    v.unwrap()
+}

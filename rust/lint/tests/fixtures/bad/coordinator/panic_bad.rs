@@ -1,0 +1,13 @@
+//! Fixture: panic idioms on the serving path.
+
+pub fn q(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn r(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
+
+pub fn s() -> u32 {
+    panic!("boom")
+}

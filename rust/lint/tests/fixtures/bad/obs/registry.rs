@@ -1,0 +1,6 @@
+//! Fixture registry with an orphaned entry.
+
+pub const SPANS: &[(&str, &str)] = &[
+    ("fixture.unused", "fixture"),
+    ("fixture.used", "fixture"),
+];

@@ -1,0 +1,9 @@
+//! Fixture: bare atomic ordering.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub static COUNT: AtomicUsize = AtomicUsize::new(0);
+
+pub fn bump() -> usize {
+    COUNT.fetch_add(1, Ordering::Relaxed)
+}

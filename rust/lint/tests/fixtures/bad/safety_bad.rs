@@ -1,0 +1,5 @@
+//! Fixture: unsafe without justification.
+
+pub fn first(v: &[u8]) -> u8 {
+    unsafe { *v.get_unchecked(0) }
+}

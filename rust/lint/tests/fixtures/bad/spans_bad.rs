@@ -1,0 +1,6 @@
+//! Fixture: a rogue span name beside a registered one.
+
+pub fn traced() {
+    let _ok = obs::span("fixture.used");
+    let _rogue = obs::span("fixture.rogue");
+}

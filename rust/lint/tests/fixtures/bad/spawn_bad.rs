@@ -1,0 +1,5 @@
+//! Fixture: raw spawn outside the sanctioned modules.
+
+pub fn go() -> std::thread::JoinHandle<()> {
+    std::thread::spawn(|| {})
+}

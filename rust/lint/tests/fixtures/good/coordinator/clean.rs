@@ -1,0 +1,11 @@
+//! Fixture: serving path with an allowed spawn and a justified escape.
+
+pub fn start() -> std::thread::JoinHandle<()> {
+    std::thread::spawn(|| {})
+}
+
+pub fn assembled(v: Option<u32>) -> u32 {
+    // hck-lint: allow(serving-no-panic): fixture — value materialized at
+    // assembly time, before any request is accepted.
+    v.unwrap()
+}

@@ -1,0 +1,13 @@
+//! Fixture: #[cfg(test)] code is exempt from the serving-path rules.
+
+pub fn add(a: u32, b: u32) -> u32 {
+    a + b
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::add(1, 2).checked_add(0).unwrap(), 3);
+    }
+}

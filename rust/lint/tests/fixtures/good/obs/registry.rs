@@ -1,0 +1,6 @@
+//! Fixture registry: every entry has a call site in spans_ok.rs.
+
+pub const SPANS: &[(&str, &str)] = &[
+    ("fixture.inner", "fixture"),
+    ("fixture.outer", "fixture"),
+];

@@ -1,0 +1,10 @@
+//! Fixture: atomics with ORDERING justifications pass.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub static COUNT: AtomicUsize = AtomicUsize::new(0);
+
+pub fn bump() -> usize {
+    // ORDERING: Relaxed — statistics counter, no cross-memory ordering.
+    COUNT.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,7 @@
+//! Fixture: unsafe with a SAFETY justification passes.
+
+pub fn first(v: &[u8]) -> u8 {
+    // SAFETY: fixture contract — callers pass a non-empty slice, so
+    // index 0 is in bounds.
+    unsafe { *v.get_unchecked(0) }
+}

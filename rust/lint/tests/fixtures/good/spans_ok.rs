@@ -1,0 +1,6 @@
+//! Fixture: span call sites using registered names only.
+
+pub fn traced() {
+    let _outer = obs::span("fixture.outer");
+    let _inner = obs::span("fixture.inner");
+}

@@ -1,0 +1,146 @@
+//! Rule-by-rule fixture tests: every rule has a good fixture that stays
+//! silent and a bad fixture that fires with an exact `file:line` and
+//! rule id — the diagnostics contract CI (and humans chasing a lint
+//! failure) depend on.
+
+use hck_lint::{lint_paths, registry_names, Report, RULES};
+use std::path::{Path, PathBuf};
+
+fn fixtures(tree: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(tree)
+}
+
+fn lint(tree: &str) -> Report {
+    lint_paths(&[fixtures(tree)]).expect("fixture tree scans")
+}
+
+/// `(suffix, line, rule)` triple of a finding, for order-insensitive
+/// path matching (the reported path is root-joined and OS-dependent).
+fn key(f: &hck_lint::Finding) -> (String, usize, &'static str) {
+    (f.file.replace('\\', "/"), f.line, f.rule)
+}
+
+#[test]
+fn good_tree_is_clean() {
+    let report = lint("good");
+    assert_eq!(report.files, 6, "good fixture tree grew or shrank");
+    assert!(
+        report.findings.is_empty(),
+        "good tree must lint clean, got:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn bad_tree_fires_every_rule_with_exact_locations() {
+    let report = lint("bad");
+    assert_eq!(report.files, 7);
+    let expected: &[(&str, usize, &str)] = &[
+        ("coordinator/allow_bad.rs", 4, "bad-allow"),
+        ("coordinator/allow_bad.rs", 5, "serving-no-panic"),
+        ("coordinator/panic_bad.rs", 4, "serving-no-panic"),
+        ("coordinator/panic_bad.rs", 8, "serving-no-panic"),
+        ("coordinator/panic_bad.rs", 12, "serving-no-panic"),
+        ("obs/registry.rs", 4, "span-registry"),
+        ("ordering_bad.rs", 8, "ordering-comment"),
+        ("safety_bad.rs", 4, "safety-comment"),
+        ("spans_bad.rs", 5, "span-registry"),
+        ("spawn_bad.rs", 4, "thread-spawn"),
+    ];
+    assert_eq!(
+        report.findings.len(),
+        expected.len(),
+        "finding count drifted:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    for (want, got) in expected.iter().zip(&report.findings) {
+        let (file, line, rule) = key(got);
+        assert!(
+            file.ends_with(want.0),
+            "expected a finding in {}, got {file}",
+            want.0
+        );
+        assert_eq!((line, rule), (want.1, want.2), "at {file}");
+    }
+    // Every rule id in a finding is a documented rule.
+    for f in &report.findings {
+        assert!(RULES.iter().any(|(id, _)| *id == f.rule), "undocumented rule {}", f.rule);
+    }
+}
+
+#[test]
+fn allow_without_reason_is_flagged_and_does_not_suppress() {
+    let report = lint("bad");
+    let in_allow_bad: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| f.file.ends_with("allow_bad.rs"))
+        .collect();
+    // The reasonless directive earns its own finding AND the violation
+    // it tried to cover still fires.
+    assert_eq!(in_allow_bad.len(), 2);
+    assert_eq!(in_allow_bad[0].rule, "bad-allow");
+    assert!(in_allow_bad[0].message.contains("requires a reason"));
+    assert_eq!(in_allow_bad[1].rule, "serving-no-panic");
+}
+
+#[test]
+fn rogue_and_orphaned_spans_are_both_reported() {
+    let report = lint("bad");
+    let spans: Vec<_> =
+        report.findings.iter().filter(|f| f.rule == "span-registry").collect();
+    assert_eq!(spans.len(), 2);
+    let unused = spans.iter().find(|f| f.file.ends_with("obs/registry.rs")).unwrap();
+    assert!(
+        unused.message.contains("fixture.unused"),
+        "orphaned entry named: {}",
+        unused.message
+    );
+    let rogue = spans.iter().find(|f| f.file.ends_with("spans_bad.rs")).unwrap();
+    assert!(
+        rogue.message.contains("fixture.rogue"),
+        "rogue name named: {}",
+        rogue.message
+    );
+}
+
+#[test]
+fn registry_names_reads_the_fixture_table() {
+    let names = registry_names(&[fixtures("good")]).expect("good tree has a registry");
+    assert_eq!(names, vec!["fixture.inner".to_string(), "fixture.outer".to_string()]);
+}
+
+/// The gate CI enforces: the real crate sources lint clean. Running it
+/// as a unit test means `cargo test` catches violations even before the
+/// dedicated CI step does.
+#[test]
+fn repo_sources_lint_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let roots = [manifest.join("../src"), manifest.join("src")];
+    let report = lint_paths(&roots).expect("repo sources scan");
+    assert!(
+        report.files > 60,
+        "expected the full rust/src tree, scanned only {} files",
+        report.files
+    );
+    assert!(
+        report.findings.is_empty(),
+        "rust/src + rust/lint/src must lint clean, got:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

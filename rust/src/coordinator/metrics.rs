@@ -51,7 +51,10 @@ impl Metrics {
 
     /// Record one served batch: per-request latencies in seconds.
     pub fn record_batch(&self, latencies_secs: &[f64]) {
-        let mut g = self.inner.lock().unwrap();
+        // A recorder that panicked mid-update must not make the metrics
+        // mutex permanently unusable for serving threads: the counters
+        // are plain integers, so take the data through the poison.
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         g.batches += 1;
         g.batch_size_sum += latencies_secs.len() as u64;
         for &s in latencies_secs {
@@ -72,10 +75,14 @@ impl Metrics {
 
     /// Snapshot of the current counters.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut g = self.inner.lock().unwrap();
+        // Same poison recovery as record_batch: a snapshot must always
+        // be observable even after a panicking recorder.
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         if g.latencies_sorted_cache.is_empty() && !g.raw.is_empty() {
             let mut v = g.raw.clone();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: latencies are never NaN, but a panicking sort
+            // comparator has no place on the serving path.
+            v.sort_by(|a, b| a.total_cmp(b));
             g.latencies_sorted_cache = v;
         }
         let pct = |p: f64| -> f64 {

@@ -49,6 +49,9 @@ pub fn serve_tcp(listener: TcpListener, svc: Arc<PredictionService>) -> std::io:
     listener.set_nonblocking(true)?;
     let mut conns = 0usize;
     let mut handles = Vec::new();
+    // ORDERING: SeqCst — shutdown control plane; one load per accept
+    // iteration, so strength is free and keeps the flag trivially
+    // coherent with the store in handle_line.
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _addr)) => {
@@ -87,6 +90,8 @@ fn handle_conn(stream: TcpStream, svc: Arc<PredictionService>, stop: Arc<AtomicB
         if writer.write_all(text.as_bytes()).is_err() {
             break;
         }
+        // ORDERING: SeqCst — shutdown control plane, checked once per
+        // request line; matches the store in handle_line.
         if stop.load(Ordering::SeqCst) {
             break;
         }
@@ -107,6 +112,8 @@ pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Js
             "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
             "schema" => schema_reply(svc),
             "shutdown" => {
+                // ORDERING: SeqCst — single shutdown store; pairs with
+                // the accept-loop and per-connection loads above.
                 stop.store(true, Ordering::SeqCst);
                 Json::obj(vec![("ok", Json::Bool(true))])
             }

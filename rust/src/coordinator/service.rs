@@ -59,6 +59,9 @@ pub trait Predictor: Send + Sync + 'static {
     fn predict_batch(&self, q: &Mat) -> Mat {
         match self.predict(&PredictRequest::mean_of(q)) {
             Ok(resp) => resp.mean,
+            // hck-lint: allow(serving-no-panic): documented panicking
+            // convenience for in-process benches/tests; the serving path
+            // proper goes through predict() and stays typed.
             Err(e) => panic!("predict_batch: {e}"),
         }
     }
@@ -71,7 +74,14 @@ impl Predictor for crate::learn::KrrModel {
         let t = Instant::now();
         let mean = crate::learn::KrrModel::predict(self, &req.queries);
         let routes = if req.want.leaf_route {
-            let pred = self.hierarchical_predictor().expect("capability-checked");
+            // Capabilities admit leaf_route only for the hierarchical
+            // engine; disagreement here is a typed internal error, not
+            // a panic that would kill the batcher thread.
+            let pred = self.hierarchical_predictor().ok_or_else(|| {
+                PredictError::Internal(
+                    "leaf_route capability admitted without a partition tree".into(),
+                )
+            })?;
             Some(crate::model::routes_of_tree(&pred.factors().tree, &req.queries))
         } else {
             None
@@ -168,6 +178,10 @@ impl PredictionService {
         let join = std::thread::Builder::new()
             .name("hck-batcher".into())
             .spawn(move || batcher_loop(model2, rx, m2, s2, policy))
+            // hck-lint: allow(serving-no-panic): one-time service
+            // assembly, before any request is accepted — failing to
+            // spawn the batcher thread means the process cannot serve
+            // at all, and the constructor has no error channel.
             .expect("spawn batcher");
         PredictionService { tx, metrics, model, stop, join: Some(join), dim, caps }
     }
@@ -220,6 +234,9 @@ impl PredictionService {
     ) -> InferResult<(u64, Receiver<InferResult<QueryReply>>)> {
         crate::infer::validate_features(&features, self.dim)?;
         self.caps.check(want)?;
+        // ORDERING: Relaxed — atomicity alone guarantees unique ids;
+        // the request itself travels (and is published) through the
+        // channel send below.
         let request_id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = sync_channel(1);
         self.tx
@@ -243,6 +260,9 @@ impl PredictionService {
 
     /// Stop the batcher and join it.
     pub fn shutdown(mut self) {
+        // ORDERING: SeqCst — one-shot shutdown flag; pairs with the
+        // loads in batcher_loop and keeps the channel close below
+        // unambiguously after the flag flip.
         self.stop.store(true, Ordering::SeqCst);
         // Drop tx by replacing with a dummy? tx dropped with self after join.
         if let Some(j) = self.join.take() {
@@ -255,6 +275,7 @@ impl PredictionService {
 
 impl Drop for PredictionService {
     fn drop(&mut self) {
+        // ORDERING: SeqCst — same shutdown edge as [`Self::shutdown`].
         self.stop.store(true, Ordering::SeqCst);
         if let Some(j) = self.join.take() {
             drop(std::mem::replace(&mut self.tx, sync_channel(1).0));
@@ -272,6 +293,8 @@ fn batcher_loop(
 ) {
     let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
     loop {
+        // ORDERING: SeqCst — shutdown control plane, one load per loop
+        // turn; pairs with the stores in shutdown()/drop().
         if stop.load(Ordering::SeqCst) && pending.is_empty() {
             // Drain whatever is still in the channel before exiting.
             match rx.try_recv() {
@@ -284,6 +307,8 @@ fn batcher_loop(
             match rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(req) => pending.push(req),
                 Err(RecvTimeoutError::Timeout) => {
+                    // ORDERING: SeqCst — shutdown check on the idle
+                    // timeout path; same pairing as above.
                     if stop.load(Ordering::SeqCst) {
                         break;
                     }
@@ -443,8 +468,9 @@ fn batcher_loop(
                 }
             }
             Err(e) if batch.len() == 1 => {
-                let req = batch.into_iter().next().expect("single-member batch");
-                let _ = req.resp.send(Err(e));
+                for req in batch {
+                    let _ = req.resp.send(Err(e.clone()));
+                }
             }
             Err(_) => {
                 // Contain the failure: re-evaluate each member on its

@@ -23,11 +23,20 @@ use core::arch::x86_64::{
 ///
 /// # Safety
 ///
-/// The CPU must support AVX2 and FMA (guaranteed by the dispatch layer,
-/// which only selects this backend after `is_x86_feature_detected!`
-/// passes for both), and the panels must hold at least `kc·MR` /
-/// `kc·NR` elements (guaranteed by the packing layer and asserted by
-/// the dispatcher).
+/// - **Target features**: the executing CPU must support AVX2 and FMA.
+///   The dispatch layer only selects this backend after
+///   `is_x86_feature_detected!("avx2")` and `("fma")` both pass, so the
+///   `#[target_feature]` instructions below are executable.
+/// - **Lengths**: every read is an unaligned 32-byte `_mm256_loadu_pd`
+///   or scalar broadcast at offsets `p·MR + i` (`i < 4`) into `apanel`
+///   and `p·NR + j` (`j ∈ {0, 4}`) into `bpanel` with `p < kc`, so the
+///   caller must guarantee `apanel.len() >= kc·MR` and
+///   `bpanel.len() >= kc·NR` (the blas packing layer zero-pads to
+///   exactly these shapes; the dispatcher `debug_assert!`s them).
+/// - **Aliasing**: `acc` is written through `&mut`, so it cannot alias
+///   either panel; the 8 `_mm256_storeu_pd` writes cover exactly the
+///   MR×NR = 4×8 tile and nothing else. Unaligned load/store intrinsics
+///   are used throughout — no alignment precondition beyond `f64`'s.
 #[target_feature(enable = "avx2,fma")]
 pub(crate) unsafe fn microkernel(
     kc: usize,

@@ -111,6 +111,9 @@ static SELECTED: AtomicU8 = AtomicU8::new(0);
 /// atomic load.
 #[inline]
 pub fn backend() -> Backend {
+    // ORDERING: Relaxed — SELECTED is a write-once-then-stable cache of
+    // a pure CPU-feature decision; racing resolvers compute the same
+    // value, so no ordering with other memory is required.
     match SELECTED.load(Ordering::Relaxed) {
         1 => Backend::Scalar,
         2 => Backend::Avx2,
@@ -148,6 +151,7 @@ fn init_backend() -> Backend {
         }
         Err(_) => detect(),
     };
+    // ORDERING: Relaxed — idempotent cache fill; see backend().
     SELECTED.store(chosen as u8, Ordering::Relaxed);
     chosen
 }
@@ -181,6 +185,8 @@ pub fn force_backend(b: Backend) -> Result<Backend, String> {
         ));
     }
     let prev = backend();
+    // ORDERING: Relaxed — test-only override of the same availability-
+    // validated cache; concurrent readers see either backend, both sound.
     SELECTED.store(b as u8, Ordering::Relaxed);
     Ok(prev)
 }
@@ -196,12 +202,17 @@ pub(crate) fn microkernel(kc: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [
     match backend() {
         Backend::Scalar => emulate::microkernel(kc, apanel, bpanel, acc),
         #[cfg(target_arch = "x86_64")]
-        // Safety: Avx2 is only ever selected after `available()` checked
-        // `is_x86_feature_detected!` for avx2 + fma, and the length
-        // guards above cover every packed read.
+        // SAFETY: target-feature — Avx2 is only ever selected after
+        // `available()` confirmed `is_x86_feature_detected!` for
+        // avx2 + fma on this CPU; lengths — the debug_asserts above
+        // restate the packing-layer guarantee `apanel.len() >= kc*MR`,
+        // `bpanel.len() >= kc*NR`, which covers every packed read the
+        // kernel performs; `acc` is a uniquely borrowed fixed-size tile.
         Backend::Avx2 => unsafe { avx2::microkernel(kc, apanel, bpanel, acc) },
         #[cfg(target_arch = "aarch64")]
-        // Safety: NEON is baseline on aarch64; length guards as above.
+        // SAFETY: target-feature — NEON is baseline on aarch64, so the
+        // `#[target_feature(enable = "neon")]` fn is always callable
+        // here; length/aliasing invariants identical to the AVX2 arm.
         Backend::Neon => unsafe { neon::microkernel(kc, apanel, bpanel, acc) },
         // A backend compiled out on this arch is unselectable (its
         // `available()` is false and selection validates availability).

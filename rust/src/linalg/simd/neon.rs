@@ -17,9 +17,20 @@ use core::arch::aarch64::{float64x2_t, vdupq_n_f64, vfmaq_f64, vld1q_f64, vst1q_
 ///
 /// # Safety
 ///
-/// aarch64-only (NEON is baseline there); the panels must hold at least
-/// `kc·MR` / `kc·NR` elements — guaranteed by the packing layer and
-/// asserted by the dispatcher.
+/// - **Target features**: aarch64-only; NEON (`asimd`) is baseline on
+///   every aarch64 target this crate builds for, so the
+///   `#[target_feature]` requirement is always met when this module
+///   compiles at all.
+/// - **Lengths**: every read is a 16-byte `vld1q_f64` at offsets
+///   `p·NR + j` (`j ∈ {0, 2, 4, 6}`) into `bpanel` or a scalar
+///   broadcast at `p·MR + i` (`i < 4`) into `apanel` with `p < kc`, so
+///   the caller must guarantee `apanel.len() >= kc·MR` and
+///   `bpanel.len() >= kc·NR` (the blas packing layer zero-pads to
+///   exactly these shapes; the dispatcher `debug_assert!`s them).
+/// - **Aliasing**: `acc` is written through `&mut`, so it cannot alias
+///   either panel; the 16 `vst1q_f64` writes cover exactly the
+///   MR×NR = 4×8 tile and nothing else. NEON load/store intrinsics
+///   require only `f64` alignment, which the slices guarantee.
 #[target_feature(enable = "neon")]
 pub(crate) unsafe fn microkernel(
     kc: usize,

@@ -267,6 +267,9 @@ pub trait Model: Send + Sync {
     fn predict_batch(&self, q: &Mat) -> Mat {
         match self.predict(&PredictRequest::raw_mean(q)) {
             Ok(resp) => resp.mean,
+            // hck-lint: allow(serving-no-panic): documented panicking
+            // convenience for in-process callers and tests; the serving
+            // stack goes through `Model::predict` and its typed errors.
             Err(e) => panic!("predict_batch: {e}"),
         }
     }
@@ -287,7 +290,7 @@ fn serve_request<Fm, Fv, Fr>(
 where
     Fm: FnOnce(&Mat) -> Mat,
     Fv: FnOnce(&Mat) -> InferResult<Vec<f64>>,
-    Fr: FnOnce(&Mat) -> Vec<LeafRoute>,
+    Fr: FnOnce(&Mat) -> InferResult<Vec<LeafRoute>>,
 {
     crate::infer::validate_queries(&req.queries, schema.dim)?;
     schema.capabilities().check(req.want)?;
@@ -296,7 +299,7 @@ where
     let t = std::time::Instant::now();
     let mean = mean(q);
     let variance = if req.want.variance { Some(variance(q)?) } else { None };
-    let routes = if req.want.leaf_route { Some(routes(q)) } else { None };
+    let routes = if req.want.leaf_route { Some(routes(q)?) } else { None };
     let per_query_ns = t.elapsed().as_nanos() as f64 / req.queries.rows() as f64;
     Ok(PredictResponse { mean, variance, routes, per_query_ns })
 }
@@ -472,9 +475,14 @@ impl Model for FittedKrr {
             |_| Err(PredictError::Unsupported("krr serves no variance".into())),
             |q| {
                 // Admitted by the capability check only for the
-                // hierarchical engine, which always has a predictor.
-                let pred = self.model.hierarchical_predictor().expect("hierarchical engine");
-                routes_of_tree(&pred.factors().tree, q)
+                // hierarchical engine, which always has a predictor; a
+                // mismatch is an internal invariant breach, not a panic.
+                let pred = self.model.hierarchical_predictor().ok_or_else(|| {
+                    PredictError::Internal(
+                        "leaf_route capability admitted without hierarchical factors".into(),
+                    )
+                })?;
+                Ok(routes_of_tree(&pred.factors().tree, q))
             },
         )
     }
@@ -545,7 +553,7 @@ impl Model for FittedGp {
             req,
             |q| self.predictor.predict_batch(q),
             |q| self.variance_cached().map(|hv| hv.variance_batch(q)),
-            |q| routes_of_tree(&self.predictor.factors().tree, q),
+            |q| Ok(routes_of_tree(&self.predictor.factors().tree, q)),
         )
     }
     fn schema(&self) -> &ModelSchema {
@@ -598,7 +606,7 @@ impl Model for FittedKpca {
             req,
             |q| self.transformer.transform(q),
             |_| Err(PredictError::Unsupported("kpca serves no variance".into())),
-            |q| routes_of_tree(&self.transformer.factors().tree, q),
+            |q| Ok(routes_of_tree(&self.transformer.factors().tree, q)),
         )
     }
     fn schema(&self) -> &ModelSchema {

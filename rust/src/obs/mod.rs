@@ -21,17 +21,15 @@
 //! tree levels).
 //!
 //! Span names are stable identifiers — `scripts/check_trace.py` and
-//! the bench harness both key on them:
-//!
-//! | span | category | layer |
-//! | --- | --- | --- |
-//! | `train.partition` / `train.sample_landmarks` / `train.sigma_factor` / `train.node_factors` | `train` | `hkernel::build` |
-//! | `factor.leaves` / `factor.level` (args `{"level":d}`) | `train` | `hkernel::solve` |
-//! | `blas.par_gemm` / `blas.par_syrk` (args shape+backend) | `blas` | `linalg::blas` |
-//! | `coord.queue_wait` / `coord.execute` / `coord.batch` / `coord.member_eval` | `coord` | coordinator |
-//! | `shard.queue_wait` / `shard.eval` (args `{"shard":i}`) | `shard` | shard workers |
+//! the bench harness both key on them. The single source of truth is
+//! the [`registry::SPANS`] const table in `obs/registry.rs`: every
+//! in-crate call site must use a registered name and every registered
+//! name must have a call site (enforced by `hck-lint`, rule
+//! `span-registry`). See that table for the full name/category/layer
+//! listing; new spans are added there first.
 
 pub mod export;
+pub mod registry;
 pub mod span;
 pub mod trace;
 

@@ -1,0 +1,86 @@
+//! The span-name registry: the single source of truth for every span
+//! name this crate records.
+//!
+//! Every `obs::span` / `span_req` / `span_with` / `record_span_between`
+//! call site in `rust/src` must use a name listed in [`SPANS`], and
+//! every entry in [`SPANS`] must have at least one call site — both
+//! directions are enforced statically by `hck-lint` (rule
+//! `span-registry`), so the table cannot drift from the code. CI
+//! additionally exports this table via `hck-lint --emit-spans` and
+//! hands it to `scripts/check_trace.py --known-spans`, which pins the
+//! required-span list and rejects trace files containing unregistered
+//! names.
+//!
+//! Integration tests and benches outside `rust/src` may record ad-hoc
+//! span names through the public API; the registry governs the
+//! library's own instrumentation points only.
+//!
+//! Keep the table sorted by name, one `("name", "category")` tuple per
+//! line — the lint parses it textually.
+
+/// `(name, category)` of every span the library records, sorted by name.
+pub const SPANS: &[(&str, &str)] = &[
+    ("blas.par_gemm", "blas"),
+    ("blas.par_syrk", "blas"),
+    ("coord.batch", "coord"),
+    ("coord.execute", "coord"),
+    ("coord.member_eval", "coord"),
+    ("coord.queue_wait", "coord"),
+    ("factor.leaves", "train"),
+    ("factor.level", "train"),
+    ("shard.eval", "shard"),
+    ("shard.queue_wait", "shard"),
+    ("solve.downward", "solve"),
+    ("solve.leaf_finish", "solve"),
+    ("solve.upward", "solve"),
+    ("train.node_factors", "train"),
+    ("train.partition", "train"),
+    ("train.sample_landmarks", "train"),
+    ("train.sigma_factor", "train"),
+];
+
+/// Whether `name` is a registered span name.
+pub fn is_registered(name: &str) -> bool {
+    SPANS.iter().any(|(n, _)| *n == name)
+}
+
+/// All registered span names, in table (sorted) order.
+pub fn names() -> impl Iterator<Item = &'static str> {
+    SPANS.iter().map(|(n, _)| *n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_sorted_and_unique() {
+        for w in SPANS.windows(2) {
+            assert!(
+                w[0].0 < w[1].0,
+                "SPANS must stay sorted/unique: {:?} before {:?}",
+                w[0].0,
+                w[1].0
+            );
+        }
+    }
+
+    #[test]
+    fn names_are_wellformed() {
+        for (name, cat) in SPANS {
+            assert!(!name.is_empty() && !cat.is_empty());
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase() || c == '.' || c == '_'),
+                "span name {name:?} must be lowercase dotted"
+            );
+            assert!(name.contains('.'), "span name {name:?} must be <layer>.<what>");
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(is_registered("coord.batch"));
+        assert!(!is_registered("coord.bogus"));
+        assert_eq!(names().count(), SPANS.len());
+    }
+}

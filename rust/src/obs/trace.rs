@@ -72,6 +72,9 @@ thread_local! {
 }
 
 fn register_thread() -> Arc<ThreadBuf> {
+    // ORDERING: Relaxed — the fetch_add's atomicity alone guarantees
+    // unique ids; registration order is published by the REGISTRY
+    // mutex, not by this counter.
     let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
     let name = std::thread::current().name().unwrap_or("thread").to_string();
     let buf = Arc::new(ThreadBuf {
@@ -90,6 +93,9 @@ fn epoch() -> Instant {
 /// Whether tracing is currently recording. One relaxed load.
 #[inline]
 pub fn is_enabled() -> bool {
+    // ORDERING: Relaxed — a stale read only means a span near the
+    // enable/disable edge is skipped or recorded; event data itself is
+    // published by the per-thread ring mutexes, never by this flag.
     ENABLED.load(Ordering::Relaxed)
 }
 
@@ -110,6 +116,9 @@ pub(crate) fn ns_of(t: Instant) -> u64 {
 pub fn enable(path: &str) {
     let _ = epoch();
     *OUT_PATH.lock().unwrap() = Some(path.to_string());
+    // ORDERING: SeqCst store — a rare control-plane edge; keeps the
+    // epoch/OUT_PATH writes above globally visible before any thread
+    // can observe tracing as on.
     ENABLED.store(true, Ordering::SeqCst);
 }
 
@@ -118,11 +127,14 @@ pub fn enable(path: &str) {
 pub fn enable_capture() {
     let _ = epoch();
     *OUT_PATH.lock().unwrap() = None;
+    // ORDERING: SeqCst store — same control-plane edge as [`enable`].
     ENABLED.store(true, Ordering::SeqCst);
 }
 
 /// Stop recording. Already-buffered events stay drainable.
 pub fn disable() {
+    // ORDERING: SeqCst store — rare control-plane edge, symmetric with
+    // [`enable`]; spans already mid-record drain normally.
     ENABLED.store(false, Ordering::SeqCst);
 }
 

@@ -148,7 +148,11 @@ pub fn load_shard_dir(dir: &str) -> Result<ShardedPredictor> {
         let (nodes, shard_of, _) = router.parts();
         for (nd, of) in nodes.iter().zip(shard_of) {
             if of.is_none() {
-                let split = nd.split.as_ref().expect("validated by load_router");
+                // load_router validated this already, but surface a
+                // corrupt artifact as a typed error, not a panic.
+                let split = nd.split.as_ref().ok_or_else(|| {
+                    Error::data("router artifact: non-boundary node lacks a split")
+                })?;
                 crate::hkernel::persist::validate_split(split, nd.children.len(), Some(dim))?;
             }
         }
@@ -331,8 +335,14 @@ impl Shard {
         // available to them) and fall back to the packed sequential core
         // for small groups — bitwise identical either way, so sharded
         // means stay exactly equal to the in-process path.
+        // hck-lint: allow(serving-no-panic): leaf factors for every leaf
+        // this shard owns are materialized by Shard::from_factors before
+        // the worker accepts jobs; a violated invariant panics into the
+        // worker's catch_unwind and surfaces as a typed Shard error.
         let x_leaf = self.leaf_x[leaf].as_ref().unwrap();
         let kq = par_kernel_cross(self.kind, x_leaf, q);
+        // hck-lint: allow(serving-no-panic): same construction invariant
+        // and catch_unwind containment as leaf_x above.
         let w_leaf = self.leaf_w[leaf].as_ref().unwrap();
         let mut z = par_matmul(w_leaf, Trans::Yes, &kq, Trans::No);
 
@@ -348,7 +358,13 @@ impl Shard {
         // d initialization at the routed leaf's parent: in-shard when the
         // leaf is below the shard root, else the replicated entry state.
         let init = if path.len() > 1 {
+            // hck-lint: allow(serving-no-panic): path.len() > 1 means the
+            // leaf sits strictly below the shard root, so its parent and
+            // that parent's factors exist by construction; a violation
+            // panics into the worker's catch_unwind (typed Shard error).
             let p = self.nodes[leaf].parent.unwrap();
+            // hck-lint: allow(serving-no-panic): same invariant — interior
+            // nodes of this shard carry landmarks and sigma_chol.
             Some((self.landmarks[p].as_ref().unwrap(), self.sigma_chol[p].as_ref().unwrap()))
         } else {
             self.entry.as_ref().map(|e| (&e.landmarks, &e.chol))

@@ -89,6 +89,11 @@ impl ShardRouter {
             let split = self.nodes[id]
                 .split
                 .as_ref()
+                // hck-lint: allow(serving-no-panic): load_router and
+                // load_shard_dir validate every non-boundary split at
+                // artifact-load time, before serving starts; route() is
+                // the per-query hot path and stays unwrap-free of
+                // recoverable states by that validation.
                 .expect("router invariant: non-boundary nodes keep their split");
             id = follow_split(split, &self.nodes[id].children, x);
         }

@@ -38,6 +38,15 @@ pub fn depth_for_shards(tree: &PartitionTree, want: usize) -> usize {
     max
 }
 
+/// Clone a per-node factor that a trained tree guarantees present.
+fn req<T: Clone>(o: &Option<T>) -> T {
+    // hck-lint: allow(serving-no-panic): shard assembly from a trained
+    // factorization runs before any request is accepted; a missing
+    // interior factor means the training artifact is corrupt, and
+    // assembly must abort loudly rather than serve wrong answers.
+    o.as_ref().unwrap().clone()
+}
+
 /// Split a fitted predictor into self-contained [`Shard`]s at `depth`.
 ///
 /// Each shard clones its slice of the factors (subtree nodes, leaf
@@ -110,9 +119,9 @@ pub fn split_predictor(pred: &HPredictor, depth: usize) -> Vec<Shard> {
 
             // Replicated entry state: the shard root's global parent.
             let entry = tree.nodes[b].parent.map(|p| EntryState {
-                landmarks: f.landmarks[p].as_ref().unwrap().clone(),
-                sigma: f.sigma[p].as_ref().unwrap().clone(),
-                chol: f.sigma_chol[p].as_ref().unwrap().clone(),
+                landmarks: req(&f.landmarks[p]),
+                sigma: req(&f.sigma[p]),
+                chol: req(&f.sigma_chol[p]),
             });
 
             // Replicated climb steps: ancestors of b from just above the
@@ -121,10 +130,7 @@ pub fn split_predictor(pred: &HPredictor, depth: usize) -> Vec<Shard> {
             let mut anc = tree.nodes[b].parent;
             while let Some(g) = anc {
                 if tree.nodes[g].parent.is_some() {
-                    top.push(TopStep {
-                        w: f.w[g].as_ref().unwrap().clone(),
-                        c: pred.c[g].as_ref().unwrap().clone(),
-                    });
+                    top.push(TopStep { w: req(&f.w[g]), c: req(&pred.c[g]) });
                 }
                 anc = tree.nodes[g].parent;
             }

@@ -98,6 +98,9 @@ impl ShardWorker {
                 // Channel disconnect (all senders dropped) ends the loop.
                 while let Ok(job) = rx.recv() {
                     let t = Instant::now();
+                    // ORDERING: Relaxed — monotone statistics counter
+                    // read only by snapshots; the job and its reply are
+                    // published via the channels, never via metrics.
                     m2.queue_wait_ns.fetch_add(
                         t.duration_since(job.enqueued).as_nanos() as u64,
                         Ordering::Relaxed,
@@ -126,9 +129,13 @@ impl ShardWorker {
                             message: "worker panicked evaluating a sub-batch".into(),
                         })
                     });
+                    // ORDERING: Relaxed — queue-depth gauge; pairs with
+                    // the bump in submit(), same statistics rationale.
                     m2.queued.fetch_sub(1, Ordering::Relaxed);
                     match out {
                         Ok(block) => {
+                            // ORDERING: Relaxed — statistics counters;
+                            // the block itself travels over the channel.
                             m2.busy_ns
                                 .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
                             m2.batches.fetch_add(1, Ordering::Relaxed);
@@ -136,12 +143,17 @@ impl ShardWorker {
                             let _ = job.resp.send(Ok(block));
                         }
                         Err(e) => {
+                            // ORDERING: Relaxed — statistics counter.
                             m2.dropped.fetch_add(job.q.rows() as u64, Ordering::Relaxed);
                             let _ = job.resp.send(Err(e));
                         }
                     }
                 }
             })
+            // hck-lint: allow(serving-no-panic): one-time shard-pool
+            // assembly before any request is accepted; a host that
+            // cannot spawn worker threads cannot serve, and the
+            // constructor has no error channel.
             .expect("spawn shard worker");
         ShardWorker { id, row_range, tx, metrics, join: Some(join) }
     }
@@ -150,8 +162,12 @@ impl ShardWorker {
     /// receiver.
     fn submit(&self, q: Mat, want: Want) -> std::sync::mpsc::Receiver<InferResult<ShardBlock>> {
         let (rtx, rrx) = sync_channel(1);
+        // ORDERING: Relaxed — queue-depth gauge only; the job is
+        // published by the channel send, not by this counter.
         self.metrics.queued.fetch_add(1, Ordering::Relaxed);
         if self.tx.send(Job { q, want, enqueued: Instant::now(), resp: rtx }).is_err() {
+            // ORDERING: Relaxed — undo the gauge bump when the worker
+            // is already gone; same rationale as above.
             self.metrics.queued.fetch_sub(1, Ordering::Relaxed);
         }
         rrx
@@ -159,12 +175,16 @@ impl ShardWorker {
 
     /// Point-in-time view of this worker's counters.
     pub fn snapshot(&self) -> ShardSnapshot {
+        // ORDERING: Relaxed — monotone statistics counters; the
+        // snapshot tolerates tearing between counters and needs no
+        // ordering with job memory (replies travel over channels).
         let batches = self.metrics.batches.load(Ordering::Relaxed);
         let requests = self.metrics.requests.load(Ordering::Relaxed);
         let busy_ns = self.metrics.busy_ns.load(Ordering::Relaxed);
         let wait_ns = self.metrics.queue_wait_ns.load(Ordering::Relaxed);
         let lifetime_ns = self.metrics.started.elapsed().as_nanos() as f64;
         ShardSnapshot {
+            // ORDERING: Relaxed — same statistics rationale as above.
             shard: self.id,
             rows_lo: self.row_range.0,
             rows_hi: self.row_range.1,
@@ -179,6 +199,7 @@ impl ShardWorker {
             } else {
                 0.0
             },
+            // ORDERING: Relaxed — same statistics rationale as above.
             dropped: self.metrics.dropped.load(Ordering::Relaxed),
         }
     }
@@ -392,6 +413,8 @@ impl Predictor for ShardedPredictor {
                 Ok(Err(e)) => return Err(e),
                 Err(_) => {
                     // The worker's queue or thread is gone entirely.
+                    // ORDERING: Relaxed — statistics counter; the typed
+                    // error below is the real signal to the caller.
                     self.workers[sid]
                         .metrics
                         .dropped

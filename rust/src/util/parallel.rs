@@ -94,6 +94,12 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// enforces this with a completion channel it drains before returning on
 /// every path, including unwinding ones.
 unsafe fn erase_job<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    // SAFETY: the two types differ only in the lifetime bound of the
+    // trait object, which has no layout effect — the fat pointer
+    // (data + vtable) is identical, so the transmute itself is sound.
+    // Soundness of *using* the result rests on the caller upholding the
+    // contract above: the borrows behind `job` stay live until the job
+    // has run.
     std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(
         job,
     )
@@ -165,6 +171,9 @@ pub fn pool_stats() -> PoolStats {
     let per_worker: Vec<WorkerCounters> = stats
         .iter()
         .map(|s| WorkerCounters {
+            // ORDERING: Relaxed loads — each counter is an independent
+            // monotone statistic; the snapshot needs no cross-counter
+            // consistency and tolerates mid-update tearing between them.
             tasks: s.tasks.load(Ordering::Relaxed),
             busy_ns: s.busy_ns.load(Ordering::Relaxed),
         })
@@ -235,6 +244,10 @@ impl Pool {
                     while let Ok(job) = rx.recv() {
                         let t = Instant::now();
                         job();
+                        // ORDERING: Relaxed — lifetime statistics read only
+                        // by pool_stats snapshots; publication of the job's
+                        // memory effects happens via the completion channel,
+                        // not these counters.
                         stat.busy_ns
                             .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         stat.tasks.fetch_add(1, Ordering::Relaxed);

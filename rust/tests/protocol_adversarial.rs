@@ -1,0 +1,132 @@
+//! Adversarial wire frames against the line protocol.
+//!
+//! Every malformed v1/v2 frame must come back as a **typed error
+//! frame** — never a panic, never a dropped connection — and the
+//! service must keep serving well-formed frames afterwards. This is the
+//! regression suite for the de-unwrapped frame-handling path
+//! (`coordinator::protocol` + the `serve_request` pipeline): the lint
+//! bans panic idioms on the serving path, and this test pins the
+//! behavior the ban protects.
+
+use hck::coordinator::protocol::handle_line;
+use hck::coordinator::{BatchPolicy, PredictionService};
+use hck::data::{Dataset, Task};
+use hck::hkernel::HConfig;
+use hck::kernels::Gaussian;
+use hck::linalg::Mat;
+use hck::model::{fit, ModelSpec};
+use hck::util::json::Json;
+use hck::util::rng::Rng;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn gp_service() -> PredictionService {
+    let mut rng = Rng::new(17);
+    let x = Mat::from_fn(160, 3, |_, _| rng.uniform(0.0, 1.0));
+    let y: Vec<f64> = (0..160)
+        .map(|i| (x[(i, 0)] * 2.0 + x[(i, 1)]).sin() + 0.02 * rng.normal())
+        .collect();
+    let train = Dataset::new("adv", x, y, Task::Regression).unwrap();
+    let mut cfg = HConfig::new(Gaussian::new(0.6), 8).with_seed(23);
+    cfg.n0 = 8;
+    let model = fit(&ModelSpec::gp(cfg, 0.05), &train).unwrap();
+    PredictionService::start_model(Arc::from(model), BatchPolicy::default())
+}
+
+/// The error frame contract: an `"error"` object with a `kind` tag for
+/// v2 frames, a plain string for v1/transport-level failures.
+fn error_kind(reply: &Json) -> Option<String> {
+    let err = reply.get("error")?;
+    match err.get("kind") {
+        Some(k) => k.as_str().map(str::to_string),
+        None => err.as_str().map(|_| "v1".to_string()),
+    }
+}
+
+#[test]
+fn adversarial_frames_get_typed_errors_and_service_survives() {
+    let svc = gp_service();
+    let stop = AtomicBool::new(false);
+
+    // (frame, expected kind) — "v1" marks the untagged v1 string form.
+    let cases: &[(&str, &str)] = &[
+        // Transport-level garbage.
+        ("{not json", "v1"),
+        ("[1, 2, 3", "v1"),
+        ("\"just a string\"", "v1"),
+        // v1 frames.
+        ("{}", "v1"),
+        (r#"{"features": "nope"}"#, "v1"),
+        (r#"{"features": [0.5, 0.5]}"#, "v1"),
+        (r#"{"features": [0.5, 0.5, 0.5, 0.5]}"#, "v1"),
+        // v2 framing violations.
+        (r#"{"v": 2}"#, "bad_request"),
+        (r#"{"v": 2, "queries": "nope"}"#, "bad_request"),
+        (r#"{"v": 2, "queries": []}"#, "bad_request"),
+        (r#"{"v": 2, "queries": [[0.1, 0.2, 0.3], "rogue"]}"#, "bad_request"),
+        (r#"{"v": 2, "queries": [[0.1, 0.2]]}"#, "bad_request"),
+        (r#"{"queries": [[0.1, null, 0.3]]}"#, "bad_request"),
+        // want-object violations.
+        (r#"{"v": 2, "queries": [[0.1, 0.2, 0.3]], "want": 7}"#, "bad_request"),
+        (
+            r#"{"v": 2, "queries": [[0.1, 0.2, 0.3]], "want": {"mean": false}}"#,
+            "bad_request",
+        ),
+        (
+            r#"{"v": 2, "queries": [[0.1, 0.2, 0.3]], "want": {"variance": "yes"}}"#,
+            "bad_request",
+        ),
+        (
+            r#"{"v": 2, "queries": [[0.1, 0.2, 0.3]], "want": {"gradient": true}}"#,
+            "bad_request",
+        ),
+        // Unknown command.
+        (r#"{"cmd": "reboot"}"#, "v1"),
+    ];
+    for (frame, want_kind) in cases {
+        let reply = handle_line(frame, &svc, &stop);
+        let kind = error_kind(&reply)
+            .unwrap_or_else(|| panic!("frame {frame:?} produced no error: {reply:?}"));
+        assert_eq!(&kind, want_kind, "frame {frame:?} replied {reply:?}");
+        assert!(!stop.load(std::sync::atomic::Ordering::SeqCst));
+    }
+
+    // Frame-level request ids are echoed even on error frames, so
+    // pipelined clients can correlate rejections.
+    let reply = handle_line(r#"{"v": 2, "request_id": 41, "queries": []}"#, &svc, &stop);
+    assert_eq!(error_kind(&reply).as_deref(), Some("bad_request"));
+    assert_eq!(reply.get("request_id").and_then(|r| r.as_f64()), Some(41.0));
+
+    // A frame with one bad row among good rows is rejected atomically:
+    // nothing is enqueued, so the request counter does not move.
+    let before = svc.snapshot().requests;
+    let reply = handle_line(
+        r#"{"v": 2, "queries": [[0.1, 0.2, 0.3], [0.4, 0.5]]}"#,
+        &svc,
+        &stop,
+    );
+    assert_eq!(error_kind(&reply).as_deref(), Some("bad_request"));
+    assert_eq!(svc.snapshot().requests, before);
+
+    // After the whole gauntlet the loop still serves both protocols.
+    let v1 = handle_line(r#"{"features": [0.5, 0.5, 0.5]}"#, &svc, &stop);
+    assert!(v1.get("error").is_none(), "v1 after gauntlet: {v1:?}");
+    assert_eq!(v1.get("prediction").unwrap().to_f64s().unwrap().len(), 1);
+
+    let v2 = handle_line(
+        r#"{"v": 2, "queries": [[0.5, 0.5, 0.5], [0.2, 0.8, 0.1]], "want": {"variance": true}}"#,
+        &svc,
+        &stop,
+    );
+    assert!(v2.get("error").is_none(), "v2 after gauntlet: {v2:?}");
+    assert_eq!(v2.get("mean").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(v2.get("variance").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(v2.get("request_ids").unwrap().as_arr().unwrap().len(), 2);
+
+    // The shutdown command is the only frame allowed to flip the stop
+    // flag — pin that contract last.
+    let bye = handle_line(r#"{"cmd": "shutdown"}"#, &svc, &stop);
+    assert_eq!(bye.get("ok").and_then(|b| b.as_bool()), Some(true));
+    assert!(stop.load(std::sync::atomic::Ordering::SeqCst));
+    svc.shutdown();
+}

@@ -17,7 +17,16 @@ silently drop.
 numeric args.request_id — the end-to-end check that request ids survive
 from the protocol layer into the trace.
 
-Usage: check_trace.py TRACE.json [--require a,b,...] [--require-request-ids]
+`--known-spans FILE` reads the span-name registry exported by
+`hck-lint --emit-spans` (one name per line, `#` comments allowed) and
+fails if any X event — or any `--require`d name — is outside it. The
+registry lives in `rust/src/obs/registry.rs` and the lint keeps it in
+lockstep with the instrumentation call sites, so this closes the loop:
+names are checked statically at the call site and dynamically in the
+trace against the same table.
+
+Usage: check_trace.py TRACE.json [--require a,b,...]
+       [--require-request-ids] [--known-spans FILE]
 """
 
 import json
@@ -33,6 +42,7 @@ def main(argv):
     args = []
     required = []
     want_request_ids = False
+    known_spans_path = None
     it = iter(argv)
     for a in it:
         if a == "--require":
@@ -41,12 +51,35 @@ def main(argv):
             required = [s for s in a.split("=", 1)[1].split(",") if s]
         elif a == "--require-request-ids":
             want_request_ids = True
+        elif a == "--known-spans":
+            known_spans_path = next(it, None)
+        elif a.startswith("--known-spans="):
+            known_spans_path = a.split("=", 1)[1]
         else:
             args.append(a)
-    if len(args) != 1:
+    if len(args) != 1 or known_spans_path == "":
         print(__doc__)
         return 2
     path = args[0]
+
+    known = None
+    if known_spans_path is not None:
+        try:
+            with open(known_spans_path, encoding="utf-8") as fh:
+                known = {
+                    line.strip()
+                    for line in fh
+                    if line.strip() and not line.lstrip().startswith("#")
+                }
+        except OSError as exc:
+            return fail(f"cannot read known-spans file ({exc})")
+        if not known:
+            return fail(f"{known_spans_path} lists no span names")
+        rogue_required = [name for name in required if name not in known]
+        if rogue_required:
+            return fail(
+                f"--require names outside the registry: {', '.join(rogue_required)}"
+            )
 
     try:
         with open(path, encoding="utf-8") as fh:
@@ -98,6 +131,14 @@ def main(argv):
         rid = (arg_obj or {}).get("request_id")
         if isinstance(rid, (int, float)):
             request_ids.add(rid)
+
+    if known is not None:
+        rogue = sorted(seen_names - known)
+        if rogue:
+            return fail(
+                f"trace records span names outside the registry: {', '.join(rogue)} "
+                f"(regenerate with `hck-lint --emit-spans` or register them)"
+            )
 
     missing = [name for name in required if name not in seen_names]
     if missing:

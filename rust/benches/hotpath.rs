@@ -395,6 +395,66 @@ fn main() {
     }
     table.print();
 
+    // ---- remote fan-out over loopback shard-workers: the same shard
+    // cut served by 1/2/4 worker processes-worth of sockets (in-process
+    // listeners, real TCP + HCKW framing), so the wire + scatter/gather
+    // overhead versus `oos_sharded` is a row in the telemetry. Shards
+    // are distributed round-robin; `threads` carries the worker count
+    // so the perf gate keys each configuration separately. ----
+    let remote_batch = if quick { 64usize } else { 256 };
+    let qr = q_all.row_range(0, remote_batch);
+    println!("\n— remote fan-out (batch {remote_batch}, {} shards, loopback) —", sharded.shards());
+    let mut table = Table::new(&["workers", "remote/q", "vs sharded"]);
+    let m_shd_base = bench.run("oos_sharded_base", || {
+        hck::coordinator::Predictor::predict_batch(&sharded, &qr)
+    });
+    for &nworkers in &[1usize, 2, 4] {
+        let shards = hck::shard::split_predictor(&pred, shard_depth);
+        let n_shards = shards.len();
+        let mut groups: Vec<Vec<hck::shard::Shard>> = (0..nworkers).map(|_| Vec::new()).collect();
+        for (i, s) in shards.into_iter().enumerate() {
+            groups[i % nworkers].push(s);
+        }
+        let workers: Vec<hck::shard::RemoteWorker> = groups
+            .into_iter()
+            .filter(|g| !g.is_empty())
+            .map(|g| hck::shard::RemoteWorker::serve("127.0.0.1:0", g, None).unwrap())
+            .collect();
+        let addrs: Vec<String> = workers.iter().map(|w| w.addr()).collect();
+        let router = hck::shard::ShardRouter::new(
+            &f.tree,
+            &hck::shard::boundary_nodes(&f.tree, shard_depth),
+        );
+        let remote = hck::shard::RemoteShardedPredictor::connect(
+            router,
+            &addrs,
+            std::time::Duration::from_millis(2000),
+        )
+        .unwrap();
+        let m_rem = bench.run("oos_remote", || {
+            hck::coordinator::Predictor::predict_batch(&remote, &qr)
+        });
+        table.row(&[
+            nworkers.to_string(),
+            fmt_secs(m_rem.median() / remote_batch as f64),
+            format!("{:.2}x", m_rem.median() / m_shd_base.median()),
+        ]);
+        report.row(vec![
+            ("op", Json::Str("oos_remote".into())),
+            ("n", Json::Num(eh_n as f64)),
+            ("r", Json::Num(eh_r as f64)),
+            ("batch", Json::Num(remote_batch as f64)),
+            ("threads", Json::Num(nworkers as f64)),
+            ("shards", Json::Num(n_shards as f64)),
+            ("ns_per_query", Json::Num(m_rem.median() * 1e9 / remote_batch as f64)),
+        ]);
+        drop(remote);
+        for w in workers {
+            w.shutdown();
+        }
+    }
+    table.print();
+
     // ---- batched GP posterior variance (protocol v2's `variance`
     // capability): one column materialization + one blocked solve per
     // batch through the long-lived HVariance state. ----

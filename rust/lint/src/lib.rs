@@ -30,8 +30,9 @@
 //!   entry must have at least one call site. Files under `obs/` (the
 //!   tracer implementation) are exempt from the use scan.
 //! * `thread-spawn` — `std::thread::spawn` / `thread::Builder` are
-//!   confined to `util/parallel.rs`, `shard/worker.rs`, and
-//!   `coordinator/`; everything else goes through the pool.
+//!   confined to `util/parallel.rs`, `shard/worker.rs`,
+//!   `shard/remote.rs`, and `coordinator/`; everything else goes
+//!   through the pool.
 //! * `bad-allow` — the escape hatch itself is linted: an allow must
 //!   name a known rule and carry a non-empty reason.
 //!
@@ -64,7 +65,8 @@ pub const RULES: &[(&str, &str)] = &[
     ),
     (
         "thread-spawn",
-        "no thread::spawn/thread::Builder outside util/parallel.rs, shard/worker.rs, coordinator/",
+        "no thread::spawn/thread::Builder outside util/parallel.rs, shard/worker.rs, \
+         shard/remote.rs, coordinator/",
     ),
     (
         "bad-allow",
@@ -556,7 +558,13 @@ fn is_serving_path(rel: &str) -> bool {
 }
 
 fn spawn_allowed_path(rel: &str) -> bool {
-    rel == "util/parallel.rs" || rel == "shard/worker.rs" || rel.starts_with("coordinator/")
+    // shard/remote.rs hosts the accept loop + per-connection handler
+    // threads of the remote worker endpoint — network threads, not
+    // compute, so they stay off the pool by design (like serve_tcp's).
+    rel == "util/parallel.rs"
+        || rel == "shard/worker.rs"
+        || rel == "shard/remote.rs"
+        || rel.starts_with("coordinator/")
 }
 
 const PANIC_TOKENS: &[&str] = &[
@@ -693,8 +701,8 @@ fn lint_file(f: &SourceFile, file_idx: usize, findings: &mut Vec<Finding>, uses:
                         idx,
                         "thread-spawn",
                         format!(
-                            "`{tok}` outside util/parallel.rs, shard/worker.rs, coordinator/; \
-                             use the worker pool"
+                            "`{tok}` outside util/parallel.rs, shard/worker.rs, \
+                             shard/remote.rs, coordinator/; use the worker pool"
                         ),
                     );
                 }

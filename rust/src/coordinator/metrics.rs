@@ -103,7 +103,39 @@ impl Metrics {
             p99_us: pct(99.0),
             elapsed_secs: elapsed,
             shards: Vec::new(),
+            workers: Vec::new(),
         }
+    }
+}
+
+/// Point-in-time view of one **remote** shard worker as seen from the
+/// router (`hck serve --workers`): reachability, reconnect count, and
+/// the worker's own per-shard counters polled over the `stats` wire
+/// command. Attached to [`MetricsSnapshot::workers`] by
+/// [`super::service::PredictionService::snapshot`].
+#[derive(Debug, Clone)]
+pub struct WorkerSnapshot {
+    /// The worker's address (`host:port`) — the `worker` label in the
+    /// Prometheus exposition.
+    pub worker: String,
+    /// How many times the router re-established this worker's
+    /// connection after a failure.
+    pub reconnects: u64,
+    /// Whether the worker answered the stats poll behind this snapshot.
+    pub reachable: bool,
+    /// The worker's per-shard counters (empty when unreachable).
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl WorkerSnapshot {
+    /// JSON encoding (one row of the snapshot's "workers" array).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("worker", Json::Str(self.worker.clone())),
+            ("reconnects", Json::Num(self.reconnects as f64)),
+            ("reachable", Json::Bool(self.reachable)),
+            ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
+        ])
     }
 }
 
@@ -178,6 +210,9 @@ pub struct MetricsSnapshot {
     /// Per-shard counters when the model behind the service is sharded
     /// (empty for single-replica predictors).
     pub shards: Vec<ShardSnapshot>,
+    /// Per-remote-worker counters when the service fronts remote shard
+    /// workers (`hck serve --workers`); empty otherwise.
+    pub workers: Vec<WorkerSnapshot>,
 }
 
 impl MetricsSnapshot {
@@ -197,6 +232,12 @@ impl MetricsSnapshot {
             pairs.push((
                 "shards",
                 Json::Arr(self.shards.iter().map(|s| s.to_json()).collect()),
+            ));
+        }
+        if !self.workers.is_empty() {
+            pairs.push((
+                "workers",
+                Json::Arr(self.workers.iter().map(|w| w.to_json()).collect()),
             ));
         }
         Json::obj(pairs)
@@ -278,6 +319,71 @@ pub fn render_prometheus(
         let _ = writeln!(out, "# TYPE hck_shard_dropped_total counter");
         for s in &snap.shards {
             let _ = writeln!(out, "hck_shard_dropped_total{{shard=\"{}\"}} {}", s.shard, s.dropped);
+        }
+    }
+    if !snap.workers.is_empty() {
+        let _ = writeln!(out, "# TYPE hck_worker_up gauge");
+        for w in &snap.workers {
+            let _ = writeln!(
+                out,
+                "hck_worker_up{{worker=\"{}\"}} {}",
+                w.worker,
+                u8::from(w.reachable)
+            );
+        }
+        let _ = writeln!(out, "# TYPE hck_worker_reconnects_total counter");
+        for w in &snap.workers {
+            let _ = writeln!(
+                out,
+                "hck_worker_reconnects_total{{worker=\"{}\"}} {}",
+                w.worker, w.reconnects
+            );
+        }
+        // The same per-shard series as the local block above, but with a
+        // `worker` label: replicated shards appear once per replica.
+        let _ = writeln!(out, "# TYPE hck_shard_queue_wait_ns gauge");
+        for w in &snap.workers {
+            for s in &w.shards {
+                let _ = writeln!(
+                    out,
+                    "hck_shard_queue_wait_ns{{worker=\"{}\",shard=\"{}\"}} {}",
+                    w.worker,
+                    s.shard,
+                    num(s.queue_wait_ns)
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE hck_shard_busy_frac gauge");
+        for w in &snap.workers {
+            for s in &w.shards {
+                let _ = writeln!(
+                    out,
+                    "hck_shard_busy_frac{{worker=\"{}\",shard=\"{}\"}} {}",
+                    w.worker,
+                    s.shard,
+                    num(s.busy_frac)
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE hck_shard_queue_depth gauge");
+        for w in &snap.workers {
+            for s in &w.shards {
+                let _ = writeln!(
+                    out,
+                    "hck_shard_queue_depth{{worker=\"{}\",shard=\"{}\"}} {}",
+                    w.worker, s.shard, s.queue_depth
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE hck_shard_requests_total counter");
+        for w in &snap.workers {
+            for s in &w.shards {
+                let _ = writeln!(
+                    out,
+                    "hck_shard_requests_total{{worker=\"{}\",shard=\"{}\"}} {}",
+                    w.worker, s.shard, s.requests
+                );
+            }
         }
     }
     out
@@ -406,5 +512,57 @@ mod tests {
         // An empty snapshot renders NaN percentiles, not invalid JSON-isms.
         let empty = render_prometheus(&Metrics::new().snapshot(), &pool);
         assert!(empty.contains("hck_latency_us{quantile=\"0.5\"} NaN"), "{empty}");
+    }
+
+    #[test]
+    fn worker_rows_serialize_and_render() {
+        let m = Metrics::new();
+        m.record_batch(&[1e-3]);
+        let mut snap = m.snapshot();
+        snap.workers.push(WorkerSnapshot {
+            worker: "127.0.0.1:7981".into(),
+            reconnects: 2,
+            reachable: true,
+            shards: vec![ShardSnapshot {
+                shard: 1,
+                rows_lo: 64,
+                rows_hi: 128,
+                queue_depth: 3,
+                batches: 5,
+                requests: 20,
+                mean_batch_size: 4.0,
+                ns_per_query: 900.0,
+                queue_wait_ns: 120.0,
+                busy_frac: 0.75,
+                dropped: 0,
+            }],
+        });
+        snap.workers.push(WorkerSnapshot {
+            worker: "127.0.0.1:7982".into(),
+            reconnects: 0,
+            reachable: false,
+            shards: Vec::new(),
+        });
+        let parsed = Json::parse(&snap.to_json().encode()).unwrap();
+        let workers = parsed.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].get("reconnects").unwrap().as_usize(), Some(2));
+        assert_eq!(workers[1].get("reachable").unwrap().as_bool(), Some(false));
+        let pool = crate::util::parallel::pool_stats();
+        let text = render_prometheus(&snap, &pool);
+        for needle in [
+            "hck_worker_up{worker=\"127.0.0.1:7981\"} 1",
+            "hck_worker_up{worker=\"127.0.0.1:7982\"} 0",
+            "hck_worker_reconnects_total{worker=\"127.0.0.1:7981\"} 2",
+            "hck_shard_queue_wait_ns{worker=\"127.0.0.1:7981\",shard=\"1\"} 120",
+            "hck_shard_busy_frac{worker=\"127.0.0.1:7981\",shard=\"1\"} 0.75",
+            "hck_shard_queue_depth{worker=\"127.0.0.1:7981\",shard=\"1\"} 3",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(value.parse::<f64>().is_ok() || value == "NaN", "bad value in {line:?}");
+        }
     }
 }

@@ -54,6 +54,13 @@ pub trait Predictor: Send + Sync + 'static {
         Vec::new()
     }
 
+    /// Per-remote-worker counters, when the predictor fans out to
+    /// remote shard workers (default: none). Implemented by
+    /// [`crate::shard::RemoteShardedPredictor`].
+    fn worker_metrics(&self) -> Vec<super::metrics::WorkerSnapshot> {
+        Vec::new()
+    }
+
     /// Mean-only convenience (benches/tests); panics on a rejected
     /// request — use [`Predictor::predict`] for typed errors.
     fn predict_batch(&self, q: &Mat) -> Mat {
@@ -217,6 +224,7 @@ impl PredictionService {
     pub fn snapshot(&self) -> super::metrics::MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
         snap.shards = self.model.shard_metrics();
+        snap.workers = self.model.worker_metrics();
         snap
     }
 

@@ -187,6 +187,17 @@ pub enum PredictError {
         /// What happened.
         message: String,
     },
+    /// The transport to a **remote** shard worker failed (connect, send,
+    /// receive, or frame decode), attributed to the worker address. The
+    /// remote router fails over to another replica on this variant; it
+    /// only reaches a client when every replica of a shard is
+    /// unreachable (then wrapped as [`PredictError::Shard`]).
+    Transport {
+        /// The worker address (host:port) the failure is attributed to.
+        worker: String,
+        /// What happened.
+        message: String,
+    },
     /// Anything else (factorization failure, dead service).
     Internal(String),
 }
@@ -198,6 +209,7 @@ impl PredictError {
             PredictError::BadRequest(_) => "bad_request",
             PredictError::Unsupported(_) => "unsupported",
             PredictError::Shard { .. } => "shard_failure",
+            PredictError::Transport { .. } => "transport",
             PredictError::Internal(_) => "internal",
         }
     }
@@ -211,6 +223,9 @@ impl PredictError {
         if let PredictError::Shard { shard, .. } = self {
             pairs.push(("shard", Json::Num(*shard as f64)));
         }
+        if let PredictError::Transport { worker, .. } = self {
+            pairs.push(("worker", Json::Str(worker.clone())));
+        }
         Json::obj(pairs)
     }
 
@@ -222,6 +237,9 @@ impl PredictError {
             | PredictError::Internal(m) => m.clone(),
             PredictError::Shard { shard, message } => {
                 format!("shard {shard}: {message}")
+            }
+            PredictError::Transport { worker, message } => {
+                format!("worker {worker}: {message}")
             }
         }
     }

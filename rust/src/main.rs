@@ -11,6 +11,8 @@
 //!   train      fit any model (krr/gp/kpca), report metric, --save artifact
 //!   predict    load an HCKM artifact and predict a LIBSVM file
 //!   shard      cut an HCKM artifact into a self-contained shard directory
+//!   shard-worker serve shards from a directory over the HCKW wire (one
+//!              process per host; `hck serve --workers` fans out to them)
 //!   serve      serve an HCKM artifact or a shard directory over TCP
 //!   likelihood GP log-marginal likelihood / MLE bandwidth search
 //!
@@ -70,6 +72,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(rest),
         "predict" => cmd_predict(rest),
         "shard" => cmd_shard(rest),
+        "shard-worker" => cmd_shard_worker(rest),
         "serve" => cmd_serve(rest),
         "likelihood" => cmd_likelihood(rest),
         "help" | "--help" | "-h" => {
@@ -107,6 +110,7 @@ fn print_help() {
            train       fit a model (krr/gp/kpca) and save an HCKM artifact\n\
            predict     load an HCKM artifact and predict a LIBSVM file\n\
            shard       cut an HCKM artifact into a serving shard directory\n\
+           shard-worker serve shards from a directory over the HCKW wire\n\
            serve       serve an artifact or shard directory over TCP\n\
            likelihood  GP log-likelihood / MLE bandwidth search\n\
          \n\
@@ -114,6 +118,11 @@ fn print_help() {
            hck train --dataset cadata --r 128 --save m.hckm\n\
            hck shard --model m.hckm --out shards/ --shards 8\n\
            hck serve --shard-dir shards/ --port 7878\n\
+         \n\
+         distributed pipeline (replicated workers + balancing router):\n\
+           hck shard-worker --shard-dir shards/ --bind 127.0.0.1:7901\n\
+           hck shard-worker --shard-dir shards/ --bind 127.0.0.1:7902\n\
+           hck serve --shard-dir shards/ --workers 127.0.0.1:7901,127.0.0.1:7902\n\
          \n\
          run 'hck <subcommand> --help' for options"
     );
@@ -613,6 +622,13 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         opt("model", "HCKM artifact from `hck train --save`", None),
         opt("shard-dir", "shard directory from `hck shard --out`", None),
         opt("port", "TCP port", Some("7878")),
+        opt("bind", "listen address (use 0.0.0.0 for non-loopback clients)", Some("127.0.0.1")),
+        opt(
+            "workers",
+            "comma-separated shard-worker host:port list (remote fan-out; needs --shard-dir)",
+            None,
+        ),
+        opt("worker-timeout-ms", "per-worker request timeout (ms)", Some("2000")),
         opt("max-batch", "dynamic batch size cap", Some("64")),
         opt("max-wait-ms", "batching window (ms)", Some("2")),
         opt("shards", "cut an in-process shard layer from --model (0 = off)", Some("0")),
@@ -647,6 +663,18 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .map(|v| v.parse::<usize>().map_err(|_| anyhow!("bad --shard-depth '{v}'")))
         .transpose()?;
 
+    // Remote fan-out needs the shard directory for its router +
+    // normalization; the shards themselves live in the workers.
+    let workers: Option<Vec<String>> = a.get("workers").map(|w| {
+        w.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+    });
+    if workers.is_some() && a.get("shard-dir").is_none() {
+        return Err(anyhow!(
+            "--workers needs --shard-dir (the router and normalization are read from it; \
+             the shards are served by the `hck shard-worker` processes)"
+        ));
+    }
+
     let svc = match (a.get("model"), a.get("shard-dir")) {
         (Some(_), Some(_)) => {
             return Err(anyhow!("pass either --model or --shard-dir, not both"))
@@ -656,6 +684,23 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
                 "serve consumes artifacts: pass --model m.hckm (from `hck train --save`) \
                  or --shard-dir dir/ (from `hck shard`)"
             ))
+        }
+        (None, Some(dir)) if workers.is_some() => {
+            // Remote fan-out: route locally, predict on the workers,
+            // balance across replicas, fail over when one dies.
+            let addrs = workers.unwrap_or_default();
+            let timeout = std::time::Duration::from_millis(
+                a.u64("worker-timeout-ms").map_err(Error::Config)?,
+            );
+            let remote =
+                hck::shard::RemoteShardedPredictor::connect_dir(dir, &addrs, timeout)?;
+            eprintln!(
+                "remote serving: {} shards across {} worker(s), replicas per shard {:?}",
+                remote.shards(),
+                addrs.len(),
+                remote.replica_counts()
+            );
+            Arc::new(PredictionService::start(Arc::new(remote), policy))
         }
         (None, Some(dir)) => {
             // Shards straight from disk: each worker owns only its slice.
@@ -709,9 +754,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     caps.check(required)?;
 
     let port = a.usize("port").map_err(Error::Config)?;
-    let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    let bind = a.get("bind").unwrap_or("127.0.0.1");
+    let listener = std::net::TcpListener::bind((bind, port as u16))
+        .map_err(|e| anyhow!("cannot bind {bind}:{port}: {e}"))?;
     eprintln!(
-        "serving on 127.0.0.1:{port} (capabilities: {caps}) — send \
+        "serving on {bind}:{port} (capabilities: {caps}) — send \
          {{\"features\": [...]}} (v1) or {{\"v\":2, \"queries\": [[...]], \
          \"want\": {{...}}}} lines; {{\"cmd\":\"metrics_text\"}} for a \
          Prometheus scrape; {{\"cmd\":\"shutdown\"}} to stop"
@@ -739,11 +786,65 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             s.busy_frac * 100.0
         );
     }
+    for w in &snap.workers {
+        let served: u64 = w.shards.iter().map(|s| s.requests).sum();
+        eprintln!(
+            "  worker {} ({}): shards {:?}, {} queries, {} reconnect(s)",
+            w.worker,
+            if w.reachable { "up" } else { "unreachable" },
+            w.shards.iter().map(|s| s.shard).collect::<Vec<_>>(),
+            served,
+            w.reconnects
+        );
+    }
     if a.flag("metrics") {
         let pool = hck::util::parallel::pool_stats();
         print!("{}", hck::coordinator::metrics::render_prometheus(&snap, &pool));
     }
     Ok(())
+}
+
+fn cmd_shard_worker(argv: Vec<String>) -> Result<()> {
+    let spec = vec![
+        opt("shard-dir", "shard directory from `hck shard --out`", None),
+        opt("index", "comma-separated shard indices to serve (default: all — a full replica)", None),
+        opt("bind", "listen address as host:port (port 0 picks an ephemeral port)", Some("127.0.0.1:7900")),
+        opt("trace", "write a Chrome-trace JSON of the worker run to this path", None),
+        flag("help", "show help"),
+    ];
+    let a = Args::parse(argv, &spec).map_err(Error::Config)?;
+    if a.flag("help") {
+        println!(
+            "{}",
+            usage(
+                "hck shard-worker",
+                "serve shards from a directory over the HCKW wire \
+                 (predict/stats/hello/shutdown); front with `hck serve --workers`",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    if let Some(path) = a.get("trace") {
+        hck::obs::enable(path);
+    }
+    print_simd_banner();
+    let dir = a.req("shard-dir").map_err(Error::Config)?;
+    let indices: Option<Vec<usize>> = match a.get("index") {
+        Some(s) => Some(
+            s.split(',')
+                .filter(|t| !t.trim().is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("bad --index entry '{t}'"))
+                })
+                .collect::<Result<Vec<usize>>>()?,
+        ),
+        None => None,
+    };
+    let bind = a.req("bind").map_err(Error::Config)?;
+    hck::shard::remote::run_worker(dir, indices.as_deref(), bind)
 }
 
 fn cmd_likelihood(argv: Vec<String>) -> Result<()> {

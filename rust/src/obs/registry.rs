@@ -28,6 +28,9 @@ pub const SPANS: &[(&str, &str)] = &[
     ("coord.queue_wait", "coord"),
     ("factor.leaves", "train"),
     ("factor.level", "train"),
+    ("remote.retry", "remote"),
+    ("remote.send", "remote"),
+    ("remote.wait", "remote"),
     ("shard.eval", "shard"),
     ("shard.queue_wait", "shard"),
     ("solve.downward", "solve"),

@@ -1,0 +1,392 @@
+//! Replica-aware remote fan-out: [`RemoteShardedPredictor`].
+//!
+//! The remote counterpart of [`super::ShardedPredictor`]: the same
+//! [`super::ShardRouter`] scatter and request-order gather, but each
+//! sub-batch travels over the `HCKW` wire
+//! ([`crate::shard::remote`]) to whichever `hck shard-worker` process
+//! currently looks least loaded among the shard's replicas.
+//!
+//! **Replication.** Workers announce which shards they serve at
+//! `hello`; any shard served by several workers has replicas. The
+//! replica map is built once at [`RemoteShardedPredictor::connect`],
+//! which also rejects topologies with uncovered shards or workers that
+//! disagree on dim/outputs.
+//!
+//! **Rebalancing.** Every [`STATS_EVERY`]-th predict refreshes each
+//! worker's cached load signals via the `stats` wire command
+//! (queue-depth sum, peak busy fraction from the per-shard
+//! [`crate::coordinator::metrics::ShardSnapshot`]s). A sub-batch then
+//! goes to the replica with the lowest score: locally-outstanding
+//! requests + remote queue depth, busy fraction as tie-break.
+//!
+//! **Failover.** A replica that fails with a *transport* or
+//! *shard-local* error merely moves the sub-batch to the next replica
+//! in score order; only when every replica of a shard has failed does
+//! the request surface a typed [`PredictError::Shard`] naming the shard
+//! and the last cause. Request-shaped errors (bad request, unsupported
+//! column) return immediately — every replica would refuse them the
+//! same way.
+
+use super::remote::RemoteWorkerClient;
+use super::router::ShardRouter;
+use super::ShardBlock;
+use crate::coordinator::metrics::{ShardSnapshot, WorkerSnapshot};
+use crate::coordinator::Predictor;
+use crate::error::{Error, Result};
+use crate::infer::{
+    Capabilities, InferResult, PredictError, PredictRequest, PredictResponse, Want,
+};
+use crate::linalg::Mat;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Refresh the cached worker load signals every this many predicts (the
+/// first predict primes them).
+const STATS_EVERY: u64 = 16;
+
+/// A [`Predictor`] that fans each batch out to remote shard workers,
+/// balancing across replicas and failing over when one dies mid-batch.
+pub struct RemoteShardedPredictor {
+    router: ShardRouter,
+    /// Clients serving each shard, indexed by shard id (≥1 per shard,
+    /// enforced at connect).
+    replicas: Vec<Vec<Arc<RemoteWorkerClient>>>,
+    /// Every distinct worker, for stats polling and metrics.
+    clients: Vec<Arc<RemoteWorkerClient>>,
+    dim: usize,
+    outputs: usize,
+    /// Whether **every** worker can serve the variance column (the
+    /// capability is the AND across workers — any replica may be asked).
+    variance: bool,
+    normalization: Option<Vec<(f64, f64)>>,
+    /// Predict counter driving the stats-refresh cadence.
+    polls: AtomicU64,
+}
+
+impl RemoteShardedPredictor {
+    /// Connect to `workers`, ask each what it serves (`hello`), and
+    /// build the shard → replicas map against `router`. Errors if any
+    /// worker is unreachable, workers disagree on dim/outputs, a worker
+    /// announces a shard the router does not know, or any routed shard
+    /// ends up with no replica.
+    pub fn connect(
+        router: ShardRouter,
+        workers: &[String],
+        timeout: Duration,
+    ) -> Result<RemoteShardedPredictor> {
+        if workers.is_empty() {
+            return Err(Error::config("remote serving needs at least one worker address"));
+        }
+        let n_shards = router.shards();
+        let mut replicas: Vec<Vec<Arc<RemoteWorkerClient>>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        let mut clients = Vec::with_capacity(workers.len());
+        let mut dim_out: Option<(usize, usize)> = None;
+        let mut variance = true;
+        for addr in workers {
+            let c = Arc::new(RemoteWorkerClient::new(addr, timeout));
+            let hello = c
+                .hello()
+                .map_err(|e| Error::Serve(format!("worker {addr}: {}", e.message())))?;
+            match dim_out {
+                None => dim_out = Some((hello.dim, hello.outputs)),
+                Some((d, o)) if d == hello.dim && o == hello.outputs => {}
+                Some((d, o)) => {
+                    return Err(Error::data(format!(
+                        "worker {addr} serves dim {} / outputs {} but earlier \
+                         workers serve {d} / {o}",
+                        hello.dim, hello.outputs
+                    )));
+                }
+            }
+            variance &= hello.variance;
+            for &(id, _lo, _hi) in &hello.shards {
+                if id >= n_shards {
+                    return Err(Error::data(format!(
+                        "worker {addr} serves shard {id} but the router only \
+                         knows shards 0..{n_shards}"
+                    )));
+                }
+                replicas[id].push(c.clone());
+            }
+            clients.push(c);
+        }
+        for (sid, r) in replicas.iter().enumerate() {
+            if r.is_empty() {
+                return Err(Error::data(format!(
+                    "shard {sid} has no replica among the {} worker(s)",
+                    workers.len()
+                )));
+            }
+        }
+        let (dim, outputs) = dim_out
+            .ok_or_else(|| Error::config("remote serving needs at least one worker address"))?;
+        Ok(RemoteShardedPredictor {
+            router,
+            replicas,
+            clients,
+            dim,
+            outputs,
+            variance,
+            normalization: None,
+            polls: AtomicU64::new(0),
+        })
+    }
+
+    /// Connect against a shard directory's router and recorded
+    /// normalization (the shards themselves live in the workers): what
+    /// `hck serve --shard-dir dir/ --workers a:p,b:p` runs.
+    pub fn connect_dir(
+        dir: &str,
+        workers: &[String],
+        timeout: Duration,
+    ) -> Result<RemoteShardedPredictor> {
+        let (router, normalization) = super::load_router_parts(dir)?;
+        let mut rp = Self::connect(router, workers, timeout)?;
+        rp.normalization = normalization;
+        Ok(rp)
+    }
+
+    /// Record feature-normalization ranges applied before routing
+    /// (`None` clears them).
+    pub fn with_normalization(mut self, ranges: Option<Vec<(f64, f64)>>) -> Self {
+        self.normalization = ranges;
+        self
+    }
+
+    /// Number of shards the router knows.
+    pub fn shards(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Replica count per shard, indexed by shard id.
+    pub fn replica_counts(&self) -> Vec<usize> {
+        self.replicas.iter().map(|r| r.len()).collect()
+    }
+
+    /// Refresh the cached per-worker load signals on a fixed predict
+    /// cadence. Best effort with a single attempt each — a dead worker
+    /// keeps its stale (high) score until it answers again.
+    fn maybe_refresh_stats(&self) {
+        // ORDERING: Relaxed — refresh-cadence heuristic only; stats
+        // results are published inside each client, not by this counter.
+        if self.polls.fetch_add(1, Ordering::Relaxed) % STATS_EVERY != 0 {
+            return;
+        }
+        for c in &self.clients {
+            let _ = c.stats();
+        }
+    }
+
+    /// Serve one shard's sub-batch, walking the shard's replicas from
+    /// least to most loaded and failing over on transport or shard-local
+    /// errors. A reply with impossible shape or non-finite values is
+    /// treated as a failed replica, never gathered.
+    fn eval_shard(&self, sid: usize, q: &Mat, want: Want) -> InferResult<ShardBlock> {
+        let reps = &self.replicas[sid];
+        let mut order: Vec<usize> = (0..reps.len()).collect();
+        order.sort_by_key(|&k| reps[k].load_score());
+        let mut last: Option<PredictError> = None;
+        for k in order {
+            let c = &reps[k];
+            c.begin_request();
+            let got = c.predict_shard(sid, q, want);
+            c.end_request();
+            match got {
+                Ok(block) => match validate_block(&block, q.rows(), self.outputs, want) {
+                    Ok(()) => return Ok(block),
+                    Err(why) => {
+                        last = Some(PredictError::Transport {
+                            worker: c.addr().to_string(),
+                            message: format!("untrustworthy reply: {why}"),
+                        });
+                    }
+                },
+                // Worker unreachable, or its shard-local evaluation
+                // failed: another replica may well succeed.
+                Err(e @ PredictError::Transport { .. }) | Err(e @ PredictError::Shard { .. }) => {
+                    last = Some(e);
+                }
+                // Request-shaped errors would repeat identically on
+                // every replica — surface them unchanged.
+                Err(e) => return Err(e),
+            }
+        }
+        let detail = match last {
+            Some(e) => e.message(),
+            None => "shard has no replicas".into(),
+        };
+        Err(PredictError::Shard {
+            shard: sid,
+            message: format!("all {} replica(s) failed; last: {detail}", reps.len()),
+        })
+    }
+}
+
+/// Shape/sanity gate on a remote reply before it is gathered: row
+/// count, output width, variance/route lengths against the request, and
+/// finiteness. The wire peer is another process — a truncated or buggy
+/// worker must read as a failed replica, not as silent NaN rows.
+fn validate_block(
+    b: &ShardBlock,
+    rows: usize,
+    outputs: usize,
+    want: Want,
+) -> std::result::Result<(), String> {
+    if b.mean.rows() != rows || b.mean.cols() != outputs {
+        return Err(format!(
+            "mean block is {}x{}, want {rows}x{outputs}",
+            b.mean.rows(),
+            b.mean.cols()
+        ));
+    }
+    for i in 0..rows {
+        if b.mean.row(i).iter().any(|v| !v.is_finite()) {
+            return Err(format!("non-finite mean in reply row {i}"));
+        }
+    }
+    match (&b.variance, want.variance) {
+        (Some(v), true) => {
+            if v.len() != rows {
+                return Err(format!("variance column has {} rows, want {rows}", v.len()));
+            }
+            if v.iter().any(|x| !x.is_finite()) {
+                return Err("non-finite variance in reply".into());
+            }
+        }
+        (None, true) => return Err("variance requested but missing from reply".into()),
+        _ => {}
+    }
+    if want.leaf_route {
+        match &b.routes {
+            Some(r) if r.len() == rows => {}
+            Some(r) => {
+                return Err(format!("route column has {} rows, want {rows}", r.len()))
+            }
+            None => return Err("leaf routes requested but missing from reply".into()),
+        }
+    }
+    Ok(())
+}
+
+impl Predictor for RemoteShardedPredictor {
+    fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
+        crate::infer::validate_queries(&req.queries, self.dim)?;
+        Predictor::capabilities(self).check(req.want)?;
+        self.maybe_refresh_stats();
+        let normalized =
+            crate::infer::normalized_queries(req, self.normalization.as_deref());
+        let q: &Mat = normalized.as_ref().unwrap_or(&req.queries);
+        let t = Instant::now();
+        // Scatter: request indices per destination shard (identical to
+        // the in-process ShardedPredictor — the router is the same).
+        let mut per: Vec<Vec<usize>> = (0..self.replicas.len()).map(|_| Vec::new()).collect();
+        for i in 0..q.rows() {
+            per[self.router.route(q.row(i))].push(i);
+        }
+        let jobs: Vec<(usize, Vec<usize>, Mat)> = per
+            .into_iter()
+            .enumerate()
+            .filter(|(_, idx)| !idx.is_empty())
+            .map(|(sid, idx)| {
+                let sub = q.select_rows(&idx);
+                (sid, idx, sub)
+            })
+            .collect();
+        // Fan out: one scoped thread per destination shard. These
+        // threads spend their lives blocked on sockets, so they ride
+        // plain scoped threads instead of occupying pool workers (the
+        // same reasoning that keeps shard workers off the pool).
+        let blocks: Vec<InferResult<ShardBlock>> = std::thread::scope(|s| {
+            let handles: Vec<_> = jobs
+                .iter()
+                .map(|(sid, _, sub)| {
+                    let sid = *sid;
+                    s.spawn(move || self.eval_shard(sid, sub, req.want))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .zip(jobs.iter())
+                .map(|(h, (sid, _, _))| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(PredictError::Shard {
+                            shard: *sid,
+                            message: "remote fan-out thread panicked".into(),
+                        })
+                    })
+                })
+                .collect()
+        });
+        // Gather in request order; any shard whose replicas are all
+        // gone aborts the request with its typed error.
+        let mut mean = Mat::zeros(q.rows(), self.outputs);
+        let mut variance = if req.want.variance { Some(vec![0.0; q.rows()]) } else { None };
+        let mut routes = if req.want.leaf_route {
+            Some(vec![
+                crate::infer::LeafRoute { shard: None, rows_lo: 0, rows_hi: 0 };
+                q.rows()
+            ])
+        } else {
+            None
+        };
+        for ((_, idx, _), block) in jobs.iter().zip(blocks) {
+            let block = block?;
+            for (k, &i) in idx.iter().enumerate() {
+                mean.row_mut(i).copy_from_slice(block.mean.row(k));
+            }
+            if let (Some(out), Some(v)) = (variance.as_mut(), block.variance.as_ref()) {
+                for (k, &i) in idx.iter().enumerate() {
+                    out[i] = v[k];
+                }
+            }
+            if let (Some(out), Some(r)) = (routes.as_mut(), block.routes.as_ref()) {
+                for (k, &i) in idx.iter().enumerate() {
+                    out[i] = r[k];
+                }
+            }
+        }
+        let per_query_ns = t.elapsed().as_nanos() as f64 / q.rows() as f64;
+        Ok(PredictResponse { mean, variance, routes, per_query_ns })
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn outputs(&self) -> usize {
+        self.outputs
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities { mean: true, variance: self.variance, leaf_route: true }
+    }
+
+    fn shard_metrics(&self) -> Vec<ShardSnapshot> {
+        // The authoritative per-shard counters live in the workers; the
+        // per-worker exposition below carries them. Local aggregation
+        // would double-count replicated shards.
+        Vec::new()
+    }
+
+    fn worker_metrics(&self) -> Vec<WorkerSnapshot> {
+        self.clients
+            .iter()
+            .map(|c| match c.stats() {
+                Ok(shards) => WorkerSnapshot {
+                    worker: c.addr().to_string(),
+                    reconnects: c.reconnects(),
+                    reachable: true,
+                    shards,
+                },
+                Err(_) => WorkerSnapshot {
+                    worker: c.addr().to_string(),
+                    reconnects: c.reconnects(),
+                    reachable: false,
+                    shards: Vec::new(),
+                },
+            })
+            .collect()
+    }
+}

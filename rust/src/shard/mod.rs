@@ -29,11 +29,22 @@
 //!
 //! Shards serialize independently ([`crate::hkernel::persist::save_shard`]),
 //! so a worker process can load only its slice of the model.
+//!
+//! For serving across hosts, [`remote`] wraps one-or-more shards in a
+//! TCP worker endpoint speaking the length-prefixed `HCKW` wire format,
+//! and [`balance`] provides [`balance::RemoteShardedPredictor`] — the
+//! same scatter/gather as [`worker::ShardedPredictor`] but fanning out
+//! to replicated remote workers with telemetry-driven replica choice
+//! and mid-batch failover (`hck shard-worker` / `hck serve --workers`).
 
+pub mod balance;
+pub mod remote;
 pub mod router;
 pub mod split;
 pub mod worker;
 
+pub use balance::RemoteShardedPredictor;
+pub use remote::{RemoteHello, RemoteWorker, RemoteWorkerClient};
 pub use router::ShardRouter;
 pub use split::{boundary_nodes, depth_for_shards, split_predictor};
 pub use worker::{ShardWorker, ShardedPredictor};
@@ -190,6 +201,65 @@ fn save_norm_file(path: &std::path::Path, ranges: &[(f64, f64)]) -> Result<()> {
     }
     out.flush()?;
     Ok(())
+}
+
+/// Load a shard directory's router and recorded normalization
+/// **without** the shards themselves — what the remote fan-out front
+/// (`hck serve --shard-dir dir/ --workers …`) needs locally; the shards
+/// live inside `hck shard-worker` processes.
+pub fn load_router_parts(dir: &str) -> Result<(ShardRouter, Option<Vec<(f64, f64)>>)> {
+    let dirp = std::path::Path::new(dir);
+    let router = crate::hkernel::load_router(&dirp.join("router.hckr").to_string_lossy())?;
+    let norm_path = dirp.join("norm.hckn");
+    let normalization =
+        if norm_path.exists() { Some(load_norm_file(&norm_path)?) } else { None };
+    Ok((router, normalization))
+}
+
+/// Load selected shards of a directory written by [`save_shard_dir`]
+/// (`None` = every shard — a full replica), for a worker process that
+/// serves only its slice of the model. Unlike [`load_shard_dir`] the
+/// result need not tile `[0, n)`; it must only be non-empty and agree
+/// on dim/outputs.
+pub fn load_shards_from_dir(dir: &str, indices: Option<&[usize]>) -> Result<Vec<Shard>> {
+    let dirp = std::path::Path::new(dir);
+    let mut shards = Vec::new();
+    match indices {
+        Some(idx) => {
+            for &i in idx {
+                let p = dirp.join(format!("shard{i:04}.hcks"));
+                if !p.exists() {
+                    return Err(Error::data(format!(
+                        "shard directory '{dir}' has no shard index {i} ({})",
+                        p.display()
+                    )));
+                }
+                shards.push(crate::hkernel::load_shard(&p.to_string_lossy())?);
+            }
+        }
+        None => {
+            let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dirp)?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().map(|x| x == "hcks").unwrap_or(false))
+                .collect();
+            paths.sort();
+            for p in &paths {
+                shards.push(crate::hkernel::load_shard(&p.to_string_lossy())?);
+            }
+            shards.sort_by_key(|s| s.id);
+        }
+    }
+    if shards.is_empty() {
+        return Err(Error::data(format!("shard directory '{dir}' holds no shards to serve")));
+    }
+    for s in &shards {
+        if s.dim != shards[0].dim || s.outputs != shards[0].outputs {
+            return Err(Error::data(format!(
+                "shard directory '{dir}': shards disagree on dim/outputs"
+            )));
+        }
+    }
+    Ok(shards)
 }
 
 /// Read `norm.hckn` written by [`save_norm_file`].

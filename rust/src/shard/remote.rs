@@ -1,0 +1,903 @@
+//! Remote shard workers: the `HCKW` wire format and both endpoints.
+//!
+//! A [`RemoteWorker`] is the serving side of distributed sharding: it
+//! owns one (or several) loaded [`Shard`]s behind the same per-shard
+//! [`ShardWorker`] queues the in-process path uses, and answers typed
+//! predict/stats/hello frames over TCP. A [`RemoteWorkerClient`] is the
+//! router's per-worker handle: one lazily-(re)connected stream, a
+//! per-request timeout, bounded exponential-backoff reconnects, and the
+//! cached load signals the balancer scores replicas by
+//! ([`crate::shard::balance::RemoteShardedPredictor`]).
+//!
+//! ## Wire format
+//!
+//! Every frame is `b"HCKW"` + a little-endian `u64` payload length
+//! (capped at [`MAX_FRAME`] against attacker-chosen allocations) + the
+//! payload. The first payload byte is a command/reply tag; the body
+//! reuses the `hkernel/persist.rs` primitives (`wu64`/`wf64`/
+//! `write_mat`/`write_f64s`), so the encoding discipline — explicit
+//! little-endian scalars, bounded counts, typed decode errors — is the
+//! same one the `HCKS`/`HCKR` artifacts already pin.
+//!
+//! | tag | direction | body |
+//! |-----|-----------|------|
+//! | `CMD_PREDICT`  | client → worker | want flags, shard id, query [`Mat`] |
+//! | `CMD_STATS`    | client → worker | — |
+//! | `CMD_HELLO`    | client → worker | — |
+//! | `CMD_SHUTDOWN` | client → worker | — |
+//! | `REPLY_BLOCK`  | worker → client | a [`ShardBlock`] (mean, variance?, routes?) |
+//! | `REPLY_ERR`    | worker → client | a typed [`PredictError`] |
+//! | `REPLY_STATS`  | worker → client | one [`ShardSnapshot`] per served shard |
+//! | `REPLY_HELLO`  | worker → client | dim, outputs, variance flag, served shard ids/ranges |
+//! | `REPLY_OK`     | worker → client | — (shutdown ack) |
+//!
+//! A malformed frame (wrong magic, oversized claimed length, torn
+//! payload) earns the sender a best-effort typed error frame and costs
+//! it **its own connection only** — the accept loop keeps serving
+//! everyone else. No panic idiom survives on this path (`hck-lint`
+//! gates `shard/`).
+
+use super::worker::ShardWorker;
+use super::{Shard, ShardBlock};
+use crate::coordinator::metrics::ShardSnapshot;
+use crate::error::{Error, Result};
+use crate::hkernel::persist::{read_mat, rf64, ru64, wf64, write_f64s, write_mat, wu64};
+use crate::hkernel::LazyVariance;
+use crate::infer::{InferResult, LeafRoute, PredictError, Want};
+use crate::linalg::Mat;
+use crate::obs;
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Frame magic: the wire cousin of `HCKS`/`HCKR`/`HCKN`.
+pub const WIRE_MAGIC: &[u8; 4] = b"HCKW";
+
+/// Hard cap on a frame's claimed payload length. A `u64` length field is
+/// attacker-chosen input; the cap bounds the allocation a hostile (or
+/// corrupt) peer can demand before the first payload byte arrives.
+pub const MAX_FRAME: u64 = 1 << 28;
+
+const CMD_PREDICT: u8 = 1;
+const CMD_STATS: u8 = 2;
+const CMD_HELLO: u8 = 3;
+const CMD_SHUTDOWN: u8 = 4;
+const REPLY_BLOCK: u8 = 0x81;
+const REPLY_ERR: u8 = 0x82;
+const REPLY_STATS: u8 = 0x83;
+const REPLY_HELLO: u8 = 0x84;
+const REPLY_OK: u8 = 0x85;
+
+// ---------------------------------------------------------------------------
+// Frame transport
+// ---------------------------------------------------------------------------
+
+/// Outcome of pulling one frame off a stream. The worker's connection
+/// handler and the client's reply read share this so both sides apply
+/// the same framing rules.
+pub(crate) enum FrameRead {
+    /// A complete, size-sane payload.
+    Frame(Vec<u8>),
+    /// Clean EOF before any byte of a frame — the peer hung up politely.
+    Closed,
+    /// The read timeout fired before any byte arrived (idle connection;
+    /// the worker uses this to poll its stop flag).
+    TimedOut,
+    /// The bytes violate the framing rules: wrong magic, a claimed
+    /// length outside `(0, MAX_FRAME]`, or a connection torn mid-frame.
+    Malformed(String),
+    /// Any other transport failure (including a timeout mid-frame,
+    /// after which the stream offset is unknowable).
+    Io(String),
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Fill `buf` completely, classifying every failure mode.
+fn read_exactly(stream: &mut TcpStream, buf: &mut [u8]) -> std::result::Result<(), FrameRead> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Err(FrameRead::Malformed("connection closed mid-frame".into())),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => {
+                return Err(FrameRead::Io("read timed out mid-frame".into()))
+            }
+            Err(e) => return Err(FrameRead::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Read one `HCKW` frame. Never allocates more than [`MAX_FRAME`] bytes
+/// no matter what the peer claims.
+pub(crate) fn read_frame(stream: &mut TcpStream) -> FrameRead {
+    let mut magic = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut magic[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    FrameRead::Closed
+                } else {
+                    FrameRead::Malformed("connection closed mid-frame (magic)".into())
+                };
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) && got == 0 => return FrameRead::TimedOut,
+            Err(e) if is_timeout(&e) => {
+                return FrameRead::Io("read timed out mid-frame (magic)".into())
+            }
+            Err(e) => return FrameRead::Io(e.to_string()),
+        }
+    }
+    if &magic != WIRE_MAGIC {
+        return FrameRead::Malformed(format!("bad frame magic {magic:?} (want {WIRE_MAGIC:?})"));
+    }
+    let mut lenb = [0u8; 8];
+    if let Err(m) = read_exactly(stream, &mut lenb) {
+        return m;
+    }
+    let len = u64::from_le_bytes(lenb);
+    if len == 0 || len > MAX_FRAME {
+        return FrameRead::Malformed(format!(
+            "claimed frame length {len} outside (0, {MAX_FRAME}]"
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    if let Err(m) = read_exactly(stream, &mut payload) {
+        return m;
+    }
+    FrameRead::Frame(payload)
+}
+
+/// Write one `HCKW` frame (magic + LE length + payload) and flush it.
+pub(crate) fn write_frame(stream: &mut impl std::io::Write, payload: &[u8]) -> Result<()> {
+    stream.write_all(WIRE_MAGIC)?;
+    stream.write_all(&(payload.len() as u64).to_le_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs (persist-primitive encodings over in-memory buffers)
+// ---------------------------------------------------------------------------
+
+fn ru8(inp: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    inp.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn wstr(out: &mut impl std::io::Write, s: &str) -> Result<()> {
+    wu64(out, s.len() as u64)?;
+    out.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn rstr(inp: &mut impl Read) -> Result<String> {
+    let n = ru64(inp)? as usize;
+    if n > (1 << 20) {
+        return Err(Error::data("wire string length exceeds the 1 MiB cap"));
+    }
+    let mut buf = vec![0u8; n];
+    inp.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|_| Error::data("wire string is not UTF-8"))
+}
+
+fn encode_predict(shard: usize, q: &Mat, want: Want) -> Result<Vec<u8>> {
+    let mut p = vec![CMD_PREDICT, want.mean as u8, want.variance as u8, want.leaf_route as u8];
+    wu64(&mut p, shard as u64)?;
+    write_mat(&mut p, q)?;
+    Ok(p)
+}
+
+fn decode_predict(mut cur: &[u8]) -> Result<(usize, Want, Mat)> {
+    let mut flags = [0u8; 3];
+    cur.read_exact(&mut flags)?;
+    let want = Want { mean: flags[0] != 0, variance: flags[1] != 0, leaf_route: flags[2] != 0 };
+    let shard = ru64(&mut cur)? as usize;
+    let q = read_mat(&mut cur)?;
+    Ok((shard, want, q))
+}
+
+fn encode_block(b: &ShardBlock) -> Result<Vec<u8>> {
+    let mut p = vec![REPLY_BLOCK];
+    write_mat(&mut p, &b.mean)?;
+    match &b.variance {
+        Some(v) => {
+            p.push(1);
+            write_f64s(&mut p, v)?;
+        }
+        None => p.push(0),
+    }
+    match &b.routes {
+        Some(rs) => {
+            p.push(1);
+            wu64(&mut p, rs.len() as u64)?;
+            for r in rs {
+                match r.shard {
+                    Some(s) => {
+                        p.push(1);
+                        wu64(&mut p, s as u64)?;
+                    }
+                    None => {
+                        p.push(0);
+                        wu64(&mut p, 0)?;
+                    }
+                }
+                wu64(&mut p, r.rows_lo as u64)?;
+                wu64(&mut p, r.rows_hi as u64)?;
+            }
+        }
+        None => p.push(0),
+    }
+    Ok(p)
+}
+
+fn decode_block(mut cur: &[u8]) -> Result<ShardBlock> {
+    let mean = read_mat(&mut cur)?;
+    let variance = match ru8(&mut cur)? {
+        0 => None,
+        _ => Some(crate::hkernel::persist::read_f64s(&mut cur)?),
+    };
+    let routes = match ru8(&mut cur)? {
+        0 => None,
+        _ => {
+            let n = ru64(&mut cur)? as usize;
+            if n > (1 << 24) {
+                return Err(Error::data("route count exceeds the wire cap"));
+            }
+            let mut rs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let has_shard = ru8(&mut cur)? != 0;
+                let sid = ru64(&mut cur)? as usize;
+                let rows_lo = ru64(&mut cur)? as usize;
+                let rows_hi = ru64(&mut cur)? as usize;
+                rs.push(LeafRoute {
+                    shard: if has_shard { Some(sid) } else { None },
+                    rows_lo,
+                    rows_hi,
+                });
+            }
+            Some(rs)
+        }
+    };
+    Ok(ShardBlock { mean, variance, routes })
+}
+
+fn encode_err(e: &PredictError) -> Result<Vec<u8>> {
+    let (kind, shard, worker, message) = match e {
+        PredictError::BadRequest(m) => (1u8, 0u64, "", m.as_str()),
+        PredictError::Unsupported(m) => (2, 0, "", m.as_str()),
+        PredictError::Shard { shard, message } => (3, *shard as u64, "", message.as_str()),
+        PredictError::Transport { worker, message } => {
+            (4, 0, worker.as_str(), message.as_str())
+        }
+        PredictError::Internal(m) => (5, 0, "", m.as_str()),
+    };
+    let mut p = vec![REPLY_ERR, kind];
+    wu64(&mut p, shard)?;
+    wstr(&mut p, worker)?;
+    wstr(&mut p, message)?;
+    Ok(p)
+}
+
+fn decode_err(mut cur: &[u8]) -> PredictError {
+    fn inner(cur: &mut &[u8]) -> Result<PredictError> {
+        let kind = ru8(cur)?;
+        let shard = ru64(cur)? as usize;
+        let worker = rstr(cur)?;
+        let message = rstr(cur)?;
+        Ok(match kind {
+            1 => PredictError::BadRequest(message),
+            2 => PredictError::Unsupported(message),
+            3 => PredictError::Shard { shard, message },
+            4 => PredictError::Transport { worker, message },
+            5 => PredictError::Internal(message),
+            other => {
+                PredictError::Internal(format!("unknown remote error kind {other}: {message}"))
+            }
+        })
+    }
+    match inner(&mut cur) {
+        Ok(e) => e,
+        Err(e) => PredictError::Internal(format!("undecodable remote error frame: {e}")),
+    }
+}
+
+fn encode_stats(snaps: &[ShardSnapshot]) -> Result<Vec<u8>> {
+    let mut p = vec![REPLY_STATS];
+    wu64(&mut p, snaps.len() as u64)?;
+    for s in snaps {
+        wu64(&mut p, s.shard as u64)?;
+        wu64(&mut p, s.rows_lo as u64)?;
+        wu64(&mut p, s.rows_hi as u64)?;
+        wu64(&mut p, s.queue_depth as u64)?;
+        wu64(&mut p, s.batches)?;
+        wu64(&mut p, s.requests)?;
+        wf64(&mut p, s.mean_batch_size)?;
+        wf64(&mut p, s.ns_per_query)?;
+        wf64(&mut p, s.queue_wait_ns)?;
+        wf64(&mut p, s.busy_frac)?;
+        wu64(&mut p, s.dropped)?;
+    }
+    Ok(p)
+}
+
+fn decode_stats(mut cur: &[u8]) -> Result<Vec<ShardSnapshot>> {
+    let n = ru64(&mut cur)? as usize;
+    if n > (1 << 20) {
+        return Err(Error::data("stats shard count exceeds the wire cap"));
+    }
+    let mut snaps = Vec::with_capacity(n);
+    for _ in 0..n {
+        snaps.push(ShardSnapshot {
+            shard: ru64(&mut cur)? as usize,
+            rows_lo: ru64(&mut cur)? as usize,
+            rows_hi: ru64(&mut cur)? as usize,
+            queue_depth: ru64(&mut cur)? as usize,
+            batches: ru64(&mut cur)?,
+            requests: ru64(&mut cur)?,
+            mean_batch_size: rf64(&mut cur)?,
+            ns_per_query: rf64(&mut cur)?,
+            queue_wait_ns: rf64(&mut cur)?,
+            busy_frac: rf64(&mut cur)?,
+            dropped: ru64(&mut cur)?,
+        });
+    }
+    Ok(snaps)
+}
+
+/// What a worker reports to `hello`: enough for a router to build its
+/// replica map and negotiate capabilities without any side channel.
+#[derive(Debug, Clone)]
+pub struct RemoteHello {
+    /// Feature dimension the served shards expect.
+    pub dim: usize,
+    /// Output columns per prediction.
+    pub outputs: usize,
+    /// Whether this worker can serve the posterior-variance column.
+    pub variance: bool,
+    /// Served shards as `(global shard id, rows_lo, rows_hi)`.
+    pub shards: Vec<(usize, usize, usize)>,
+}
+
+fn encode_hello(served: &Served) -> Result<Vec<u8>> {
+    let mut p = vec![REPLY_HELLO];
+    wu64(&mut p, served.dim as u64)?;
+    wu64(&mut p, served.outputs as u64)?;
+    p.push(served.variance as u8);
+    wu64(&mut p, served.ids.len() as u64)?;
+    for (k, &id) in served.ids.iter().enumerate() {
+        wu64(&mut p, id as u64)?;
+        wu64(&mut p, served.ranges[k].0 as u64)?;
+        wu64(&mut p, served.ranges[k].1 as u64)?;
+    }
+    Ok(p)
+}
+
+fn decode_hello(mut cur: &[u8]) -> Result<RemoteHello> {
+    let dim = ru64(&mut cur)? as usize;
+    let outputs = ru64(&mut cur)? as usize;
+    let variance = ru8(&mut cur)? != 0;
+    let n = ru64(&mut cur)? as usize;
+    if n > (1 << 20) {
+        return Err(Error::data("hello shard count exceeds the wire cap"));
+    }
+    let mut shards = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = ru64(&mut cur)? as usize;
+        let lo = ru64(&mut cur)? as usize;
+        let hi = ru64(&mut cur)? as usize;
+        shards.push((id, lo, hi));
+    }
+    Ok(RemoteHello { dim, outputs, variance, shards })
+}
+
+// ---------------------------------------------------------------------------
+// Worker endpoint
+// ---------------------------------------------------------------------------
+
+/// Everything a connection handler needs, shared across connections.
+struct Served {
+    workers: Vec<ShardWorker>,
+    /// Global shard id per worker (positional).
+    ids: Vec<usize>,
+    /// Global row range per worker (positional).
+    ranges: Vec<(usize, usize)>,
+    dim: usize,
+    outputs: usize,
+    variance: bool,
+}
+
+/// A running remote shard worker: a TCP accept loop over one
+/// [`ShardWorker`] queue per served shard. Dropping (or
+/// [`RemoteWorker::shutdown`]) stops the accept loop, closes the
+/// listener, and joins the per-shard workers.
+pub struct RemoteWorker {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RemoteWorker {
+    /// Bind `addr:port` (port 0 picks an ephemeral port — read it back
+    /// with [`RemoteWorker::addr`]) and serve the given shards. Pass the
+    /// shared [`LazyVariance`] state to serve the variance column; bare
+    /// shard directories have none, so the CLI worker serves
+    /// mean + routes.
+    pub fn serve(
+        bind: &str,
+        shards: Vec<Shard>,
+        variance: Option<Arc<LazyVariance>>,
+    ) -> Result<RemoteWorker> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| Error::config(format!("shard-worker: cannot bind {bind}: {e}")))?;
+        Self::serve_listener(listener, shards, variance)
+    }
+
+    /// Serve on an already-bound listener.
+    pub fn serve_listener(
+        listener: TcpListener,
+        shards: Vec<Shard>,
+        variance: Option<Arc<LazyVariance>>,
+    ) -> Result<RemoteWorker> {
+        if shards.is_empty() {
+            return Err(Error::config("shard-worker: no shards to serve"));
+        }
+        let addr = listener.local_addr()?;
+        // Non-blocking accept so the loop can poll the stop flag.
+        listener.set_nonblocking(true)?;
+        let dim = shards[0].dim;
+        let outputs = shards[0].outputs;
+        for s in &shards {
+            if s.dim != dim || s.outputs != outputs {
+                return Err(Error::data("shard-worker: shards disagree on dim/outputs"));
+            }
+        }
+        let ids: Vec<usize> = shards.iter().map(|s| s.id).collect();
+        let ranges: Vec<(usize, usize)> = shards.iter().map(|s| s.row_range()).collect();
+        let has_var = variance.is_some();
+        let workers: Vec<ShardWorker> =
+            shards.into_iter().map(|s| ShardWorker::spawn(s, variance.clone())).collect();
+        let served =
+            Arc::new(Served { workers, ids, ranges, dim, outputs, variance: has_var });
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("hck-remote-accept".into())
+            .spawn(move || accept_loop(listener, served, s2))
+            .map_err(|e| {
+                Error::config(format!("shard-worker: cannot spawn accept thread: {e}"))
+            })?;
+        Ok(RemoteWorker { addr, stop, join: Some(join) })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Block until the accept loop exits (a `shutdown` wire command or a
+    /// signal) — the CLI worker's main thread parks here.
+    pub fn wait(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Stop accepting, close the listener, and join every thread.
+    pub fn shutdown(self) {
+        // Drop does the work; the method exists for call-site clarity.
+    }
+
+    fn halt(&mut self) {
+        // ORDERING: SeqCst — one-shot shutdown flag; pairs with the
+        // loads in accept_loop and the connection handlers.
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for RemoteWorker {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn accept_loop(listener: TcpListener, served: Arc<Served>, stop: Arc<AtomicBool>) {
+    loop {
+        // ORDERING: SeqCst — shutdown control plane, one load per turn;
+        // pairs with the stores in RemoteWorker::halt and dispatch.
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((conn, _)) => {
+                let served = served.clone();
+                let stop2 = stop.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("hck-remote-conn".into())
+                    .spawn(move || handle_conn(conn, served, stop2));
+                if let Err(e) = spawned {
+                    // Out of threads: shed this connection, keep serving.
+                    eprintln!("shard-worker: dropping connection (cannot spawn handler: {e})");
+                }
+            }
+            Err(e) if is_timeout(&e) => std::thread::sleep(Duration::from_millis(5)),
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn handle_conn(mut conn: TcpStream, served: Arc<Served>, stop: Arc<AtomicBool>) {
+    // A finite read timeout turns the blocking read into a poll, so an
+    // idle connection still notices the stop flag.
+    if conn.set_read_timeout(Some(Duration::from_millis(200))).is_err() {
+        return;
+    }
+    let _ = conn.set_nodelay(true);
+    loop {
+        // ORDERING: SeqCst — shutdown control plane; pairs with the
+        // stores in RemoteWorker::halt and dispatch.
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let payload = match read_frame(&mut conn) {
+            FrameRead::Frame(p) => p,
+            FrameRead::TimedOut => continue,
+            FrameRead::Closed => return,
+            FrameRead::Malformed(m) => {
+                // Best-effort typed reject, then drop *this* connection
+                // only — the stream offset is unknowable after a framing
+                // violation, but the accept loop keeps serving.
+                let err = PredictError::BadRequest(format!("malformed frame: {m}"));
+                if let Ok(b) = encode_err(&err) {
+                    let _ = write_frame(&mut conn, &b);
+                }
+                return;
+            }
+            FrameRead::Io(_) => return,
+        };
+        let bytes = match dispatch(&payload, &served, &stop) {
+            Ok(b) => b,
+            Err(e) => match encode_err(&e) {
+                Ok(b) => b,
+                Err(_) => return,
+            },
+        };
+        if write_frame(&mut conn, &bytes).is_err() {
+            return;
+        }
+    }
+}
+
+/// Serve one decoded frame. Every failure is a typed [`PredictError`]
+/// the caller turns into a `REPLY_ERR` frame — a request can never kill
+/// the worker process.
+fn dispatch(payload: &[u8], served: &Served, stop: &AtomicBool) -> InferResult<Vec<u8>> {
+    let Some((&tag, body)) = payload.split_first() else {
+        return Err(PredictError::BadRequest("empty frame payload".into()));
+    };
+    let encode_fail =
+        |e: Error| PredictError::Internal(format!("wire encode failed: {e}"));
+    match tag {
+        CMD_PREDICT => {
+            let (shard, want, q) = decode_predict(body)
+                .map_err(|e| PredictError::BadRequest(format!("bad predict frame: {e}")))?;
+            let Some(pos) = served.ids.iter().position(|&id| id == shard) else {
+                return Err(PredictError::Shard {
+                    shard,
+                    message: format!(
+                        "this worker does not serve shard {shard} (serves {:?})",
+                        served.ids
+                    ),
+                });
+            };
+            if q.rows() == 0 {
+                return Err(PredictError::BadRequest("empty query batch".into()));
+            }
+            if q.cols() != served.dim {
+                return Err(PredictError::BadRequest(format!(
+                    "queries have {} columns; the served shards expect {}",
+                    q.cols(),
+                    served.dim
+                )));
+            }
+            if want.variance && !served.variance {
+                return Err(PredictError::Unsupported(
+                    "this shard-worker has no variance state (serve from a GP model)".into(),
+                ));
+            }
+            let rrx = served.workers[pos].submit(q, want);
+            match rrx.recv() {
+                Ok(Ok(block)) => encode_block(&block).map_err(encode_fail),
+                Ok(Err(e)) => Err(e),
+                Err(_) => Err(PredictError::Shard {
+                    shard,
+                    message: "worker thread is gone (dropped the sub-batch)".into(),
+                }),
+            }
+        }
+        CMD_STATS => {
+            let snaps: Vec<ShardSnapshot> =
+                served.workers.iter().map(|w| w.snapshot()).collect();
+            encode_stats(&snaps).map_err(encode_fail)
+        }
+        CMD_HELLO => encode_hello(served).map_err(encode_fail),
+        CMD_SHUTDOWN => {
+            // ORDERING: SeqCst — one-shot shutdown edge; pairs with the
+            // loads in accept_loop and handle_conn.
+            stop.store(true, Ordering::SeqCst);
+            Ok(vec![REPLY_OK])
+        }
+        other => Err(PredictError::BadRequest(format!("unknown wire command tag {other}"))),
+    }
+}
+
+/// Load the requested shards of a directory and serve them until a
+/// `shutdown` wire command (or a signal) — the body of
+/// `hck shard-worker`. `indices: None` serves every shard in the
+/// directory (a full replica).
+pub fn run_worker(dir: &str, indices: Option<&[usize]>, bind: &str) -> Result<()> {
+    let shards = super::load_shards_from_dir(dir, indices)?;
+    let ids: Vec<usize> = shards.iter().map(|s| s.id).collect();
+    let worker = RemoteWorker::serve(bind, shards, None)?;
+    eprintln!(
+        "shard-worker: serving shards {ids:?} from {dir} on {} \
+         (HCKW wire: predict/stats/hello/shutdown)",
+        worker.addr()
+    );
+    worker.wait();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client endpoint
+// ---------------------------------------------------------------------------
+
+/// How many send attempts a predict RPC gets (1 initial + bounded
+/// exponential-backoff reconnects at 10 ms, 20 ms).
+const PREDICT_ATTEMPTS: u32 = 3;
+
+/// The router's handle to one remote worker: a lazily-(re)connected
+/// stream with per-request timeouts, plus the cached load signals the
+/// balancer sorts replicas by. One RPC is in flight per client at a
+/// time (the stream mutex serializes request/reply pairs); the router
+/// fans out across *clients* concurrently.
+pub struct RemoteWorkerClient {
+    addr: String,
+    stream: Mutex<Option<TcpStream>>,
+    timeout: Duration,
+    connected_once: AtomicBool,
+    reconnects: AtomicU64,
+    outstanding: AtomicUsize,
+    /// Total queue depth across the worker's shards at the last stats
+    /// poll (the balancer's primary remote signal).
+    queue_depth: AtomicUsize,
+    /// Peak per-shard busy fraction at the last stats poll, in ppm
+    /// (atomically storable tie-break signal).
+    busy_ppm: AtomicU64,
+}
+
+impl RemoteWorkerClient {
+    /// A handle to `host:port`. Nothing connects until the first RPC.
+    pub fn new(addr: &str, timeout: Duration) -> RemoteWorkerClient {
+        RemoteWorkerClient {
+            addr: addr.to_string(),
+            stream: Mutex::new(None),
+            timeout,
+            connected_once: AtomicBool::new(false),
+            reconnects: AtomicU64::new(0),
+            outstanding: AtomicUsize::new(0),
+            queue_depth: AtomicUsize::new(0),
+            busy_ppm: AtomicU64::new(0),
+        }
+    }
+
+    /// The worker address this client talks to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// How many times the connection was re-established after a failure.
+    pub fn reconnects(&self) -> u64 {
+        // ORDERING: Relaxed — monotone statistics counter.
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// Balance score: locally-outstanding requests plus the remote
+    /// queue depth from the last stats poll, with the peak busy
+    /// fraction (ppm) as tie-break. Lower is less loaded.
+    pub(crate) fn load_score(&self) -> (usize, u64) {
+        // ORDERING: Relaxed — heuristic load gauges; tearing between
+        // the two loads only perturbs replica choice, never correctness.
+        (
+            self.outstanding.load(Ordering::Relaxed)
+                + self.queue_depth.load(Ordering::Relaxed),
+            self.busy_ppm.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Mark a request in flight on this client (balance signal).
+    pub(crate) fn begin_request(&self) {
+        // ORDERING: Relaxed — load gauge for replica scoring only.
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark a request finished on this client.
+    pub(crate) fn end_request(&self) {
+        // ORDERING: Relaxed — load gauge for replica scoring only.
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn transport(&self, message: impl Into<String>) -> PredictError {
+        PredictError::Transport { worker: self.addr.clone(), message: message.into() }
+    }
+
+    fn connect(&self) -> InferResult<TcpStream> {
+        use std::net::ToSocketAddrs;
+        let mut addrs = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| self.transport(format!("bad address: {e}")))?;
+        let Some(sa) = addrs.next() else {
+            return Err(self.transport("address resolves to nothing"));
+        };
+        let s = TcpStream::connect_timeout(&sa, self.timeout)
+            .map_err(|e| self.transport(format!("connect failed: {e}")))?;
+        s.set_read_timeout(Some(self.timeout))
+            .map_err(|e| self.transport(format!("set_read_timeout: {e}")))?;
+        s.set_write_timeout(Some(self.timeout))
+            .map_err(|e| self.transport(format!("set_write_timeout: {e}")))?;
+        let _ = s.set_nodelay(true);
+        Ok(s)
+    }
+
+    /// One request/reply round trip with bounded reconnect: up to
+    /// `attempts` tries, sleeping 10 ms · 2^(k-1) before retry k. Every
+    /// failure mode comes back as a typed
+    /// [`PredictError::Transport`] — the balancer decides whether
+    /// another replica absorbs the work.
+    fn rpc(&self, payload: &[u8], attempts: u32) -> InferResult<Vec<u8>> {
+        // One in-flight request per connection: the mutex both owns the
+        // stream and serializes request/reply pairs on it.
+        let mut guard = match self.stream.lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        };
+        let mut last: Option<PredictError> = None;
+        for attempt in 0..attempts.max(1) {
+            if attempt > 0 {
+                let _sp = obs::span_with("remote.retry", "remote", || {
+                    format!("{{\"worker\":\"{}\",\"attempt\":{attempt}}}", self.addr)
+                });
+                std::thread::sleep(Duration::from_millis(10u64 << (attempt - 1).min(6)));
+            }
+            if guard.is_none() {
+                match self.connect() {
+                    Ok(s) => {
+                        // ORDERING: Relaxed — statistics counter; the
+                        // stream itself is published via the mutex.
+                        if self.connected_once.swap(true, Ordering::Relaxed) {
+                            // ORDERING: Relaxed — statistics counter.
+                            self.reconnects.fetch_add(1, Ordering::Relaxed);
+                        }
+                        *guard = Some(s);
+                    }
+                    Err(e) => {
+                        last = Some(e);
+                        continue;
+                    }
+                }
+            }
+            let Some(stream) = guard.as_mut() else { continue };
+            let sent = {
+                let _sp = obs::span_with("remote.send", "remote", || {
+                    format!(
+                        "{{\"worker\":\"{}\",\"bytes\":{}}}",
+                        self.addr,
+                        payload.len()
+                    )
+                });
+                write_frame(stream, payload)
+            };
+            if let Err(e) = sent {
+                *guard = None;
+                last = Some(self.transport(format!("send failed: {e}")));
+                continue;
+            }
+            let got = {
+                let _sp = obs::span_with("remote.wait", "remote", || {
+                    format!("{{\"worker\":\"{}\"}}", self.addr)
+                });
+                read_frame(stream)
+            };
+            match got {
+                FrameRead::Frame(p) => return Ok(p),
+                FrameRead::TimedOut | FrameRead::Io(_) => {
+                    *guard = None;
+                    last = Some(self.transport("reply timed out or tore mid-frame"));
+                }
+                FrameRead::Closed => {
+                    *guard = None;
+                    last = Some(self.transport("worker closed the connection"));
+                }
+                FrameRead::Malformed(m) => {
+                    *guard = None;
+                    last = Some(self.transport(format!("malformed reply frame: {m}")));
+                }
+            }
+        }
+        Err(match last {
+            Some(e) => e,
+            None => self.transport("no RPC attempts made"),
+        })
+    }
+
+    /// Typed predict for one shard's sub-batch.
+    pub fn predict_shard(&self, shard: usize, q: &Mat, want: Want) -> InferResult<ShardBlock> {
+        let payload = encode_predict(shard, q, want)
+            .map_err(|e| PredictError::Internal(format!("wire encode failed: {e}")))?;
+        let reply = self.rpc(&payload, PREDICT_ATTEMPTS)?;
+        match reply.split_first() {
+            Some((&REPLY_BLOCK, body)) => decode_block(body)
+                .map_err(|e| self.transport(format!("bad predict reply: {e}"))),
+            Some((&REPLY_ERR, body)) => Err(decode_err(body)),
+            _ => Err(self.transport("unexpected predict reply tag")),
+        }
+    }
+
+    /// Poll the worker's per-shard counters (the `stats` wire command)
+    /// and refresh the cached balance signals. Single attempt — a dead
+    /// worker must not stall the poller in reconnect backoff.
+    pub fn stats(&self) -> InferResult<Vec<ShardSnapshot>> {
+        let reply = self.rpc(&[CMD_STATS], 1)?;
+        match reply.split_first() {
+            Some((&REPLY_STATS, body)) => {
+                let snaps = decode_stats(body)
+                    .map_err(|e| self.transport(format!("bad stats reply: {e}")))?;
+                let depth: usize = snaps.iter().map(|s| s.queue_depth).sum();
+                let busy = snaps.iter().map(|s| s.busy_frac).fold(0.0f64, f64::max);
+                // ORDERING: Relaxed — heuristic balance caches; tearing
+                // only perturbs replica choice, never correctness.
+                self.queue_depth.store(depth, Ordering::Relaxed);
+                self.busy_ppm.store((busy * 1e6) as u64, Ordering::Relaxed);
+                Ok(snaps)
+            }
+            Some((&REPLY_ERR, body)) => Err(decode_err(body)),
+            _ => Err(self.transport("unexpected stats reply tag")),
+        }
+    }
+
+    /// Ask the worker what it serves (the `hello` wire command).
+    pub fn hello(&self) -> InferResult<RemoteHello> {
+        let reply = self.rpc(&[CMD_HELLO], 2)?;
+        match reply.split_first() {
+            Some((&REPLY_HELLO, body)) => decode_hello(body)
+                .map_err(|e| self.transport(format!("bad hello reply: {e}"))),
+            Some((&REPLY_ERR, body)) => Err(decode_err(body)),
+            _ => Err(self.transport("unexpected hello reply tag")),
+        }
+    }
+
+    /// Ask the worker process to stop (the `shutdown` wire command).
+    pub fn shutdown_worker(&self) -> InferResult<()> {
+        let reply = self.rpc(&[CMD_SHUTDOWN], 1)?;
+        match reply.first() {
+            Some(&REPLY_OK) => Ok(()),
+            Some(&REPLY_ERR) => Err(decode_err(&reply[1..])),
+            _ => Err(self.transport("unexpected shutdown reply tag")),
+        }
+    }
+}

@@ -159,8 +159,13 @@ impl ShardWorker {
     }
 
     /// Enqueue a sub-batch; the typed reply arrives on the returned
-    /// receiver.
-    fn submit(&self, q: Mat, want: Want) -> std::sync::mpsc::Receiver<InferResult<ShardBlock>> {
+    /// receiver. `pub(crate)` so the remote worker endpoint
+    /// ([`crate::shard::remote`]) can feed the same per-shard queues.
+    pub(crate) fn submit(
+        &self,
+        q: Mat,
+        want: Want,
+    ) -> std::sync::mpsc::Receiver<InferResult<ShardBlock>> {
         let (rtx, rrx) = sync_channel(1);
         // ORDERING: Relaxed — queue-depth gauge only; the job is
         // published by the channel send, not by this counter.

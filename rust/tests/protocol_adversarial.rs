@@ -12,15 +12,20 @@ use hck::coordinator::protocol::handle_line;
 use hck::coordinator::{BatchPolicy, PredictionService};
 use hck::data::{Dataset, Task};
 use hck::hkernel::HConfig;
+use hck::infer::Want;
 use hck::kernels::Gaussian;
 use hck::linalg::Mat;
-use hck::model::{fit, ModelSpec};
+use hck::model::{fit, Model, ModelSpec};
+use hck::shard::{split_predictor, RemoteWorker, RemoteWorkerClient};
 use hck::util::json::Json;
 use hck::util::rng::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
+use std::time::Duration;
 
-fn gp_service() -> PredictionService {
+fn gp_model() -> Box<dyn Model> {
     let mut rng = Rng::new(17);
     let x = Mat::from_fn(160, 3, |_, _| rng.uniform(0.0, 1.0));
     let y: Vec<f64> = (0..160)
@@ -29,8 +34,11 @@ fn gp_service() -> PredictionService {
     let train = Dataset::new("adv", x, y, Task::Regression).unwrap();
     let mut cfg = HConfig::new(Gaussian::new(0.6), 8).with_seed(23);
     cfg.n0 = 8;
-    let model = fit(&ModelSpec::gp(cfg, 0.05), &train).unwrap();
-    PredictionService::start_model(Arc::from(model), BatchPolicy::default())
+    fit(&ModelSpec::gp(cfg, 0.05), &train).unwrap()
+}
+
+fn gp_service() -> PredictionService {
+    PredictionService::start_model(Arc::from(gp_model()), BatchPolicy::default())
 }
 
 /// The error frame contract: an `"error"` object with a `kind` tag for
@@ -129,4 +137,117 @@ fn adversarial_frames_get_typed_errors_and_service_survives() {
     assert_eq!(bye.get("ok").and_then(|b| b.as_bool()), Some(true));
     assert!(stop.load(std::sync::atomic::Ordering::SeqCst));
     svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Remote shard-worker wire gauntlet (the binary HCKW protocol)
+// ---------------------------------------------------------------------------
+
+/// Read one raw `HCKW` reply frame off a test socket. `None` means the
+/// worker (rightfully) hung up instead of replying.
+fn read_raw_reply(s: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut magic = [0u8; 4];
+    s.read_exact(&mut magic).ok()?;
+    assert_eq!(&magic, b"HCKW", "reply frame must carry the wire magic");
+    let mut lenb = [0u8; 8];
+    s.read_exact(&mut lenb).ok()?;
+    let len = u64::from_le_bytes(lenb);
+    assert!(len > 0 && len <= 1 << 28, "reply length {len} out of range");
+    let mut payload = vec![0u8; len as usize];
+    s.read_exact(&mut payload).ok()?;
+    Some(payload)
+}
+
+/// A reply payload must be a typed `REPLY_ERR` (0x82) frame with the
+/// `bad_request` kind (1) and a message containing `needle`.
+fn assert_bad_request(payload: &[u8], needle: &str, label: &str) {
+    assert_eq!(payload[0], 0x82, "{label}: want REPLY_ERR, got tag {:#x}", payload[0]);
+    assert_eq!(payload[1], 1, "{label}: want bad_request kind, got {}", payload[1]);
+    let text = String::from_utf8_lossy(payload);
+    assert!(text.contains(needle), "{label}: message should contain {needle:?}: {text}");
+}
+
+#[test]
+fn remote_worker_survives_malformed_wire_frames() {
+    let model = gp_model();
+    let pred = model.hierarchical_predictor().expect("gp model is hierarchical");
+    let shards = split_predictor(pred, 1);
+    let n_shards = shards.len();
+    let worker = RemoteWorker::serve("127.0.0.1:0", shards, model.variance_state())
+        .expect("worker binds an ephemeral loopback port");
+    let addr = worker.addr();
+
+    // 1. Wrong magic: the worker replies with a typed bad_request frame,
+    //    then drops that connection (the stream offset is unknowable).
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"XXXX").unwrap();
+        s.write_all(&8u64.to_le_bytes()).unwrap();
+        s.write_all(&[0u8; 8]).unwrap();
+        let payload = read_raw_reply(&mut s).expect("wrong magic earns a typed reject");
+        assert_bad_request(&payload, "malformed frame", "wrong magic");
+        let mut one = [0u8; 1];
+        assert_eq!(s.read(&mut one).unwrap_or(0), 0, "connection closes after bad magic");
+    }
+
+    // 2. Oversized claimed length: rejected before any allocation, with
+    //    a typed frame naming the violation.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"HCKW").unwrap();
+        s.write_all(&(1u64 << 60).to_le_bytes()).unwrap();
+        let payload = read_raw_reply(&mut s).expect("oversized length earns a typed reject");
+        assert_bad_request(&payload, "length", "oversized length");
+    }
+
+    // 3. Truncated length prefix, then disconnect: nothing to reply to,
+    //    the worker just reaps the connection.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"HCKW").unwrap();
+        s.write_all(&[1, 2, 3]).unwrap();
+        drop(s);
+    }
+
+    // 4. Disconnect mid-payload: header promises 64 bytes, 10 arrive.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"HCKW").unwrap();
+        s.write_all(&64u64.to_le_bytes()).unwrap();
+        s.write_all(&[7u8; 10]).unwrap();
+        drop(s);
+    }
+
+    // 5. A well-framed frame with an unknown command tag: typed reject,
+    //    but the framing is intact so the connection stays usable.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"HCKW").unwrap();
+        s.write_all(&1u64.to_le_bytes()).unwrap();
+        s.write_all(&[99]).unwrap();
+        let payload = read_raw_reply(&mut s).expect("unknown tag earns a typed reject");
+        assert_eq!(payload[0], 0x82, "unknown tag: want REPLY_ERR");
+        // Same connection, now a valid hello (tag 3): still served.
+        s.write_all(b"HCKW").unwrap();
+        s.write_all(&1u64.to_le_bytes()).unwrap();
+        s.write_all(&[3]).unwrap();
+        let payload = read_raw_reply(&mut s).expect("hello after reject still answered");
+        assert_eq!(payload[0], 0x84, "want REPLY_HELLO after an in-band reject");
+    }
+
+    // After the whole gauntlet, the worker still serves real requests
+    // through the typed client — the abuse cost only its own sockets.
+    let client = RemoteWorkerClient::new(&addr, Duration::from_millis(2000));
+    let hello = client.hello().expect("worker alive after gauntlet");
+    assert_eq!(hello.shards.len(), n_shards);
+    assert_eq!(hello.dim, 3);
+    let q = Mat::from_fn(3, 3, |_, j| 0.2 + 0.1 * j as f64);
+    let block = client
+        .predict_shard(hello.shards[0].0, &q, Want::mean_only())
+        .expect("predict after gauntlet");
+    assert_eq!(block.mean.rows(), 3);
+    assert!(block.mean.row(0).iter().all(|v| v.is_finite()));
+    let stats = client.stats().expect("stats after gauntlet");
+    assert_eq!(stats.len(), n_shards);
+    worker.shutdown();
 }

@@ -1,0 +1,199 @@
+//! Distributed serving acceptance: remote shard workers + the
+//! balancing router against the in-process reference.
+//!
+//! - remote == in-process ≤1e-10 for mean **and** variance at every cut
+//!   depth (the `HCKW` wire must be numerically invisible);
+//! - killing a replicated worker mid-stream fails over to the replica
+//!   and still returns correct results;
+//! - killing an unreplicated worker yields a typed
+//!   `PredictError::Shard` — never a panic, never NaN rows.
+
+use hck::coordinator::Predictor;
+use hck::hkernel::HConfig;
+use hck::infer::{PredictRequest, Want};
+use hck::kernels::Gaussian;
+use hck::linalg::Mat;
+use hck::model::{fit, load_any, Model, ModelSpec};
+use hck::shard::{
+    boundary_nodes, split_predictor, RemoteShardedPredictor, RemoteWorker, ShardRouter,
+};
+use hck::util::rng::Rng;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_millis(2000);
+
+fn toy(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_fn(n, d, |_, _| rng.uniform(0.0, 1.0));
+    let y: Vec<f64> =
+        (0..n).map(|i| (4.0 * x[(i, 0)]).sin() + 0.05 * rng.normal()).collect();
+    (x, y)
+}
+
+fn hcfg(r: usize, seed: u64) -> HConfig {
+    let mut cfg = HConfig::new(Gaussian::new(0.4), r).with_seed(seed);
+    cfg.n0 = r;
+    cfg.lambda_prime = 0.0;
+    cfg
+}
+
+/// Fit a GP artifact and round-trip it through disk, so the workers
+/// serve persisted state like a real deployment.
+fn gp_artifact(tag: &str) -> Box<dyn Model> {
+    let (x, y) = toy(240, 3, 7);
+    let train = hck::data::Dataset::new("toy", x, y, hck::data::Task::Regression).unwrap();
+    let ranges: Vec<(f64, f64)> = (0..3).map(|_| (0.0, 1.0)).collect();
+    let spec = ModelSpec::gp(hcfg(8, 3), 0.05).with_normalization(ranges);
+    let model = fit(&spec, &train).unwrap();
+    let path =
+        std::env::temp_dir().join(format!("hck_remote_{tag}_{}.hckm", std::process::id()));
+    let path = path.to_string_lossy().into_owned();
+    model.save(&path).unwrap();
+    let loaded = load_any(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    loaded
+}
+
+/// Serve a full replica (every shard of the cut) on an ephemeral
+/// loopback port, with the model's shared variance state.
+fn full_replica(model: &dyn Model, cut: usize) -> RemoteWorker {
+    let pred = model.hierarchical_predictor().unwrap();
+    let shards = split_predictor(pred, cut);
+    RemoteWorker::serve("127.0.0.1:0", shards, model.variance_state()).unwrap()
+}
+
+fn router_at(model: &dyn Model, cut: usize) -> ShardRouter {
+    let tree = &model.hierarchical_predictor().unwrap().factors().tree;
+    ShardRouter::new(tree, &boundary_nodes(tree, cut))
+}
+
+fn connect(
+    model: &dyn Model,
+    cut: usize,
+    workers: &[String],
+) -> RemoteShardedPredictor {
+    RemoteShardedPredictor::connect(router_at(model, cut), workers, TIMEOUT)
+        .unwrap()
+        .with_normalization(model.schema().normalization.clone())
+}
+
+#[test]
+fn remote_matches_in_process_at_every_cut_depth() {
+    let model = gp_artifact("depths");
+    let mut rng = Rng::new(5);
+    let q = Mat::from_fn(40, 3, |_, _| rng.uniform(0.0, 1.0));
+    let req =
+        PredictRequest::new(q.clone(), Want::mean_only().with_variance().with_leaf_route());
+    let reference = model.predict(&req).unwrap();
+    let ref_var = reference.variance.as_ref().unwrap();
+    let ref_routes = reference.routes.as_ref().unwrap();
+
+    let depth = model.hierarchical_predictor().unwrap().factors().tree.depth();
+    for cut in 0..=depth {
+        let worker = full_replica(model.as_ref(), cut);
+        let remote = connect(model.as_ref(), cut, &[worker.addr()]);
+        assert_eq!(remote.shards(), remote.replica_counts().len());
+        let got = remote.predict(&req).unwrap();
+        let got_var = got.variance.as_ref().unwrap();
+        let got_routes = got.routes.as_ref().unwrap();
+        for i in 0..q.rows() {
+            assert!(
+                (got.mean[(i, 0)] - reference.mean[(i, 0)]).abs()
+                    <= 1e-10 * (1.0 + reference.mean[(i, 0)].abs()),
+                "depth {cut} query {i} mean: {} vs {}",
+                got.mean[(i, 0)],
+                reference.mean[(i, 0)]
+            );
+            assert!(
+                (got_var[i] - ref_var[i]).abs() <= 1e-10 * (1.0 + ref_var[i].abs()),
+                "depth {cut} query {i} variance: {} vs {}",
+                got_var[i],
+                ref_var[i]
+            );
+            assert_eq!(
+                (got_routes[i].rows_lo, got_routes[i].rows_hi),
+                (ref_routes[i].rows_lo, ref_routes[i].rows_hi),
+                "depth {cut} query {i} route"
+            );
+            assert!(got_routes[i].shard.is_some());
+        }
+        worker.shutdown();
+    }
+}
+
+#[test]
+fn killed_replica_fails_over_with_correct_results() {
+    let model = gp_artifact("failover");
+    let cut = 1;
+    let w1 = full_replica(model.as_ref(), cut);
+    let w2 = full_replica(model.as_ref(), cut);
+    let remote = connect(model.as_ref(), cut, &[w1.addr(), w2.addr()]);
+    assert!(remote.replica_counts().iter().all(|&r| r == 2), "{:?}", remote.replica_counts());
+
+    let mut rng = Rng::new(11);
+    let q = Mat::from_fn(24, 3, |_, _| rng.uniform(0.0, 1.0));
+    let req = PredictRequest::new(q.clone(), Want::mean_only().with_variance());
+    let reference = model.predict(&req).unwrap();
+    let ref_var = reference.variance.as_ref().unwrap();
+
+    let check = |got: &hck::infer::PredictResponse, label: &str| {
+        let got_var = got.variance.as_ref().unwrap();
+        for i in 0..q.rows() {
+            assert!(
+                (got.mean[(i, 0)] - reference.mean[(i, 0)]).abs()
+                    <= 1e-10 * (1.0 + reference.mean[(i, 0)].abs()),
+                "{label} query {i} mean"
+            );
+            assert!(got.mean[(i, 0)].is_finite(), "{label} query {i}: NaN mean");
+            assert!(
+                (got_var[i] - ref_var[i]).abs() <= 1e-10 * (1.0 + ref_var[i].abs()),
+                "{label} query {i} variance"
+            );
+        }
+    };
+
+    // Both replicas up: correct results, connections warm.
+    check(&remote.predict(&req).unwrap(), "both replicas");
+    // Kill one worker mid-stream. The router's next predict hits a dead
+    // socket (or a refused reconnect) on that replica and must fail
+    // over — repeatedly, so replica scoring can't route back into the
+    // corpse.
+    w1.shutdown();
+    for round in 0..3 {
+        check(&remote.predict(&req).unwrap(), &format!("post-kill round {round}"));
+    }
+    // The metrics view agrees: one worker unreachable, one up.
+    let workers = remote.worker_metrics();
+    assert_eq!(workers.len(), 2);
+    assert_eq!(workers.iter().filter(|w| w.reachable).count(), 1);
+    w2.shutdown();
+}
+
+#[test]
+fn unreplicated_worker_death_is_a_typed_shard_error() {
+    let model = gp_artifact("typed");
+    let cut = 1;
+    let worker = full_replica(model.as_ref(), cut);
+    let remote = connect(model.as_ref(), cut, &[worker.addr()]);
+
+    let mut rng = Rng::new(13);
+    let q = Mat::from_fn(8, 3, |_, _| rng.uniform(0.0, 1.0));
+    let req = PredictRequest::new(q, Want::mean_only());
+    assert!(remote.predict(&req).is_ok());
+
+    worker.shutdown();
+    // Every subsequent predict is a typed shard failure naming the
+    // shard — never a panic, never NaN rows.
+    for _ in 0..2 {
+        let err = match remote.predict(&req) {
+            Err(e) => e,
+            Ok(_) => panic!("predict after worker death must fail with a typed error"),
+        };
+        assert_eq!(err.kind(), "shard_failure");
+        assert!(
+            err.message().contains("replica"),
+            "error should describe exhausted replicas: {}",
+            err.message()
+        );
+    }
+}

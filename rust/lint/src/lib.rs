@@ -31,8 +31,8 @@
 //!   tracer implementation) are exempt from the use scan.
 //! * `thread-spawn` — `std::thread::spawn` / `thread::Builder` are
 //!   confined to `util/parallel.rs`, `shard/worker.rs`,
-//!   `shard/remote.rs`, and `coordinator/`; everything else goes
-//!   through the pool.
+//!   `shard/remote.rs`, `shard/balance.rs`, and `coordinator/`;
+//!   everything else goes through the pool.
 //! * `bad-allow` — the escape hatch itself is linted: an allow must
 //!   name a known rule and carry a non-empty reason.
 //!
@@ -66,7 +66,7 @@ pub const RULES: &[(&str, &str)] = &[
     (
         "thread-spawn",
         "no thread::spawn/thread::Builder outside util/parallel.rs, shard/worker.rs, \
-         shard/remote.rs, coordinator/",
+         shard/remote.rs, shard/balance.rs, coordinator/",
     ),
     (
         "bad-allow",
@@ -559,11 +559,14 @@ fn is_serving_path(rel: &str) -> bool {
 
 fn spawn_allowed_path(rel: &str) -> bool {
     // shard/remote.rs hosts the accept loop + per-connection handler
-    // threads of the remote worker endpoint — network threads, not
-    // compute, so they stay off the pool by design (like serve_tcp's).
+    // threads of the remote worker endpoint, and shard/balance.rs the
+    // replica supervisor + detached hedge threads — network threads,
+    // not compute, so they stay off the pool by design (like
+    // serve_tcp's).
     rel == "util/parallel.rs"
         || rel == "shard/worker.rs"
         || rel == "shard/remote.rs"
+        || rel == "shard/balance.rs"
         || rel.starts_with("coordinator/")
 }
 
@@ -702,7 +705,8 @@ fn lint_file(f: &SourceFile, file_idx: usize, findings: &mut Vec<Finding>, uses:
                         "thread-spawn",
                         format!(
                             "`{tok}` outside util/parallel.rs, shard/worker.rs, \
-                             shard/remote.rs, coordinator/; use the worker pool"
+                             shard/remote.rs, shard/balance.rs, coordinator/; use \
+                             the worker pool"
                         ),
                     );
                 }

@@ -123,6 +123,16 @@ pub struct WorkerSnapshot {
     pub reconnects: u64,
     /// Whether the worker answered the stats poll behind this snapshot.
     pub reachable: bool,
+    /// Replica lifecycle state: `active`, `draining`, or `retired`.
+    pub state: String,
+    /// How many times this worker's circuit breaker opened (consecutive
+    /// predict failures reached the threshold).
+    pub breaker_opens: u64,
+    /// How many times this worker was asked to drain.
+    pub drains: u64,
+    /// Straggling sub-batches re-issued from this worker to a sibling
+    /// replica (the worker was the slow side of a hedge).
+    pub hedges: u64,
     /// The worker's per-shard counters (empty when unreachable).
     pub shards: Vec<ShardSnapshot>,
 }
@@ -134,6 +144,10 @@ impl WorkerSnapshot {
             ("worker", Json::Str(self.worker.clone())),
             ("reconnects", Json::Num(self.reconnects as f64)),
             ("reachable", Json::Bool(self.reachable)),
+            ("state", Json::Str(self.state.clone())),
+            ("breaker_opens", Json::Num(self.breaker_opens as f64)),
+            ("drains", Json::Num(self.drains as f64)),
+            ("hedges", Json::Num(self.hedges as f64)),
             ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
         ])
     }
@@ -339,6 +353,42 @@ pub fn render_prometheus(
                 w.worker, w.reconnects
             );
         }
+        // Lifecycle as a one-hot state-set gauge (the Prometheus idiom
+        // for enums): exactly one series per worker carries a 1.
+        let _ = writeln!(out, "# TYPE hck_worker_state gauge");
+        for w in &snap.workers {
+            for state in ["active", "draining", "retired"] {
+                let _ = writeln!(
+                    out,
+                    "hck_worker_state{{worker=\"{}\",state=\"{state}\"}} {}",
+                    w.worker,
+                    u8::from(w.state == state)
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE hck_worker_breaker_open_total counter");
+        for w in &snap.workers {
+            let _ = writeln!(
+                out,
+                "hck_worker_breaker_open_total{{worker=\"{}\"}} {}",
+                w.worker, w.breaker_opens
+            );
+        }
+        let _ = writeln!(out, "# TYPE hck_worker_drains_total counter");
+        for w in &snap.workers {
+            let _ = writeln!(
+                out,
+                "hck_worker_drains_total{{worker=\"{}\"}} {}",
+                w.worker, w.drains
+            );
+        }
+        // Hedges are counted against the straggling worker; the total
+        // is the fleet-wide number of re-issued sub-batches.
+        let _ = writeln!(
+            out,
+            "# TYPE hck_hedges_total counter\nhck_hedges_total {}",
+            snap.workers.iter().map(|w| w.hedges).sum::<u64>()
+        );
         // The same per-shard series as the local block above, but with a
         // `worker` label: replicated shards appear once per replica.
         let _ = writeln!(out, "# TYPE hck_shard_queue_wait_ns gauge");
@@ -523,6 +573,10 @@ mod tests {
             worker: "127.0.0.1:7981".into(),
             reconnects: 2,
             reachable: true,
+            state: "active".into(),
+            breaker_opens: 0,
+            drains: 0,
+            hedges: 3,
             shards: vec![ShardSnapshot {
                 shard: 1,
                 rows_lo: 64,
@@ -541,6 +595,10 @@ mod tests {
             worker: "127.0.0.1:7982".into(),
             reconnects: 0,
             reachable: false,
+            state: "draining".into(),
+            breaker_opens: 1,
+            drains: 1,
+            hedges: 2,
             shards: Vec::new(),
         });
         let parsed = Json::parse(&snap.to_json().encode()).unwrap();
@@ -557,6 +615,12 @@ mod tests {
             "hck_shard_queue_wait_ns{worker=\"127.0.0.1:7981\",shard=\"1\"} 120",
             "hck_shard_busy_frac{worker=\"127.0.0.1:7981\",shard=\"1\"} 0.75",
             "hck_shard_queue_depth{worker=\"127.0.0.1:7981\",shard=\"1\"} 3",
+            "hck_worker_state{worker=\"127.0.0.1:7981\",state=\"active\"} 1",
+            "hck_worker_state{worker=\"127.0.0.1:7981\",state=\"draining\"} 0",
+            "hck_worker_state{worker=\"127.0.0.1:7982\",state=\"draining\"} 1",
+            "hck_worker_breaker_open_total{worker=\"127.0.0.1:7982\"} 1",
+            "hck_worker_drains_total{worker=\"127.0.0.1:7982\"} 1",
+            "hck_hedges_total 5",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

@@ -111,6 +111,7 @@ pub fn handle_line(line: &str, svc: &PredictionService, stop: &AtomicBool) -> Js
             "metrics_text" => metrics_text_reply(svc),
             "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
             "schema" => schema_reply(svc),
+            "worker_add" | "worker_drain" | "workers" => admin_reply(cmd, &parsed, svc),
             "shutdown" => {
                 // ORDERING: SeqCst — single shutdown store; pairs with
                 // the accept-loop and per-connection loads above.
@@ -168,6 +169,24 @@ fn metrics_text_reply(svc: &PredictionService) -> Json {
         ("content_type", Json::Str("text/plain; version=0.0.4".into())),
         ("text", Json::Str(super::metrics::render_prometheus(&snap, &pool))),
     ])
+}
+
+/// The `worker_add` / `worker_drain` / `workers` admin commands:
+/// replica-lifecycle control forwarded to the predictor. `worker_add`
+/// and `worker_drain` take the target in `addr`; predictors without a
+/// dynamic topology answer with a typed `unsupported` error.
+fn admin_reply(cmd: &str, parsed: &Json, svc: &PredictionService) -> Json {
+    let addr = parsed.get("addr").and_then(|a| a.as_str()).unwrap_or("");
+    if addr.is_empty() && cmd != "workers" {
+        return Json::obj(vec![(
+            "error",
+            Json::Str(format!("cmd '{cmd}' needs an 'addr' field")),
+        )]);
+    }
+    match svc.admin(cmd, addr) {
+        Ok(reply) => reply,
+        Err(e) => Json::obj(vec![("error", e.to_json())]),
+    }
 }
 
 /// The `schema` command: dimension, outputs, capability set, supported
@@ -385,6 +404,25 @@ mod tests {
         let out = handle_line(r#"{"features": [3.0, 1.0]}"#, &s, &stop);
         assert_eq!(out.get("prediction").unwrap().to_f64s().unwrap(), vec![6.0]);
         assert!(out.get("latency_ms").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn admin_commands_answer_typed_errors_without_a_registry() {
+        let s = svc();
+        let stop = AtomicBool::new(false);
+        // Lifecycle verbs need a target address.
+        let bad = handle_line(r#"{"cmd": "worker_add"}"#, &s, &stop);
+        assert!(bad.get("error").unwrap().as_str().unwrap().contains("addr"));
+        // Echo has no dynamic replica topology: typed unsupported error.
+        let out =
+            handle_line(r#"{"cmd": "worker_drain", "addr": "127.0.0.1:1"}"#, &s, &stop);
+        let err = out.get("error").unwrap();
+        assert_eq!(err.get("kind").and_then(|k| k.as_str()), Some("unsupported"));
+        let ws = handle_line(r#"{"cmd": "workers"}"#, &s, &stop);
+        assert_eq!(
+            ws.get("error").unwrap().get("kind").and_then(|k| k.as_str()),
+            Some("unsupported")
+        );
     }
 
     #[test]

@@ -61,6 +61,17 @@ pub trait Predictor: Send + Sync + 'static {
         Vec::new()
     }
 
+    /// Runtime administration hook (the TCP `worker_add` /
+    /// `worker_drain` / `workers` protocol commands). Predictors
+    /// without a dynamic replica topology refuse every command;
+    /// [`crate::shard::RemoteShardedPredictor`] implements the
+    /// lifecycle verbs.
+    fn admin(&self, cmd: &str, _arg: &str) -> crate::infer::InferResult<Json> {
+        Err(crate::infer::PredictError::Unsupported(format!(
+            "admin command '{cmd}' is not supported by this predictor"
+        )))
+    }
+
     /// Mean-only convenience (benches/tests); panics on a rejected
     /// request — use [`Predictor::predict`] for typed errors.
     fn predict_batch(&self, q: &Mat) -> Mat {
@@ -217,6 +228,12 @@ impl PredictionService {
     /// The predictor's full schema JSON, when it wraps an artifact.
     pub fn schema_json(&self) -> Option<Json> {
         self.model.schema_json()
+    }
+
+    /// Forward a runtime admin command to the predictor (replica
+    /// lifecycle, when the predictor has one).
+    pub fn admin(&self, cmd: &str, arg: &str) -> crate::infer::InferResult<Json> {
+        self.model.admin(cmd, arg)
     }
 
     /// Service-level counters with the predictor's per-shard counters

@@ -198,6 +198,15 @@ pub enum PredictError {
         /// What happened.
         message: String,
     },
+    /// The worker is draining: it finishes in-flight batches but
+    /// accepts no new ones (the `drain` wire command). The remote
+    /// router treats this like a transport failure for routing — the
+    /// next replica absorbs the sub-batch — while the distinct kind
+    /// lets operators tell a planned handoff from a real outage.
+    Draining {
+        /// The draining worker's address (host:port).
+        worker: String,
+    },
     /// Anything else (factorization failure, dead service).
     Internal(String),
 }
@@ -210,6 +219,7 @@ impl PredictError {
             PredictError::Unsupported(_) => "unsupported",
             PredictError::Shard { .. } => "shard_failure",
             PredictError::Transport { .. } => "transport",
+            PredictError::Draining { .. } => "draining",
             PredictError::Internal(_) => "internal",
         }
     }
@@ -226,6 +236,9 @@ impl PredictError {
         if let PredictError::Transport { worker, .. } = self {
             pairs.push(("worker", Json::Str(worker.clone())));
         }
+        if let PredictError::Draining { worker } = self {
+            pairs.push(("worker", Json::Str(worker.clone())));
+        }
         Json::obj(pairs)
     }
 
@@ -240,6 +253,9 @@ impl PredictError {
             }
             PredictError::Transport { worker, message } => {
                 format!("worker {worker}: {message}")
+            }
+            PredictError::Draining { worker } => {
+                format!("worker {worker}: draining (not accepting new batches)")
             }
         }
     }

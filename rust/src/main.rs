@@ -629,6 +629,44 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             None,
         ),
         opt("worker-timeout-ms", "per-worker request timeout (ms)", Some("2000")),
+        opt(
+            "stats-timeout-ms",
+            "per-worker stats-poll timeout (ms; shorter than the request timeout so a \
+             hung worker cannot stall load refresh)",
+            Some("250"),
+        ),
+        opt(
+            "hedge-ms",
+            "re-issue a straggling sub-batch to a sibling replica after this many ms \
+             (0 = off; default: auto, 2x recent p95)",
+            None,
+        ),
+        opt(
+            "breaker-failures",
+            "consecutive predict failures that open a worker's circuit breaker",
+            Some("5"),
+        ),
+        opt(
+            "breaker-cooldown-ms",
+            "how long an open breaker fast-fails before a half-open probe (ms)",
+            Some("1000"),
+        ),
+        opt(
+            "standby",
+            "comma-separated standby shard-worker host:port list the supervisor may \
+             attach under load",
+            None,
+        ),
+        opt(
+            "attach-busy",
+            "attach the next standby when peak worker busy fraction exceeds this",
+            Some("0.75"),
+        ),
+        opt(
+            "retire-busy",
+            "drain a redundant replica when peak busy fraction falls below this (0 = never)",
+            Some("0"),
+        ),
         opt("max-batch", "dynamic batch size cap", Some("64")),
         opt("max-wait-ms", "batching window (ms)", Some("2")),
         opt("shards", "cut an in-process shard layer from --model (0 = off)", Some("0")),
@@ -687,13 +725,49 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         }
         (None, Some(dir)) if workers.is_some() => {
             // Remote fan-out: route locally, predict on the workers,
-            // balance across replicas, fail over when one dies.
+            // balance across replicas, fail over when one dies, hedge
+            // stragglers, and supervise the replica lifecycle.
             let addrs = workers.unwrap_or_default();
             let timeout = std::time::Duration::from_millis(
                 a.u64("worker-timeout-ms").map_err(Error::Config)?,
             );
-            let remote =
-                hck::shard::RemoteShardedPredictor::connect_dir(dir, &addrs, timeout)?;
+            let cfg = hck::shard::ResilienceConfig {
+                breaker_failures: a
+                    .usize("breaker-failures")
+                    .map_err(Error::Config)? as u32,
+                breaker_cooldown: std::time::Duration::from_millis(
+                    a.u64("breaker-cooldown-ms").map_err(Error::Config)?,
+                ),
+                hedge_after_ms: a
+                    .get("hedge-ms")
+                    .map(|v| v.parse::<u64>().map_err(|_| anyhow!("bad --hedge-ms '{v}'")))
+                    .transpose()?,
+                stats_timeout: std::time::Duration::from_millis(
+                    a.u64("stats-timeout-ms").map_err(Error::Config)?,
+                ),
+                ..Default::default()
+            };
+            let standby: Vec<String> = a
+                .get("standby")
+                .map(|w| {
+                    w.split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default();
+            let scale = if standby.is_empty() {
+                None
+            } else {
+                Some(hck::shard::ScalePolicy {
+                    standby,
+                    attach_busy: a.f64("attach-busy").map_err(Error::Config)?,
+                    retire_busy: a.f64("retire-busy").map_err(Error::Config)?,
+                })
+            };
+            let remote = hck::shard::RemoteShardedPredictor::connect_dir_with(
+                dir, &addrs, timeout, cfg, scale,
+            )?;
             eprintln!(
                 "remote serving: {} shards across {} worker(s), replicas per shard {:?}",
                 remote.shards(),

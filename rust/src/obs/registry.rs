@@ -20,6 +20,7 @@
 
 /// `(name, category)` of every span the library records, sorted by name.
 pub const SPANS: &[(&str, &str)] = &[
+    ("balance.scale", "balance"),
     ("blas.par_gemm", "blas"),
     ("blas.par_syrk", "blas"),
     ("coord.batch", "coord"),
@@ -28,6 +29,8 @@ pub const SPANS: &[(&str, &str)] = &[
     ("coord.queue_wait", "coord"),
     ("factor.leaves", "train"),
     ("factor.level", "train"),
+    ("remote.drain", "remote"),
+    ("remote.hedge", "remote"),
     ("remote.retry", "remote"),
     ("remote.send", "remote"),
     ("remote.wait", "remote"),

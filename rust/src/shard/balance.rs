@@ -1,4 +1,5 @@
-//! Replica-aware remote fan-out: [`RemoteShardedPredictor`].
+//! Replica-aware remote fan-out with a self-healing lifecycle:
+//! [`RemoteShardedPredictor`].
 //!
 //! The remote counterpart of [`super::ShardedPredictor`]: the same
 //! [`super::ShardRouter`] scatter and request-order gather, but each
@@ -6,28 +7,48 @@
 //! ([`crate::shard::remote`]) to whichever `hck shard-worker` process
 //! currently looks least loaded among the shard's replicas.
 //!
-//! **Replication.** Workers announce which shards they serve at
-//! `hello`; any shard served by several workers has replicas. The
-//! replica map is built once at [`RemoteShardedPredictor::connect`],
-//! which also rejects topologies with uncovered shards or workers that
-//! disagree on dim/outputs.
+//! **Dynamic registry.** The worker set is no longer frozen at connect:
+//! every worker lives in a registry entry with a lifecycle state —
+//! `active` (serving), `draining` (finishing in-flight work, no new
+//! batches), `retired` (kept only for metrics continuity). Replicas can
+//! be attached ([`RemoteShardedPredictor::attach_worker`]) and drained
+//! ([`RemoteShardedPredictor::drain_worker`]) at runtime, by the
+//! operator (the `worker_add`/`worker_drain` admin protocol commands)
+//! or by the supervisor's [`ScalePolicy`].
 //!
-//! **Rebalancing.** Every [`STATS_EVERY`]-th predict refreshes each
-//! worker's cached load signals via the `stats` wire command
-//! (queue-depth sum, peak busy fraction from the per-shard
-//! [`crate::coordinator::metrics::ShardSnapshot`]s). A sub-batch then
-//! goes to the replica with the lowest score: locally-outstanding
-//! requests + remote queue depth, busy fraction as tie-break.
+//! **Supervisor.** A background loop ticks every
+//! [`ResilienceConfig::supervise_every`]: it refreshes worker load
+//! signals, retires draining replicas whose outstanding count reached
+//! zero, and — when a [`ScalePolicy`] is configured — attaches standby
+//! replicas under sustained load and drains redundant ones when load
+//! subsides. [`RemoteShardedPredictor::reconcile`] runs the same pass
+//! synchronously, so tests and admin commands never sleep-as-sync.
 //!
-//! **Failover.** A replica that fails with a *transport* or
-//! *shard-local* error merely moves the sub-batch to the next replica
-//! in score order; only when every replica of a shard has failed does
-//! the request surface a typed [`PredictError::Shard`] naming the shard
-//! and the last cause. Request-shaped errors (bad request, unsupported
-//! column) return immediately — every replica would refuse them the
-//! same way.
+//! **Drain/handoff.** Draining is two-sided: the router stops routing
+//! new sub-batches to the replica *and* sends the `drain` wire command
+//! so the worker refuses predicts from any other router. In-flight
+//! requests finish normally and the entry only moves to `retired` once
+//! its outstanding count hits zero — a rebalance never drops a request.
+//!
+//! **Circuit breakers + hedging.** Each replica carries a breaker
+//! ([`crate::shard::remote::BreakerConfig`]): consecutive predict
+//! failures open it, predicts fast-fail and route around until a
+//! half-open probe succeeds. Separately, when a shard has ≥2 usable
+//! replicas, a sub-batch that straggles past the hedge deadline
+//! (fixed via [`ResilienceConfig::hedge_after_ms`], or derived as
+//! 2 × the recent p95 latency) is re-issued to a sibling replica and
+//! the first answer wins — both replicas compute the same block, so
+//! the hedge is numerically invisible.
+//!
+//! **Failover.** A replica that fails with a *transport*, *shard-local*
+//! or *draining* error merely moves the sub-batch to the next replica
+//! in score order; only when every active replica of a shard has failed
+//! does the request surface a typed [`PredictError::Shard`] naming the
+//! shard and the last cause. Request-shaped errors (bad request,
+//! unsupported column) return immediately — every replica would refuse
+//! them the same way.
 
-use super::remote::RemoteWorkerClient;
+use super::remote::{BreakerConfig, RemoteWorkerClient};
 use super::router::ShardRouter;
 use super::ShardBlock;
 use crate::coordinator::metrics::{ShardSnapshot, WorkerSnapshot};
@@ -37,83 +58,610 @@ use crate::infer::{
     Capabilities, InferResult, PredictError, PredictRequest, PredictResponse, Want,
 };
 use crate::linalg::Mat;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::obs;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Refresh the cached worker load signals every this many predicts (the
-/// first predict primes them).
+/// first predict primes them; the supervisor refreshes on its own tick
+/// as well, so idle periods stay fresh too).
 const STATS_EVERY: u64 = 16;
 
-/// A [`Predictor`] that fans each batch out to remote shard workers,
-/// balancing across replicas and failing over when one dies mid-batch.
-pub struct RemoteShardedPredictor {
+/// Ring capacity of the recent shard-eval latency window (hedge
+/// deadline source).
+const LAT_RING: usize = 512;
+
+/// Samples required before an auto-derived hedge deadline activates —
+/// hedging off a cold estimate would double-send half the warmup.
+const LAT_WARMUP: usize = 32;
+
+/// Lifecycle states of a registry entry (an `AtomicU8`).
+const STATE_ACTIVE: u8 = 0;
+const STATE_DRAINING: u8 = 1;
+const STATE_RETIRED: u8 = 2;
+
+fn state_name(state: u8) -> &'static str {
+    match state {
+        STATE_DRAINING => "draining",
+        STATE_RETIRED => "retired",
+        _ => "active",
+    }
+}
+
+/// Resilience knobs for the remote fan-out.
+#[derive(Debug, Clone, Copy)]
+pub struct ResilienceConfig {
+    /// Consecutive predict failures that open a replica's breaker.
+    pub breaker_failures: u32,
+    /// How long an open breaker fast-fails before a half-open probe.
+    pub breaker_cooldown: Duration,
+    /// Hedge deadline: `None` derives 2×p95 from recent latencies
+    /// (after warmup), `Some(0)` disables hedging, `Some(ms)` is a
+    /// fixed deadline.
+    pub hedge_after_ms: Option<u64>,
+    /// Reply deadline for the background stats poll (shorter than the
+    /// predict timeout so a hung worker cannot stall signal refresh).
+    pub stats_timeout: Duration,
+    /// Supervisor tick period (drain reconciliation, stats refresh,
+    /// scale policy).
+    pub supervise_every: Duration,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            breaker_failures: 5,
+            breaker_cooldown: Duration::from_secs(1),
+            hedge_after_ms: None,
+            stats_timeout: Duration::from_millis(250),
+            supervise_every: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Autoscaling policy the supervisor applies: attach standby replicas
+/// under sustained load, drain redundant ones when it subsides.
+#[derive(Debug, Clone, Default)]
+pub struct ScalePolicy {
+    /// Standby worker addresses the supervisor may attach, in order.
+    pub standby: Vec<String>,
+    /// Attach the next standby when the peak per-worker busy fraction
+    /// exceeds this (0 disables attaching).
+    pub attach_busy: f64,
+    /// Drain the most recently attached redundant replica when the
+    /// peak busy fraction falls below this (0 disables retiring).
+    pub retire_busy: f64,
+}
+
+/// One registry entry: a worker client plus its lifecycle state and the
+/// shards it announced at handshake.
+struct WorkerEntry {
+    client: Arc<RemoteWorkerClient>,
+    shards: Vec<usize>,
+    state: AtomicU8,
+}
+
+impl WorkerEntry {
+    fn state(&self) -> u8 {
+        // ORDERING: SeqCst — lifecycle control plane; pairs with the
+        // stores in Core::drain / Core::reconcile.
+        self.state.load(Ordering::SeqCst)
+    }
+
+    fn set_state(&self, s: u8) {
+        // ORDERING: SeqCst — lifecycle control plane; pairs with the
+        // loads in WorkerEntry::state.
+        self.state.store(s, Ordering::SeqCst)
+    }
+}
+
+/// Recent shard-eval latency ring (ns), feeding the hedge deadline.
+struct LatWindow {
+    buf: Vec<u64>,
+    pos: usize,
+}
+
+/// Shared state between the predictor, its fan-out threads, and the
+/// supervisor.
+struct Core {
     router: ShardRouter,
-    /// Clients serving each shard, indexed by shard id (≥1 per shard,
-    /// enforced at connect).
-    replicas: Vec<Vec<Arc<RemoteWorkerClient>>>,
-    /// Every distinct worker, for stats polling and metrics.
-    clients: Vec<Arc<RemoteWorkerClient>>,
+    workers: RwLock<Vec<Arc<WorkerEntry>>>,
     dim: usize,
     outputs: usize,
     /// Whether **every** worker can serve the variance column (the
-    /// capability is the AND across workers — any replica may be asked).
+    /// capability is the AND across workers — any replica may be
+    /// asked; attach rejects workers that would break it).
     variance: bool,
-    normalization: Option<Vec<(f64, f64)>>,
+    timeout: Duration,
+    cfg: ResilienceConfig,
+    policy: Option<ScalePolicy>,
     /// Predict counter driving the stats-refresh cadence.
     polls: AtomicU64,
+    lat: Mutex<LatWindow>,
+}
+
+impl Core {
+    fn entries(&self) -> Vec<Arc<WorkerEntry>> {
+        // A panicking writer cannot corrupt a Vec<Arc<_>> beyond its
+        // own aborted mutation; recover the data through the poison so
+        // serving never deadlocks on a poisoned registry.
+        let g = match self.workers.read() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        };
+        g.clone()
+    }
+
+    /// One synchronous supervisor pass: retire drained replicas,
+    /// refresh load signals, apply the scale policy.
+    fn supervise(&self) {
+        self.reconcile();
+        self.refresh_stats();
+        self.apply_policy();
+    }
+
+    /// Move draining entries whose outstanding count reached zero to
+    /// `retired` — the drain-completion edge of the lifecycle.
+    fn reconcile(&self) {
+        for e in self.entries() {
+            if e.state() == STATE_DRAINING && e.client.outstanding() == 0 {
+                e.set_state(STATE_RETIRED);
+                let _sp = obs::span_with("remote.drain", "remote", || {
+                    format!("{{\"worker\":\"{}\",\"phase\":\"retired\"}}", e.client.addr())
+                });
+            }
+        }
+    }
+
+    /// Refresh every live worker's cached load signals (single attempt
+    /// each, short stats timeout — a dead worker keeps its stale score).
+    fn refresh_stats(&self) {
+        for e in self.entries() {
+            if e.state() != STATE_RETIRED {
+                let _ = e.client.stats();
+            }
+        }
+    }
+
+    /// Apply the scale policy, at most one action per tick: attach the
+    /// next absent standby when peak busy exceeds `attach_busy`; drain
+    /// the most recent redundant active replica when it falls below
+    /// `retire_busy`.
+    fn apply_policy(&self) {
+        let Some(policy) = &self.policy else { return };
+        let entries = self.entries();
+        let active: Vec<&Arc<WorkerEntry>> =
+            entries.iter().filter(|e| e.state() == STATE_ACTIVE).collect();
+        let peak_busy = active
+            .iter()
+            .map(|e| e.client.load_score().1 as f64 / 1e6)
+            .fold(0.0f64, f64::max);
+        if policy.attach_busy > 0.0 && peak_busy > policy.attach_busy {
+            let absent = policy.standby.iter().find(|addr| {
+                !entries
+                    .iter()
+                    .any(|e| e.client.addr() == addr.as_str() && e.state() != STATE_RETIRED)
+            });
+            if let Some(addr) = absent {
+                if let Err(e) = self.attach(addr) {
+                    eprintln!("balance: cannot attach standby {addr}: {e}");
+                }
+            }
+            return;
+        }
+        if policy.retire_busy > 0.0 && peak_busy < policy.retire_busy && active.len() > 1 {
+            // Most recently attached redundant replica first (reverse
+            // registry order), so scale-down unwinds scale-up.
+            let redundant = entries.iter().rev().find(|e| {
+                e.state() == STATE_ACTIVE
+                    && e.shards.iter().all(|&sid| {
+                        entries.iter().any(|o| {
+                            !Arc::ptr_eq(o, e)
+                                && o.state() == STATE_ACTIVE
+                                && o.shards.contains(&sid)
+                        })
+                    })
+            });
+            if let Some(e) = redundant {
+                let addr = e.client.addr().to_string();
+                if let Err(err) = self.drain(&addr) {
+                    eprintln!("balance: cannot drain {addr}: {err}");
+                }
+            }
+        }
+    }
+
+    /// Attach a worker at runtime: handshake, validate against the
+    /// topology, register as `active`. Rejects duplicates of a live
+    /// entry; a retired entry with the same address is replaced (so
+    /// Prometheus never sees two live series for one worker label).
+    fn attach(&self, addr: &str) -> Result<()> {
+        {
+            let g = match self.workers.read() {
+                Ok(g) => g,
+                Err(poison) => poison.into_inner(),
+            };
+            if g.iter().any(|e| e.client.addr() == addr && e.state() != STATE_RETIRED) {
+                return Err(Error::config(format!("worker {addr} is already attached")));
+            }
+        }
+        let (entry, dim_out, has_var) =
+            handshake(addr, self.timeout, &self.cfg, self.router.shards())?;
+        if dim_out != (self.dim, self.outputs) {
+            return Err(Error::data(format!(
+                "worker {addr} serves dim {} / outputs {} but this router serves {} / {}",
+                dim_out.0, dim_out.1, self.dim, self.outputs
+            )));
+        }
+        if self.variance && !has_var {
+            return Err(Error::data(format!(
+                "worker {addr} has no variance state but this router serves the \
+                 variance column"
+            )));
+        }
+        let _sp = obs::span_with("balance.scale", "balance", || {
+            format!("{{\"action\":\"attach\",\"worker\":\"{addr}\"}}")
+        });
+        let mut g = match self.workers.write() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        };
+        g.retain(|e| !(e.client.addr() == addr && e.state() == STATE_RETIRED));
+        g.push(entry);
+        Ok(())
+    }
+
+    /// Begin draining a worker: refuse if it is not active or if any of
+    /// its shards would be left with no active replica, then stop
+    /// routing to it and send the `drain` wire command. The supervisor
+    /// (or [`Core::reconcile`]) retires it once outstanding hits zero.
+    fn drain(&self, addr: &str) -> Result<()> {
+        let entries = self.entries();
+        let Some(target) = entries.iter().find(|e| e.client.addr() == addr) else {
+            return Err(Error::config(format!("no attached worker at {addr}")));
+        };
+        if target.state() != STATE_ACTIVE {
+            return Err(Error::config(format!(
+                "worker {addr} is {} — only active workers can drain",
+                state_name(target.state())
+            )));
+        }
+        for &sid in &target.shards {
+            let covered = entries.iter().any(|o| {
+                !Arc::ptr_eq(o, target) && o.state() == STATE_ACTIVE && o.shards.contains(&sid)
+            });
+            if !covered {
+                return Err(Error::config(format!(
+                    "draining {addr} would leave shard {sid} with no active replica"
+                )));
+            }
+        }
+        let _sp = obs::span_with("remote.drain", "remote", || {
+            format!("{{\"worker\":\"{addr}\",\"phase\":\"drain\"}}")
+        });
+        // Router-side gate first: no new sub-batch routes here from now
+        // on, even if the wire command below fails.
+        target.set_state(STATE_DRAINING);
+        target.client.note_drain();
+        if let Err(e) = target.client.drain_worker() {
+            eprintln!(
+                "balance: drain command to {addr} failed ({}); draining locally anyway",
+                e.message()
+            );
+        }
+        Ok(())
+    }
+
+    /// The usable replicas of a shard, least-loaded first; replicas
+    /// with a blocking (open, cooling-down) breaker sort last so the
+    /// balancer routes around them without burning their fast-fail.
+    fn replicas_for(&self, sid: usize) -> Vec<Arc<WorkerEntry>> {
+        let mut reps: Vec<Arc<WorkerEntry>> = self
+            .entries()
+            .into_iter()
+            .filter(|e| e.state() == STATE_ACTIVE && e.shards.contains(&sid))
+            .collect();
+        reps.sort_by_key(|e| (e.client.breaker_blocked(), e.client.load_score()));
+        reps
+    }
+
+    /// Record one successful shard-eval latency (ns) into the ring.
+    fn note_latency(&self, ns: u64) {
+        let mut g = match self.lat.lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        };
+        if g.buf.len() < LAT_RING {
+            g.buf.push(ns);
+        } else {
+            let pos = g.pos;
+            g.buf[pos] = ns;
+            g.pos = (pos + 1) % LAT_RING;
+        }
+    }
+
+    /// The current hedge deadline, if hedging is enabled and warm:
+    /// a fixed `hedge_after_ms`, or 2 × the recent p95 (floored at
+    /// 5 ms so noise cannot hedge every request), capped at the
+    /// predict timeout.
+    fn hedge_deadline(&self) -> Option<Duration> {
+        match self.cfg.hedge_after_ms {
+            Some(0) => None,
+            Some(ms) => Some(Duration::from_millis(ms).min(self.timeout)),
+            None => {
+                let sorted = {
+                    let g = match self.lat.lock() {
+                        Ok(g) => g,
+                        Err(poison) => poison.into_inner(),
+                    };
+                    if g.buf.len() < LAT_WARMUP {
+                        return None;
+                    }
+                    let mut v = g.buf.clone();
+                    v.sort_unstable();
+                    v
+                };
+                let idx = (sorted.len() * 95 / 100).min(sorted.len() - 1);
+                let ns = sorted[idx].saturating_mul(2).max(5_000_000);
+                Some(Duration::from_nanos(ns).min(self.timeout))
+            }
+        }
+    }
+
+    /// Refresh the cached per-worker load signals on a fixed predict
+    /// cadence (the supervisor also refreshes on its own tick).
+    fn maybe_refresh_stats(&self) {
+        // ORDERING: Relaxed — refresh-cadence heuristic only; stats
+        // results are published inside each client, not by this counter.
+        if self.polls.fetch_add(1, Ordering::Relaxed) % STATS_EVERY != 0 {
+            return;
+        }
+        self.refresh_stats();
+    }
+
+    /// Serve one shard's sub-batch, walking the shard's active replicas
+    /// from least to most loaded and failing over on transport,
+    /// shard-local, or draining errors. When ≥2 replicas are usable and
+    /// a hedge deadline is known, the least-loaded pair runs the hedged
+    /// protocol first.
+    fn eval_shard(&self, sid: usize, q: &Mat, want: Want) -> InferResult<ShardBlock> {
+        let reps = self.replicas_for(sid);
+        if reps.is_empty() {
+            return Err(PredictError::Shard {
+                shard: sid,
+                message: "shard has no active replica".into(),
+            });
+        }
+        let t = Instant::now();
+        let mut last: Option<PredictError> = None;
+        let mut k = 0usize;
+        if reps.len() >= 2 {
+            if let Some(deadline) = self.hedge_deadline() {
+                match self.eval_hedged(sid, q, want, &reps[0], &reps[1], deadline) {
+                    Ok(block) => {
+                        self.note_latency(t.elapsed().as_nanos() as u64);
+                        return Ok(block);
+                    }
+                    Err(e) if failover_ok(&e) => {
+                        last = Some(e);
+                        k = 2;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        while k < reps.len() {
+            let c = &reps[k].client;
+            match eval_one(c, sid, q, want, self.outputs) {
+                Ok(block) => {
+                    self.note_latency(t.elapsed().as_nanos() as u64);
+                    return Ok(block);
+                }
+                Err(e) if failover_ok(&e) => last = Some(e),
+                // Request-shaped errors would repeat identically on
+                // every replica — surface them unchanged.
+                Err(e) => return Err(e),
+            }
+            k += 1;
+        }
+        let detail = match last {
+            Some(e) => e.message(),
+            None => "shard has no replicas".into(),
+        };
+        Err(PredictError::Shard {
+            shard: sid,
+            message: format!("all {} replica(s) failed; last: {detail}", reps.len()),
+        })
+    }
+
+    /// Hedged eval over the two least-loaded replicas: the primary runs
+    /// on a detached thread; if it straggles past `deadline`, the same
+    /// sub-batch is re-issued to the sibling and the first answer wins.
+    /// Both replicas hold identical shard state, so whichever answers
+    /// is bitwise the same block.
+    fn eval_hedged(
+        &self,
+        sid: usize,
+        q: &Mat,
+        want: Want,
+        primary: &Arc<WorkerEntry>,
+        sibling: &Arc<WorkerEntry>,
+        deadline: Duration,
+    ) -> InferResult<ShardBlock> {
+        let (tx, rx) = mpsc::channel();
+        let q1 = q.clone();
+        let outputs = self.outputs;
+        let p2 = primary.clone();
+        // Detached on purpose: a scoped thread would force joining the
+        // straggler, stalling the hedge's whole point. The thread owns
+        // clones of everything it touches and reports through the
+        // channel; if the receiver is gone (we returned early), the
+        // send fails silently and the thread exits.
+        let spawned = std::thread::Builder::new()
+            .name("hck-hedge-primary".into())
+            .spawn(move || {
+                let _ = tx.send(eval_one(&p2.client, sid, &q1, want, outputs));
+            });
+        if spawned.is_err() {
+            // Out of threads: hedging is an optimization, not a
+            // requirement — evaluate the primary synchronously.
+            return eval_one(&primary.client, sid, q, want, self.outputs);
+        }
+        match rx.recv_timeout(deadline) {
+            Ok(Ok(block)) => Ok(block),
+            // Primary failed fast → ordinary failover to the sibling.
+            Ok(Err(e)) if failover_ok(&e) => {
+                eval_one(&sibling.client, sid, q, want, self.outputs)
+            }
+            Ok(Err(e)) => Err(e),
+            // Deadline passed (or the thread died): hedge to the
+            // sibling; if the sibling fails, give the straggler until
+            // the full predict timeout before giving up on the pair.
+            Err(_) => {
+                primary.client.note_hedge();
+                let _sp = obs::span_with("remote.hedge", "remote", || {
+                    format!(
+                        "{{\"shard\":{sid},\"slow\":\"{}\",\"hedge\":\"{}\"}}",
+                        primary.client.addr(),
+                        sibling.client.addr()
+                    )
+                });
+                match eval_one(&sibling.client, sid, q, want, self.outputs) {
+                    Ok(block) => Ok(block),
+                    Err(sibling_err) => match rx.recv_timeout(self.timeout) {
+                        Ok(Ok(block)) => Ok(block),
+                        _ => Err(sibling_err),
+                    },
+                }
+            }
+        }
+    }
+}
+
+/// Whether an error moves the sub-batch to the next replica (transport,
+/// shard-local, or a planned drain) rather than aborting the request.
+fn failover_ok(e: &PredictError) -> bool {
+    matches!(
+        e,
+        PredictError::Transport { .. }
+            | PredictError::Shard { .. }
+            | PredictError::Draining { .. }
+    )
+}
+
+/// One replica eval: in-flight accounting around the wire predict, and
+/// a shape/finiteness gate on the reply before it may be gathered.
+fn eval_one(
+    c: &RemoteWorkerClient,
+    sid: usize,
+    q: &Mat,
+    want: Want,
+    outputs: usize,
+) -> InferResult<ShardBlock> {
+    c.begin_request();
+    let got = c.predict_shard(sid, q, want);
+    c.end_request();
+    let block = got?;
+    match validate_block(&block, q.rows(), outputs, want) {
+        Ok(()) => Ok(block),
+        Err(why) => Err(PredictError::Transport {
+            worker: c.addr().to_string(),
+            message: format!("untrustworthy reply: {why}"),
+        }),
+    }
+}
+
+/// Handshake one worker: build its client, `hello` it, and validate the
+/// announced shards against the router's shard count.
+fn handshake(
+    addr: &str,
+    timeout: Duration,
+    cfg: &ResilienceConfig,
+    n_shards: usize,
+) -> Result<(Arc<WorkerEntry>, (usize, usize), bool)> {
+    let breaker =
+        BreakerConfig { failures: cfg.breaker_failures, cooldown: cfg.breaker_cooldown };
+    let client =
+        Arc::new(RemoteWorkerClient::with_config(addr, timeout, cfg.stats_timeout, breaker));
+    let hello = client
+        .hello()
+        .map_err(|e| Error::Serve(format!("worker {addr}: {}", e.message())))?;
+    let mut shards = Vec::with_capacity(hello.shards.len());
+    for &(id, _lo, _hi) in &hello.shards {
+        if id >= n_shards {
+            return Err(Error::data(format!(
+                "worker {addr} serves shard {id} but the router only knows \
+                 shards 0..{n_shards}"
+            )));
+        }
+        shards.push(id);
+    }
+    let entry =
+        Arc::new(WorkerEntry { client, shards, state: AtomicU8::new(STATE_ACTIVE) });
+    Ok((entry, (hello.dim, hello.outputs), hello.variance))
+}
+
+/// A [`Predictor`] that fans each batch out to remote shard workers,
+/// balancing across replicas, hedging stragglers, and failing over when
+/// one dies mid-batch — with a supervisor thread keeping the replica
+/// registry healthy at runtime.
+pub struct RemoteShardedPredictor {
+    core: Arc<Core>,
+    normalization: Option<Vec<(f64, f64)>>,
+    stop: Arc<AtomicBool>,
+    supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl RemoteShardedPredictor {
-    /// Connect to `workers`, ask each what it serves (`hello`), and
-    /// build the shard → replicas map against `router`. Errors if any
-    /// worker is unreachable, workers disagree on dim/outputs, a worker
-    /// announces a shard the router does not know, or any routed shard
-    /// ends up with no replica.
+    /// Connect to `workers` with default resilience settings and no
+    /// scale policy. See [`RemoteShardedPredictor::connect_with`].
     pub fn connect(
         router: ShardRouter,
         workers: &[String],
         timeout: Duration,
     ) -> Result<RemoteShardedPredictor> {
+        Self::connect_with(router, workers, timeout, ResilienceConfig::default(), None)
+    }
+
+    /// Connect to `workers`, ask each what it serves (`hello`), and
+    /// build the dynamic registry against `router`. Errors if any
+    /// worker is unreachable, workers disagree on dim/outputs, a worker
+    /// announces a shard the router does not know, or any routed shard
+    /// ends up with no replica. Starts the supervisor thread.
+    pub fn connect_with(
+        router: ShardRouter,
+        workers: &[String],
+        timeout: Duration,
+        cfg: ResilienceConfig,
+        policy: Option<ScalePolicy>,
+    ) -> Result<RemoteShardedPredictor> {
         if workers.is_empty() {
             return Err(Error::config("remote serving needs at least one worker address"));
         }
         let n_shards = router.shards();
-        let mut replicas: Vec<Vec<Arc<RemoteWorkerClient>>> =
-            (0..n_shards).map(|_| Vec::new()).collect();
-        let mut clients = Vec::with_capacity(workers.len());
+        let mut entries: Vec<Arc<WorkerEntry>> = Vec::with_capacity(workers.len());
         let mut dim_out: Option<(usize, usize)> = None;
         let mut variance = true;
         for addr in workers {
-            let c = Arc::new(RemoteWorkerClient::new(addr, timeout));
-            let hello = c
-                .hello()
-                .map_err(|e| Error::Serve(format!("worker {addr}: {}", e.message())))?;
+            let (entry, d_o, has_var) = handshake(addr, timeout, &cfg, n_shards)?;
             match dim_out {
-                None => dim_out = Some((hello.dim, hello.outputs)),
-                Some((d, o)) if d == hello.dim && o == hello.outputs => {}
+                None => dim_out = Some(d_o),
+                Some((d, o)) if (d, o) == d_o => {}
                 Some((d, o)) => {
                     return Err(Error::data(format!(
                         "worker {addr} serves dim {} / outputs {} but earlier \
                          workers serve {d} / {o}",
-                        hello.dim, hello.outputs
+                        d_o.0, d_o.1
                     )));
                 }
             }
-            variance &= hello.variance;
-            for &(id, _lo, _hi) in &hello.shards {
-                if id >= n_shards {
-                    return Err(Error::data(format!(
-                        "worker {addr} serves shard {id} but the router only \
-                         knows shards 0..{n_shards}"
-                    )));
-                }
-                replicas[id].push(c.clone());
-            }
-            clients.push(c);
+            variance &= has_var;
+            entries.push(entry);
         }
-        for (sid, r) in replicas.iter().enumerate() {
-            if r.is_empty() {
+        for sid in 0..n_shards {
+            if !entries.iter().any(|e| e.shards.contains(&sid)) {
                 return Err(Error::data(format!(
                     "shard {sid} has no replica among the {} worker(s)",
                     workers.len()
@@ -122,16 +670,27 @@ impl RemoteShardedPredictor {
         }
         let (dim, outputs) = dim_out
             .ok_or_else(|| Error::config("remote serving needs at least one worker address"))?;
-        Ok(RemoteShardedPredictor {
+        let core = Arc::new(Core {
             router,
-            replicas,
-            clients,
+            workers: RwLock::new(entries),
             dim,
             outputs,
             variance,
-            normalization: None,
+            timeout,
+            cfg,
+            policy,
             polls: AtomicU64::new(0),
-        })
+            lat: Mutex::new(LatWindow { buf: Vec::new(), pos: 0 }),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let rp = RemoteShardedPredictor {
+            core,
+            normalization: None,
+            stop,
+            supervisor: Mutex::new(None),
+        };
+        rp.spawn_supervisor()?;
+        Ok(rp)
     }
 
     /// Connect against a shard directory's router and recorded
@@ -142,10 +701,37 @@ impl RemoteShardedPredictor {
         workers: &[String],
         timeout: Duration,
     ) -> Result<RemoteShardedPredictor> {
+        Self::connect_dir_with(dir, workers, timeout, ResilienceConfig::default(), None)
+    }
+
+    /// [`RemoteShardedPredictor::connect_dir`] with explicit resilience
+    /// settings and an optional scale policy.
+    pub fn connect_dir_with(
+        dir: &str,
+        workers: &[String],
+        timeout: Duration,
+        cfg: ResilienceConfig,
+        policy: Option<ScalePolicy>,
+    ) -> Result<RemoteShardedPredictor> {
         let (router, normalization) = super::load_router_parts(dir)?;
-        let mut rp = Self::connect(router, workers, timeout)?;
+        let mut rp = Self::connect_with(router, workers, timeout, cfg, policy)?;
         rp.normalization = normalization;
         Ok(rp)
+    }
+
+    fn spawn_supervisor(&self) -> Result<()> {
+        let core = self.core.clone();
+        let stop = self.stop.clone();
+        let join = std::thread::Builder::new()
+            .name("hck-balance-supervisor".into())
+            .spawn(move || supervisor_loop(core, stop))
+            .map_err(|e| Error::config(format!("cannot spawn balance supervisor: {e}")))?;
+        let mut g = match self.supervisor.lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        };
+        *g = Some(join);
+        Ok(())
     }
 
     /// Record feature-normalization ranges applied before routing
@@ -157,70 +743,90 @@ impl RemoteShardedPredictor {
 
     /// Number of shards the router knows.
     pub fn shards(&self) -> usize {
-        self.replicas.len()
+        self.core.router.shards()
     }
 
-    /// Replica count per shard, indexed by shard id.
+    /// **Active** replica count per shard, indexed by shard id.
     pub fn replica_counts(&self) -> Vec<usize> {
-        self.replicas.iter().map(|r| r.len()).collect()
+        let entries = self.core.entries();
+        (0..self.core.router.shards())
+            .map(|sid| {
+                entries
+                    .iter()
+                    .filter(|e| e.state() == STATE_ACTIVE && e.shards.contains(&sid))
+                    .count()
+            })
+            .collect()
     }
 
-    /// Refresh the cached per-worker load signals on a fixed predict
-    /// cadence. Best effort with a single attempt each — a dead worker
-    /// keeps its stale (high) score until it answers again.
-    fn maybe_refresh_stats(&self) {
-        // ORDERING: Relaxed — refresh-cadence heuristic only; stats
-        // results are published inside each client, not by this counter.
-        if self.polls.fetch_add(1, Ordering::Relaxed) % STATS_EVERY != 0 {
+    /// Attach a worker at runtime (admin `worker_add`, or a test).
+    pub fn attach_worker(&self, addr: &str) -> Result<()> {
+        self.core.attach(addr)
+    }
+
+    /// Begin draining a worker at runtime (admin `worker_drain`).
+    pub fn drain_worker(&self, addr: &str) -> Result<()> {
+        self.core.drain(addr)
+    }
+
+    /// Run one synchronous supervisor pass (drain reconciliation, stats
+    /// refresh, scale policy) — the deterministic alternative to
+    /// waiting for the supervisor tick.
+    pub fn reconcile(&self) {
+        self.core.supervise();
+    }
+
+    /// `(address, lifecycle state, outstanding requests)` per registry
+    /// entry, in registry order.
+    pub fn worker_states(&self) -> Vec<(String, &'static str, usize)> {
+        self.core
+            .entries()
+            .iter()
+            .map(|e| {
+                (e.client.addr().to_string(), state_name(e.state()), e.client.outstanding())
+            })
+            .collect()
+    }
+}
+
+impl Drop for RemoteShardedPredictor {
+    fn drop(&mut self) {
+        // ORDERING: SeqCst — one-shot shutdown flag; pairs with the
+        // load in supervisor_loop.
+        self.stop.store(true, Ordering::SeqCst);
+        let join = {
+            let mut g = match self.supervisor.lock() {
+                Ok(g) => g,
+                Err(poison) => poison.into_inner(),
+            };
+            g.take()
+        };
+        if let Some(j) = join {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The supervisor body: tick [`Core::supervise`] every
+/// `supervise_every`, polling the stop flag at 10 ms so shutdown is
+/// prompt regardless of the tick period.
+fn supervisor_loop(core: Arc<Core>, stop: Arc<AtomicBool>) {
+    let mut last_tick: Option<Instant> = None;
+    loop {
+        // ORDERING: SeqCst — shutdown control plane; pairs with the
+        // store in RemoteShardedPredictor::drop.
+        if stop.load(Ordering::SeqCst) {
             return;
         }
-        for c in &self.clients {
-            let _ = c.stats();
-        }
-    }
-
-    /// Serve one shard's sub-batch, walking the shard's replicas from
-    /// least to most loaded and failing over on transport or shard-local
-    /// errors. A reply with impossible shape or non-finite values is
-    /// treated as a failed replica, never gathered.
-    fn eval_shard(&self, sid: usize, q: &Mat, want: Want) -> InferResult<ShardBlock> {
-        let reps = &self.replicas[sid];
-        let mut order: Vec<usize> = (0..reps.len()).collect();
-        order.sort_by_key(|&k| reps[k].load_score());
-        let mut last: Option<PredictError> = None;
-        for k in order {
-            let c = &reps[k];
-            c.begin_request();
-            let got = c.predict_shard(sid, q, want);
-            c.end_request();
-            match got {
-                Ok(block) => match validate_block(&block, q.rows(), self.outputs, want) {
-                    Ok(()) => return Ok(block),
-                    Err(why) => {
-                        last = Some(PredictError::Transport {
-                            worker: c.addr().to_string(),
-                            message: format!("untrustworthy reply: {why}"),
-                        });
-                    }
-                },
-                // Worker unreachable, or its shard-local evaluation
-                // failed: another replica may well succeed.
-                Err(e @ PredictError::Transport { .. }) | Err(e @ PredictError::Shard { .. }) => {
-                    last = Some(e);
-                }
-                // Request-shaped errors would repeat identically on
-                // every replica — surface them unchanged.
-                Err(e) => return Err(e),
-            }
-        }
-        let detail = match last {
-            Some(e) => e.message(),
-            None => "shard has no replicas".into(),
+        let due = match last_tick {
+            None => true,
+            Some(t) => t.elapsed() >= core.cfg.supervise_every,
         };
-        Err(PredictError::Shard {
-            shard: sid,
-            message: format!("all {} replica(s) failed; last: {detail}", reps.len()),
-        })
+        if due {
+            last_tick = Some(Instant::now());
+            core.supervise();
+        }
+        std::thread::sleep(Duration::from_millis(10));
     }
 }
 
@@ -272,18 +878,19 @@ fn validate_block(
 
 impl Predictor for RemoteShardedPredictor {
     fn predict(&self, req: &PredictRequest) -> InferResult<PredictResponse> {
-        crate::infer::validate_queries(&req.queries, self.dim)?;
+        crate::infer::validate_queries(&req.queries, self.core.dim)?;
         Predictor::capabilities(self).check(req.want)?;
-        self.maybe_refresh_stats();
+        self.core.maybe_refresh_stats();
         let normalized =
             crate::infer::normalized_queries(req, self.normalization.as_deref());
         let q: &Mat = normalized.as_ref().unwrap_or(&req.queries);
         let t = Instant::now();
         // Scatter: request indices per destination shard (identical to
         // the in-process ShardedPredictor — the router is the same).
-        let mut per: Vec<Vec<usize>> = (0..self.replicas.len()).map(|_| Vec::new()).collect();
+        let mut per: Vec<Vec<usize>> =
+            (0..self.core.router.shards()).map(|_| Vec::new()).collect();
         for i in 0..q.rows() {
-            per[self.router.route(q.row(i))].push(i);
+            per[self.core.router.route(q.row(i))].push(i);
         }
         let jobs: Vec<(usize, Vec<usize>, Mat)> = per
             .into_iter()
@@ -303,7 +910,7 @@ impl Predictor for RemoteShardedPredictor {
                 .iter()
                 .map(|(sid, _, sub)| {
                     let sid = *sid;
-                    s.spawn(move || self.eval_shard(sid, sub, req.want))
+                    s.spawn(move || self.core.eval_shard(sid, sub, req.want))
                 })
                 .collect();
             handles
@@ -321,7 +928,7 @@ impl Predictor for RemoteShardedPredictor {
         });
         // Gather in request order; any shard whose replicas are all
         // gone aborts the request with its typed error.
-        let mut mean = Mat::zeros(q.rows(), self.outputs);
+        let mut mean = Mat::zeros(q.rows(), self.core.outputs);
         let mut variance = if req.want.variance { Some(vec![0.0; q.rows()]) } else { None };
         let mut routes = if req.want.leaf_route {
             Some(vec![
@@ -352,15 +959,15 @@ impl Predictor for RemoteShardedPredictor {
     }
 
     fn dim(&self) -> usize {
-        self.dim
+        self.core.dim
     }
 
     fn outputs(&self) -> usize {
-        self.outputs
+        self.core.outputs
     }
 
     fn capabilities(&self) -> Capabilities {
-        Capabilities { mean: true, variance: self.variance, leaf_route: true }
+        Capabilities { mean: true, variance: self.core.variance, leaf_route: true }
     }
 
     fn shard_metrics(&self) -> Vec<ShardSnapshot> {
@@ -371,22 +978,75 @@ impl Predictor for RemoteShardedPredictor {
     }
 
     fn worker_metrics(&self) -> Vec<WorkerSnapshot> {
-        self.clients
+        self.core
+            .entries()
             .iter()
-            .map(|c| match c.stats() {
-                Ok(shards) => WorkerSnapshot {
-                    worker: c.addr().to_string(),
-                    reconnects: c.reconnects(),
-                    reachable: true,
-                    shards,
-                },
-                Err(_) => WorkerSnapshot {
+            .map(|e| {
+                let c = &e.client;
+                let base = WorkerSnapshot {
                     worker: c.addr().to_string(),
                     reconnects: c.reconnects(),
                     reachable: false,
+                    state: state_name(e.state()).to_string(),
+                    breaker_opens: c.breaker_opens(),
+                    drains: c.drains(),
+                    hedges: c.hedges(),
                     shards: Vec::new(),
-                },
+                };
+                if e.state() == STATE_RETIRED {
+                    // Retired replicas are not polled — the entry stays
+                    // for counter continuity, flagged unreachable.
+                    return base;
+                }
+                match c.stats() {
+                    Ok(shards) => WorkerSnapshot { reachable: true, shards, ..base },
+                    Err(_) => base,
+                }
             })
             .collect()
+    }
+
+    fn admin(&self, cmd: &str, arg: &str) -> InferResult<Json> {
+        let ok = |addr: &str| {
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("worker", Json::Str(addr.to_string())),
+            ]))
+        };
+        match cmd {
+            "worker_add" => match self.attach_worker(arg) {
+                Ok(()) => ok(arg),
+                Err(e) => Err(PredictError::BadRequest(e.to_string())),
+            },
+            "worker_drain" => match self.drain_worker(arg) {
+                Ok(()) => ok(arg),
+                Err(e) => Err(PredictError::BadRequest(e.to_string())),
+            },
+            "workers" => {
+                // Reconcile first so the reply reflects completed
+                // drains, not the last supervisor tick.
+                self.core.reconcile();
+                let rows = self
+                    .core
+                    .entries()
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("worker", Json::Str(e.client.addr().to_string())),
+                            ("state", Json::Str(state_name(e.state()).to_string())),
+                            (
+                                "outstanding",
+                                Json::Num(e.client.outstanding() as f64),
+                            ),
+                            ("breaker", Json::Str(e.client.breaker_state().to_string())),
+                        ])
+                    })
+                    .collect();
+                Ok(Json::obj(vec![("workers", Json::Arr(rows))]))
+            }
+            other => Err(PredictError::Unsupported(format!(
+                "unknown admin command '{other}' (worker_add | worker_drain | workers)"
+            ))),
+        }
     }
 }

@@ -1,0 +1,421 @@
+//! Deterministic fault injection for the remote serving tier.
+//!
+//! Distributed-failure behavior (circuit breakers, drain/handoff,
+//! hedged requests, reconnect backoff) must be exercised by *seeded*
+//! tests, not timing luck. This module is the shared switchboard: the
+//! client transport ([`crate::shard::remote::RemoteWorkerClient`]) and
+//! the worker's connection handler both consult [`check`] at their
+//! I/O boundaries and act out whatever the installed [`FaultPlan`]
+//! dictates — stall for a fixed time, drop the connection, return a
+//! typed failure, or corrupt the reply framing.
+//!
+//! ## `HCK_FAULT` grammar
+//!
+//! ```text
+//! HCK_FAULT = rule (";" rule)*
+//! rule      = action [":" key "=" value ("," key "=" value)*]
+//! action    = "stall" | "drop" | "fail" | "corrupt"
+//! ```
+//!
+//! Selector keys (all optional — an absent key matches everything):
+//!
+//! | key      | meaning                                              |
+//! |----------|------------------------------------------------------|
+//! | `ms`     | stall duration in milliseconds (default 50)          |
+//! | `site`   | `client` or `worker` — which endpoint acts           |
+//! | `op`     | `predict`, `stats`, `hello`, `shutdown`, `drain`     |
+//! | `shard`  | only predict frames for this global shard id         |
+//! | `worker` | substring match on the worker address                |
+//! | `after`  | skip the first N matching events (default 0)         |
+//! | `times`  | fire at most N times (default unlimited)             |
+//!
+//! Example: `stall:site=client,op=predict,worker=:7981,ms=200,times=2`
+//! stalls the first two predict RPCs the router sends toward any worker
+//! whose address contains `:7981`, by 200 ms each, then gets out of the
+//! way. Rules are evaluated in order; the first rule that matches *and*
+//! is inside its `after`/`times` window fires.
+//!
+//! Tests install plans directly with [`install`] (no env mutation, no
+//! cross-test races beyond the shared global — serialize with a lock);
+//! operators use the `HCK_FAULT` environment variable, parsed once on
+//! first use. Parse errors are reported to stderr and ignored — a typo
+//! in a chaos drill must never take down real serving.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which endpoint consults the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// The router-side transport, before sending a frame.
+    Client,
+    /// The worker's connection handler, after decoding a frame.
+    Worker,
+}
+
+/// What a fired rule does at the consulting site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Sleep this many milliseconds, then proceed normally.
+    Stall(u64),
+    /// Tear the connection down without a reply.
+    Drop,
+    /// Return a typed injected failure.
+    Fail,
+    /// Emit bytes that violate the `HCKW` framing rules.
+    Corrupt,
+}
+
+/// One parsed rule: an action plus selectors and a firing window.
+#[derive(Debug)]
+pub struct FaultRule {
+    action: FaultAction,
+    site: Option<FaultSite>,
+    op: Option<String>,
+    shard: Option<usize>,
+    worker: Option<String>,
+    after: u64,
+    times: u64,
+    /// How many events have matched the selectors so far (the
+    /// `after`/`times` window is carved out of this count).
+    matched: AtomicU64,
+}
+
+impl FaultRule {
+    fn matches(&self, site: FaultSite, op: &str, shard: Option<usize>, worker: &str) -> bool {
+        if let Some(s) = self.site {
+            if s != site {
+                return false;
+            }
+        }
+        if let Some(o) = &self.op {
+            if o != op {
+                return false;
+            }
+        }
+        if let Some(want) = self.shard {
+            if shard != Some(want) {
+                return false;
+            }
+        }
+        if let Some(w) = &self.worker {
+            if !worker.contains(w.as_str()) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Count a matching event; fire iff it lands in the window.
+    fn fire(&self) -> Option<FaultAction> {
+        // ORDERING: Relaxed — the counter only sequences this rule's own
+        // window; no other memory is published through it.
+        let n = self.matched.fetch_add(1, Ordering::Relaxed);
+        (n >= self.after && n < self.after.saturating_add(self.times)).then_some(self.action)
+    }
+}
+
+/// An ordered set of [`FaultRule`]s, as parsed from the `HCK_FAULT`
+/// grammar or built by a test.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse a plan from the `HCK_FAULT` grammar (see module docs).
+    pub fn parse(spec: &str) -> std::result::Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for raw in spec.split(';') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let (action_str, kv) = match raw.split_once(':') {
+                Some((a, rest)) => (a.trim(), rest),
+                None => (raw, ""),
+            };
+            let mut ms = 50u64;
+            let mut site = None;
+            let mut op = None;
+            let mut shard = None;
+            let mut worker = None;
+            let mut after = 0u64;
+            let mut times = u64::MAX;
+            for pair in kv.split(',') {
+                let pair = pair.trim();
+                if pair.is_empty() {
+                    continue;
+                }
+                let Some((k, v)) = pair.split_once('=') else {
+                    return Err(format!("fault rule '{raw}': expected key=value, got '{pair}'"));
+                };
+                let (k, v) = (k.trim(), v.trim());
+                match k {
+                    "ms" => {
+                        ms = v
+                            .parse()
+                            .map_err(|_| format!("fault rule '{raw}': bad ms '{v}'"))?
+                    }
+                    "site" => {
+                        site = Some(match v {
+                            "client" => FaultSite::Client,
+                            "worker" => FaultSite::Worker,
+                            other => {
+                                return Err(format!(
+                                    "fault rule '{raw}': site must be client|worker, got '{other}'"
+                                ))
+                            }
+                        })
+                    }
+                    "op" => {
+                        if !matches!(v, "predict" | "stats" | "hello" | "shutdown" | "drain") {
+                            return Err(format!(
+                                "fault rule '{raw}': op must be \
+                                 predict|stats|hello|shutdown|drain, got '{v}'"
+                            ));
+                        }
+                        op = Some(v.to_string());
+                    }
+                    "shard" => {
+                        shard = Some(
+                            v.parse()
+                                .map_err(|_| format!("fault rule '{raw}': bad shard '{v}'"))?,
+                        )
+                    }
+                    "worker" => worker = Some(v.to_string()),
+                    "after" => {
+                        after = v
+                            .parse()
+                            .map_err(|_| format!("fault rule '{raw}': bad after '{v}'"))?
+                    }
+                    "times" => {
+                        times = v
+                            .parse()
+                            .map_err(|_| format!("fault rule '{raw}': bad times '{v}'"))?
+                    }
+                    other => {
+                        return Err(format!("fault rule '{raw}': unknown key '{other}'"))
+                    }
+                }
+            }
+            let action = match action_str {
+                "stall" => FaultAction::Stall(ms),
+                "drop" => FaultAction::Drop,
+                "fail" => FaultAction::Fail,
+                "corrupt" => FaultAction::Corrupt,
+                other => {
+                    return Err(format!(
+                        "fault rule '{raw}': action must be stall|drop|fail|corrupt, \
+                         got '{other}'"
+                    ))
+                }
+            };
+            rules.push(FaultRule {
+                action,
+                site,
+                op,
+                shard,
+                worker,
+                after,
+                times,
+                matched: AtomicU64::new(0),
+            });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    /// Number of parsed rules (an empty plan injects nothing).
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// Whether the plan has no rules.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+/// The installed plan. `ARMED` is the fast path: serving traffic pays
+/// one relaxed load when no plan is installed, never a mutex.
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+static ENV_LOADED: AtomicBool = AtomicBool::new(false);
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn plan_guard() -> std::sync::MutexGuard<'static, Option<Arc<FaultPlan>>> {
+    // A panicking holder cannot corrupt an Option<Arc<_>>; recover the
+    // data through the poison so fault checks never panic themselves.
+    match PLAN.lock() {
+        Ok(g) => g,
+        Err(poison) => poison.into_inner(),
+    }
+}
+
+/// Install a plan programmatically (test hook). `None` disarms
+/// injection entirely. Also marks the environment as consumed, so an
+/// installed plan is never overridden by a stale `HCK_FAULT` value.
+pub fn install(plan: Option<FaultPlan>) {
+    let mut g = plan_guard();
+    let armed = plan.is_some();
+    *g = plan.map(Arc::new);
+    // ORDERING: SeqCst — arming must not be reordered before the plan
+    // store above (the guard's release covers the plan; SeqCst keeps
+    // the two flags coherent for concurrent checkers).
+    ENV_LOADED.store(true, Ordering::SeqCst);
+    ARMED.store(armed, Ordering::SeqCst);
+}
+
+/// Remove any installed plan (test hook).
+pub fn clear() {
+    install(None);
+}
+
+fn active() -> Option<Arc<FaultPlan>> {
+    // ORDERING: SeqCst — pairs with the stores in `install`; the
+    // once-per-process env parse below must observe them.
+    if !ENV_LOADED.load(Ordering::SeqCst) {
+        let mut g = plan_guard();
+        // ORDERING: SeqCst — re-check under the lock so exactly one
+        // thread parses the environment.
+        if !ENV_LOADED.swap(true, Ordering::SeqCst) {
+            if let Ok(spec) = std::env::var("HCK_FAULT") {
+                match FaultPlan::parse(&spec) {
+                    Ok(p) if !p.is_empty() => {
+                        *g = Some(Arc::new(p));
+                        // ORDERING: SeqCst — publish arming after the plan.
+                        ARMED.store(true, Ordering::SeqCst);
+                    }
+                    Ok(_) => {}
+                    Err(e) => eprintln!("HCK_FAULT ignored (parse error): {e}"),
+                }
+            }
+        }
+    }
+    // ORDERING: SeqCst — the no-plan fast path; pairs with `install`.
+    if !ARMED.load(Ordering::SeqCst) {
+        return None;
+    }
+    plan_guard().clone()
+}
+
+/// Consult the installed plan at an I/O boundary. Returns the action of
+/// the first rule whose selectors match and whose `after`/`times`
+/// window admits this event. The caller acts it out (sleep, drop,
+/// typed failure, corrupt bytes) — this function never blocks.
+pub fn check(
+    site: FaultSite,
+    op: &str,
+    shard: Option<usize>,
+    worker: &str,
+) -> Option<FaultAction> {
+    let plan = active()?;
+    for rule in &plan.rules {
+        if rule.matches(site, op, shard, worker) {
+            if let Some(action) = rule.fire() {
+                return Some(action);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The plan is process-global; serialize tests that install one.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse(
+            "stall:site=client,op=predict,worker=:7981,ms=200,times=2; \
+             drop:op=stats; fail:shard=3,after=1; corrupt",
+        )
+        .unwrap();
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.rules[0].action, FaultAction::Stall(200));
+        assert_eq!(p.rules[0].site, Some(FaultSite::Client));
+        assert_eq!(p.rules[0].times, 2);
+        assert_eq!(p.rules[1].action, FaultAction::Drop);
+        assert_eq!(p.rules[2].shard, Some(3));
+        assert_eq!(p.rules[2].after, 1);
+        assert_eq!(p.rules[3].action, FaultAction::Corrupt);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "explode",
+            "stall:ms=abc",
+            "fail:site=router",
+            "drop:op=dance",
+            "fail:shard=x",
+            "stall:novalue",
+            "fail:wat=1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should not parse");
+        }
+        // Empty / whitespace specs are an empty plan, not an error.
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn selectors_gate_matching() {
+        let _g = locked();
+        install(Some(
+            FaultPlan::parse("fail:site=worker,op=predict,shard=2,worker=:79").unwrap(),
+        ));
+        // All selectors line up → fires.
+        assert_eq!(
+            check(FaultSite::Worker, "predict", Some(2), "127.0.0.1:7981"),
+            Some(FaultAction::Fail)
+        );
+        // Any selector off → no fire.
+        assert_eq!(check(FaultSite::Client, "predict", Some(2), "127.0.0.1:7981"), None);
+        assert_eq!(check(FaultSite::Worker, "stats", Some(2), "127.0.0.1:7981"), None);
+        assert_eq!(check(FaultSite::Worker, "predict", Some(1), "127.0.0.1:7981"), None);
+        assert_eq!(check(FaultSite::Worker, "predict", Some(2), "10.0.0.1:80"), None);
+        clear();
+    }
+
+    #[test]
+    fn after_times_window_is_deterministic() {
+        let _g = locked();
+        install(Some(FaultPlan::parse("drop:op=predict,after=1,times=2").unwrap()));
+        let hit = || check(FaultSite::Client, "predict", Some(0), "w");
+        assert_eq!(hit(), None); // event 0: skipped by after=1
+        assert_eq!(hit(), Some(FaultAction::Drop)); // event 1
+        assert_eq!(hit(), Some(FaultAction::Drop)); // event 2
+        assert_eq!(hit(), None); // window exhausted
+        assert_eq!(hit(), None);
+        clear();
+    }
+
+    #[test]
+    fn first_matching_rule_in_window_wins() {
+        let _g = locked();
+        install(Some(FaultPlan::parse("stall:op=predict,times=1,ms=7; fail:op=predict").unwrap()));
+        assert_eq!(
+            check(FaultSite::Client, "predict", None, "w"),
+            Some(FaultAction::Stall(7))
+        );
+        // First rule exhausted → falls through to the second.
+        assert_eq!(check(FaultSite::Client, "predict", None, "w"), Some(FaultAction::Fail));
+        clear();
+    }
+
+    #[test]
+    fn cleared_plan_injects_nothing() {
+        let _g = locked();
+        install(Some(FaultPlan::parse("fail").unwrap()));
+        assert!(check(FaultSite::Client, "predict", None, "w").is_some());
+        clear();
+        assert_eq!(check(FaultSite::Client, "predict", None, "w"), None);
+    }
+}

@@ -36,15 +36,21 @@
 //! same scatter/gather as [`worker::ShardedPredictor`] but fanning out
 //! to replicated remote workers with telemetry-driven replica choice
 //! and mid-batch failover (`hck shard-worker` / `hck serve --workers`).
+//! The remote layer self-heals: replicas attach/drain/retire at runtime
+//! under a supervisor loop, per-replica circuit breakers quarantine
+//! flapping workers, stragglers are hedged to sibling replicas, and
+//! [`fault`] injects deterministic faults (`HCK_FAULT`) so all of it is
+//! testable without real outages.
 
 pub mod balance;
+pub mod fault;
 pub mod remote;
 pub mod router;
 pub mod split;
 pub mod worker;
 
-pub use balance::RemoteShardedPredictor;
-pub use remote::{RemoteHello, RemoteWorker, RemoteWorkerClient};
+pub use balance::{RemoteShardedPredictor, ResilienceConfig, ScalePolicy};
+pub use remote::{BreakerConfig, RemoteHello, RemoteWorker, RemoteWorkerClient};
 pub use router::ShardRouter;
 pub use split::{boundary_nodes, depth_for_shards, split_predictor};
 pub use worker::{ShardWorker, ShardedPredictor};

@@ -25,6 +25,7 @@
 //! | `CMD_STATS`    | client → worker | — |
 //! | `CMD_HELLO`    | client → worker | — |
 //! | `CMD_SHUTDOWN` | client → worker | — |
+//! | `CMD_DRAIN`    | client → worker | — (stop accepting predicts; finish in-flight) |
 //! | `REPLY_BLOCK`  | worker → client | a [`ShardBlock`] (mean, variance?, routes?) |
 //! | `REPLY_ERR`    | worker → client | a typed [`PredictError`] |
 //! | `REPLY_STATS`  | worker → client | one [`ShardSnapshot`] per served shard |
@@ -37,6 +38,7 @@
 //! everyone else. No panic idiom survives on this path (`hck-lint`
 //! gates `shard/`).
 
+use super::fault::{self, FaultAction, FaultSite};
 use super::worker::ShardWorker;
 use super::{Shard, ShardBlock};
 use crate::coordinator::metrics::ShardSnapshot;
@@ -48,9 +50,10 @@ use crate::linalg::Mat;
 use crate::obs;
 use std::io::Read;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Frame magic: the wire cousin of `HCKS`/`HCKR`/`HCKN`.
 pub const WIRE_MAGIC: &[u8; 4] = b"HCKW";
@@ -64,6 +67,7 @@ const CMD_PREDICT: u8 = 1;
 const CMD_STATS: u8 = 2;
 const CMD_HELLO: u8 = 3;
 const CMD_SHUTDOWN: u8 = 4;
+const CMD_DRAIN: u8 = 5;
 const REPLY_BLOCK: u8 = 0x81;
 const REPLY_ERR: u8 = 0x82;
 const REPLY_STATS: u8 = 0x83;
@@ -282,6 +286,9 @@ fn encode_err(e: &PredictError) -> Result<Vec<u8>> {
             (4, 0, worker.as_str(), message.as_str())
         }
         PredictError::Internal(m) => (5, 0, "", m.as_str()),
+        PredictError::Draining { worker } => {
+            (6, 0, worker.as_str(), "worker is draining (not accepting new batches)")
+        }
     };
     let mut p = vec![REPLY_ERR, kind];
     wu64(&mut p, shard)?;
@@ -302,6 +309,7 @@ fn decode_err(mut cur: &[u8]) -> PredictError {
             3 => PredictError::Shard { shard, message },
             4 => PredictError::Transport { worker, message },
             5 => PredictError::Internal(message),
+            6 => PredictError::Draining { worker },
             other => {
                 PredictError::Internal(format!("unknown remote error kind {other}: {message}"))
             }
@@ -416,6 +424,13 @@ struct Served {
     dim: usize,
     outputs: usize,
     variance: bool,
+    /// This worker's bound address — names the worker in typed
+    /// [`PredictError::Draining`] replies and fault-rule selectors.
+    addr: String,
+    /// Set by the `drain` wire command: predicts are refused with a
+    /// typed Draining error while stats/hello keep answering, so the
+    /// router can watch the outstanding count reach zero.
+    draining: AtomicBool,
 }
 
 /// A running remote shard worker: a TCP accept loop over one
@@ -468,8 +483,16 @@ impl RemoteWorker {
         let has_var = variance.is_some();
         let workers: Vec<ShardWorker> =
             shards.into_iter().map(|s| ShardWorker::spawn(s, variance.clone())).collect();
-        let served =
-            Arc::new(Served { workers, ids, ranges, dim, outputs, variance: has_var });
+        let served = Arc::new(Served {
+            workers,
+            ids,
+            ranges,
+            dim,
+            outputs,
+            variance: has_var,
+            addr: addr.to_string(),
+            draining: AtomicBool::new(false),
+        });
         let stop = Arc::new(AtomicBool::new(false));
         let s2 = stop.clone();
         let join = std::thread::Builder::new()
@@ -569,6 +592,32 @@ fn handle_conn(mut conn: TcpStream, served: Arc<Served>, stop: Arc<AtomicBool>) 
             }
             FrameRead::Io(_) => return,
         };
+        // Worker-site fault injection: the decoded frame names the op
+        // (and shard, for predicts), so seeded chaos tests can target
+        // exactly one behavior without timing luck.
+        if let Some((op, shard)) = frame_op(&payload) {
+            match fault::check(FaultSite::Worker, op, shard, &served.addr) {
+                Some(FaultAction::Stall(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+                // Tear the connection down with no reply: the client
+                // sees EOF mid-exchange, exactly like a crashed worker.
+                Some(FaultAction::Drop) => return,
+                // Violate the framing rules on purpose: the client's
+                // read must classify this as malformed, never gather it.
+                Some(FaultAction::Corrupt) => {
+                    let _ = std::io::Write::write_all(&mut conn, b"XCKW\x00garbage\x00");
+                    let _ = std::io::Write::flush(&mut conn);
+                    return;
+                }
+                Some(FaultAction::Fail) => {
+                    let err = injected_failure(op, shard);
+                    match encode_err(&err) {
+                        Ok(b) if write_frame(&mut conn, &b).is_ok() => continue,
+                        _ => return,
+                    }
+                }
+                None => {}
+            }
+        }
         let bytes = match dispatch(&payload, &served, &stop) {
             Ok(b) => b,
             Err(e) => match encode_err(&e) {
@@ -579,6 +628,40 @@ fn handle_conn(mut conn: TcpStream, served: Arc<Served>, stop: Arc<AtomicBool>) 
         if write_frame(&mut conn, &bytes).is_err() {
             return;
         }
+    }
+}
+
+/// Classify a decoded frame for fault-rule matching: the op name, plus
+/// the target shard for predict frames (shard id sits after the tag and
+/// three want flags, as a LE u64).
+fn frame_op(payload: &[u8]) -> Option<(&'static str, Option<usize>)> {
+    let (&tag, body) = payload.split_first()?;
+    match tag {
+        CMD_PREDICT => {
+            let shard = if body.len() >= 11 {
+                let mut le = [0u8; 8];
+                le.copy_from_slice(&body[3..11]);
+                Some(u64::from_le_bytes(le) as usize)
+            } else {
+                None
+            };
+            Some(("predict", shard))
+        }
+        CMD_STATS => Some(("stats", None)),
+        CMD_HELLO => Some(("hello", None)),
+        CMD_SHUTDOWN => Some(("shutdown", None)),
+        CMD_DRAIN => Some(("drain", None)),
+        _ => None,
+    }
+}
+
+/// The typed error an injected `fail` rule produces at the worker site.
+fn injected_failure(op: &str, shard: Option<usize>) -> PredictError {
+    match (op, shard) {
+        ("predict", Some(shard)) => {
+            PredictError::Shard { shard, message: "injected fault: fail".into() }
+        }
+        _ => PredictError::Internal(format!("injected fault: fail ({op})")),
     }
 }
 
@@ -593,6 +676,12 @@ fn dispatch(payload: &[u8], served: &Served, stop: &AtomicBool) -> InferResult<V
         |e: Error| PredictError::Internal(format!("wire encode failed: {e}"));
     match tag {
         CMD_PREDICT => {
+            // ORDERING: SeqCst — the drain edge; pairs with the store in
+            // the CMD_DRAIN arm so no predict accepted after the drain
+            // ack can slip past the gate.
+            if served.draining.load(Ordering::SeqCst) {
+                return Err(PredictError::Draining { worker: served.addr.clone() });
+            }
             let (shard, want, q) = decode_predict(body)
                 .map_err(|e| PredictError::BadRequest(format!("bad predict frame: {e}")))?;
             let Some(pos) = served.ids.iter().position(|&id| id == shard) else {
@@ -635,6 +724,16 @@ fn dispatch(payload: &[u8], served: &Served, stop: &AtomicBool) -> InferResult<V
             encode_stats(&snaps).map_err(encode_fail)
         }
         CMD_HELLO => encode_hello(served).map_err(encode_fail),
+        CMD_DRAIN => {
+            // Graceful drain: refuse new predicts from now on, but keep
+            // answering stats/hello so the router can watch in-flight
+            // work finish. In-flight sub-batches already queued on the
+            // ShardWorkers complete and are replied to normally — the
+            // gate sits at frame admission, not in the workers.
+            // ORDERING: SeqCst — pairs with the load in CMD_PREDICT.
+            served.draining.store(true, Ordering::SeqCst);
+            Ok(vec![REPLY_OK])
+        }
         CMD_SHUTDOWN => {
             // ORDERING: SeqCst — one-shot shutdown edge; pairs with the
             // loads in accept_loop and handle_conn.
@@ -667,18 +766,73 @@ pub fn run_worker(dir: &str, indices: Option<&[usize]>, bind: &str) -> Result<()
 // ---------------------------------------------------------------------------
 
 /// How many send attempts a predict RPC gets (1 initial + bounded
-/// exponential-backoff reconnects at 10 ms, 20 ms).
+/// jittered-backoff reconnects).
 const PREDICT_ATTEMPTS: u32 = 3;
 
+/// Reconnect backoff bounds: decorrelated jitter in
+/// `[BACKOFF_BASE_MS, min(3·prev, BACKOFF_CAP_MS)]`. The jitter
+/// de-synchronizes a fleet of routers reconnecting after a mass worker
+/// restart (no thundering herd); the cap bounds the worst-case stall a
+/// single retry can add.
+const BACKOFF_BASE_MS: u64 = 10;
+const BACKOFF_CAP_MS: u64 = 500;
+
+/// Circuit-breaker state machine values (an `AtomicU8`).
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Per-replica circuit-breaker thresholds.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive predict failures that open the breaker.
+    pub failures: u32,
+    /// How long an open breaker fast-fails before admitting one
+    /// half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { failures: 5, cooldown: Duration::from_secs(1) }
+    }
+}
+
 /// The router's handle to one remote worker: a lazily-(re)connected
-/// stream with per-request timeouts, plus the cached load signals the
-/// balancer sorts replicas by. One RPC is in flight per client at a
-/// time (the stream mutex serializes request/reply pairs); the router
-/// fans out across *clients* concurrently.
+/// stream with per-request timeouts, a per-replica circuit breaker,
+/// plus the cached load signals the balancer sorts replicas by. One
+/// RPC is in flight per client at a time (the stream mutex serializes
+/// request/reply pairs); the router fans out across *clients*
+/// concurrently.
+///
+/// **Breaker.** [`BreakerConfig::failures`] consecutive predict
+/// failures open the breaker: predicts fast-fail with a typed
+/// transport error (no connect, no retry budget burned) until
+/// [`BreakerConfig::cooldown`] elapses, after which exactly one probe
+/// is admitted (half-open). A successful probe closes the breaker; a
+/// failed one re-opens it for another cooldown. Stats/hello/control
+/// RPCs bypass the breaker — they *are* the health checks.
 pub struct RemoteWorkerClient {
     addr: String,
     stream: Mutex<Option<TcpStream>>,
     timeout: Duration,
+    /// Separate (shorter) deadline for the background stats poll: a
+    /// hung worker must never stall balance-signal refresh for the
+    /// full predict timeout.
+    stats_timeout: Duration,
+    breaker_cfg: BreakerConfig,
+    breaker: AtomicU8,
+    consec_failures: AtomicU32,
+    /// When the breaker last opened (drives the half-open cooldown).
+    opened_at: Mutex<Option<Instant>>,
+    breaker_opens: AtomicU64,
+    /// Drain requests issued to this worker (metrics).
+    drains: AtomicU64,
+    /// Hedged sub-batches issued *away* from this straggling worker.
+    hedges: AtomicU64,
+    /// Jitter source for the decorrelated reconnect backoff, seeded
+    /// from the address so tests are reproducible per worker.
+    backoff_rng: Mutex<Rng>,
     connected_once: AtomicBool,
     reconnects: AtomicU64,
     outstanding: AtomicUsize,
@@ -692,11 +846,45 @@ pub struct RemoteWorkerClient {
 
 impl RemoteWorkerClient {
     /// A handle to `host:port`. Nothing connects until the first RPC.
+    /// The stats poll gets the lesser of `timeout` and 250 ms; tune
+    /// both with [`RemoteWorkerClient::with_config`].
     pub fn new(addr: &str, timeout: Duration) -> RemoteWorkerClient {
+        Self::with_config(
+            addr,
+            timeout,
+            timeout.min(Duration::from_millis(250)),
+            BreakerConfig::default(),
+        )
+    }
+
+    /// Full-control constructor: predict timeout, stats-poll timeout,
+    /// and breaker thresholds.
+    pub fn with_config(
+        addr: &str,
+        timeout: Duration,
+        stats_timeout: Duration,
+        breaker_cfg: BreakerConfig,
+    ) -> RemoteWorkerClient {
+        // FNV-1a over the address: a stable, dependency-free seed so
+        // each worker's jitter stream is distinct but reproducible.
+        let mut seed: u64 = 0xcbf2_9ce4_8422_2325;
+        for &b in addr.as_bytes() {
+            seed ^= b as u64;
+            seed = seed.wrapping_mul(0x100_0000_01b3);
+        }
         RemoteWorkerClient {
             addr: addr.to_string(),
             stream: Mutex::new(None),
             timeout,
+            stats_timeout,
+            breaker_cfg,
+            breaker: AtomicU8::new(BREAKER_CLOSED),
+            consec_failures: AtomicU32::new(0),
+            opened_at: Mutex::new(None),
+            breaker_opens: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            backoff_rng: Mutex::new(Rng::new(seed)),
             connected_once: AtomicBool::new(false),
             reconnects: AtomicU64::new(0),
             outstanding: AtomicUsize::new(0),
@@ -714,6 +902,157 @@ impl RemoteWorkerClient {
     pub fn reconnects(&self) -> u64 {
         // ORDERING: Relaxed — monotone statistics counter.
         self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// How many times the circuit breaker opened.
+    pub fn breaker_opens(&self) -> u64 {
+        // ORDERING: Relaxed — monotone statistics counter.
+        self.breaker_opens.load(Ordering::Relaxed)
+    }
+
+    /// How many drain requests were issued toward this worker.
+    pub fn drains(&self) -> u64 {
+        // ORDERING: Relaxed — monotone statistics counter.
+        self.drains.load(Ordering::Relaxed)
+    }
+
+    /// How many hedged sub-batches were re-issued away from this
+    /// worker after it straggled past the hedge deadline.
+    pub fn hedges(&self) -> u64 {
+        // ORDERING: Relaxed — monotone statistics counter.
+        self.hedges.load(Ordering::Relaxed)
+    }
+
+    /// Count a drain issued toward this worker (balancer bookkeeping).
+    pub(crate) fn note_drain(&self) {
+        // ORDERING: Relaxed — monotone statistics counter.
+        self.drains.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a hedge fired against this straggling worker.
+    pub(crate) fn note_hedge(&self) {
+        // ORDERING: Relaxed — monotone statistics counter.
+        self.hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests currently in flight on this client (the drain monitor's
+    /// signal: a draining replica retires when this reaches zero).
+    pub(crate) fn outstanding(&self) -> usize {
+        // ORDERING: Relaxed — load gauge; the drain monitor re-polls.
+        self.outstanding.load(Ordering::Relaxed)
+    }
+
+    /// Breaker state name for metrics (`closed` / `open` / `half_open`).
+    pub fn breaker_state(&self) -> &'static str {
+        // ORDERING: SeqCst — breaker control plane; cheap at this rate.
+        match self.breaker.load(Ordering::SeqCst) {
+            BREAKER_OPEN => "open",
+            BREAKER_HALF_OPEN => "half_open",
+            _ => "closed",
+        }
+    }
+
+    fn cooldown_elapsed(&self) -> bool {
+        let g = match self.opened_at.lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        };
+        match *g {
+            Some(t) => t.elapsed() >= self.breaker_cfg.cooldown,
+            None => true,
+        }
+    }
+
+    /// Whether predicts are currently fast-failed (open breaker, still
+    /// cooling down). The balancer sorts such replicas last.
+    pub(crate) fn breaker_blocked(&self) -> bool {
+        // ORDERING: SeqCst — breaker control plane; pairs with the
+        // transitions in breaker_admit/record_success/reopen.
+        self.breaker.load(Ordering::SeqCst) == BREAKER_OPEN && !self.cooldown_elapsed()
+    }
+
+    /// Gate a predict on the breaker. Closed/half-open admit; open
+    /// admits exactly one probe per cooldown (the winning CAS flips
+    /// OPEN → HALF_OPEN; losers keep fast-failing).
+    fn breaker_admit(&self) -> bool {
+        // ORDERING: SeqCst — breaker control plane; pairs with the
+        // stores in record_success/record_failure/reopen.
+        let state = self.breaker.load(Ordering::SeqCst);
+        if state != BREAKER_OPEN {
+            return true;
+        }
+        if !self.cooldown_elapsed() {
+            return false;
+        }
+        // ORDERING: SeqCst — exactly one thread wins the half-open
+        // probe slot; pairs with the loads above.
+        self.breaker
+            .compare_exchange(
+                BREAKER_OPEN,
+                BREAKER_HALF_OPEN,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
+    }
+
+    /// A predict round trip proved the worker alive: reset the failure
+    /// streak and close the breaker (half-open probe succeeded).
+    fn record_success(&self) {
+        // ORDERING: Relaxed — streak counter; the state store below is
+        // the synchronizing edge.
+        self.consec_failures.store(0, Ordering::Relaxed);
+        // ORDERING: SeqCst — breaker control plane; pairs with
+        // breaker_admit's loads.
+        self.breaker.store(BREAKER_CLOSED, Ordering::SeqCst);
+    }
+
+    /// A predict failed: a failed half-open probe re-opens immediately;
+    /// a closed breaker opens once the streak hits the threshold.
+    fn record_failure(&self) {
+        // ORDERING: SeqCst — breaker control plane; pairs with the
+        // transitions in breaker_admit.
+        let state = self.breaker.load(Ordering::SeqCst);
+        if state == BREAKER_HALF_OPEN {
+            self.reopen();
+            return;
+        }
+        // ORDERING: Relaxed — streak counter; reopen() publishes state.
+        let n = self.consec_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if state == BREAKER_CLOSED && n >= self.breaker_cfg.failures {
+            self.reopen();
+        }
+    }
+
+    fn reopen(&self) {
+        {
+            let mut g = match self.opened_at.lock() {
+                Ok(g) => g,
+                Err(poison) => poison.into_inner(),
+            };
+            *g = Some(Instant::now());
+        }
+        // ORDERING: SeqCst — breaker control plane; pairs with
+        // breaker_admit. swap (not store) so concurrent failures count
+        // one open, not several.
+        let prev = self.breaker.swap(BREAKER_OPEN, Ordering::SeqCst);
+        // ORDERING: Relaxed — streak counter reset.
+        self.consec_failures.store(0, Ordering::Relaxed);
+        if prev != BREAKER_OPEN {
+            // ORDERING: Relaxed — monotone statistics counter.
+            self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One decorrelated-jitter backoff step:
+    /// `uniform(BASE, clamp(3·prev, BASE+1, CAP))` milliseconds.
+    fn backoff_ms(&self, prev: u64) -> u64 {
+        let hi = prev.saturating_mul(3).clamp(BACKOFF_BASE_MS + 1, BACKOFF_CAP_MS);
+        let mut rng = match self.backoff_rng.lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        };
+        BACKOFF_BASE_MS + rng.below((hi - BACKOFF_BASE_MS + 1) as usize) as u64
     }
 
     /// Balance score: locally-outstanding requests plus the remote
@@ -765,11 +1104,21 @@ impl RemoteWorkerClient {
     }
 
     /// One request/reply round trip with bounded reconnect: up to
-    /// `attempts` tries, sleeping 10 ms · 2^(k-1) before retry k. Every
-    /// failure mode comes back as a typed
-    /// [`PredictError::Transport`] — the balancer decides whether
-    /// another replica absorbs the work.
-    fn rpc(&self, payload: &[u8], attempts: u32) -> InferResult<Vec<u8>> {
+    /// `attempts` tries, sleeping a decorrelated-jitter backoff
+    /// ([`BACKOFF_BASE_MS`]..[`BACKOFF_CAP_MS`] ms) before each retry.
+    /// `op`/`shard` name the RPC for fault-rule matching;
+    /// `read_timeout` is the reply deadline for this RPC (predicts use
+    /// the full timeout, stats polls a shorter one). Every failure mode
+    /// comes back as a typed [`PredictError::Transport`] — the balancer
+    /// decides whether another replica absorbs the work.
+    fn rpc(
+        &self,
+        payload: &[u8],
+        attempts: u32,
+        op: &'static str,
+        shard: Option<usize>,
+        read_timeout: Duration,
+    ) -> InferResult<Vec<u8>> {
         // One in-flight request per connection: the mutex both owns the
         // stream and serializes request/reply pairs on it.
         let mut guard = match self.stream.lock() {
@@ -777,12 +1126,41 @@ impl RemoteWorkerClient {
             Err(poison) => poison.into_inner(),
         };
         let mut last: Option<PredictError> = None;
+        let mut prev_ms = BACKOFF_BASE_MS;
         for attempt in 0..attempts.max(1) {
             if attempt > 0 {
+                let ms = self.backoff_ms(prev_ms);
+                prev_ms = ms;
                 let _sp = obs::span_with("remote.retry", "remote", || {
-                    format!("{{\"worker\":\"{}\",\"attempt\":{attempt}}}", self.addr)
+                    format!(
+                        "{{\"worker\":\"{}\",\"attempt\":{attempt},\"backoff_ms\":{ms}}}",
+                        self.addr
+                    )
                 });
-                std::thread::sleep(Duration::from_millis(10u64 << (attempt - 1).min(6)));
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            // Client-site fault injection, once per attempt: stalls
+            // happen on top of the real RPC; drop/fail/corrupt replace
+            // it with the corresponding transport failure.
+            match fault::check(FaultSite::Client, op, shard, &self.addr) {
+                Some(FaultAction::Stall(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms))
+                }
+                Some(FaultAction::Drop) => {
+                    *guard = None;
+                    last = Some(self.transport("injected fault: connection dropped"));
+                    continue;
+                }
+                Some(FaultAction::Fail) => {
+                    last = Some(self.transport("injected fault: fail"));
+                    continue;
+                }
+                Some(FaultAction::Corrupt) => {
+                    *guard = None;
+                    last = Some(self.transport("injected fault: corrupt reply"));
+                    continue;
+                }
+                None => {}
             }
             if guard.is_none() {
                 match self.connect() {
@@ -802,6 +1180,15 @@ impl RemoteWorkerClient {
                 }
             }
             let Some(stream) = guard.as_mut() else { continue };
+            // Per-RPC reply deadline: predicts wait the full timeout,
+            // background stats polls a shorter one (a hung worker must
+            // not stall balance-signal refresh).
+            let set = stream.set_read_timeout(Some(read_timeout));
+            if let Err(e) = set {
+                *guard = None;
+                last = Some(self.transport(format!("set_read_timeout: {e}")));
+                continue;
+            }
             let sent = {
                 let _sp = obs::span_with("remote.send", "remote", || {
                     format!(
@@ -845,16 +1232,55 @@ impl RemoteWorkerClient {
         })
     }
 
-    /// Typed predict for one shard's sub-batch.
+    /// Typed predict for one shard's sub-batch, gated by the circuit
+    /// breaker: an open breaker fast-fails without touching the socket
+    /// (the balancer routes around), and the first predict after the
+    /// cooldown rides through as the half-open probe.
     pub fn predict_shard(&self, shard: usize, q: &Mat, want: Want) -> InferResult<ShardBlock> {
-        let payload = encode_predict(shard, q, want)
-            .map_err(|e| PredictError::Internal(format!("wire encode failed: {e}")))?;
-        let reply = self.rpc(&payload, PREDICT_ATTEMPTS)?;
+        if !self.breaker_admit() {
+            return Err(self.transport(
+                "circuit breaker open (fast-fail; worker quarantined until a \
+                 half-open probe succeeds)",
+            ));
+        }
+        let payload = match encode_predict(shard, q, want) {
+            Ok(p) => p,
+            Err(e) => {
+                // Local encode failure says nothing about worker health.
+                return Err(PredictError::Internal(format!("wire encode failed: {e}")));
+            }
+        };
+        let reply = match self.rpc(&payload, PREDICT_ATTEMPTS, "predict", Some(shard), self.timeout)
+        {
+            Ok(r) => r,
+            Err(e) => {
+                self.record_failure();
+                return Err(e);
+            }
+        };
         match reply.split_first() {
-            Some((&REPLY_BLOCK, body)) => decode_block(body)
-                .map_err(|e| self.transport(format!("bad predict reply: {e}"))),
-            Some((&REPLY_ERR, body)) => Err(decode_err(body)),
-            _ => Err(self.transport("unexpected predict reply tag")),
+            Some((&REPLY_BLOCK, body)) => match decode_block(body) {
+                Ok(b) => {
+                    self.record_success();
+                    Ok(b)
+                }
+                Err(e) => {
+                    self.record_failure();
+                    Err(self.transport(format!("bad predict reply: {e}")))
+                }
+            },
+            Some((&REPLY_ERR, body)) => {
+                // A typed error reply proves the transport and the
+                // worker's frame loop alive — that is breaker-success
+                // even when the evaluation itself failed (a draining or
+                // overloaded worker is healthy, not broken).
+                self.record_success();
+                Err(decode_err(body))
+            }
+            _ => {
+                self.record_failure();
+                Err(self.transport("unexpected predict reply tag"))
+            }
         }
     }
 
@@ -862,7 +1288,7 @@ impl RemoteWorkerClient {
     /// and refresh the cached balance signals. Single attempt — a dead
     /// worker must not stall the poller in reconnect backoff.
     pub fn stats(&self) -> InferResult<Vec<ShardSnapshot>> {
-        let reply = self.rpc(&[CMD_STATS], 1)?;
+        let reply = self.rpc(&[CMD_STATS], 1, "stats", None, self.stats_timeout)?;
         match reply.split_first() {
             Some((&REPLY_STATS, body)) => {
                 let snaps = decode_stats(body)
@@ -882,7 +1308,7 @@ impl RemoteWorkerClient {
 
     /// Ask the worker what it serves (the `hello` wire command).
     pub fn hello(&self) -> InferResult<RemoteHello> {
-        let reply = self.rpc(&[CMD_HELLO], 2)?;
+        let reply = self.rpc(&[CMD_HELLO], 2, "hello", None, self.timeout)?;
         match reply.split_first() {
             Some((&REPLY_HELLO, body)) => decode_hello(body)
                 .map_err(|e| self.transport(format!("bad hello reply: {e}"))),
@@ -893,11 +1319,24 @@ impl RemoteWorkerClient {
 
     /// Ask the worker process to stop (the `shutdown` wire command).
     pub fn shutdown_worker(&self) -> InferResult<()> {
-        let reply = self.rpc(&[CMD_SHUTDOWN], 1)?;
+        let reply = self.rpc(&[CMD_SHUTDOWN], 1, "shutdown", None, self.timeout)?;
         match reply.first() {
             Some(&REPLY_OK) => Ok(()),
             Some(&REPLY_ERR) => Err(decode_err(&reply[1..])),
             _ => Err(self.transport("unexpected shutdown reply tag")),
+        }
+    }
+
+    /// Ask the worker to stop accepting new predicts while finishing
+    /// in-flight ones (the `drain` wire command). The worker keeps
+    /// answering stats/hello, so the router can watch the drain
+    /// complete before retiring the replica.
+    pub fn drain_worker(&self) -> InferResult<()> {
+        let reply = self.rpc(&[CMD_DRAIN], 2, "drain", None, self.timeout)?;
+        match reply.first() {
+            Some(&REPLY_OK) => Ok(()),
+            Some(&REPLY_ERR) => Err(decode_err(&reply[1..])),
+            _ => Err(self.transport("unexpected drain reply tag")),
         }
     }
 }

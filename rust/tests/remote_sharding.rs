@@ -6,7 +6,13 @@
 //! - killing a replicated worker mid-stream fails over to the replica
 //!   and still returns correct results;
 //! - killing an unreplicated worker yields a typed
-//!   `PredictError::Shard` — never a panic, never NaN rows.
+//!   `PredictError::Shard` — never a panic, never NaN rows;
+//! - seeded fault injection (`fault::install`) drives the resilience
+//!   machinery deterministically: circuit breakers open on a flapping
+//!   replica and recover half-open, a stalled replica is hedged to its
+//!   sibling with bit-identical results, and draining a replica under
+//!   load drops no request and retires it once outstanding work hits
+//!   zero.
 
 use hck::coordinator::Predictor;
 use hck::hkernel::HConfig;
@@ -14,13 +20,40 @@ use hck::infer::{PredictRequest, Want};
 use hck::kernels::Gaussian;
 use hck::linalg::Mat;
 use hck::model::{fit, load_any, Model, ModelSpec};
+use hck::shard::fault::{self, FaultPlan};
 use hck::shard::{
-    boundary_nodes, split_predictor, RemoteShardedPredictor, RemoteWorker, ShardRouter,
+    boundary_nodes, split_predictor, RemoteShardedPredictor, RemoteWorker,
+    RemoteWorkerClient, ResilienceConfig, ShardRouter,
 };
 use hck::util::rng::Rng;
-use std::time::Duration;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 const TIMEOUT: Duration = Duration::from_millis(2000);
+
+/// The fault plan is process-global; fault-driven tests serialize on
+/// this so one test's plan never leaks into another's workers. Every
+/// rule additionally carries a `worker=<addr>` selector, so the
+/// fault-free tests running in parallel are never matched.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn fault_guard() -> std::sync::MutexGuard<'static, ()> {
+    match FAULT_LOCK.lock() {
+        Ok(g) => g,
+        Err(poison) => poison.into_inner(),
+    }
+}
+
+fn connect_resilient(
+    model: &dyn Model,
+    cut: usize,
+    workers: &[String],
+    cfg: ResilienceConfig,
+) -> RemoteShardedPredictor {
+    RemoteShardedPredictor::connect_with(router_at(model, cut), workers, TIMEOUT, cfg, None)
+        .unwrap()
+        .with_normalization(model.schema().normalization.clone())
+}
 
 fn toy(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
     let mut rng = Rng::new(seed);
@@ -196,4 +229,281 @@ fn unreplicated_worker_death_is_a_typed_shard_error() {
             err.message()
         );
     }
+}
+
+#[test]
+fn flapping_replica_opens_breaker_and_recovers_half_open() {
+    let _serialized = fault_guard();
+    let model = gp_artifact("breaker");
+    let cut = 1;
+    let w1 = full_replica(model.as_ref(), cut);
+    let w2 = full_replica(model.as_ref(), cut);
+    let cfg = ResilienceConfig {
+        breaker_failures: 1,
+        breaker_cooldown: Duration::from_millis(0),
+        hedge_after_ms: Some(0),
+        ..Default::default()
+    };
+    let remote = connect_resilient(model.as_ref(), cut, &[w1.addr(), w2.addr()], cfg);
+
+    let mut rng = Rng::new(21);
+    let q = Mat::from_fn(16, 3, |_, _| rng.uniform(0.0, 1.0));
+    let req = PredictRequest::new(q.clone(), Want::mean_only().with_variance());
+    let reference = model.predict(&req).unwrap();
+    let ref_var = reference.variance.as_ref().unwrap();
+    let check = |got: &hck::infer::PredictResponse, label: &str| {
+        let got_var = got.variance.as_ref().unwrap();
+        for i in 0..q.rows() {
+            assert!(
+                (got.mean[(i, 0)] - reference.mean[(i, 0)]).abs()
+                    <= 1e-10 * (1.0 + reference.mean[(i, 0)].abs()),
+                "{label} query {i} mean"
+            );
+            assert!(
+                (got_var[i] - ref_var[i]).abs() <= 1e-10 * (1.0 + ref_var[i].abs()),
+                "{label} query {i} variance"
+            );
+        }
+    };
+
+    // Every predict to w1 fails at the client edge: the sub-batch fails
+    // over to w2 (correct rows), and one failure is enough to open w1's
+    // breaker under breaker_failures = 1.
+    fault::install(Some(
+        FaultPlan::parse(&format!("fail:site=client,op=predict,worker={}", w1.addr()))
+            .unwrap(),
+    ));
+    for round in 0..2 {
+        check(&remote.predict(&req).unwrap(), &format!("flapping round {round}"));
+    }
+    let opens_while_failing: u64 =
+        remote.worker_metrics().iter().map(|w| w.breaker_opens).sum();
+    assert!(opens_while_failing >= 1, "breaker never opened: {opens_while_failing}");
+
+    // Fault gone: the zero cooldown admits a half-open probe on the next
+    // predict, the probe succeeds, and the breaker closes — no further
+    // opens, both replicas reachable and active.
+    fault::clear();
+    for round in 0..3 {
+        check(&remote.predict(&req).unwrap(), &format!("recovered round {round}"));
+    }
+    let workers = remote.worker_metrics();
+    assert_eq!(
+        workers.iter().map(|w| w.breaker_opens).sum::<u64>(),
+        opens_while_failing,
+        "breaker reopened after the fault was cleared"
+    );
+    assert!(workers.iter().all(|w| w.reachable && w.state == "active"));
+    w1.shutdown();
+    w2.shutdown();
+}
+
+#[test]
+fn stalled_replica_is_hedged_to_its_sibling() {
+    let _serialized = fault_guard();
+    let model = gp_artifact("hedge");
+    let cut = 1;
+    let w1 = full_replica(model.as_ref(), cut);
+    let w2 = full_replica(model.as_ref(), cut);
+    let cfg = ResilienceConfig {
+        hedge_after_ms: Some(5),
+        // The stalled replica must stay in rotation: this test is about
+        // hedging, not breakers.
+        breaker_failures: 100,
+        ..Default::default()
+    };
+    let remote = connect_resilient(model.as_ref(), cut, &[w1.addr(), w2.addr()], cfg);
+
+    let mut rng = Rng::new(23);
+    let q = Mat::from_fn(24, 3, |_, _| rng.uniform(0.0, 1.0));
+    let req = PredictRequest::new(q.clone(), Want::mean_only().with_variance());
+    let reference = model.predict(&req).unwrap();
+    let ref_var = reference.variance.as_ref().unwrap();
+
+    // Both workers are idle (equal load scores), so replica order is
+    // registry order and w1 is every shard's primary. Stall it well past
+    // the hedge deadline; the hedge must win long before the stall ends.
+    fault::install(Some(
+        FaultPlan::parse(&format!(
+            "stall:site=client,op=predict,worker={},ms=500",
+            w1.addr()
+        ))
+        .unwrap(),
+    ));
+    let t = Instant::now();
+    let got = remote.predict(&req).unwrap();
+    let elapsed = t.elapsed();
+    fault::clear();
+
+    let got_var = got.variance.as_ref().unwrap();
+    for i in 0..q.rows() {
+        assert!(
+            (got.mean[(i, 0)] - reference.mean[(i, 0)]).abs()
+                <= 1e-10 * (1.0 + reference.mean[(i, 0)].abs()),
+            "hedged query {i} mean: {} vs {}",
+            got.mean[(i, 0)],
+            reference.mean[(i, 0)]
+        );
+        assert!(
+            (got_var[i] - ref_var[i]).abs() <= 1e-10 * (1.0 + ref_var[i].abs()),
+            "hedged query {i} variance"
+        );
+    }
+    let hedges: u64 = remote.worker_metrics().iter().map(|w| w.hedges).sum();
+    assert!(hedges >= 1, "no hedge fired against the stalled replica");
+    assert!(
+        elapsed < Duration::from_millis(400),
+        "hedge did not win over the 500ms stall: {elapsed:?}"
+    );
+    w1.shutdown();
+    w2.shutdown();
+}
+
+#[test]
+fn drain_under_load_drops_nothing_and_retires() {
+    let _serialized = fault_guard();
+    let model = gp_artifact("drain");
+    let cut = 1;
+    let w1 = full_replica(model.as_ref(), cut);
+    let w2 = full_replica(model.as_ref(), cut);
+    let cfg = ResilienceConfig {
+        hedge_after_ms: Some(0),
+        breaker_failures: 100,
+        ..Default::default()
+    };
+    let remote = connect_resilient(model.as_ref(), cut, &[w1.addr(), w2.addr()], cfg);
+
+    let mut rng = Rng::new(29);
+    let q = Mat::from_fn(24, 3, |_, _| rng.uniform(0.0, 1.0));
+    let req = PredictRequest::new(q.clone(), Want::mean_only().with_variance());
+    let reference = model.predict(&req).unwrap();
+    let ref_var = reference.variance.as_ref().unwrap();
+
+    // Slow the first few evaluations at w1's worker edge so in-flight
+    // work genuinely overlaps the drain command.
+    fault::install(Some(
+        FaultPlan::parse(&format!(
+            "stall:site=worker,op=predict,worker={},ms=30,times=4",
+            w1.addr()
+        ))
+        .unwrap(),
+    ));
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                s.spawn(|| {
+                    for _ in 0..3 {
+                        let got = remote.predict(&req).unwrap();
+                        let got_var = got.variance.as_ref().unwrap();
+                        for i in 0..q.rows() {
+                            assert!(
+                                (got.mean[(i, 0)] - reference.mean[(i, 0)]).abs()
+                                    <= 1e-10 * (1.0 + reference.mean[(i, 0)].abs()),
+                                "under-drain query {i} mean (order/row integrity)"
+                            );
+                            assert!(
+                                (got_var[i] - ref_var[i]).abs()
+                                    <= 1e-10 * (1.0 + ref_var[i].abs()),
+                                "under-drain query {i} variance"
+                            );
+                        }
+                    }
+                })
+            })
+            .collect();
+        // Drain w1 while that traffic is in flight: new sub-batches stop
+        // routing to it, in-flight ones finish.
+        remote.drain_worker(&w1.addr()).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    fault::clear();
+
+    // All traffic finished, so outstanding is zero and a reconcile pass
+    // retires the drained replica.
+    remote.reconcile();
+    let states = remote.worker_states();
+    assert_eq!(states.len(), 2);
+    for (addr, state, outstanding) in &states {
+        if *addr == w1.addr() {
+            assert_eq!(*state, "retired", "drained worker must retire, got {state}");
+            assert_eq!(*outstanding, 0);
+        } else {
+            assert_eq!(*state, "active");
+        }
+    }
+    let drains: u64 = remote.worker_metrics().iter().map(|w| w.drains).sum();
+    assert_eq!(drains, 1);
+
+    // The worker-side gate holds for everyone: a fresh client asking the
+    // drained worker directly gets the typed draining error.
+    let direct = RemoteWorkerClient::new(&w1.addr(), TIMEOUT);
+    let err = match direct.predict_shard(0, &q, Want::mean_only()) {
+        Err(e) => e,
+        Ok(_) => panic!("a drained worker must refuse new predicts"),
+    };
+    assert_eq!(err.kind(), "draining");
+
+    // Traffic after the drain still serves correctly from w2 alone.
+    let got = remote.predict(&req).unwrap();
+    assert!((got.mean[(0, 0)] - reference.mean[(0, 0)]).abs() <= 1e-10);
+    w1.shutdown();
+    w2.shutdown();
+}
+
+#[test]
+fn workers_attach_and_drain_at_runtime() {
+    let model = gp_artifact("attach");
+    let cut = 1;
+    let w1 = full_replica(model.as_ref(), cut);
+    let w2 = full_replica(model.as_ref(), cut);
+    let remote = connect(model.as_ref(), cut, &[w1.addr()]);
+
+    let mut rng = Rng::new(31);
+    let q = Mat::from_fn(16, 3, |_, _| rng.uniform(0.0, 1.0));
+    let req = PredictRequest::new(q.clone(), Want::mean_only());
+    let reference = model.predict(&req).unwrap();
+    let check = |got: &hck::infer::PredictResponse, label: &str| {
+        for i in 0..q.rows() {
+            assert!(
+                (got.mean[(i, 0)] - reference.mean[(i, 0)]).abs()
+                    <= 1e-10 * (1.0 + reference.mean[(i, 0)].abs()),
+                "{label} query {i}"
+            );
+        }
+    };
+    check(&remote.predict(&req).unwrap(), "single replica");
+
+    // Attach the second replica at runtime; every shard gains a replica
+    // and results stay identical.
+    remote.attach_worker(&w2.addr()).unwrap();
+    assert!(
+        remote.replica_counts().iter().all(|&r| r == 2),
+        "{:?}",
+        remote.replica_counts()
+    );
+    check(&remote.predict(&req).unwrap(), "after attach");
+    // Double-attach of a live worker is refused.
+    assert!(remote.attach_worker(&w2.addr()).is_err());
+
+    // Drain the original, reconcile, and the replacement carries the
+    // whole topology.
+    remote.drain_worker(&w1.addr()).unwrap();
+    remote.reconcile();
+    let states = remote.worker_states();
+    assert!(states
+        .iter()
+        .any(|(addr, state, _)| *addr == w1.addr() && *state == "retired"));
+    check(&remote.predict(&req).unwrap(), "after drain");
+    // Draining the last active replica would uncover every shard.
+    assert!(remote.drain_worker(&w2.addr()).is_err());
+
+    // The admin surface agrees with worker_states().
+    let admin = remote.admin("workers", "").unwrap();
+    let rows = admin.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    assert!(remote.admin("nonsense", "").is_err());
+    w1.shutdown();
+    w2.shutdown();
 }
